@@ -1,0 +1,57 @@
+//! Shared scaffolding for the figure benches (criterion is not available
+//! in this environment's crate cache, so benches are plain `harness =
+//! false` binaries over the experiment harness, plus a small timing
+//! utility for the micro benches).
+
+use edgerag::config::DeviceProfile;
+use edgerag::coordinator::builder::SystemBuilder;
+use edgerag::eval::experiments::{ExperimentCtx, DEFAULT_QUERY_LIMIT};
+use edgerag::runtime::ComputeHandle;
+use edgerag::testutil::artifacts_dir;
+
+/// Build the default experiment context; `--full` on the bench command
+/// line lifts the query budget, `--limit N` overrides it.
+pub fn ctx() -> ExperimentCtx {
+    let args: Vec<String> = std::env::args().collect();
+    let full = args.iter().any(|a| a == "--full");
+    let limit = args
+        .iter()
+        .position(|a| a == "--limit")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok());
+    let compute = ComputeHandle::start(&artifacts_dir()).expect("run `make artifacts` first");
+    let builder = SystemBuilder::new(compute, DeviceProfile::jetson_orin_nano());
+    ExperimentCtx {
+        builder,
+        query_limit: if full { None } else { Some(limit.unwrap_or(DEFAULT_QUERY_LIMIT)) },
+    }
+}
+
+/// Measure a closure's wall time over `iters` runs after `warmup` runs;
+/// returns (mean, p50, p95) in nanoseconds.
+#[allow(dead_code)]
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (u64, u64, u64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<u64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = std::time::Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as u64);
+    }
+    samples.sort_unstable();
+    let mean = samples.iter().sum::<u64>() / iters as u64;
+    (mean, samples[iters / 2], samples[iters * 95 / 100])
+}
+
+#[allow(dead_code)]
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}

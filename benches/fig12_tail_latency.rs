@@ -1,0 +1,12 @@
+//! Bench E8/E11 — paper Fig. 12 + §6.3.3: retrieval-latency distribution
+//! per optimization stage (IVF → +gen → +load → +cache) on the nq-like
+//! profile, with the p95 reduction factors the paper reports.
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = common::ctx();
+    edgerag::eval::experiments::fig12(&ctx, "nq")?;
+    edgerag::eval::experiments::breakdown(&ctx, "nq")?;
+    Ok(())
+}

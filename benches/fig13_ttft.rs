@@ -1,0 +1,12 @@
+//! Bench E9/E10 — paper Fig. 13 + headline: TTFT for all five index
+//! configurations across all datasets, with the paper's aggregate
+//! speedups (1.8× avg, 3.82× large).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = common::ctx();
+    edgerag::eval::experiments::fig13(&ctx)?;
+    edgerag::eval::experiments::headline(&ctx)?;
+    Ok(())
+}

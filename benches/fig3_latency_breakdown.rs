@@ -1,0 +1,12 @@
+//! Bench E2 — paper Fig. 3: RAG latency breakdown (retrieval / first
+//! token) and embedded DB size vs device memory, Flat vs IVF, across the
+//! BEIR-suite profiles. Run: `cargo bench --bench fig3_latency_breakdown`
+//! (`-- --full` for the complete workloads).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = common::ctx();
+    edgerag::eval::experiments::fig3(&ctx)?;
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! Bench E3 — paper Fig. 4: embedding-generation rate vs storage-load
+//! rate across cluster sizes (the ~24 kB crossover), plus a grounding
+//! measurement of the real PJRT embedding path's throughput.
+
+mod common;
+
+use edgerag::embedding::{Embedder, EmbedderBackend};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = common::ctx();
+    edgerag::eval::experiments::fig4(&ctx)?;
+
+    // Grounding: real embeddings/second through the three-layer stack
+    // (this testbed's CPU, not the modeled Jetson — reported for context).
+    let embedder = Embedder::new(ctx.builder.compute.clone(), EmbedderBackend::Projection);
+    let texts: Vec<String> = (0..64)
+        .map(|i| format!("chunk {i} with some words w{} w{} w{}", i % 7, i % 13, i % 29))
+        .collect();
+    let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+    let (mean, p50, p95) = common::time(2, 10, || {
+        embedder.embed_texts(&refs).unwrap();
+    });
+    println!(
+        "grounding: real PJRT embed of 64 chunks — mean {} p50 {} p95 {} ({:.0} chunks/s on this testbed)",
+        common::fmt_ns(mean),
+        common::fmt_ns(p50),
+        common::fmt_ns(p95),
+        64.0 / (mean as f64 / 1e9),
+    );
+    Ok(())
+}

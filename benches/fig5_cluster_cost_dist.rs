@@ -1,0 +1,10 @@
+//! Bench E4 — paper Fig. 5: distribution of per-cluster embedding
+//! generation cost on the nq-like profile (tail-heavy shape).
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = common::ctx();
+    edgerag::eval::experiments::fig5(&ctx, "nq")?;
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Bench E5 — paper Fig. 7: retrieval latency and cache hit rate across
+//! pinned Minimum Latency Caching Thresholds (fever-like profile), plus
+//! the adaptive controller's operating point.
+
+mod common;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = common::ctx();
+    edgerag::eval::experiments::fig7(&ctx, "fever")?;
+    Ok(())
+}

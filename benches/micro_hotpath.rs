@@ -1,0 +1,149 @@
+//! L3 micro benches: wall-clock cost of the coordinator hot paths that sit
+//! in front of every PJRT call — cache access/insert, top-k selection,
+//! tokenizer featurization, centroid-probe masking, memory-model touch,
+//! JSON protocol encode/decode. These are the perf-pass targets: the
+//! coordinator must be invisible next to the modeled device latencies
+//! (§Perf in EXPERIMENTS.md).
+
+mod common;
+
+use edgerag::cache::CostAwareCache;
+use edgerag::data::Rng;
+use edgerag::embedding::tokenizer;
+use edgerag::json;
+use edgerag::storage::{MemoryModel, Region};
+use edgerag::vecmath::{self, EmbeddingMatrix};
+use std::sync::Arc;
+
+fn emb(rows: usize, dim: usize) -> Arc<EmbeddingMatrix> {
+    let mut rng = Rng::new(7);
+    let mut m = EmbeddingMatrix::new(dim);
+    for _ in 0..rows {
+        let row: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        m.push(&row);
+    }
+    Arc::new(m)
+}
+
+fn main() {
+    println!("== L3 micro hot paths (wall clock, this testbed) ==");
+
+    // 1. cost-aware cache access (hit) + decay sweep at realistic size
+    let mut cache = CostAwareCache::new(64 << 20, 0.9);
+    for c in 0..200u32 {
+        cache.insert(c, emb(64, 256), 100.0 + c as f64);
+    }
+    let (mean, p50, p95) = common::time(100, 3000, || {
+        std::hint::black_box(cache.access(97));
+    });
+    println!(
+        "cache access (200 entries, hit + decay): mean {} p50 {} p95 {}",
+        common::fmt_ns(mean),
+        common::fmt_ns(p50),
+        common::fmt_ns(p95)
+    );
+
+    // 2. cache insert with eviction pressure
+    let mut cache2 = CostAwareCache::new(4 << 20, 0.9);
+    let block = emb(64, 256);
+    let mut id = 0u32;
+    let (mean, p50, p95) = common::time(50, 1000, || {
+        cache2.insert(id, block.clone(), 50.0);
+        id += 1;
+    });
+    println!(
+        "cache insert+evict (4 MiB cap): mean {} p50 {} p95 {}",
+        common::fmt_ns(mean),
+        common::fmt_ns(p50),
+        common::fmt_ns(p95)
+    );
+
+    // 3. top-k over a 4096-score slab (the post-kernel selection)
+    let mut rng = Rng::new(3);
+    let scores: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+    let (mean, p50, p95) = common::time(100, 5000, || {
+        std::hint::black_box(vecmath::top_k(&scores, 4096, 5));
+    });
+    println!(
+        "top-k(5) of 4096 scores: mean {} p50 {} p95 {}",
+        common::fmt_ns(mean),
+        common::fmt_ns(p50),
+        common::fmt_ns(p95)
+    );
+
+    // 4. tokenizer featurization of a 256-char chunk
+    let text = "the quick brown fox jumps over the lazy dog ".repeat(6);
+    let mut buf = vec![0.0f32; tokenizer::VOCAB];
+    let (mean, p50, p95) = common::time(100, 5000, || {
+        tokenizer::features_into(&text, &mut buf);
+    });
+    println!(
+        "tokenize+featurize 256-char chunk: mean {} p50 {} p95 {}",
+        common::fmt_ns(mean),
+        common::fmt_ns(p50),
+        common::fmt_ns(p95)
+    );
+
+    // 5. memory-model touch (hit path)
+    let mut mm = MemoryModel::new(1 << 30);
+    for c in 0..500u32 {
+        mm.touch(Region::Cluster(c), 64 << 10);
+    }
+    let (mean, p50, p95) = common::time(100, 5000, || {
+        std::hint::black_box(mm.touch(Region::Cluster(250), 64 << 10));
+    });
+    println!(
+        "memory-model touch (hit, 500 regions): mean {} p50 {} p95 {}",
+        common::fmt_ns(mean),
+        common::fmt_ns(p50),
+        common::fmt_ns(p95)
+    );
+
+    // 6. server JSON round-trip encode+decode of a query response
+    let resp = json::Value::object(vec![
+        ("hits", json::Value::array((0..5).map(|i| {
+            json::Value::object(vec![("chunk", (i as u64).into()), ("score", 0.73.into())])
+        }))),
+        ("retrieval_ms", 123.456.into()),
+        ("ttft_ms", 456.789.into()),
+    ]);
+    let (mean, p50, p95) = common::time(100, 5000, || {
+        let s = resp.to_string();
+        std::hint::black_box(json::parse(&s).unwrap());
+    });
+    println!(
+        "JSON response encode+parse: mean {} p50 {} p95 {}",
+        common::fmt_ns(mean),
+        common::fmt_ns(p50),
+        common::fmt_ns(p95)
+    );
+
+    // 7. end-to-end coordinator overhead: one full pipeline.handle minus
+    //    the PJRT time is hard to isolate; instead report handle() wall
+    //    time on the tiny dataset as the upper bound.
+    let ctx = common::ctx();
+    let built = ctx.build("tiny").expect("build tiny");
+    let mut pipeline = ctx
+        .builder
+        .pipeline(&built, edgerag::config::IndexKind::EdgeRag)
+        .unwrap();
+    let queries: Vec<String> = built
+        .workload
+        .queries
+        .iter()
+        .take(16)
+        .map(|q| q.text.clone())
+        .collect();
+    let mut qi = 0;
+    let (mean, p50, p95) = common::time(4, 64, || {
+        let q = &queries[qi % queries.len()];
+        qi += 1;
+        std::hint::black_box(pipeline.handle(q).unwrap());
+    });
+    println!(
+        "pipeline.handle (tiny, incl. PJRT): mean {} p50 {} p95 {}",
+        common::fmt_ns(mean),
+        common::fmt_ns(p50),
+        common::fmt_ns(p95)
+    );
+}

@@ -1,0 +1,56 @@
+//! Dataset sweep: the Fig. 13 experiment as a runnable example — TTFT for
+//! all five index configurations across the BEIR-suite profiles, printing
+//! the paper's headline comparison.
+//!
+//!     cargo run --release --example dataset_sweep [-- --small] [-- --full]
+//!
+//! `--small` restricts to the in-memory datasets (fast); default runs all
+//! six at the default query budget; `--full` evaluates every workload
+//! query.
+
+use anyhow::Result;
+use edgerag::config::DeviceProfile;
+use edgerag::coordinator::builder::SystemBuilder;
+use edgerag::eval::experiments::{self, ExperimentCtx, DEFAULT_QUERY_LIMIT};
+use edgerag::runtime::ComputeHandle;
+use edgerag::testutil::artifacts_dir;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let small = args.iter().any(|a| a == "--small");
+    let full = args.iter().any(|a| a == "--full");
+
+    let compute = ComputeHandle::start(&artifacts_dir())?;
+    let builder = SystemBuilder::new(compute, DeviceProfile::jetson_orin_nano());
+    let ctx = ExperimentCtx {
+        builder,
+        query_limit: if full { None } else { Some(DEFAULT_QUERY_LIMIT) },
+    };
+
+    if small {
+        // Small subset: just show the per-dataset trend quickly.
+        for name in ["scidocs", "fiqa"] {
+            let built = ctx.build(name)?;
+            for kind in edgerag::config::IndexKind::ALL {
+                let r = edgerag::eval::run_workload(
+                    &ctx.builder,
+                    &built,
+                    kind,
+                    &ctx.opts(),
+                )?;
+                println!(
+                    "{name:<8} {:<13} retrieval {:>8} ttft {:>8} recall {:.3}",
+                    kind.name(),
+                    format!("{}", r.retrieval_mean),
+                    format!("{}", r.ttft_mean),
+                    r.quality.recall
+                );
+            }
+        }
+        return Ok(());
+    }
+
+    experiments::fig13(&ctx)?;
+    experiments::headline(&ctx)?;
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Quickstart: build an EdgeRAG index over a small corpus and serve a few
+//! queries through the full three-layer stack (rust coordinator → PJRT →
+//! AOT-compiled JAX/Pallas graphs).
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the *transformer* embedding backend and real compiled prefill so
+//! every layer is genuinely exercised.
+
+use anyhow::Result;
+use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
+use edgerag::coordinator::builder::SystemBuilder;
+use edgerag::embedding::EmbedderBackend;
+use edgerag::runtime::ComputeHandle;
+use edgerag::testutil::artifacts_dir;
+
+fn main() -> Result<()> {
+    println!("== EdgeRAG quickstart ==");
+    let compute = ComputeHandle::start(&artifacts_dir())?;
+    println!(
+        "compute executor up: {} artifacts, dim={}",
+        compute.manifest().artifacts.len(),
+        compute.dim()
+    );
+
+    let mut builder = SystemBuilder::new(compute, DeviceProfile::jetson_orin_nano());
+    builder.options.backend = EmbedderBackend::Transformer; // full encoder
+    builder.options.real_prefill = true; // run the compiled decoder graph
+    builder.options.prebuilt_generation = false; // live online generation
+    builder.options.cache_dir = None; // build fresh
+    builder.retrieval.nprobe = 4;
+
+    let profile = DatasetProfile::tiny();
+    println!(
+        "building dataset `{}`: {} chunks, {} topics…",
+        profile.name, profile.n_chunks, profile.n_topics
+    );
+    let built = builder.build_dataset(&profile)?;
+    let mut pipeline = builder.pipeline(&built, IndexKind::EdgeRag)?;
+
+    // Take three workload queries + one ad-hoc query.
+    let mut texts: Vec<String> = built
+        .workload
+        .queries
+        .iter()
+        .take(3)
+        .map(|q| q.text.clone())
+        .collect();
+    texts.push(built.corpus.chunks[7].text.clone());
+
+    for (i, text) in texts.iter().enumerate() {
+        let out = pipeline.handle(text)?;
+        println!(
+            "\nquery {i}: \"{}\"\n  top chunks: {:?}\n  retrieval {} · ttft {} · prompt {} tokens · first-token id {:?}\n  events: gen={} load={} cache={} (wall {:?})",
+            &text[..text.len().min(60)],
+            out.hits.iter().map(|h| h.0).collect::<Vec<_>>(),
+            out.retrieval,
+            out.ttft,
+            out.prompt_tokens,
+            out.first_token,
+            out.events.generated,
+            out.events.loaded,
+            out.events.cache_hits,
+            out.wall,
+        );
+    }
+
+    // Repeat the first query: the cost-aware cache should now hit.
+    let again = pipeline.handle(&texts[0])?;
+    println!(
+        "\nrepeat of query 0: cache hits = {} (retrieval {} vs cold)",
+        again.events.cache_hits, again.retrieval
+    );
+
+    let m = pipeline.metrics_mut();
+    println!(
+        "\nserved {} queries: retrieval p50 {} p95 {}, ttft p95 {}",
+        m.queries(),
+        m.retrieval.percentile(50.0),
+        m.retrieval.percentile(95.0),
+        m.ttft.percentile(95.0),
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}

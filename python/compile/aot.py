@@ -1,0 +1,173 @@
+"""AOT pipeline: lower every Layer-2 graph to HLO *text* + write weights
+and a manifest the rust runtime consumes.
+
+Run once at build time (`make artifacts`):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange is HLO text, NOT `.serialize()`: jax ≥ 0.5 emits HloModuleProto
+with 64-bit instruction ids which the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs under --out:
+  manifest.json          artifact registry: name → hlo file, input specs
+                         (weight blobs vs runtime inputs), output specs
+  weights/*.bin          flat little-endian f32 weight blobs (seeded)
+  *.hlo.txt              one HLO module per (graph, shape-bucket)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape buckets — must match rust/src/runtime/artifacts.rs.
+SIM_QUERY_BATCHES = [1]
+SIM_ROWS = [128, 256, 512, 1024, 4096]
+KMEANS_SIM = (32, 512)          # (points-batch, max-centroids)
+PROJ_BATCHES = [1, 32]
+ENC_BATCHES = [1, 8]
+
+SEEDS = {"projection": 1, "encoder": 2, "prefill": 3}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32", kind="input", file=None):
+    d = {"kind": kind, "dtype": dtype, "shape": list(shape)}
+    if file is not None:
+        d["file"] = file
+    return d
+
+
+def _write_weights(out_dir: str, name: str, pack: model.ParamPack) -> str:
+    os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+    rel = f"weights/{name}.bin"
+    theta = pack.init(SEEDS[name])
+    theta.astype("<f4").tofile(os.path.join(out_dir, rel))
+    return rel
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+
+    def lower(name: str, fn, example_args, inputs):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        hlo = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, hlo), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *example_args)
+        outputs = [
+            _spec(o.shape, "f32" if o.dtype == jnp.float32 else str(o.dtype))
+            for o in out_avals
+        ]
+        artifacts.append(
+            {"name": name, "hlo": hlo, "inputs": inputs, "outputs": outputs}
+        )
+        print(f"  {name:<14} {hlo:<22} {len(text) / 1024:8.1f} KiB")
+
+    d = model.DIM
+    f32 = jnp.float32
+
+    # ---- similarity scorers (level-1 centroids, level-2 clusters, flat) ----
+    for b in SIM_QUERY_BATCHES:
+        for n in SIM_ROWS:
+            lower(
+                f"sim_{b}x{n}",
+                model.scores,
+                (jax.ShapeDtypeStruct((b, d), f32),
+                 jax.ShapeDtypeStruct((n, d), f32)),
+                [_spec((b, d)), _spec((n, d))],
+            )
+    kb, kn = KMEANS_SIM
+    lower(
+        f"sim_{kb}x{kn}",
+        model.scores,
+        (jax.ShapeDtypeStruct((kb, d), f32),
+         jax.ShapeDtypeStruct((kn, d), f32)),
+        [_spec((kb, d)), _spec((kn, d))],
+    )
+
+    # ---- projection embedder ----
+    pp = model.projection_pack()
+    proj_w = _write_weights(out_dir, "projection", pp)
+    for b in PROJ_BATCHES:
+        lower(
+            f"proj_{b}",
+            model.projection_embed,
+            (jax.ShapeDtypeStruct((pp.total,), f32),
+             jax.ShapeDtypeStruct((b, model.VOCAB), f32)),
+            [_spec((pp.total,), kind="weight", file=proj_w),
+             _spec((b, model.VOCAB))],
+        )
+
+    # ---- transformer encoder embedder ----
+    ep = model.transformer_pack(model.ENC_LAYERS, causal=False)
+    enc_w = _write_weights(out_dir, "encoder", ep)
+    for b in ENC_BATCHES:
+        lower(
+            f"enc_{b}",
+            model.encoder_embed,
+            (jax.ShapeDtypeStruct((ep.total,), f32),
+             jax.ShapeDtypeStruct((b, model.ENC_SEQ), jnp.int32),
+             jax.ShapeDtypeStruct((b, model.ENC_SEQ), f32)),
+            [_spec((ep.total,), kind="weight", file=enc_w),
+             _spec((b, model.ENC_SEQ), dtype="i32"),
+             _spec((b, model.ENC_SEQ))],
+        )
+
+    # ---- LLM prefill proxy ----
+    fp = model.transformer_pack(model.PREFILL_LAYERS, causal=True)
+    pre_w = _write_weights(out_dir, "prefill", fp)
+    lower(
+        "prefill_1",
+        model.prefill_logits,
+        (jax.ShapeDtypeStruct((fp.total,), f32),
+         jax.ShapeDtypeStruct((1, model.PREFILL_SEQ), jnp.int32)),
+        [_spec((fp.total,), kind="weight", file=pre_w),
+         _spec((1, model.PREFILL_SEQ), dtype="i32")],
+    )
+
+    manifest = {
+        "dim": model.DIM,
+        "vocab": model.VOCAB,
+        "enc_seq": model.ENC_SEQ,
+        "prefill_seq": model.PREFILL_SEQ,
+        "sim_rows": SIM_ROWS,
+        "proj_batches": PROJ_BATCHES,
+        "enc_batches": ENC_BATCHES,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    print(f"lowering EdgeRAG graphs → {args.out}")
+    m = build_all(args.out)
+    print(f"wrote {len(m['artifacts'])} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

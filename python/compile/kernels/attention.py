@@ -1,0 +1,65 @@
+"""Pallas kernel: fused scaled-dot-product attention.
+
+Used by both L2 models that contain transformers: the gte-style embedding
+encoder (padding mask) and the LLM prefill proxy (causal mask). One grid
+step processes one (batch·head) slice entirely in VMEM — at the serving
+sequence lengths (s=64 encoder, s=256 prefill) the whole s×s score matrix
+fits comfortably, so a flash-style online softmax would only add overhead:
+
+  s=256, dh=64, f32: q/k/v 3·256·64·4 = 192 KiB, scores 256·256·4 = 256 KiB
+  → ≈ 0.5 MiB per step, ≪ VMEM. (A flash variant becomes worthwhile past
+  s≈2k; DESIGN.md §8 records the crossover estimate.)
+
+The mask is passed as a (bh, s) validity vector rather than materialized
+(bh, s, s) bias — the kernel broadcasts it in-register, which is the main
+fusion win over the naive L2 composition.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, mask: jax.Array, *,
+              causal: bool = False) -> jax.Array:
+    """SDPA over (bh, s, dh) with key-padding mask (bh, s); 1.0 = valid."""
+    bh, s, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+
+    def kernel(q_ref, k_ref, v_ref, m_ref, o_ref):
+        qq = q_ref[0]          # (s, dh)
+        kk = k_ref[0]
+        vv = v_ref[0]
+        scores = jnp.dot(qq, kk.T, preferred_element_type=qq.dtype) * scale
+        valid = m_ref[0][None, :] > 0            # (1, s) key mask
+        scores = jnp.where(valid, scores, -1e9)
+        if causal:
+            i = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+            j = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+            scores = jnp.where(j <= i, scores, -1e9)
+        # numerically-stable softmax, fused in-kernel
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        p = jnp.exp(scores - m)
+        p = p / jnp.sum(p, axis=-1, keepdims=True)
+        o_ref[0] = jnp.dot(p, vv, preferred_element_type=qq.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, mask)
+
+
+attention_causal = functools.partial(attention, causal=True)

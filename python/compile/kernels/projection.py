@@ -1,0 +1,70 @@
+"""Pallas kernel: hash-feature projection embedder (matmul + bias + L2-norm).
+
+The fast embedding path: a bag-of-tokens count vector `(b, vocab)` is
+projected to the embedding space and L2-normalized in one fused kernel.
+This is the kernel EdgeRAG pays for on every *online embedding generation*
+(the paper's core trade — compute embeddings instead of storing them), so
+its cost model is what Figures 4/5 are built on.
+
+Tiling: the contraction dimension (vocab=4096) streams through VMEM in
+`(block_k, dim)` weight tiles; the output accumulator `(b, dim)` lives in
+VMEM across all grid steps (index_map pins it), and the final grid step
+fuses bias-add + L2 normalization so the embedding never round-trips to
+HBM un-normalized.
+
+VMEM per step (f32, b=32, block_k=512, dim=256):
+  f-tile 32·512·4 = 64 KiB + w-tile 512·256·4 = 512 KiB + acc 32 KiB
+  ≈ 608 KiB — 2-deep double buffering of the streamed tiles fits easily.
+MXU: (b×block_k)·(block_k×dim) per step; block_k=512, dim=256 are
+128-multiples so the contraction is fully MXU-tiled.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_K = 512
+
+
+def project(feats: jax.Array, w: jax.Array, bias: jax.Array, *,
+            block_k: int = DEFAULT_BLOCK_K, eps: float = 1e-6) -> jax.Array:
+    """normalize(feats @ w + bias): (b, vocab) × (vocab, dim) → (b, dim)."""
+    b, vocab = feats.shape
+    vocab2, dim = w.shape
+    assert vocab == vocab2
+    if vocab % block_k != 0:
+        block_k = vocab
+    nk = vocab // block_k
+    bias2 = bias.reshape(1, dim)
+
+    def kernel(f_ref, w_ref, b_ref, o_ref):
+        k = pl.program_id(0)
+
+        @pl.when(k == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            f_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+        )
+
+        @pl.when(k == nk - 1)
+        def _finish():
+            x = o_ref[...] + b_ref[...]
+            norm = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True) + eps)
+            o_ref[...] = x / norm
+
+    return pl.pallas_call(
+        kernel,
+        grid=(nk,),
+        in_specs=[
+            pl.BlockSpec((b, block_k), lambda k: (0, k)),
+            pl.BlockSpec((block_k, dim), lambda k: (k, 0)),
+            pl.BlockSpec((1, dim), lambda k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, dim), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, dim), feats.dtype),
+        interpret=True,
+    )(feats, w, bias2)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness contracts: `python/tests/` sweeps shapes and
+dtypes (hypothesis) asserting `assert_allclose(kernel(...), ref(...))`.
+Keep them boring and obviously-right.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def similarity_ref(q: jax.Array, e: jax.Array) -> jax.Array:
+    """Inner-product scores between query rows and embedding rows.
+
+    q: (b, d), e: (n, d)  →  (b, n).  With L2-normalized inputs this is
+    cosine similarity — the metric EdgeRAG's IVF index uses at both levels.
+    """
+    return q @ e.T
+
+
+def projection_ref(theta: jax.Array, feats: jax.Array, *, dim: int,
+                   eps: float = 1e-6) -> jax.Array:
+    """Hash-projection embedder: normalize(feats @ W + b).
+
+    theta: flat f32[vocab*dim + dim] packing W (vocab, dim) then b (dim,).
+    feats: (b, vocab) bag-of-tokens counts  →  (b, dim) unit vectors.
+    """
+    vocab = feats.shape[1]
+    w = theta[: vocab * dim].reshape(vocab, dim)
+    b = theta[vocab * dim: vocab * dim + dim]
+    x = feats @ w + b[None, :]
+    norm = jnp.sqrt(jnp.sum(x * x, axis=-1, keepdims=True) + eps)
+    return x / norm
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                  mask: jax.Array, *, causal: bool = False) -> jax.Array:
+    """Scaled-dot-product attention with key padding mask.
+
+    q, k, v: (bh, s, dh); mask: (bh, s) with 1.0 = valid key.
+    Optionally causal (used by the prefill decoder proxy).
+    """
+    s = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) * scale
+    bias = jnp.where(mask[:, None, :] > 0, 0.0, -1e9).astype(q.dtype)
+    scores = scores + bias
+    if causal:
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        scores = scores + jnp.where(j <= i, 0.0, -1e9).astype(q.dtype)[None, :, :]
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)

@@ -1,0 +1,212 @@
+"""Layer 2: the JAX compute graphs EdgeRAG serves, all calling the Layer-1
+Pallas kernels. AOT-lowered once by `aot.py`; never imported at runtime.
+
+Graphs
+------
+* `projection_embed` — the fast hash-projection embedder (kernel:
+  `projection.project`). Online embedding generation runs through this.
+* `encoder_embed`    — gte-style transformer encoder (kernel:
+  `attention.attention`), mean-pooled + L2-normalized. The "full" embedder
+  used by the e2e example.
+* `scores`           — similarity scoring (kernel: `similarity.similarity`)
+  for both IVF levels and the flat baseline.
+* `prefill_logits`   — causal decoder prefill proxy: first-output-token
+  logits for TTFT's prefill component.
+
+All weights are packed into a single flat f32 `theta` parameter so the rust
+runtime feeds exactly one weight literal per executable (see
+`ParamPack`). Weight values are seeded-deterministic: python and rust both
+read the same `artifacts/weights/*.bin` blobs.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import attention
+from .kernels.projection import project
+from .kernels.similarity import similarity
+
+VOCAB = 4096
+DIM = 256
+HEADS = 4
+HEAD_DIM = DIM // HEADS
+FFN = 1024
+ENC_LAYERS = 4
+ENC_SEQ = 64
+PREFILL_LAYERS = 2
+PREFILL_SEQ = 256
+
+
+# --------------------------------------------------------------------------
+# Flat parameter packing
+# --------------------------------------------------------------------------
+
+@dataclass
+class ParamPack:
+    """Ordered (name, shape) spec for a flat f32 theta vector."""
+
+    entries: list[tuple[str, tuple[int, ...]]] = field(default_factory=list)
+
+    def add(self, name: str, shape: tuple[int, ...]) -> None:
+        self.entries.append((name, shape))
+
+    @property
+    def total(self) -> int:
+        return int(sum(np.prod(s) for _, s in self.entries))
+
+    def slices(self, theta: jax.Array) -> dict[str, jax.Array]:
+        out, off = {}, 0
+        for name, shape in self.entries:
+            n = int(np.prod(shape))
+            out[name] = theta[off: off + n].reshape(shape)
+            off += n
+        return out
+
+    def init(self, seed: int) -> np.ndarray:
+        """Deterministic weights: per-entry scaled gaussian, single PRNG."""
+        rng = np.random.RandomState(seed)
+        parts = []
+        for name, shape in self.entries:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            if name.endswith("_b") or ".bias" in name:
+                parts.append(np.zeros(int(np.prod(shape)), dtype=np.float32))
+            elif name.endswith("_g") or ".gamma" in name:
+                parts.append(np.ones(int(np.prod(shape)), dtype=np.float32))
+            else:
+                scale = 1.0 / np.sqrt(max(fan_in, 1))
+                parts.append(
+                    (rng.randn(int(np.prod(shape))) * scale).astype(np.float32)
+                )
+        return np.concatenate(parts)
+
+
+def projection_pack() -> ParamPack:
+    p = ParamPack()
+    p.add("w", (VOCAB, DIM))
+    p.add("proj_b", (DIM,))
+    return p
+
+
+def transformer_pack(layers: int, *, causal: bool) -> ParamPack:
+    p = ParamPack()
+    p.add("tok_emb", (VOCAB, DIM))
+    p.add("pos_emb", (PREFILL_SEQ if causal else ENC_SEQ, DIM))
+    for i in range(layers):
+        p.add(f"l{i}.wq", (DIM, DIM))
+        p.add(f"l{i}.wk", (DIM, DIM))
+        p.add(f"l{i}.wv", (DIM, DIM))
+        p.add(f"l{i}.wo", (DIM, DIM))
+        p.add(f"l{i}.ln1_g", (DIM,))
+        p.add(f"l{i}.ln1_b", (DIM,))
+        p.add(f"l{i}.w1", (DIM, FFN))
+        p.add(f"l{i}.ffn1_b", (FFN,))
+        p.add(f"l{i}.w2", (FFN, DIM))
+        p.add(f"l{i}.ffn2_b", (DIM,))
+        p.add(f"l{i}.ln2_g", (DIM,))
+        p.add(f"l{i}.ln2_b", (DIM,))
+    p.add("lnf_g", (DIM,))
+    p.add("lnf_b", (DIM,))
+    if causal:
+        p.add("head_w", (DIM, VOCAB))
+    return p
+
+
+# --------------------------------------------------------------------------
+# Model pieces
+# --------------------------------------------------------------------------
+
+def _layer_norm(x: jax.Array, g: jax.Array, b: jax.Array,
+                eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _mha(x: jax.Array, mask: jax.Array, p: dict[str, jax.Array], i: int,
+         *, causal: bool) -> jax.Array:
+    """Multi-head attention over (b, s, DIM) through the Pallas SDPA kernel."""
+    b, s, _ = x.shape
+    q = x @ p[f"l{i}.wq"]
+    k = x @ p[f"l{i}.wk"]
+    v = x @ p[f"l{i}.wv"]
+
+    def split(t):  # (b, s, DIM) → (b·H, s, HEAD_DIM)
+        return (t.reshape(b, s, HEADS, HEAD_DIM)
+                 .transpose(0, 2, 1, 3)
+                 .reshape(b * HEADS, s, HEAD_DIM))
+
+    kmask = jnp.repeat(mask, HEADS, axis=0)  # (b·H, s)
+    o = attention(split(q), split(k), split(v), kmask, causal=causal)
+    o = (o.reshape(b, HEADS, s, HEAD_DIM)
+          .transpose(0, 2, 1, 3)
+          .reshape(b, s, DIM))
+    return o @ p[f"l{i}.wo"]
+
+
+def _block(x: jax.Array, mask: jax.Array, p: dict[str, jax.Array], i: int,
+           *, causal: bool) -> jax.Array:
+    h = x + _mha(_layer_norm(x, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"]),
+                 mask, p, i, causal=causal)
+    z = _layer_norm(h, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+    z = jax.nn.gelu(z @ p[f"l{i}.w1"] + p[f"l{i}.ffn1_b"])
+    return h + z @ p[f"l{i}.w2"] + p[f"l{i}.ffn2_b"]
+
+
+def _transformer(theta: jax.Array, ids: jax.Array, mask: jax.Array, *,
+                 layers: int, causal: bool) -> tuple[jax.Array, dict]:
+    pack = transformer_pack(layers, causal=causal)
+    p = pack.slices(theta)
+    s = ids.shape[1]
+    x = p["tok_emb"][ids] + p["pos_emb"][None, :s, :]
+    x = x * mask[:, :, None]
+    for i in range(layers):
+        x = _block(x, mask, p, i, causal=causal)
+    x = _layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x, p
+
+
+# --------------------------------------------------------------------------
+# Exported graphs (each becomes one or more HLO artifacts)
+# --------------------------------------------------------------------------
+
+def projection_embed(theta: jax.Array, feats: jax.Array) -> tuple[jax.Array]:
+    """(b, VOCAB) counts → (b, DIM) unit embeddings via the Pallas kernel."""
+    w = theta[: VOCAB * DIM].reshape(VOCAB, DIM)
+    b = theta[VOCAB * DIM: VOCAB * DIM + DIM]
+    return (project(feats, w, b),)
+
+
+def encoder_embed(theta: jax.Array, ids: jax.Array,
+                  mask: jax.Array) -> tuple[jax.Array]:
+    """(b, ENC_SEQ) token ids → (b, DIM) unit embeddings (masked mean-pool)."""
+    x, _ = _transformer(theta, ids, mask, layers=ENC_LAYERS, causal=False)
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    pooled = jnp.sum(x * mask[:, :, None], axis=1) / denom
+    norm = jnp.sqrt(jnp.sum(pooled * pooled, axis=-1, keepdims=True) + 1e-6)
+    return (pooled / norm,)
+
+
+def scores(q: jax.Array, e: jax.Array) -> tuple[jax.Array]:
+    """(b, d) × (n, d) → (b, n) similarity scores via the Pallas kernel."""
+    return (similarity(q, e),)
+
+
+def prefill_logits(theta: jax.Array, ids: jax.Array) -> tuple[jax.Array]:
+    """Causal prefill: (1, PREFILL_SEQ) ids → (1, VOCAB) last-position logits.
+
+    The proxy for the LLM prefill stage of TTFT: same dataflow (embed →
+    causal attention stack → head matmul), scaled down. Padding positions
+    carry id 0 and are masked out.
+    """
+    mask = (ids != 0).astype(jnp.float32)
+    mask = mask.at[:, 0].set(1.0)  # BOS always valid
+    x, p = _transformer(theta, ids, mask, layers=PREFILL_LAYERS, causal=True)
+    # last valid position per row
+    last = jnp.maximum(jnp.sum(mask, axis=1).astype(jnp.int32) - 1, 0)
+    h = x[jnp.arange(ids.shape[0]), last]  # (b, DIM)
+    return (h @ p["head_w"],)

@@ -1,0 +1,78 @@
+"""Deterministic hashed tokenizer — the python mirror of
+`rust/src/embedding/tokenizer.rs`.
+
+Both sides must agree bit-for-bit: the rust coordinator tokenizes on the
+request path, while python uses the same scheme at build/test time to
+validate kernels and to produce golden vectors.
+
+Scheme
+------
+* lowercase, split on any non-alphanumeric byte
+* token id = 2 + (FNV-1a-32(word) % (VOCAB - 2))   (0 = PAD, 1 = CLS)
+* bag-of-tokens features: raw counts per id (exact in f32), used by the
+  hash-projection embedder
+* sequence form: [CLS] + ids, truncated/zero-padded to a fixed length,
+  used by the transformer embedder
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+VOCAB = 4096
+PAD_ID = 0
+CLS_ID = 1
+SEQ_LEN = 64
+
+_FNV_OFFSET = 0x811C9DC5
+_FNV_PRIME = 0x01000193
+_MASK = 0xFFFFFFFF
+
+
+def fnv1a32(data: bytes) -> int:
+    h = _FNV_OFFSET
+    for byte in data:
+        h ^= byte
+        h = (h * _FNV_PRIME) & _MASK
+    return h
+
+
+def words(text: str) -> list[str]:
+    out, cur = [], []
+    for ch in text.lower():
+        if ch.isascii() and (ch.isalnum()):
+            cur.append(ch)
+        else:
+            if cur:
+                out.append("".join(cur))
+                cur = []
+    if cur:
+        out.append("".join(cur))
+    return out
+
+
+def token_id(word: str) -> int:
+    return 2 + fnv1a32(word.encode("utf-8")) % (VOCAB - 2)
+
+
+def token_ids(text: str) -> list[int]:
+    return [token_id(w) for w in words(text)]
+
+
+def features(text: str) -> np.ndarray:
+    """Bag-of-tokens count vector, f32[VOCAB]."""
+    f = np.zeros(VOCAB, dtype=np.float32)
+    for tid in token_ids(text):
+        f[tid] += 1.0
+    return f
+
+
+def sequence(text: str, seq_len: int = SEQ_LEN) -> tuple[np.ndarray, np.ndarray]:
+    """([CLS] + ids) padded to seq_len → (ids i32[seq_len], mask f32[seq_len])."""
+    ids = [CLS_ID] + token_ids(text)
+    ids = ids[:seq_len]
+    mask = np.zeros(seq_len, dtype=np.float32)
+    mask[: len(ids)] = 1.0
+    arr = np.zeros(seq_len, dtype=np.int32)
+    arr[: len(ids)] = ids
+    return arr, mask

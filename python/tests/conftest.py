@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Tests import `compile.*` the same way aot.py is invoked (from python/).
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+# Pallas interpret-mode is slow; keep example counts modest but meaningful.
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")

@@ -1,0 +1,89 @@
+"""L1 attention kernel vs oracle: padding masks, causal masks, stability."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.attention import attention
+from compile.kernels.ref import attention_ref
+
+
+def _qkv(rng, bh, s, dh):
+    q = jnp.asarray(rng.standard_normal((bh, s, dh)), dtype=jnp.float32)
+    k = jnp.asarray(rng.standard_normal((bh, s, dh)), dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((bh, s, dh)), dtype=jnp.float32)
+    return q, k, v
+
+
+def _mask(rng, bh, s):
+    lens = rng.integers(1, s + 1, bh)
+    m = np.zeros((bh, s), dtype=np.float32)
+    for i, L in enumerate(lens):
+        m[i, :L] = 1.0
+    return jnp.asarray(m)
+
+
+@given(
+    bh=st.sampled_from([1, 4, 16]),
+    s=st.sampled_from([8, 64, 128]),
+    dh=st.sampled_from([16, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref(bh, s, dh, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = _qkv(rng, bh, s, dh)
+    m = _mask(rng, bh, s)
+    got = attention(q, k, v, m, causal=causal)
+    want = attention_ref(q, k, v, m, causal=causal)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_padding_keys_have_no_influence():
+    """Changing values at masked-out key positions must not change output."""
+    rng = np.random.default_rng(3)
+    q, k, v = _qkv(rng, 2, 16, 32)
+    m = np.ones((2, 16), dtype=np.float32)
+    m[:, 10:] = 0.0
+    m = jnp.asarray(m)
+    out1 = attention(q, k, v, m)
+    k2 = k.at[:, 10:, :].set(999.0)
+    v2 = v.at[:, 10:, :].set(-999.0)
+    out2 = attention(q, k2, v2, m)
+    assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5, atol=1e-5)
+
+
+def test_causal_future_has_no_influence():
+    rng = np.random.default_rng(4)
+    q, k, v = _qkv(rng, 1, 32, 16)
+    m = jnp.ones((1, 32), dtype=jnp.float32)
+    out1 = attention(q, k, v, m, causal=True)
+    k2 = k.at[:, 20:, :].set(123.0)
+    v2 = v.at[:, 20:, :].set(-123.0)
+    out2 = attention(q, k2, v2, m, causal=True)
+    # positions < 20 must be identical
+    assert_allclose(np.asarray(out1)[:, :20], np.asarray(out2)[:, :20],
+                    rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_stability_large_logits():
+    rng = np.random.default_rng(5)
+    q, k, v = _qkv(rng, 1, 8, 16)
+    q = q * 1e3  # huge logits — unstabilized softmax would overflow
+    m = jnp.ones((1, 8), dtype=jnp.float32)
+    out = np.asarray(attention(q, k, v, m))
+    assert np.isfinite(out).all()
+
+
+def test_uniform_attention_when_keys_equal():
+    """Identical keys ⇒ output = mean of values."""
+    rng = np.random.default_rng(6)
+    q = jnp.asarray(rng.standard_normal((1, 4, 8)), dtype=jnp.float32)
+    k = jnp.ones((1, 4, 8), dtype=jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 4, 8)), dtype=jnp.float32)
+    m = jnp.ones((1, 4), dtype=jnp.float32)
+    out = np.asarray(attention(q, k, v, m))
+    want = np.broadcast_to(np.asarray(v).mean(axis=1, keepdims=True),
+                           out.shape)
+    assert_allclose(out, want, rtol=1e-5, atol=1e-5)

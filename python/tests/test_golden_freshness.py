@@ -1,0 +1,44 @@
+"""The committed golden files must match what the current code + shipped
+weights produce (catches drift between tokenizer/model changes and the
+cross-language contract)."""
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile import tokenizer as tok
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "..")
+GOLDEN = os.path.join(ROOT, "tests", "golden")
+ARTIFACTS = os.path.join(ROOT, "artifacts")
+
+
+def test_embedding_golden_fresh():
+    path = os.path.join(GOLDEN, "embeddings.json")
+    if not os.path.exists(path):
+        pytest.skip("golden not generated")
+    with open(path) as f:
+        g = json.load(f)
+    theta = np.fromfile(
+        os.path.join(ARTIFACTS, "weights", "projection.bin"), dtype="<f4"
+    )
+    feats = np.stack([tok.features(t) for t in g["texts"]])
+    (proj,) = model.projection_embed(jnp.asarray(theta), jnp.asarray(feats))
+    np.testing.assert_allclose(
+        np.asarray(proj), np.asarray(g["projection"]), atol=2e-6
+    )
+
+    enc_theta = np.fromfile(
+        os.path.join(ARTIFACTS, "weights", "encoder.bin"), dtype="<f4"
+    )
+    pairs = [tok.sequence(t) for t in g["texts"]]
+    ids = np.stack([p[0] for p in pairs])
+    mask = np.stack([p[1] for p in pairs])
+    (enc,) = model.encoder_embed(
+        jnp.asarray(enc_theta), jnp.asarray(ids), jnp.asarray(mask)
+    )
+    np.testing.assert_allclose(np.asarray(enc), np.asarray(g["encoder"]), atol=2e-6)

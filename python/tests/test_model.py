@@ -1,0 +1,102 @@
+"""L2 model graphs: shapes, determinism, pooling/masking semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+
+
+def _enc_theta(seed=2):
+    return jnp.asarray(
+        model.transformer_pack(model.ENC_LAYERS, causal=False).init(seed))
+
+
+def _pre_theta(seed=3):
+    return jnp.asarray(
+        model.transformer_pack(model.PREFILL_LAYERS, causal=True).init(seed))
+
+
+def test_param_pack_roundtrip():
+    p = model.transformer_pack(2, causal=True)
+    theta = jnp.arange(p.total, dtype=jnp.float32)
+    sl = p.slices(theta)
+    # every element is covered exactly once, in order
+    flat = jnp.concatenate([sl[n].reshape(-1) for n, _ in p.entries])
+    assert_allclose(np.asarray(flat), np.asarray(theta))
+
+
+def test_param_init_deterministic():
+    p = model.projection_pack()
+    assert_allclose(p.init(1), p.init(1))
+    assert not np.allclose(p.init(1), p.init(2))
+
+
+def test_encoder_shapes_and_norm():
+    theta = _enc_theta()
+    ids = jnp.zeros((2, model.ENC_SEQ), dtype=jnp.int32)
+    ids = ids.at[:, 0].set(1).at[0, 1:5].set(jnp.asarray([10, 20, 30, 40]))
+    mask = (ids != 0).astype(jnp.float32).at[:, 0].set(1.0)
+    (e,) = model.encoder_embed(theta, ids, mask)
+    assert e.shape == (2, model.DIM)
+    assert_allclose(np.linalg.norm(np.asarray(e), axis=1), np.ones(2),
+                    rtol=1e-4)
+
+
+def test_encoder_padding_invariance():
+    """Garbage in padded positions must not change the embedding."""
+    theta = _enc_theta()
+    ids = np.zeros((1, model.ENC_SEQ), dtype=np.int32)
+    ids[0, :6] = [1, 11, 22, 33, 44, 55]
+    mask = np.zeros((1, model.ENC_SEQ), dtype=np.float32)
+    mask[0, :6] = 1.0
+    (e1,) = model.encoder_embed(theta, jnp.asarray(ids), jnp.asarray(mask))
+    ids2 = ids.copy()
+    ids2[0, 6:] = 777  # garbage beyond the mask
+    (e2,) = model.encoder_embed(theta, jnp.asarray(ids2), jnp.asarray(mask))
+    assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-5, atol=1e-5)
+
+
+def test_encoder_batch_consistency():
+    """Row i of a batched call equals a singleton call (buckets can't change
+    the numbers)."""
+    theta = _enc_theta()
+    rng = np.random.default_rng(0)
+    ids = rng.integers(2, model.VOCAB, (8, model.ENC_SEQ)).astype(np.int32)
+    ids[:, 0] = 1
+    mask = np.ones((8, model.ENC_SEQ), dtype=np.float32)
+    (full,) = model.encoder_embed(theta, jnp.asarray(ids), jnp.asarray(mask))
+    (one,) = model.encoder_embed(theta, jnp.asarray(ids[3:4]),
+                                 jnp.asarray(mask[3:4]))
+    assert_allclose(np.asarray(full)[3], np.asarray(one)[0],
+                    rtol=1e-4, atol=1e-4)
+
+
+def test_prefill_shapes_and_finite():
+    theta = _pre_theta()
+    ids = np.zeros((1, model.PREFILL_SEQ), dtype=np.int32)
+    ids[0, :10] = np.arange(1, 11)
+    (logits,) = model.prefill_logits(theta, jnp.asarray(ids))
+    assert logits.shape == (1, model.VOCAB)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_prefill_uses_last_valid_position():
+    """Appending a token after padding start must change logits; garbage in
+    the padded tail must not."""
+    theta = _pre_theta()
+    ids = np.zeros((1, model.PREFILL_SEQ), dtype=np.int32)
+    ids[0, :5] = [1, 7, 8, 9, 10]
+    (l1,) = model.prefill_logits(theta, jnp.asarray(ids))
+    ids2 = ids.copy()
+    ids2[0, 5] = 42  # one more real token
+    (l2,) = model.prefill_logits(theta, jnp.asarray(ids2))
+    assert not np.allclose(np.asarray(l1), np.asarray(l2))
+
+
+def test_scores_graph_matches_matmul():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, model.DIM)), dtype=jnp.float32)
+    e = jnp.asarray(rng.standard_normal((128, model.DIM)), dtype=jnp.float32)
+    (s,) = model.scores(q, e)
+    assert_allclose(np.asarray(s), np.asarray(q @ e.T), rtol=2e-5, atol=2e-5)

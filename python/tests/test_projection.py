@@ -1,0 +1,78 @@
+"""L1 projection kernel vs oracle + embedding invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels.projection import project
+from compile.kernels.ref import projection_ref
+
+
+def _pack(rng, vocab, dim):
+    theta = rng.standard_normal(vocab * dim + dim).astype(np.float32)
+    return jnp.asarray(theta)
+
+
+@given(
+    b=st.sampled_from([1, 4, 32]),
+    vocab=st.sampled_from([256, 1024, 4096]),
+    dim=st.sampled_from([64, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref(b, vocab, dim, seed):
+    rng = np.random.default_rng(seed)
+    theta = _pack(rng, vocab, dim)
+    feats = jnp.asarray(
+        rng.poisson(0.01, (b, vocab)).astype(np.float32))
+    w = theta[: vocab * dim].reshape(vocab, dim)
+    bias = theta[vocab * dim:]
+    got = project(feats, w, bias)
+    want = projection_ref(theta, feats, dim=dim)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+@given(block_k=st.sampled_from([128, 256, 512, 1024]), seed=st.integers(0, 99))
+def test_block_k_invariance(block_k, seed):
+    rng = np.random.default_rng(seed)
+    vocab, dim, b = 1024, 64, 4
+    theta = _pack(rng, vocab, dim)
+    feats = jnp.asarray(rng.poisson(0.05, (b, vocab)).astype(np.float32))
+    w = theta[: vocab * dim].reshape(vocab, dim)
+    bias = theta[vocab * dim:]
+    got = project(feats, w, bias, block_k=block_k)
+    want = projection_ref(theta, feats, dim=dim)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+def test_output_is_unit_norm():
+    rng = np.random.default_rng(7)
+    theta = _pack(rng, 4096, 256)
+    feats = jnp.asarray(rng.poisson(0.01, (8, 4096)).astype(np.float32))
+    out = np.asarray(model.projection_embed(theta, feats)[0])
+    assert_allclose(np.linalg.norm(out, axis=1), np.ones(8), rtol=1e-4)
+
+
+def test_similar_texts_closer_than_dissimilar():
+    """The embedding must preserve token-overlap structure (what retrieval
+    quality experiments depend on)."""
+    rng = np.random.default_rng(8)
+    theta = _pack(rng, 4096, 256)
+    base = rng.poisson(0.02, 4096).astype(np.float32)
+    near = base.copy()
+    near[rng.integers(0, 4096, 5)] += 1.0            # small perturbation
+    far = rng.poisson(0.02, 4096).astype(np.float32)  # unrelated
+    feats = jnp.asarray(np.stack([base, near, far]))
+    e = np.asarray(model.projection_embed(theta, feats)[0])
+    assert e[0] @ e[1] > e[0] @ e[2]
+
+
+def test_zero_features_finite():
+    rng = np.random.default_rng(9)
+    theta = _pack(rng, 1024, 64)
+    feats = jnp.zeros((2, 1024), dtype=jnp.float32)
+    w = theta[: 1024 * 64].reshape(1024, 64)
+    bias = theta[1024 * 64:]
+    out = np.asarray(project(feats, w, bias))
+    assert np.isfinite(out).all()

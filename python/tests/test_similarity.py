@@ -1,0 +1,68 @@
+"""L1 similarity kernel vs pure-jnp oracle: shape/dtype sweep."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.ref import similarity_ref
+from compile.kernels.similarity import similarity
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+@given(
+    b=st.sampled_from([1, 2, 8, 32]),
+    n=st.sampled_from([8, 128, 256, 384, 1024]),
+    d=st.sampled_from([32, 128, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_matches_ref(b, n, d, seed):
+    rng = np.random.default_rng(seed)
+    q, e = _rand(rng, b, d), _rand(rng, n, d)
+    got = similarity(q, e)
+    want = similarity_ref(q, e)
+    assert got.shape == (b, n)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@given(
+    block_n=st.sampled_from([32, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_block_size_invariance(block_n, seed):
+    """Scores must not depend on the tiling choice."""
+    rng = np.random.default_rng(seed)
+    q, e = _rand(rng, 4, 128), _rand(rng, 256, 128)
+    got = similarity(q, e, block_n=block_n)
+    want = similarity_ref(q, e)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_unit_vectors_cosine_bounds():
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((2, 64)).astype(np.float32)
+    e = rng.standard_normal((128, 64)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    e /= np.linalg.norm(e, axis=1, keepdims=True)
+    s = np.asarray(similarity(jnp.asarray(q), jnp.asarray(e)))
+    assert np.all(s <= 1.0 + 1e-5) and np.all(s >= -1.0 - 1e-5)
+
+
+def test_self_similarity_is_max():
+    rng = np.random.default_rng(1)
+    e = rng.standard_normal((128, 64)).astype(np.float32)
+    e /= np.linalg.norm(e, axis=1, keepdims=True)
+    s = np.asarray(similarity(jnp.asarray(e[:4]), jnp.asarray(e)))
+    assert (s.argmax(axis=1) == np.arange(4)).all()
+
+
+def test_non_multiple_n_falls_back():
+    rng = np.random.default_rng(2)
+    q = jnp.asarray(rng.standard_normal((1, 64)), dtype=jnp.float32)
+    e = jnp.asarray(rng.standard_normal((100, 64)), dtype=jnp.float32)
+    got = similarity(q, e)  # 100 % 128 != 0 → single-tile fallback
+    assert_allclose(np.asarray(got), np.asarray(similarity_ref(q, e)),
+                    rtol=2e-5, atol=2e-5)

@@ -1,0 +1,77 @@
+"""Tokenizer: invariants + cross-language golden vectors.
+
+The golden file (tests/golden/tokenizer.json at the repo root) is consumed
+by BOTH this test and `rust/tests/tokenizer_golden.rs` — the two
+implementations must agree bit-for-bit since rust tokenizes on the serving
+path and python at kernel-validation time.
+"""
+
+import json
+import os
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from compile import tokenizer as tok
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "..", "..",
+                      "tests", "golden", "tokenizer.json")
+
+
+def test_golden_vectors():
+    with open(GOLDEN) as f:
+        cases = json.load(f)
+    assert len(cases) >= 8
+    for case in cases:
+        assert tok.token_ids(case["text"]) == case["ids"], case["text"]
+
+
+def test_fnv1a_known_values():
+    # Published FNV-1a 32-bit test vectors.
+    assert tok.fnv1a32(b"") == 0x811C9DC5
+    assert tok.fnv1a32(b"a") == 0xE40C292C
+    assert tok.fnv1a32(b"foobar") == 0xBF9CF968
+
+
+@given(st.text(max_size=200))
+def test_ids_in_range(text):
+    for tid in tok.token_ids(text):
+        assert 2 <= tid < tok.VOCAB
+
+
+@given(st.text(alphabet=st.characters(max_codepoint=127), max_size=200))
+def test_case_insensitive(text):
+    # ASCII-only property: non-ascii characters may case-map INTO ascii
+    # (e.g. 'ſ'.upper() == 'S'), which legitimately changes tokenization.
+    assert tok.token_ids(text) == tok.token_ids(text.upper())
+
+
+@given(st.text(max_size=100))
+def test_features_match_ids(text):
+    f = tok.features(text)
+    ids = tok.token_ids(text)
+    assert f.sum() == len(ids)
+    for tid in set(ids):
+        assert f[tid] == ids.count(tid)
+
+
+def test_sequence_layout():
+    ids, mask = tok.sequence("hello world")
+    assert ids[0] == tok.CLS_ID
+    assert mask[:3].tolist() == [1.0, 1.0, 1.0]
+    assert mask[3:].sum() == 0
+    assert ids[3:].sum() == 0
+
+
+def test_sequence_truncation():
+    text = " ".join(f"w{i}" for i in range(500))
+    ids, mask = tok.sequence(text)
+    assert len(ids) == tok.SEQ_LEN
+    assert mask.sum() == tok.SEQ_LEN
+
+
+def test_empty_text():
+    assert tok.token_ids("") == []
+    assert tok.features("").sum() == 0
+    ids, mask = tok.sequence("")
+    assert ids[0] == tok.CLS_ID and mask.sum() == 1.0

@@ -1,0 +1,84 @@
+"""Regenerate the cross-language golden files in tests/golden/.
+
+    cd python && python tools/gen_golden.py
+
+* tokenizer.json  — token ids for a fixed text set (rust + python tests)
+* embeddings.json — projection + encoder embeddings computed by the jax/
+  Pallas (interpret) path using the shipped artifact weights; the rust
+  test re-computes them through PJRT-compiled HLO and compares.
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+from compile import tokenizer as tok
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+GOLDEN = os.path.join(ROOT, "tests", "golden")
+ARTIFACTS = os.path.join(ROOT, "artifacts")
+
+TOKENIZER_TEXTS = [
+    "hello world",
+    "Hello, World!",
+    "the quick brown fox jumps over the lazy dog",
+    "EdgeRAG: Online-Indexed RAG for Edge Devices",
+    "retrieval augmented generation 2024",
+    "a",
+    "  multiple   spaces\tand\nnewlines ",
+    "123 456 alpha-beta_gamma",
+    "repeated repeated repeated words words",
+    "punctuation!!! only??? ...",
+    "UTF ascii only caf test",
+    "inverted file index clusters embeddings of data chunks into centroids",
+]
+
+EMBED_TEXTS = [
+    "hello world",
+    "edge devices run small language models efficiently",
+    "t3w7 t3w12 c100 c200 retrieval augmented generation",
+]
+
+
+def main() -> None:
+    os.makedirs(GOLDEN, exist_ok=True)
+
+    cases = [{"text": t, "ids": tok.token_ids(t)} for t in TOKENIZER_TEXTS]
+    with open(os.path.join(GOLDEN, "tokenizer.json"), "w") as f:
+        json.dump(cases, f, indent=1)
+    print(f"tokenizer.json: {len(cases)} cases")
+
+    theta = np.fromfile(
+        os.path.join(ARTIFACTS, "weights", "projection.bin"), dtype="<f4"
+    )
+    feats = np.stack([tok.features(t) for t in EMBED_TEXTS])
+    (proj,) = model.projection_embed(jnp.asarray(theta), jnp.asarray(feats))
+
+    enc_theta = np.fromfile(
+        os.path.join(ARTIFACTS, "weights", "encoder.bin"), dtype="<f4"
+    )
+    pairs = [tok.sequence(t) for t in EMBED_TEXTS]
+    ids = np.stack([p[0] for p in pairs])
+    mask = np.stack([p[1] for p in pairs])
+    (enc,) = model.encoder_embed(
+        jnp.asarray(enc_theta), jnp.asarray(ids), jnp.asarray(mask)
+    )
+
+    out = {
+        "texts": EMBED_TEXTS,
+        "projection": np.asarray(proj).astype(float).round(6).tolist(),
+        "encoder": np.asarray(enc).astype(float).round(6).tolist(),
+    }
+    with open(os.path.join(GOLDEN, "embeddings.json"), "w") as f:
+        json.dump(out, f)
+    print(f"embeddings.json: {np.asarray(proj).shape} + {np.asarray(enc).shape}")
+
+
+if __name__ == "__main__":
+    main()

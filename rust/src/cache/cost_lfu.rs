@@ -1,0 +1,354 @@
+//! Cost-aware Least-Frequently-Used embedding cache — paper Algorithm 2.
+//!
+//! Each entry is one cluster's generated embeddings, weighted by its
+//! profiled generation latency. Eviction removes the entry minimizing
+//! `genLatency × useCounter` (cheap-to-regenerate AND rarely used first);
+//! counters decay multiplicatively after every access so the policy tracks
+//! shifting query mixes.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::vecmath::EmbeddingMatrix;
+
+#[derive(Debug)]
+struct Entry {
+    /// Shared with callers: hits hand out an `Arc` clone instead of
+    /// copying the whole matrix (perf pass §Perf item L3-1).
+    emb: Arc<EmbeddingMatrix>,
+    /// Profiled generation latency, milliseconds (the cost weight).
+    gen_latency_ms: f64,
+    /// Use counter as of `epoch` (lazily decayed — §Perf item L3-2).
+    counter: f64,
+    /// Decay epoch at which `counter` was last materialized.
+    epoch: u64,
+    bytes: u64,
+}
+
+impl Entry {
+    /// Counter decayed forward to `now` without mutating.
+    fn counter_at(&self, now: u64, decay: f64) -> f64 {
+        self.counter * decay.powi((now - self.epoch) as i32)
+    }
+}
+
+/// Statistics the experiment harness reports (hit rates, Fig. 7).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub rejected_below_threshold: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The cost-aware LFU cache over generated cluster embeddings.
+///
+/// Algorithm 2's trailing "decay every counter after each access" loop is
+/// implemented lazily: a global epoch advances per access, and each
+/// entry's counter is materialized as `counter × decay^(epoch − touched)`
+/// on demand — O(1) per access instead of O(entries), with identical
+/// eviction decisions (uniform multiplicative decay preserves relative
+/// weights between touches).
+#[derive(Debug)]
+pub struct CostAwareCache {
+    capacity_bytes: u64,
+    used_bytes: u64,
+    decay: f64,
+    epoch: u64,
+    entries: HashMap<u32, Entry>,
+    stats: CacheStats,
+}
+
+impl CostAwareCache {
+    pub fn new(capacity_bytes: u64, decay: f64) -> Self {
+        assert!((0.0..=1.0).contains(&decay));
+        CostAwareCache {
+            capacity_bytes,
+            used_bytes: 0,
+            decay,
+            epoch: 0,
+            entries: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn contains(&self, cluster: u32) -> bool {
+        self.entries.contains_key(&cluster)
+    }
+
+    /// Look up a cluster's embeddings. On hit, bumps the entry's counter;
+    /// the global decay epoch advances either way (Algorithm 2's trailing
+    /// decay loop, applied lazily).
+    pub fn access(&mut self, cluster: u32) -> Option<Arc<EmbeddingMatrix>> {
+        let now = self.epoch;
+        let decay = self.decay;
+        let out = match self.entries.get_mut(&cluster) {
+            Some(e) => {
+                self.stats.hits += 1;
+                e.counter = e.counter_at(now, decay) + 1.0;
+                e.epoch = now;
+                Some(e.emb.clone())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        };
+        self.epoch += 1; // every access decays all counters once
+        out
+    }
+
+    /// Insert a freshly generated cluster (Algorithm 2 miss path), evicting
+    /// minimum `genLatency × counter` entries until it fits. Entries larger
+    /// than the whole cache are not cached. Returns evicted cluster ids
+    /// (callers release their memory-model regions).
+    pub fn insert(
+        &mut self,
+        cluster: u32,
+        emb: Arc<EmbeddingMatrix>,
+        gen_latency_ms: f64,
+    ) -> Vec<u32> {
+        let bytes = emb.bytes();
+        let mut evicted = Vec::new();
+        if bytes > self.capacity_bytes {
+            return evicted; // would displace everything; never worth it
+        }
+        // Re-inserting an id replaces the old entry (size may differ after
+        // cluster updates): release its bytes first.
+        self.remove(cluster);
+        while self.used_bytes + bytes > self.capacity_bytes {
+            // Weighted-LFU victim: min genLatency × (lazily decayed) counter.
+            let (now, decay) = (self.epoch, self.decay);
+            let victim = self
+                .entries
+                .iter()
+                .min_by(|a, b| {
+                    let ka = a.1.gen_latency_ms * a.1.counter_at(now, decay);
+                    let kb = b.1.gen_latency_ms * b.1.counter_at(now, decay);
+                    ka.partial_cmp(&kb).unwrap()
+                })
+                .map(|(id, _)| *id);
+            match victim {
+                Some(v) => {
+                    self.remove(v);
+                    self.stats.evictions += 1;
+                    evicted.push(v);
+                }
+                None => break,
+            }
+        }
+        self.used_bytes += bytes;
+        self.entries.insert(
+            cluster,
+            Entry {
+                emb,
+                gen_latency_ms,
+                counter: 1.0,
+                epoch: self.epoch,
+                bytes,
+            },
+        );
+        self.stats.insertions += 1;
+        evicted
+    }
+
+    /// Count an insertion rejected by the adaptive threshold (Alg. 3 gate).
+    pub fn note_rejected(&mut self) {
+        self.stats.rejected_below_threshold += 1;
+    }
+
+    /// Remove one entry (threshold-driven eviction or cluster removal).
+    pub fn remove(&mut self, cluster: u32) -> bool {
+        if let Some(e) = self.entries.remove(&cluster) {
+            self.used_bytes -= e.bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Evict every entry whose generation latency is below `threshold_ms`
+    /// (Algorithm 3: "evicts and prevents caching of cluster embeddings
+    /// whose generation latency falls below the threshold"). Returns the
+    /// evicted ids.
+    pub fn evict_below(&mut self, threshold_ms: f64) -> Vec<u32> {
+        let victims: Vec<u32> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.gen_latency_ms < threshold_ms)
+            .map(|(id, _)| *id)
+            .collect();
+        for v in &victims {
+            self.remove(*v);
+            self.stats.evictions += 1;
+        }
+        victims
+    }
+
+    /// (cluster id, genLatency×counter) pairs — introspection for tests
+    /// and the metrics endpoint.
+    pub fn weights(&self) -> Vec<(u32, f64)> {
+        self.entries
+            .iter()
+            .map(|(id, e)| (*id, e.gen_latency_ms * e.counter_at(self.epoch, self.decay)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn emb(rows: usize) -> Arc<EmbeddingMatrix> {
+        let mut m = EmbeddingMatrix::new(4);
+        for i in 0..rows {
+            m.push(&[i as f32; 4]);
+        }
+        Arc::new(m)
+    }
+
+    fn row_bytes() -> u64 {
+        16
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let mut c = CostAwareCache::new(1000, 0.9);
+        assert!(c.access(1).is_none());
+        c.insert(1, emb(2), 50.0);
+        assert!(c.access(1).is_some());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 1, 1));
+        assert_eq!(c.used_bytes(), 2 * row_bytes());
+    }
+
+    #[test]
+    fn evicts_min_cost_times_counter() {
+        // capacity for exactly two 1-row entries
+        let mut c = CostAwareCache::new(2 * row_bytes(), 1.0);
+        c.insert(1, emb(1), 100.0); // weight 100×1
+        c.insert(2, emb(1), 10.0);  // weight 10×1
+        // bump 2's counter so weights become 100 vs 10×~2
+        c.access(2);
+        // inserting 3 must evict the *lower* weight entry — still 2? 10×2=20 < 100
+        let evicted = c.insert(3, emb(1), 50.0);
+        assert_eq!(evicted, vec![2]);
+        assert!(c.contains(1) && c.contains(3));
+    }
+
+    #[test]
+    fn frequency_protects_cheap_entries() {
+        let mut c = CostAwareCache::new(2 * row_bytes(), 1.0);
+        c.insert(1, emb(1), 10.0);
+        c.insert(2, emb(1), 100.0);
+        for _ in 0..20 {
+            c.access(1); // weight(1) = 10 × 21 = 210 > 100
+        }
+        let evicted = c.insert(3, emb(1), 50.0);
+        assert_eq!(evicted, vec![2], "frequently-used cheap entry must survive");
+    }
+
+    #[test]
+    fn counters_decay() {
+        let mut c = CostAwareCache::new(1000, 0.5);
+        c.insert(1, emb(1), 10.0);
+        c.access(1); // counter: 1 → 2, then decay → 1.0
+        c.access(9); // miss; decay → 0.5
+        c.access(9); // miss; decay → 0.25
+        let w = c.weights();
+        let w1 = w.iter().find(|(id, _)| *id == 1).unwrap().1;
+        assert!((w1 - 10.0 * 0.25).abs() < 1e-9, "weight {w1}");
+    }
+
+    #[test]
+    fn oversized_entry_not_cached() {
+        let mut c = CostAwareCache::new(3 * row_bytes(), 0.9);
+        c.insert(1, emb(1), 10.0);
+        let evicted = c.insert(2, emb(10), 99.0);
+        assert!(evicted.is_empty());
+        assert!(!c.contains(2));
+        assert!(c.contains(1), "existing entries must not be displaced");
+    }
+
+    #[test]
+    fn evict_below_threshold() {
+        let mut c = CostAwareCache::new(1000, 0.9);
+        c.insert(1, emb(1), 5.0);
+        c.insert(2, emb(1), 50.0);
+        c.insert(3, emb(1), 500.0);
+        let mut v = c.evict_below(60.0);
+        v.sort_unstable();
+        assert_eq!(v, vec![1, 2]);
+        assert!(c.contains(3));
+    }
+
+    #[test]
+    fn multi_entry_eviction_for_large_insert() {
+        let mut c = CostAwareCache::new(4 * row_bytes(), 1.0);
+        c.insert(1, emb(1), 1.0);
+        c.insert(2, emb(1), 2.0);
+        c.insert(3, emb(1), 3.0);
+        c.insert(4, emb(1), 4.0);
+        // inserting a 3-row entry must evict the three cheapest
+        let mut evicted = c.insert(9, emb(3), 100.0);
+        evicted.sort_unstable();
+        assert_eq!(evicted, vec![1, 2, 3]);
+        assert!(c.contains(4) && c.contains(9));
+        assert!(c.used_bytes() <= c.capacity_bytes());
+    }
+
+    #[test]
+    fn capacity_invariant_holds_randomized() {
+        // Property-style sweep with the deterministic Rng: the capacity
+        // invariant and stats consistency hold under arbitrary workloads.
+        let mut rng = crate::data::Rng::new(42);
+        let mut c = CostAwareCache::new(64 * row_bytes(), 0.9);
+        for _ in 0..2000 {
+            let id = rng.below(50) as u32;
+            if rng.f64() < 0.5 {
+                c.access(id);
+            } else {
+                let rows = rng.range(1, 8);
+                let lat = rng.f64() * 1000.0;
+                c.insert(id, emb(rows), lat);
+            }
+            assert!(c.used_bytes() <= c.capacity_bytes());
+            let by_sum: u64 = c.weights().len() as u64;
+            assert_eq!(by_sum as usize, c.len());
+        }
+        let s = c.stats();
+        assert!(s.hits > 0 && s.misses > 0 && s.evictions > 0);
+    }
+}

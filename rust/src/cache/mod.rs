@@ -1,0 +1,9 @@
+//! EdgeRAG's adaptive cost-aware caching layer (paper §4.2): the
+//! cost-aware LFU cache (Algorithm 2) gated by the adaptive Minimum
+//! Latency Caching Threshold (Algorithm 3).
+
+pub mod cost_lfu;
+pub mod threshold;
+
+pub use cost_lfu::{CacheStats, CostAwareCache};
+pub use threshold::ThresholdController;

@@ -1,0 +1,171 @@
+//! Minimum Latency Caching Threshold controller — paper Algorithm 3.
+//!
+//! Gates what the cost-aware cache may hold: clusters whose generation
+//! latency is below the threshold are not worth caching (they regenerate
+//! fast anyway), so the cache's bytes concentrate on expensive clusters.
+//!
+//! The controller is a simple feedback loop over per-query observations:
+//! on a cache miss whose retrieval latency came out *above* the moving
+//! average, the threshold increases (pressure: reserve the cache for
+//! costlier clusters); on a hit it decreases (slack: we can afford to
+//! cache more). The paper's prose and pseudocode disagree on the miss
+//! comparison's direction (`movAvgLatency < lastLatency` in Algorithm 3 vs
+//! "current retrieval latency is lower than the moving average" in §4.2);
+//! we follow the pseudocode, which is the stable direction: misses that
+//! hurt latency push the threshold up.
+
+/// Adaptive threshold state.
+#[derive(Debug, Clone)]
+pub struct ThresholdController {
+    threshold_ms: f64,
+    mov_avg_ms: f64,
+    alpha: f64,
+    step_ms: f64,
+    /// Upper bound (the dataset SLO): clusters costlier than the SLO are
+    /// always worth caching, so the threshold never exceeds it. Also
+    /// prevents controller runaway on low-reuse workloads.
+    cap_ms: f64,
+    observations: u64,
+}
+
+impl ThresholdController {
+    /// `alpha`: EWMA coefficient for the moving-average latency;
+    /// `step_ms`: the `++`/`--` increment of Algorithm 3.
+    pub fn new(alpha: f64, step_ms: f64, cap_ms: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        ThresholdController {
+            threshold_ms: 0.0, // Algorithm 3: initialize to 0 (cache all)
+            mov_avg_ms: 0.0,
+            alpha,
+            step_ms,
+            cap_ms,
+            observations: 0,
+        }
+    }
+
+    pub fn threshold_ms(&self) -> f64 {
+        self.threshold_ms
+    }
+
+    pub fn moving_avg_ms(&self) -> f64 {
+        self.mov_avg_ms
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Would a cluster with this generation latency be cached right now?
+    pub fn should_cache(&self, gen_latency_ms: f64) -> bool {
+        gen_latency_ms >= self.threshold_ms
+    }
+
+    /// Feed one query's outcome (Algorithm 3 body).
+    pub fn observe(&mut self, cache_miss: bool, last_latency_ms: f64) {
+        if self.observations == 0 {
+            self.mov_avg_ms = last_latency_ms; // seed the EWMA
+        }
+        if cache_miss {
+            if self.mov_avg_ms < last_latency_ms {
+                self.threshold_ms = (self.threshold_ms + self.step_ms).min(self.cap_ms);
+            }
+        } else {
+            self.threshold_ms = (self.threshold_ms - self.step_ms).max(0.0);
+        }
+        self.mov_avg_ms =
+            (1.0 - self.alpha) * self.mov_avg_ms + self.alpha * last_latency_ms;
+        self.observations += 1;
+    }
+
+    /// Pin the threshold (used by the Fig. 7 sweep, which evaluates fixed
+    /// thresholds instead of the adaptive loop).
+    pub fn pin(&mut self, threshold_ms: f64) {
+        self.threshold_ms = threshold_ms;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_zero_caching_everything() {
+        let t = ThresholdController::new(0.2, 10.0, 1_000.0);
+        assert_eq!(t.threshold_ms(), 0.0);
+        assert!(t.should_cache(0.001));
+    }
+
+    #[test]
+    fn slow_misses_raise_threshold() {
+        let mut t = ThresholdController::new(0.2, 10.0, 1_000.0);
+        t.observe(true, 100.0); // seeds avg at 100; no raise (avg !< last)
+        for _ in 0..5 {
+            t.observe(true, 500.0); // misses far above average
+        }
+        assert!(t.threshold_ms() >= 40.0, "threshold {}", t.threshold_ms());
+    }
+
+    #[test]
+    fn hits_lower_threshold_to_zero_floor() {
+        let mut t = ThresholdController::new(0.2, 10.0, 1_000.0);
+        t.pin(25.0);
+        t.observe(false, 10.0);
+        t.observe(false, 10.0);
+        assert!((t.threshold_ms() - 5.0).abs() < 1e-9);
+        t.observe(false, 10.0);
+        assert_eq!(t.threshold_ms(), 0.0, "must clamp at zero");
+        t.observe(false, 10.0);
+        assert_eq!(t.threshold_ms(), 0.0);
+    }
+
+    #[test]
+    fn fast_misses_do_not_raise() {
+        let mut t = ThresholdController::new(0.2, 10.0, 1_000.0);
+        t.observe(true, 1000.0); // seed high
+        t.observe(true, 10.0);   // fast miss: avg(1000) < last(10)? no → no raise
+        assert_eq!(t.threshold_ms(), 0.0);
+    }
+
+    #[test]
+    fn ewma_tracks_latency() {
+        let mut t = ThresholdController::new(0.5, 1.0, 1_000.0);
+        t.observe(false, 100.0);
+        assert!((t.moving_avg_ms() - 100.0).abs() < 1e-9);
+        t.observe(false, 200.0);
+        assert!((t.moving_avg_ms() - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cap_bounds_threshold() {
+        let mut t = ThresholdController::new(0.2, 100.0, 250.0);
+        t.observe(true, 100.0);
+        for _ in 0..50 {
+            t.observe(true, 10_000.0);
+        }
+        assert!(t.threshold_ms() <= 250.0);
+    }
+
+    #[test]
+    fn converges_under_alternating_load() {
+        // Mixed hits/misses with stable latency: threshold must stay
+        // bounded (no runaway).
+        let mut t = ThresholdController::new(0.2, 10.0, 1_000.0);
+        let mut rng = crate::data::Rng::new(3);
+        for i in 0..10_000 {
+            let miss = i % 3 == 0;
+            let lat = 200.0 + 50.0 * rng.normal();
+            t.observe(miss, lat.max(1.0));
+            assert!(t.threshold_ms() >= 0.0);
+            assert!(t.threshold_ms() < 5_000.0, "runaway threshold");
+        }
+    }
+
+    #[test]
+    fn should_cache_respects_threshold() {
+        let mut t = ThresholdController::new(0.2, 10.0, 1_000.0);
+        t.pin(100.0);
+        assert!(!t.should_cache(50.0));
+        assert!(t.should_cache(100.0));
+        assert!(t.should_cache(500.0));
+    }
+}

@@ -1,0 +1,676 @@
+//! Configuration system: device profiles, dataset profiles, index/serving
+//! configuration. Everything serializes to JSON (via the in-tree `json`
+//! substrate) so deployments ship a config file; built-in profiles mirror
+//! the paper's testbed (Table 1/3) and evaluated datasets (Table 2) at the
+//! 1:100 scale DESIGN.md §3 documents.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json::{self, Value};
+use crate::simtime::SimDuration;
+
+/// Physical characteristics of the modeled edge device.
+///
+/// Calibration (see DESIGN.md §3 and EXPERIMENTS.md): rates are chosen so
+/// the paper's observed phenomena hold in our scaled world —
+/// * embedding generation beats storage loads below ~24 kB of cluster text
+///   (paper Fig. 4 crossover) because small scattered blobs pay SD-card
+///   random-IO rates while generation is compute-rate-bound;
+/// * large precomputed blobs are contiguous and load at sequential
+///   bandwidth, which is why storing only the heavy tail wins (Fig. 12);
+/// * datasets whose embedding DB exceeds the memory budget thrash, with
+///   page-ins at random-IO rates plus LLM-weight eviction (Fig. 3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    pub name: String,
+    /// Total memory available to the RAG process (embeddings + cache + LLM).
+    pub mem_total_bytes: u64,
+    /// Resident size of the generation model's weights.
+    pub llm_weight_bytes: u64,
+    /// Fixed overhead per online embedding-generation call (dispatch,
+    /// tokenize, kernel launch).
+    pub embed_gen_overhead_us: u64,
+    /// Embedding-generation throughput of the device NPU/GPU, in corpus
+    /// characters per second.
+    pub embed_gen_chars_per_sec: f64,
+    /// Seek / open latency for a contiguous blob read.
+    pub storage_seek_us: u64,
+    /// Fixed overhead of a *scattered* read (extent-map walk + queueing of
+    /// the dozens of small random IOs a paged-out FAISS cluster needs).
+    /// This constant, together with the two bandwidths, places the paper's
+    /// Fig. 4 gen-vs-load crossover at ~24 kB of cluster text.
+    pub storage_scatter_overhead_us: u64,
+    /// Small scattered (page-sized) read bandwidth — SD UHS-I random IO.
+    pub storage_random_bps: f64,
+    /// Contiguous blob read bandwidth — SD UHS-I sequential.
+    pub storage_seq_bps: f64,
+    /// Effective bandwidth of *thrash* page-ins (4 KiB mmap fault storms
+    /// with page-cache churn and write-back interference — far worse than
+    /// a clean scattered read of the same bytes; this is what makes the
+    /// paper's Fig. 3/12 IVF tail so heavy).
+    pub thrash_bps: f64,
+    /// In-memory similarity-scan rate (bytes of embeddings per second).
+    pub mem_scan_bps: f64,
+    /// LLM prefill rate, prompt tokens per second.
+    pub prefill_tokens_per_sec: f64,
+    /// Average characters per token for the corpus/LLM tokenizer.
+    pub chars_per_token: f64,
+}
+
+impl DeviceProfile {
+    /// The paper's testbed (Jetson Orin Nano, Table 3) at 1:100 data scale.
+    pub fn jetson_orin_nano() -> Self {
+        DeviceProfile {
+            name: "jetson-orin-nano-1:100".into(),
+            // 48 MiB represents the 8 GiB device; the LLM working set
+            // (Sheared-LLaMA-2.7B fp16 + KV + runtime ≈ 5.4 GiB, i.e.
+            // ~2/3 of device RAM) takes 32 MiB, leaving a 16 MiB index
+            // budget — the same proportions as the paper's testbed, which
+            // classify Table 2 exactly (quora lands at the "nearly
+            // exceeds memory" boundary §6.3.4 describes).
+            mem_total_bytes: 48 << 20,
+            llm_weight_bytes: 32 << 20,
+            embed_gen_overhead_us: 1_000,
+            embed_gen_chars_per_sec: 100_000.0,
+            storage_seek_us: 1_000,
+            storage_scatter_overhead_us: 25_000,
+            storage_random_bps: 450e3, // SD UHS-I small-random
+            storage_seq_bps: 20e6,     // SD UHS-I sequential
+            thrash_bps: 120e3,         // mmap fault storms under pressure
+            mem_scan_bps: 2e9,
+            prefill_tokens_per_sec: 1_200.0,
+            chars_per_token: 4.0,
+        }
+    }
+
+    /// A hypothetical NVMe-equipped edge box — used by the storage-
+    /// sensitivity ablation (EXPERIMENTS.md §Ablations).
+    pub fn edge_nvme() -> Self {
+        DeviceProfile {
+            name: "edge-nvme-1:100".into(),
+            storage_seek_us: 100,
+            storage_scatter_overhead_us: 400,
+            storage_random_bps: 40e6,
+            storage_seq_bps: 600e6,
+            thrash_bps: 10e6,
+            ..Self::jetson_orin_nano()
+        }
+    }
+
+    /// A server-class reference (Nvidia L40 row of Table 1): everything
+    /// fits, nothing thrashes — the contrast row for Fig. 3.
+    pub fn server_l40() -> Self {
+        DeviceProfile {
+            name: "server-l40-1:100".into(),
+            mem_total_bytes: 384 << 20,
+            embed_gen_chars_per_sec: 2e6,
+            prefill_tokens_per_sec: 20_000.0,
+            storage_seek_us: 50,
+            storage_scatter_overhead_us: 200,
+            storage_random_bps: 100e6,
+            storage_seq_bps: 2e9,
+            thrash_bps: 50e6,
+            ..Self::jetson_orin_nano()
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DeviceProfile> {
+        match name {
+            "jetson" | "jetson-orin-nano" => Some(Self::jetson_orin_nano()),
+            "nvme" | "edge-nvme" => Some(Self::edge_nvme()),
+            "server" | "server-l40" => Some(Self::server_l40()),
+            _ => None,
+        }
+    }
+
+    pub fn embed_gen_overhead(&self) -> SimDuration {
+        SimDuration::from_micros(self.embed_gen_overhead_us)
+    }
+
+    pub fn storage_seek(&self) -> SimDuration {
+        SimDuration::from_micros(self.storage_seek_us)
+    }
+
+    /// Modeled cost of generating embeddings for `chars` characters of text.
+    pub fn embed_gen_cost(&self, chars: u64) -> SimDuration {
+        self.embed_gen_overhead()
+            + SimDuration::from_secs_f64(chars as f64 / self.embed_gen_chars_per_sec)
+    }
+
+    /// Modeled cost of a storage read. Contiguous blobs (precomputed tail
+    /// clusters, sequential flat-scan pages, LLM weight reloads) stream at
+    /// sequential bandwidth after one seek; scattered reads (paged-out
+    /// cluster embeddings) pay the scatter overhead plus random-IO rate.
+    pub fn storage_read_cost(&self, bytes: u64, contiguous: bool) -> SimDuration {
+        if contiguous {
+            self.storage_seek()
+                + SimDuration::from_secs_f64(bytes as f64 / self.storage_seq_bps)
+        } else {
+            SimDuration::from_micros(self.storage_scatter_overhead_us)
+                + SimDuration::from_secs_f64(bytes as f64 / self.storage_random_bps)
+        }
+    }
+
+    /// Modeled cost of faulting `bytes` back in under memory pressure
+    /// (thrash): mmap fault storms, page-cache churn, write-back
+    /// interference. Strictly worse than a clean scattered read.
+    pub fn thrash_cost(&self, bytes: u64) -> SimDuration {
+        SimDuration::from_micros(self.storage_scatter_overhead_us)
+            + SimDuration::from_secs_f64(bytes as f64 / self.thrash_bps)
+    }
+
+    /// Modeled cost of an in-memory similarity scan over `bytes` of
+    /// embeddings.
+    pub fn mem_scan_cost(&self, bytes: u64) -> SimDuration {
+        SimDuration::from_secs_f64(bytes as f64 / self.mem_scan_bps)
+    }
+
+    /// Modeled LLM prefill cost for a prompt of `tokens`.
+    pub fn prefill_cost(&self, tokens: u64) -> SimDuration {
+        SimDuration::from_secs_f64(tokens as f64 / self.prefill_tokens_per_sec)
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("name", Value::str(&self.name)),
+            ("mem_total_bytes", self.mem_total_bytes.into()),
+            ("llm_weight_bytes", self.llm_weight_bytes.into()),
+            ("embed_gen_overhead_us", self.embed_gen_overhead_us.into()),
+            ("embed_gen_chars_per_sec", self.embed_gen_chars_per_sec.into()),
+            ("storage_seek_us", self.storage_seek_us.into()),
+            (
+                "storage_scatter_overhead_us",
+                self.storage_scatter_overhead_us.into(),
+            ),
+            ("storage_random_bps", self.storage_random_bps.into()),
+            ("storage_seq_bps", self.storage_seq_bps.into()),
+            ("thrash_bps", self.thrash_bps.into()),
+            ("mem_scan_bps", self.mem_scan_bps.into()),
+            ("prefill_tokens_per_sec", self.prefill_tokens_per_sec.into()),
+            ("chars_per_token", self.chars_per_token.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(DeviceProfile {
+            name: v.req("name")?.as_str().context("name")?.into(),
+            mem_total_bytes: v.req("mem_total_bytes")?.as_u64().context("mem")?,
+            llm_weight_bytes: v.req("llm_weight_bytes")?.as_u64().context("llm")?,
+            embed_gen_overhead_us: v
+                .req("embed_gen_overhead_us")?
+                .as_u64()
+                .context("overhead")?,
+            embed_gen_chars_per_sec: v
+                .req("embed_gen_chars_per_sec")?
+                .as_f64()
+                .context("gen rate")?,
+            storage_seek_us: v.req("storage_seek_us")?.as_u64().context("seek")?,
+            storage_scatter_overhead_us: v
+                .req("storage_scatter_overhead_us")?
+                .as_u64()
+                .context("scatter")?,
+            storage_random_bps: v.req("storage_random_bps")?.as_f64().context("rbps")?,
+            storage_seq_bps: v.req("storage_seq_bps")?.as_f64().context("sbps")?,
+            thrash_bps: v.req("thrash_bps")?.as_f64().context("thrash")?,
+            mem_scan_bps: v.req("mem_scan_bps")?.as_f64().context("scan")?,
+            prefill_tokens_per_sec: v
+                .req("prefill_tokens_per_sec")?
+                .as_f64()
+                .context("prefill")?,
+            chars_per_token: v.req("chars_per_token")?.as_f64().context("cpt")?,
+        })
+    }
+}
+
+/// One evaluated dataset (Table 2), scaled 1:100 in record count while
+/// keeping per-cluster text sizes paper-scale (DESIGN.md §3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetProfile {
+    pub name: String,
+    /// Number of data chunks (≈ records at this scale).
+    pub n_chunks: usize,
+    /// Number of queries in the evaluation workload.
+    pub n_queries: usize,
+    /// Target cluster-access reuse ratio (Table 2: total/unique accesses).
+    pub reuse_ratio: f64,
+    /// Number of topic groups in the generative corpus model; controls how
+    /// many natural clusters exist.
+    pub n_topics: usize,
+    /// Mean characters per chunk.
+    pub chunk_chars_mean: usize,
+    /// Lognormal sigma of topic (→ cluster) sizes; ~1.0 gives the paper's
+    /// tail-heavy Fig. 5 shape.
+    pub cluster_sigma: f64,
+    /// Retrieval SLO for this dataset (paper §6.2: 1 s small, 1.5 s large).
+    pub slo_ms: u64,
+    /// Corpus-generator seed (workloads are fully deterministic).
+    pub seed: u64,
+    /// Per-dataset nprobe, tuned (paper §6.2) to normalize recall against
+    /// the flat baseline (`edgerag tune --dataset X` re-derives it).
+    pub nprobe: usize,
+}
+
+impl DatasetProfile {
+    pub fn slo(&self) -> SimDuration {
+        SimDuration::from_millis(self.slo_ms)
+    }
+
+    /// Approximate embedding-database size for this dataset (dim f32).
+    pub fn embedding_bytes(&self, dim: usize) -> u64 {
+        (self.n_chunks * dim * 4) as u64
+    }
+
+    /// The six BEIR-suite profiles of Table 2 at 1:100 scale.
+    pub fn beir_suite() -> Vec<DatasetProfile> {
+        vec![
+            DatasetProfile {
+                name: "scidocs".into(),
+                n_chunks: 2_000,
+                n_queries: 200,
+                reuse_ratio: 1.73,
+                n_topics: 120,
+                chunk_chars_mean: 256,
+                cluster_sigma: 1.2,
+                slo_ms: 1_000,
+                seed: 101,
+                nprobe: 8,
+            },
+            DatasetProfile {
+                name: "fiqa".into(),
+                n_chunks: 6_000,
+                n_queries: 1_329,
+                reuse_ratio: 4.47,
+                n_topics: 360,
+                chunk_chars_mean: 256,
+                cluster_sigma: 1.2,
+                slo_ms: 1_000,
+                seed: 102,
+                nprobe: 8,
+            },
+            DatasetProfile {
+                name: "quora".into(),
+                n_chunks: 16_000,
+                n_queries: 3_000,
+                reuse_ratio: 1.91,
+                n_topics: 1_000,
+                chunk_chars_mean: 160,
+                cluster_sigma: 1.2,
+                slo_ms: 1_000,
+                seed: 103,
+                nprobe: 12,
+            },
+            DatasetProfile {
+                name: "nq".into(),
+                n_chunks: 40_000,
+                n_queries: 1_024,
+                reuse_ratio: 1.25,
+                n_topics: 2_400,
+                chunk_chars_mean: 256,
+                cluster_sigma: 1.2,
+                slo_ms: 1_500,
+                seed: 104,
+                nprobe: 16,
+            },
+            DatasetProfile {
+                name: "hotpotqa".into(),
+                n_chunks: 64_000,
+                n_queries: 2_210,
+                reuse_ratio: 1.42,
+                n_topics: 3_900,
+                chunk_chars_mean: 256,
+                cluster_sigma: 1.2,
+                slo_ms: 1_500,
+                seed: 105,
+                nprobe: 24,
+            },
+            DatasetProfile {
+                name: "fever".into(),
+                n_chunks: 72_000,
+                n_queries: 1_392,
+                reuse_ratio: 2.41,
+                n_topics: 4_360,
+                chunk_chars_mean: 288,
+                cluster_sigma: 1.3,
+                slo_ms: 1_500,
+                seed: 106,
+                nprobe: 24,
+            },
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<DatasetProfile> {
+        if name == "tiny" {
+            return Some(Self::tiny());
+        }
+        Self::beir_suite().into_iter().find(|d| d.name == name)
+    }
+
+    /// A tiny profile for tests and the quickstart example.
+    pub fn tiny() -> DatasetProfile {
+        DatasetProfile {
+            name: "tiny".into(),
+            n_chunks: 512,
+            n_queries: 64,
+            reuse_ratio: 2.0,
+            n_topics: 8,
+            chunk_chars_mean: 200,
+            cluster_sigma: 0.8,
+            slo_ms: 1_000,
+            seed: 7,
+            nprobe: 4,
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("name", Value::str(&self.name)),
+            ("n_chunks", self.n_chunks.into()),
+            ("n_queries", self.n_queries.into()),
+            ("reuse_ratio", self.reuse_ratio.into()),
+            ("n_topics", self.n_topics.into()),
+            ("chunk_chars_mean", self.chunk_chars_mean.into()),
+            ("cluster_sigma", self.cluster_sigma.into()),
+            ("slo_ms", self.slo_ms.into()),
+            ("seed", self.seed.into()),
+            ("nprobe", self.nprobe.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(DatasetProfile {
+            name: v.req("name")?.as_str().context("name")?.into(),
+            n_chunks: v.req("n_chunks")?.as_usize().context("n_chunks")?,
+            n_queries: v.req("n_queries")?.as_usize().context("n_queries")?,
+            reuse_ratio: v.req("reuse_ratio")?.as_f64().context("reuse")?,
+            n_topics: v.req("n_topics")?.as_usize().context("topics")?,
+            chunk_chars_mean: v
+                .req("chunk_chars_mean")?
+                .as_usize()
+                .context("chunk chars")?,
+            cluster_sigma: v.req("cluster_sigma")?.as_f64().context("sigma")?,
+            slo_ms: v.req("slo_ms")?.as_u64().context("slo")?,
+            seed: v.req("seed")?.as_u64().context("seed")?,
+            nprobe: v.req("nprobe")?.as_usize().context("nprobe")?,
+        })
+    }
+}
+
+/// Which of the paper's five evaluated index configurations (Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IndexKind {
+    /// Linear scan of all embeddings, all in memory.
+    Flat,
+    /// Two-level IVF, both levels' embeddings in memory.
+    Ivf,
+    /// Two-level, second level pruned, embeddings generated online.
+    IvfGen,
+    /// + heavy tail clusters precomputed and loaded from storage.
+    IvfGenLoad,
+    /// + cost-aware adaptive caching — the full EdgeRAG system.
+    EdgeRag,
+}
+
+impl IndexKind {
+    pub const ALL: [IndexKind; 5] = [
+        IndexKind::Flat,
+        IndexKind::Ivf,
+        IndexKind::IvfGen,
+        IndexKind::IvfGenLoad,
+        IndexKind::EdgeRag,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IndexKind::Flat => "flat",
+            IndexKind::Ivf => "ivf",
+            IndexKind::IvfGen => "ivf+gen",
+            IndexKind::IvfGenLoad => "ivf+gen+load",
+            IndexKind::EdgeRag => "edgerag",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<IndexKind> {
+        Self::ALL.into_iter().find(|k| k.name() == name)
+    }
+
+    pub fn uses_storage(self) -> bool {
+        matches!(self, IndexKind::IvfGenLoad | IndexKind::EdgeRag)
+    }
+
+    pub fn uses_cache(self) -> bool {
+        matches!(self, IndexKind::EdgeRag)
+    }
+}
+
+/// Retrieval / serving parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetrievalConfig {
+    /// Clusters probed per query (IVF nprobe). Tuned per dataset to
+    /// normalize recall against the flat baseline (paper §6.2).
+    pub nprobe: usize,
+    /// Data chunks returned to the LLM.
+    pub top_k: usize,
+    /// Embedding-cache capacity in bytes (paper: ≈7% of system memory).
+    pub cache_capacity_bytes: u64,
+    /// Cost-aware LFU decay factor (Alg. 2).
+    pub cache_decay: f64,
+    /// Adaptive-threshold step in milliseconds (Alg. 3 `++`/`--`).
+    pub threshold_step_ms: f64,
+    /// EWMA alpha for the moving-average latency (Alg. 3).
+    pub latency_ewma_alpha: f64,
+    /// Selective-storage limit as a fraction of the dataset SLO: clusters
+    /// whose gen cost exceeds `store_slo_fraction × SLO` are precomputed.
+    pub store_slo_fraction: f64,
+    /// Max prompt tokens fed to the LLM (query + retrieved chunks).
+    pub max_prompt_tokens: usize,
+}
+
+impl Default for RetrievalConfig {
+    fn default() -> Self {
+        RetrievalConfig {
+            nprobe: 8,
+            top_k: 5,
+            cache_capacity_bytes: 4 << 20, // ≈7% of the 64 MiB budget
+            cache_decay: 0.9,
+            threshold_step_ms: 2.0,
+            latency_ewma_alpha: 0.2,
+            store_slo_fraction: 0.33,
+            max_prompt_tokens: 2048,
+        }
+    }
+}
+
+impl RetrievalConfig {
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("nprobe", self.nprobe.into()),
+            ("top_k", self.top_k.into()),
+            ("cache_capacity_bytes", self.cache_capacity_bytes.into()),
+            ("cache_decay", self.cache_decay.into()),
+            ("threshold_step_ms", self.threshold_step_ms.into()),
+            ("latency_ewma_alpha", self.latency_ewma_alpha.into()),
+            ("store_slo_fraction", self.store_slo_fraction.into()),
+            ("max_prompt_tokens", self.max_prompt_tokens.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        Ok(RetrievalConfig {
+            nprobe: v.req("nprobe")?.as_usize().context("nprobe")?,
+            top_k: v.req("top_k")?.as_usize().context("top_k")?,
+            cache_capacity_bytes: v
+                .req("cache_capacity_bytes")?
+                .as_u64()
+                .context("cache cap")?,
+            cache_decay: v.req("cache_decay")?.as_f64().context("decay")?,
+            threshold_step_ms: v.req("threshold_step_ms")?.as_f64().context("step")?,
+            latency_ewma_alpha: v
+                .req("latency_ewma_alpha")?
+                .as_f64()
+                .context("alpha")?,
+            store_slo_fraction: v
+                .req("store_slo_fraction")?
+                .as_f64()
+                .context("fraction")?,
+            max_prompt_tokens: v
+                .req("max_prompt_tokens")?
+                .as_usize()
+                .context("prompt tokens")?,
+        })
+    }
+}
+
+/// Top-level config: what `edgerag serve`/`edgerag bench` load from JSON.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub device: DeviceProfile,
+    pub dataset: DatasetProfile,
+    pub index: IndexKind,
+    pub retrieval: RetrievalConfig,
+    /// Directory holding AOT artifacts (manifest.json etc.).
+    pub artifacts_dir: String,
+    /// Directory for on-disk index state (blob store).
+    pub state_dir: String,
+}
+
+impl SystemConfig {
+    pub fn new(dataset: DatasetProfile, index: IndexKind) -> Self {
+        SystemConfig {
+            device: DeviceProfile::jetson_orin_nano(),
+            dataset,
+            index,
+            retrieval: RetrievalConfig::default(),
+            artifacts_dir: "artifacts".into(),
+            state_dir: "target/edgerag-state".into(),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::object(vec![
+            ("device", self.device.to_json()),
+            ("dataset", self.dataset.to_json()),
+            ("index", Value::str(self.index.name())),
+            ("retrieval", self.retrieval.to_json()),
+            ("artifacts_dir", Value::str(&self.artifacts_dir)),
+            ("state_dir", Value::str(&self.state_dir)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let index_name = v.req("index")?.as_str().context("index")?;
+        Ok(SystemConfig {
+            device: DeviceProfile::from_json(v.req("device")?)?,
+            dataset: DatasetProfile::from_json(v.req("dataset")?)?,
+            index: IndexKind::by_name(index_name)
+                .with_context(|| format!("unknown index kind `{index_name}`"))?,
+            retrieval: RetrievalConfig::from_json(v.req("retrieval")?)?,
+            artifacts_dir: v.req("artifacts_dir")?.as_str().context("dir")?.into(),
+            state_dir: v.req("state_dir")?.as_str().context("state")?.into(),
+        })
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gen_vs_load_crossover_matches_fig4() {
+        // Paper Fig. 4: generating embeddings for clusters below ~24 kB of
+        // text is faster than loading their (scattered) embeddings.
+        let d = DeviceProfile::jetson_orin_nano();
+        let emb_bytes = |chars: u64| chars / 256 * 1024; // 1 KiB per 256-char chunk
+        let small = 12_000u64;
+        let big = 48_000u64;
+        assert!(d.embed_gen_cost(small) < d.storage_read_cost(emb_bytes(small), false));
+        assert!(d.embed_gen_cost(big) > d.storage_read_cost(emb_bytes(big), false));
+    }
+
+    #[test]
+    fn tail_cluster_sequential_load_beats_generation() {
+        // Why selective storage works: a 600 kB-of-text tail cluster takes
+        // seconds to generate but loads fast as one contiguous blob.
+        let d = DeviceProfile::jetson_orin_nano();
+        let chars = 600_000u64;
+        let bytes = chars / 256 * 1024;
+        let gen = d.embed_gen_cost(chars);
+        let load = d.storage_read_cost(bytes, true);
+        assert!(gen.as_millis() > 2_000, "gen = {gen}");
+        assert!(load < gen, "load {load} !< gen {gen}");
+        assert!(gen.as_nanos() / load.as_nanos().max(1) >= 4);
+    }
+
+    #[test]
+    fn table2_memory_fit_classification() {
+        // Table 2 "Fit in Dev. Mem": scidocs/fiqa/quora fit, nq/hotpotqa/
+        // fever do not (after the LLM's resident share).
+        let d = DeviceProfile::jetson_orin_nano();
+        let budget = d.mem_total_bytes - d.llm_weight_bytes;
+        for ds in DatasetProfile::beir_suite() {
+            let fits = ds.embedding_bytes(256) <= budget;
+            let expect = matches!(ds.name.as_str(), "scidocs" | "fiqa" | "quora");
+            assert_eq!(fits, expect, "{} fits={}", ds.name, fits);
+        }
+    }
+
+    #[test]
+    fn beir_suite_matches_table2_ordering() {
+        let suite = DatasetProfile::beir_suite();
+        assert_eq!(suite.len(), 6);
+        // embedding sizes must preserve the paper's ordering
+        let sizes: Vec<u64> = suite.iter().map(|d| d.embedding_bytes(256)).collect();
+        for w in sizes.windows(2).take(4) {
+            assert!(w[0] < w[1], "sizes not increasing: {sizes:?}");
+        }
+        // fever > hotpotqa in embedding bytes (Table 2: 18.5 GB > 15.4 GB)
+        let fever = suite.iter().find(|d| d.name == "fever").unwrap();
+        let hotpot = suite.iter().find(|d| d.name == "hotpotqa").unwrap();
+        assert!(fever.embedding_bytes(256) > hotpot.embedding_bytes(256));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = SystemConfig::new(DatasetProfile::tiny(), IndexKind::EdgeRag);
+        let text = cfg.to_json().pretty();
+        let back = SystemConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn index_kind_names_roundtrip() {
+        for k in IndexKind::ALL {
+            assert_eq!(IndexKind::by_name(k.name()), Some(k));
+        }
+        assert_eq!(IndexKind::by_name("nope"), None);
+    }
+
+    #[test]
+    fn prefill_cost_linear() {
+        let d = DeviceProfile::jetson_orin_nano();
+        let a = d.prefill_cost(600);
+        let b = d.prefill_cost(1200);
+        assert_eq!(b.as_nanos(), 2 * a.as_nanos());
+        assert_eq!(a.as_millis(), 500);
+    }
+
+    #[test]
+    fn device_by_name() {
+        assert!(DeviceProfile::by_name("jetson").is_some());
+        assert!(DeviceProfile::by_name("nvme").is_some());
+        assert!(DeviceProfile::by_name("server").is_some());
+        assert!(DeviceProfile::by_name("x").is_none());
+    }
+}

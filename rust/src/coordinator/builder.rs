@@ -1,0 +1,453 @@
+//! System builder: turns a [`DatasetProfile`] + [`IndexKind`] into a
+//! ready-to-serve [`RagPipeline`] — corpus generation, embedding (with an
+//! on-disk build cache), k-means clustering (paper Fig. 8), and index
+//! construction.
+//!
+//! The embedding/k-means build cache mirrors the paper's methodology
+//! (§6.2: "the embedding clustering process … is precomputed and shared
+//! across all four configurations"): all index configurations of one
+//! dataset share identical clustering.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{DatasetProfile, DeviceProfile, IndexKind, RetrievalConfig};
+use crate::coordinator::retrieval::RagPipeline;
+use crate::data::{Corpus, Workload};
+use crate::embedding::{Embedder, EmbedderBackend};
+use crate::index::kmeans::{kmeans, KMeansConfig};
+use crate::index::{
+    shared_memory, ClusterSet, EdgeIndex, EmbedSource, FlatIndex, IvfIndex, Scorer, VectorIndex,
+};
+use crate::llm::Llm;
+use crate::runtime::ComputeHandle;
+use crate::simtime::SimDuration;
+use crate::storage::BlobStore;
+use crate::vecmath::EmbeddingMatrix;
+
+#[derive(Debug, Clone)]
+pub struct BuildOptions {
+    pub backend: EmbedderBackend,
+    /// Execute the real compiled prefill graph per query (examples) or
+    /// only charge its modeled cost (figure-scale benches).
+    pub real_prefill: bool,
+    /// Cache embeddings + clustering under this directory.
+    pub cache_dir: Option<PathBuf>,
+    /// Blob-store root (per dataset/config subdirs are created below it).
+    pub state_dir: PathBuf,
+    pub kmeans_iterations: usize,
+    /// First-level size; defaults to the profile's topic count.
+    pub nlist: Option<usize>,
+    /// Serve online generation from the verified-equal prebuilt matrix
+    /// (fast) instead of re-running the embedder (fully live).
+    pub prebuilt_generation: bool,
+    /// Clustering warm start: None = auto (topic means for ≥10k-chunk
+    /// corpora, full k-means++ otherwise); Some(x) forces it. Topic-mean
+    /// init preserves the corpus's tail-heavy natural cluster sizes that
+    /// from-scratch k-means++ tends to balance away on uniform synthetic
+    /// topics (DESIGN.md §7).
+    pub topic_init: Option<bool>,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        let target = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target");
+        BuildOptions {
+            backend: EmbedderBackend::Projection,
+            real_prefill: false,
+            cache_dir: Some(target.join("edgerag-cache")),
+            state_dir: target.join("edgerag-state"),
+            kmeans_iterations: 20, // paper §6.2
+            nlist: None,
+            prebuilt_generation: true,
+            topic_init: None,
+        }
+    }
+}
+
+/// Everything shared across the index configurations of one dataset.
+pub struct BuiltDataset {
+    pub profile: DatasetProfile,
+    pub corpus: Corpus,
+    pub workload: Workload,
+    pub embeddings: Arc<EmbeddingMatrix>,
+    pub centroids: EmbeddingMatrix,
+    pub assignment: Vec<u32>,
+    pub chunk_texts: Arc<Vec<String>>,
+}
+
+impl BuiltDataset {
+    pub fn cluster_set(&self, device: &DeviceProfile) -> ClusterSet {
+        ClusterSet::build(
+            &self.corpus,
+            self.centroids.clone(),
+            &self.assignment,
+            device,
+        )
+    }
+}
+
+/// Builds datasets and pipelines against one compute executor + device.
+#[derive(Clone)]
+pub struct SystemBuilder {
+    pub compute: ComputeHandle,
+    pub device: DeviceProfile,
+    pub retrieval: RetrievalConfig,
+    pub options: BuildOptions,
+}
+
+impl SystemBuilder {
+    pub fn new(compute: ComputeHandle, device: DeviceProfile) -> Self {
+        SystemBuilder {
+            compute,
+            device,
+            retrieval: RetrievalConfig::default(),
+            options: BuildOptions::default(),
+        }
+    }
+
+    /// A copy of this builder with an optional nprobe override (harness
+    /// sweeps).
+    pub fn clone_with_nprobe(&self, nprobe: Option<usize>) -> SystemBuilder {
+        let mut b = self.clone();
+        if let Some(np) = nprobe {
+            b.retrieval.nprobe = np;
+        }
+        b
+    }
+
+    pub fn embedder(&self) -> Embedder {
+        Embedder::new(self.compute.clone(), self.options.backend)
+    }
+
+    pub fn scorer(&self) -> Scorer {
+        Scorer::new(self.compute.clone())
+    }
+
+    /// Generate corpus + workload, embed every chunk, cluster. Heavy steps
+    /// are disk-cached keyed by (dataset, backend, nlist, iterations).
+    pub fn build_dataset(&self, profile: &DatasetProfile) -> Result<BuiltDataset> {
+        let corpus = Corpus::generate(profile);
+        let workload = Workload::generate(profile, &corpus);
+        let embedder = self.embedder();
+        let scorer = self.scorer();
+        let dim = scorer.dim();
+        let nlist = self.options.nlist.unwrap_or(profile.n_topics);
+
+        let key = format!(
+            "{}-{}-s{}-n{}-t{}-d{}",
+            profile.name,
+            self.options.backend.name(),
+            profile.seed,
+            profile.n_chunks,
+            profile.n_topics,
+            dim
+        );
+
+        // ---- embeddings (cached) ----
+        let emb_path = self
+            .options
+            .cache_dir
+            .as_ref()
+            .map(|d| d.join(format!("{key}.emb")));
+        let embeddings = match emb_path.as_ref().and_then(|p| load_matrix(p, dim).ok()) {
+            Some(m) if m.len() == corpus.len() => m,
+            _ => {
+                let texts = corpus.texts();
+                let m = embedder.embed_texts(&texts)?;
+                if let Some(p) = &emb_path {
+                    save_matrix(p, &m)?;
+                }
+                m
+            }
+        };
+        let embeddings = Arc::new(embeddings);
+
+        // ---- clustering (cached) ----
+        let km_path = self.options.cache_dir.as_ref().map(|d| {
+            d.join(format!(
+                "{key}-k{nlist}-i{}.km",
+                self.options.kmeans_iterations
+            ))
+        });
+        let (centroids, assignment) = match km_path
+            .as_ref()
+            .and_then(|p| load_kmeans(p, dim).ok())
+        {
+            Some((c, a)) if a.len() == corpus.len() => (c, a),
+            _ => {
+                // Large corpora warm-start from topic means (cheap, CPU)
+                // and refine with a few Lloyd iterations — the balanced-IVF
+                // configuration DESIGN.md §7 documents; small corpora run
+                // the paper's full 20-iteration k-means++ from scratch.
+                let auto = corpus.len() >= 10_000;
+                let use_topics = self.options.topic_init.unwrap_or(auto)
+                    && nlist == profile.n_topics;
+                let (init, iterations) = if use_topics {
+                    (Some(topic_means(&corpus, &embeddings, dim)), 3)
+                } else {
+                    (None, self.options.kmeans_iterations)
+                };
+                let km = kmeans(
+                    &embeddings,
+                    &KMeansConfig {
+                        n_clusters: nlist,
+                        iterations,
+                        seed: profile.seed,
+                        init,
+                    },
+                    &scorer,
+                )?;
+                if let Some(p) = &km_path {
+                    save_kmeans(p, &km.centroids, &km.assignment)?;
+                }
+                (km.centroids, km.assignment)
+            }
+        };
+
+        let chunk_texts = Arc::new(
+            corpus
+                .chunks
+                .iter()
+                .map(|c| c.text.clone())
+                .collect::<Vec<_>>(),
+        );
+        Ok(BuiltDataset {
+            profile: profile.clone(),
+            corpus,
+            workload,
+            embeddings,
+            centroids,
+            assignment,
+            chunk_texts,
+        })
+    }
+
+    fn embed_source(&self, built: &BuiltDataset) -> EmbedSource {
+        if self.options.prebuilt_generation {
+            EmbedSource::Prebuilt(built.embeddings.clone())
+        } else {
+            EmbedSource::Live {
+                embedder: self.embedder(),
+                texts: built.chunk_texts.clone(),
+            }
+        }
+    }
+
+    /// Construct one of the five Table-4 index configurations.
+    pub fn index(&self, built: &BuiltDataset, kind: IndexKind) -> Result<(Box<dyn VectorIndex>, crate::index::SharedMemory)> {
+        let memory = shared_memory(self.device.mem_total_bytes);
+        let scorer = self.scorer();
+        let index: Box<dyn VectorIndex> = match kind {
+            IndexKind::Flat => {
+                let idx = FlatIndex::new(
+                    built.embeddings.clone(),
+                    scorer,
+                    memory.clone(),
+                    self.device.clone(),
+                );
+                idx.preload(); // Table 4: flat keeps embeddings in memory
+                Box::new(idx)
+            }
+            IndexKind::Ivf => {
+                let set = built.cluster_set(&self.device);
+                let source = EmbedSource::Prebuilt(built.embeddings.clone());
+                let cluster_embs = set
+                    .clusters
+                    .iter()
+                    .map(|m| source.cluster_embeddings(m))
+                    .collect::<Result<Vec<_>>>()?;
+                let idx = IvfIndex::new(
+                    set,
+                    cluster_embs,
+                    scorer,
+                    memory.clone(),
+                    self.device.clone(),
+                    self.retrieval.nprobe,
+                );
+                idx.preload(); // Table 4: IVF keeps both levels in memory
+                Box::new(idx)
+            }
+            IndexKind::IvfGen | IndexKind::IvfGenLoad | IndexKind::EdgeRag => {
+                let set = built.cluster_set(&self.device);
+                let blob = if kind.uses_storage() {
+                    let dir = self
+                        .options
+                        .state_dir
+                        .join(&built.profile.name)
+                        .join(kind.name());
+                    Some(BlobStore::open(&dir, self.scorer().dim())?)
+                } else {
+                    None
+                };
+                let store_limit = SimDuration::from_secs_f64(
+                    built.profile.slo().as_secs_f64() * self.retrieval.store_slo_fraction,
+                );
+                Box::new(EdgeIndex::build(
+                    kind,
+                    set,
+                    self.embed_source(built),
+                    blob,
+                    scorer,
+                    memory.clone(),
+                    self.device.clone(),
+                    &self.retrieval,
+                    store_limit,
+                    built.profile.slo(),
+                )?)
+            }
+        };
+        Ok((index, memory))
+    }
+
+    /// Assemble the full serving pipeline for one configuration.
+    pub fn pipeline(&self, built: &BuiltDataset, kind: IndexKind) -> Result<RagPipeline> {
+        let (index, memory) = self.index(built, kind)?;
+        let llm = Llm::new(
+            self.device.clone(),
+            memory,
+            Some(self.compute.clone()),
+            self.retrieval.max_prompt_tokens,
+        );
+        Ok(RagPipeline::new(
+            index,
+            self.embedder(),
+            llm,
+            self.device.clone(),
+            crate::coordinator::texts::TextStore::new(built.chunk_texts.to_vec()),
+            self.retrieval.top_k,
+            self.options.real_prefill,
+        ))
+    }
+}
+
+/// Unit-normalized per-topic mean embeddings (k-means warm start).
+fn topic_means(corpus: &Corpus, embeddings: &EmbeddingMatrix, dim: usize) -> EmbeddingMatrix {
+    let mut sums = vec![0.0f64; corpus.n_topics * dim];
+    let mut counts = vec![0usize; corpus.n_topics];
+    for (i, chunk) in corpus.chunks.iter().enumerate() {
+        let t = chunk.topic as usize;
+        counts[t] += 1;
+        for (s, v) in sums[t * dim..(t + 1) * dim].iter_mut().zip(embeddings.row(i)) {
+            *s += *v as f64;
+        }
+    }
+    let mut m = EmbeddingMatrix::with_capacity(dim, corpus.n_topics);
+    for t in 0..corpus.n_topics {
+        let k = counts[t].max(1) as f64;
+        let mut row: Vec<f32> = sums[t * dim..(t + 1) * dim]
+            .iter()
+            .map(|&s| (s / k) as f32)
+            .collect();
+        let norm = crate::vecmath::l2_norm(&row).max(1e-9);
+        for v in &mut row {
+            *v /= norm;
+        }
+        m.push(&row);
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// Build cache persistence (raw little-endian blobs + tiny headers)
+// ---------------------------------------------------------------------------
+
+fn save_matrix(path: &Path, m: &EmbeddingMatrix) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut bytes = Vec::with_capacity(8 + m.data.len() * 4);
+    bytes.extend_from_slice(&(m.dim as u32).to_le_bytes());
+    bytes.extend_from_slice(&(m.len() as u32).to_le_bytes());
+    for v in &m.data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+fn load_matrix(path: &Path, expect_dim: usize) -> Result<EmbeddingMatrix> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() >= 8, "truncated matrix file");
+    let dim = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
+    let n = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+    anyhow::ensure!(dim == expect_dim, "dim mismatch");
+    anyhow::ensure!(bytes.len() == 8 + n * dim * 4, "size mismatch");
+    let data = bytes[8..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(EmbeddingMatrix { dim, data })
+}
+
+fn save_kmeans(path: &Path, centroids: &EmbeddingMatrix, assignment: &[u32]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&(centroids.dim as u32).to_le_bytes());
+    bytes.extend_from_slice(&(centroids.len() as u32).to_le_bytes());
+    bytes.extend_from_slice(&(assignment.len() as u32).to_le_bytes());
+    for v in &centroids.data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    for a in assignment {
+        bytes.extend_from_slice(&a.to_le_bytes());
+    }
+    std::fs::write(path, bytes)?;
+    Ok(())
+}
+
+fn load_kmeans(path: &Path, expect_dim: usize) -> Result<(EmbeddingMatrix, Vec<u32>)> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() >= 12, "truncated kmeans file");
+    let dim = u32::from_le_bytes(bytes[0..4].try_into()?) as usize;
+    let k = u32::from_le_bytes(bytes[4..8].try_into()?) as usize;
+    let n = u32::from_le_bytes(bytes[8..12].try_into()?) as usize;
+    anyhow::ensure!(dim == expect_dim, "dim mismatch");
+    let cent_bytes = k * dim * 4;
+    anyhow::ensure!(bytes.len() == 12 + cent_bytes + n * 4, "size mismatch");
+    let data: Vec<f32> = bytes[12..12 + cent_bytes]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let assignment: Vec<u32> = bytes[12 + cent_bytes..]
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok((EmbeddingMatrix { dim, data }, assignment))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_cache_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("edgerag-bc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = dir.join("m.emb");
+        let m = EmbeddingMatrix::from_rows(3, &[vec![1., 2., 3.], vec![4., 5., 6.]]);
+        save_matrix(&p, &m).unwrap();
+        let back = load_matrix(&p, 3).unwrap();
+        assert_eq!(back.data, m.data);
+        assert!(load_matrix(&p, 4).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn kmeans_cache_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("edgerag-kc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let p = dir.join("k.km");
+        let c = EmbeddingMatrix::from_rows(2, &[vec![0.1, 0.2]]);
+        let a = vec![0u32, 0, 0, 0, 0];
+        save_kmeans(&p, &c, &a).unwrap();
+        let (c2, a2) = load_kmeans(&p, 2).unwrap();
+        assert_eq!(c2.data, c.data);
+        assert_eq!(a2, a);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,228 @@
+//! Serving metrics: latency recording, percentiles, per-component
+//! breakdowns, SLO attainment. The figure benches read these; the server
+//! exposes them on its stats endpoint.
+
+use std::collections::HashMap;
+
+use crate::simtime::{Breakdown, Component, SimDuration};
+
+/// A recorded latency series with exact percentile queries (we keep raw
+/// samples — workloads are ≤ thousands of queries, exactness beats
+/// HDR-style bucketing at this scale).
+#[derive(Debug, Clone, Default)]
+pub struct LatencySeries {
+    samples_ns: Vec<u64>,
+    sorted: bool,
+}
+
+impl LatencySeries {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: SimDuration) {
+        self.samples_ns.push(d.as_nanos());
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_ns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_ns.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples_ns.sort_unstable();
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile (nearest-rank), `p` in [0, 100].
+    pub fn percentile(&mut self, p: f64) -> SimDuration {
+        if self.samples_ns.is_empty() {
+            return SimDuration::ZERO;
+        }
+        self.ensure_sorted();
+        let n = self.samples_ns.len();
+        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+        SimDuration::from_nanos(self.samples_ns[rank.min(n) - 1])
+    }
+
+    pub fn median(&mut self) -> SimDuration {
+        self.percentile(50.0)
+    }
+
+    pub fn mean(&self) -> SimDuration {
+        if self.samples_ns.is_empty() {
+            return SimDuration::ZERO;
+        }
+        let sum: u128 = self.samples_ns.iter().map(|&x| x as u128).sum();
+        SimDuration::from_nanos((sum / self.samples_ns.len() as u128) as u64)
+    }
+
+    pub fn max(&mut self) -> SimDuration {
+        self.ensure_sorted();
+        SimDuration::from_nanos(self.samples_ns.last().copied().unwrap_or(0))
+    }
+
+    /// Fraction of samples at or below `slo`.
+    pub fn slo_attainment(&self, slo: SimDuration) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 1.0;
+        }
+        let ok = self
+            .samples_ns
+            .iter()
+            .filter(|&&s| s <= slo.as_nanos())
+            .count();
+        ok as f64 / self.samples_ns.len() as f64
+    }
+
+    /// CDF points (latency, cumulative fraction) — Fig. 12's distribution.
+    pub fn cdf(&mut self, points: usize) -> Vec<(SimDuration, f64)> {
+        if self.samples_ns.is_empty() {
+            return Vec::new();
+        }
+        self.ensure_sorted();
+        let n = self.samples_ns.len();
+        (1..=points)
+            .map(|i| {
+                let frac = i as f64 / points as f64;
+                let idx = ((frac * n as f64).ceil() as usize).min(n) - 1;
+                (SimDuration::from_nanos(self.samples_ns[idx]), frac)
+            })
+            .collect()
+    }
+}
+
+/// Full per-run metrics: TTFT + retrieval series, component sums, event
+/// counters.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub retrieval: LatencySeries,
+    pub ttft: LatencySeries,
+    component_ns: HashMap<&'static str, u64>,
+    counters: HashMap<&'static str, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_query(&mut self, breakdown: &Breakdown, retrieval: SimDuration, ttft: SimDuration) {
+        self.retrieval.record(retrieval);
+        self.ttft.record(ttft);
+        for c in Component::ALL {
+            let ns = breakdown.get(c).as_nanos();
+            if ns > 0 {
+                *self.component_ns.entry(c.name()).or_insert(0) += ns;
+            }
+        }
+    }
+
+    pub fn bump(&mut self, counter: &'static str, by: u64) {
+        *self.counters.entry(counter).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, counter: &str) -> u64 {
+        self.counters.get(counter).copied().unwrap_or(0)
+    }
+
+    pub fn component_total(&self, c: Component) -> SimDuration {
+        SimDuration::from_nanos(self.component_ns.get(c.name()).copied().unwrap_or(0))
+    }
+
+    /// Mean per-query time in component `c`.
+    pub fn component_mean(&self, c: Component) -> SimDuration {
+        let n = self.retrieval.len().max(1) as u64;
+        SimDuration::from_nanos(self.component_total(c).as_nanos() / n)
+    }
+
+    pub fn queries(&self) -> usize {
+        self.retrieval.len()
+    }
+
+    /// Drop all recorded samples/counters (post-warmup reset).
+    pub fn reset(&mut self) {
+        *self = Metrics::new();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simtime::LatencyLedger;
+
+    fn ms(v: u64) -> SimDuration {
+        SimDuration::from_millis(v)
+    }
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = LatencySeries::new();
+        for v in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            s.record(ms(v));
+        }
+        assert_eq!(s.median(), ms(50));
+        assert_eq!(s.percentile(95.0), ms(100));
+        assert_eq!(s.percentile(10.0), ms(10));
+        assert_eq!(s.max(), ms(100));
+        assert_eq!(s.mean(), ms(55));
+    }
+
+    #[test]
+    fn percentile_of_singleton() {
+        let mut s = LatencySeries::new();
+        s.record(ms(42));
+        assert_eq!(s.median(), ms(42));
+        assert_eq!(s.percentile(99.0), ms(42));
+    }
+
+    #[test]
+    fn slo_attainment_counts_boundary() {
+        let mut s = LatencySeries::new();
+        for v in [100u64, 200, 300, 400] {
+            s.record(ms(v));
+        }
+        assert_eq!(s.slo_attainment(ms(250)), 0.5);
+        assert_eq!(s.slo_attainment(ms(400)), 1.0);
+        assert_eq!(s.slo_attainment(ms(50)), 0.0);
+    }
+
+    #[test]
+    fn cdf_monotone() {
+        let mut s = LatencySeries::new();
+        let mut rng = crate::data::Rng::new(1);
+        for _ in 0..500 {
+            s.record(SimDuration::from_micros((rng.f64() * 1e6) as u64));
+        }
+        let cdf = s.cdf(20);
+        assert_eq!(cdf.len(), 20);
+        for w in cdf.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 < w[1].1);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_aggregate_components() {
+        let mut m = Metrics::new();
+        let mut l = LatencyLedger::new();
+        l.charge(Component::EmbedGen, ms(100));
+        l.charge(Component::Prefill, ms(50));
+        let b = crate::simtime::Breakdown::from_ledger(&l);
+        m.record_query(&b, ms(100), ms(150));
+        m.record_query(&b, ms(100), ms(150));
+        assert_eq!(m.queries(), 2);
+        assert_eq!(m.component_total(Component::EmbedGen), ms(200));
+        assert_eq!(m.component_mean(Component::Prefill), ms(50));
+        m.bump("cache_hits", 3);
+        assert_eq!(m.counter("cache_hits"), 3);
+        assert_eq!(m.counter("nope"), 0);
+    }
+}

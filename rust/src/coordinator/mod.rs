@@ -1,0 +1,12 @@
+//! The serving coordinator: the retrieval pipeline (Fig. 9), system
+//! builder, serving metrics and SLO accounting.
+
+pub mod builder;
+pub mod metrics;
+pub mod retrieval;
+pub mod texts;
+
+pub use builder::{BuildOptions, BuiltDataset, SystemBuilder};
+pub use metrics::{LatencySeries, Metrics};
+pub use retrieval::{QueryOutcome, RagPipeline};
+pub use texts::TextStore;

@@ -1,0 +1,148 @@
+//! The retrieval pipeline (paper Fig. 9 + the prefill tail of Fig. 6):
+//! query embedding → index search → chunk fetch → prompt assembly →
+//! prefill. Produces the TTFT breakdown every figure is built from.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::DeviceProfile;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::texts::TextStore;
+use crate::embedding::Embedder;
+use crate::index::{SearchEvents, VectorIndex};
+use crate::llm::Llm;
+use crate::simtime::{Breakdown, Component, LatencyLedger, SimDuration};
+
+/// One served query's full outcome.
+#[derive(Debug, Clone)]
+pub struct QueryOutcome {
+    /// (chunk id, score), descending.
+    pub hits: Vec<(u32, f32)>,
+    /// Modeled retrieval latency (vector search side of TTFT).
+    pub retrieval: SimDuration,
+    /// Modeled time-to-first-token (retrieval + prefill + reloads).
+    pub ttft: SimDuration,
+    pub breakdown: Breakdown,
+    pub events: SearchEvents,
+    pub prompt_tokens: usize,
+    /// Predicted first token (real prefill only).
+    pub first_token: Option<i32>,
+    /// Wall-clock coordinator time actually spent (L3 perf accounting).
+    pub wall: std::time::Duration,
+}
+
+/// The serving pipeline: owns one index configuration plus the shared LLM.
+pub struct RagPipeline {
+    index: Box<dyn VectorIndex>,
+    embedder: Embedder,
+    llm: Llm,
+    device: DeviceProfile,
+    chunk_texts: TextStore,
+    top_k: usize,
+    real_prefill: bool,
+    metrics: Metrics,
+}
+
+impl RagPipeline {
+    pub fn new(
+        index: Box<dyn VectorIndex>,
+        embedder: Embedder,
+        llm: Llm,
+        device: DeviceProfile,
+        chunk_texts: TextStore,
+        top_k: usize,
+        real_prefill: bool,
+    ) -> Self {
+        RagPipeline {
+            index,
+            embedder,
+            llm,
+            device,
+            chunk_texts,
+            top_k,
+            real_prefill,
+            metrics: Metrics::new(),
+        }
+    }
+
+    pub fn index(&self) -> &dyn VectorIndex {
+        self.index.as_ref()
+    }
+
+    pub fn index_mut(&mut self) -> &mut Box<dyn VectorIndex> {
+        &mut self.index
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn metrics_mut(&mut self) -> &mut Metrics {
+        &mut self.metrics
+    }
+
+    /// The shared chunk-text store (the server appends to it on insert).
+    pub fn texts(&self) -> TextStore {
+        self.chunk_texts.clone()
+    }
+
+    /// Serve one query end to end.
+    pub fn handle(&mut self, query_text: &str) -> Result<QueryOutcome> {
+        let wall_start = Instant::now();
+        let mut ledger = LatencyLedger::new();
+
+        // Query embedding (same embedding model as indexing — Fig. 1b
+        // step 1). Charged at the device's generation rate.
+        ledger.charge(
+            Component::QueryEmbed,
+            self.device.embed_gen_cost(query_text.len() as u64),
+        );
+        let q = self.embedder.embed_one(query_text)?;
+
+        // Vector search through the configured index.
+        let search = self.index.search(&q, self.top_k)?;
+        ledger.merge(&search.ledger);
+
+        // Fetch the matched chunks' text from storage (Fig. 9 step 6).
+        let ids: Vec<u32> = search.hits.iter().map(|&(id, _)| id).collect();
+        let texts: Vec<String> = self.chunk_texts.get_many(&ids);
+        let texts: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+        let fetch_bytes: u64 = texts.iter().map(|t| t.len() as u64).sum();
+        if fetch_bytes > 0 {
+            ledger.charge(
+                Component::ChunkFetch,
+                self.device.storage_read_cost(fetch_bytes, true),
+            );
+        }
+
+        // Prompt assembly + prefill (the first-token half of TTFT).
+        let prompt = self.llm.build_prompt(query_text, &texts);
+        let prefill = self.llm.prefill(&prompt, &mut ledger, self.real_prefill)?;
+
+        let retrieval = ledger.retrieval();
+        let ttft = ledger.total();
+
+        // Adaptive-threshold feedback (paper Alg. 3) sees retrieval latency.
+        self.index.feedback(retrieval);
+
+        let breakdown = Breakdown::from_ledger(&ledger);
+        self.metrics.record_query(&breakdown, retrieval, ttft);
+        self.metrics.bump("generated", search.events.generated as u64);
+        self.metrics.bump("loaded", search.events.loaded as u64);
+        self.metrics.bump("cache_hits", search.events.cache_hits as u64);
+        self.metrics
+            .bump("thrash_faults", search.events.thrash_faults as u64);
+
+        Ok(QueryOutcome {
+            hits: search.hits,
+            retrieval,
+            ttft,
+            breakdown,
+            events: search.events,
+            prompt_tokens: prefill.prompt_tokens,
+            first_token: prefill.first_token,
+            wall: wall_start.elapsed(),
+        })
+    }
+}

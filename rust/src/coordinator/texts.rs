@@ -1,0 +1,75 @@
+//! Shared chunk-text store: the corpus texts plus any chunks ingested
+//! online (§5.4). The retrieval pipeline reads it on every prompt
+//! assembly; the server appends on `insert`.
+
+use std::sync::{Arc, RwLock};
+
+#[derive(Clone)]
+pub struct TextStore {
+    inner: Arc<RwLock<Vec<String>>>,
+}
+
+impl TextStore {
+    pub fn new(texts: Vec<String>) -> Self {
+        TextStore {
+            inner: Arc::new(RwLock::new(texts)),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn get(&self, id: u32) -> Option<String> {
+        self.inner.read().unwrap().get(id as usize).cloned()
+    }
+
+    /// Append a new chunk's text, returning its id.
+    pub fn push(&self, text: String) -> u32 {
+        let mut v = self.inner.write().unwrap();
+        v.push(text);
+        (v.len() - 1) as u32
+    }
+
+    /// Fetch several texts at once (prompt assembly).
+    pub fn get_many(&self, ids: &[u32]) -> Vec<String> {
+        let v = self.inner.read().unwrap();
+        ids.iter()
+            .filter_map(|&id| v.get(id as usize).cloned())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_get() {
+        let s = TextStore::new(vec!["a".into(), "b".into()]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(1).as_deref(), Some("b"));
+        let id = s.push("c".into());
+        assert_eq!(id, 2);
+        assert_eq!(s.get(2).as_deref(), Some("c"));
+        assert_eq!(s.get(99), None);
+    }
+
+    #[test]
+    fn get_many_skips_missing() {
+        let s = TextStore::new(vec!["a".into()]);
+        assert_eq!(s.get_many(&[0, 5]), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn shared_across_clones() {
+        let s = TextStore::new(vec![]);
+        let s2 = s.clone();
+        s.push("x".into());
+        assert_eq!(s2.len(), 1);
+    }
+}

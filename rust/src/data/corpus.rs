@@ -1,0 +1,286 @@
+//! Synthetic BEIR-like corpus generator.
+//!
+//! Substitution for the real BEIR datasets (DESIGN.md §3): a generative
+//! topic model producing corpora whose *retrieval-relevant statistics*
+//! match Table 2 —
+//!
+//! * topic (→ natural cluster) sizes are lognormal, giving the tail-heavy
+//!   cluster-size distribution of Fig. 5;
+//! * chunks from one topic share a topic vocabulary, so embeddings cluster
+//!   by topic under any reasonable embedder;
+//! * a fraction of chunks are near-duplicates, giving each query a small
+//!   ground-truth relevant set (BEIR-style qrels) for precision/recall.
+
+use crate::config::DatasetProfile;
+use crate::data::rng::Rng;
+
+/// One data chunk (the unit the paper indexes, embeds and retrieves).
+#[derive(Debug, Clone)]
+pub struct Chunk {
+    pub id: u32,
+    pub topic: u32,
+    /// Duplicate-group id: chunks with the same group are near-duplicates
+    /// of each other (the qrel unit).
+    pub group: u32,
+    pub text: String,
+}
+
+impl Chunk {
+    pub fn chars(&self) -> u64 {
+        self.text.len() as u64
+    }
+}
+
+/// A generated corpus plus its topic structure.
+#[derive(Debug)]
+pub struct Corpus {
+    pub name: String,
+    pub chunks: Vec<Chunk>,
+    pub n_topics: usize,
+}
+
+impl Corpus {
+    /// Deterministically generate the corpus described by `profile`.
+    pub fn generate(profile: &DatasetProfile) -> Corpus {
+        let mut rng = Rng::new(profile.seed);
+
+        // Topic sizes: lognormal, tail-heavy, normalized to n_chunks.
+        let raw: Vec<f64> = (0..profile.n_topics)
+            .map(|_| rng.lognormal(0.0, profile.cluster_sigma))
+            .collect();
+        let total: f64 = raw.iter().sum();
+        let mut sizes: Vec<usize> = raw
+            .iter()
+            .map(|w| ((w / total) * profile.n_chunks as f64).round() as usize)
+            .collect();
+        // Fix rounding drift; every topic keeps at least one chunk.
+        for s in sizes.iter_mut() {
+            *s = (*s).max(1);
+        }
+        let mut assigned: usize = sizes.iter().sum();
+        while assigned > profile.n_chunks {
+            let i = (0..sizes.len()).max_by_key(|&i| sizes[i]).unwrap();
+            sizes[i] -= 1;
+            assigned -= 1;
+        }
+        while assigned < profile.n_chunks {
+            let i = rng.below(sizes.len());
+            sizes[i] += 1;
+            assigned += 1;
+        }
+
+        // Per-topic vocabulary + shared common vocabulary.
+        let topic_vocab_size = 48;
+        let common_vocab_size = 256;
+        let common: Vec<String> = (0..common_vocab_size).map(|k| format!("c{k}")).collect();
+
+        let mut chunks: Vec<Chunk> = Vec::with_capacity(profile.n_chunks);
+        let mut id: u32 = 0;
+        for (topic, &size) in sizes.iter().enumerate() {
+            let tv: Vec<String> = (0..topic_vocab_size)
+                .map(|k| format!("t{topic}w{k}"))
+                .collect();
+            let mut topic_rng = rng.fork(topic as u64);
+            let first_of_topic = id;
+            for j in 0..size {
+                // ~18% of non-initial chunks are near-duplicates of an
+                // earlier chunk in the topic: the qrel groups.
+                let dup_of = if j > 0 && topic_rng.f64() < 0.18 {
+                    let prev = first_of_topic + topic_rng.below(j) as u32;
+                    Some(chunks[prev as usize].clone())
+                } else {
+                    None
+                };
+                let chunk = match dup_of {
+                    Some(orig) => Chunk {
+                        id,
+                        topic: topic as u32,
+                        group: orig.group,
+                        text: mutate_text(&orig.text, &tv, &mut topic_rng),
+                    },
+                    None => Chunk {
+                        id,
+                        topic: topic as u32,
+                        group: id,
+                        text: gen_text(
+                            profile.chunk_chars_mean,
+                            &tv,
+                            &common,
+                            &mut topic_rng,
+                        ),
+                    },
+                };
+                chunks.push(chunk);
+                id += 1;
+            }
+        }
+
+        Corpus {
+            name: profile.name.clone(),
+            chunks,
+            n_topics: profile.n_topics,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+
+    pub fn total_chars(&self) -> u64 {
+        self.chunks.iter().map(|c| c.chars()).sum()
+    }
+
+    /// All chunk ids sharing `group` (the relevant set for a query built
+    /// from any chunk of that group).
+    pub fn group_members(&self, group: u32) -> Vec<u32> {
+        self.chunks
+            .iter()
+            .filter(|c| c.group == group)
+            .map(|c| c.id)
+            .collect()
+    }
+
+    pub fn texts(&self) -> Vec<&str> {
+        self.chunks.iter().map(|c| c.text.as_str()).collect()
+    }
+}
+
+/// Fresh chunk text: ~70% topic words, ~30% common words, until the target
+/// character budget (±30%) is met.
+fn gen_text(chars_mean: usize, topic_vocab: &[String], common: &[String], rng: &mut Rng) -> String {
+    let target = (chars_mean as f64 * (0.7 + 0.6 * rng.f64())) as usize;
+    let mut text = String::with_capacity(target + 16);
+    while text.len() < target {
+        let w = if rng.f64() < 0.7 {
+            &topic_vocab[rng.below(topic_vocab.len())]
+        } else {
+            &common[rng.below(common.len())]
+        };
+        if !text.is_empty() {
+            text.push(' ');
+        }
+        text.push_str(w);
+    }
+    text
+}
+
+/// Near-duplicate: resample ~15% of the words from the topic vocabulary.
+fn mutate_text(orig: &str, topic_vocab: &[String], rng: &mut Rng) -> String {
+    let words: Vec<&str> = orig.split(' ').collect();
+    let mut out = String::with_capacity(orig.len() + 8);
+    for w in words {
+        if !out.is_empty() {
+            out.push(' ');
+        }
+        if rng.f64() < 0.15 {
+            out.push_str(&topic_vocab[rng.below(topic_vocab.len())]);
+        } else {
+            out.push_str(w);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetProfile;
+
+    fn tiny() -> Corpus {
+        Corpus::generate(&DatasetProfile::tiny())
+    }
+
+    #[test]
+    fn chunk_count_matches_profile() {
+        let c = tiny();
+        assert_eq!(c.len(), DatasetProfile::tiny().n_chunks);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = tiny();
+        let b = tiny();
+        assert_eq!(a.chunks.len(), b.chunks.len());
+        for (x, y) in a.chunks.iter().zip(&b.chunks) {
+            assert_eq!(x.text, y.text);
+            assert_eq!(x.topic, y.topic);
+            assert_eq!(x.group, y.group);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut p = DatasetProfile::tiny();
+        p.seed = 999;
+        let a = tiny();
+        let b = Corpus::generate(&p);
+        assert_ne!(a.chunks[0].text, b.chunks[0].text);
+    }
+
+    #[test]
+    fn topics_cover_all_chunks_in_order() {
+        let c = tiny();
+        let mut last_topic = 0;
+        for ch in &c.chunks {
+            assert!(ch.topic >= last_topic, "topics must be contiguous runs");
+            last_topic = ch.topic;
+            assert!((ch.topic as usize) < c.n_topics);
+        }
+    }
+
+    #[test]
+    fn topic_sizes_are_tail_heavy() {
+        let mut p = DatasetProfile::tiny();
+        p.n_chunks = 4096;
+        p.n_topics = 64;
+        p.cluster_sigma = 1.0;
+        let c = Corpus::generate(&p);
+        let mut sizes = vec![0usize; p.n_topics];
+        for ch in &c.chunks {
+            sizes[ch.topic as usize] += 1;
+        }
+        sizes.sort_unstable();
+        let median = sizes[sizes.len() / 2] as f64;
+        let max = *sizes.last().unwrap() as f64;
+        assert!(max / median > 3.0, "max/median = {}", max / median);
+    }
+
+    #[test]
+    fn duplicate_groups_exist_and_share_topic() {
+        let c = tiny();
+        let mut dup_chunks = 0;
+        for ch in &c.chunks {
+            if ch.group != ch.id {
+                dup_chunks += 1;
+                let orig = &c.chunks[ch.group as usize];
+                assert_eq!(orig.topic, ch.topic);
+            }
+        }
+        assert!(dup_chunks > 10, "only {dup_chunks} duplicates");
+    }
+
+    #[test]
+    fn group_members_includes_original_and_dups() {
+        let c = tiny();
+        let dup = c.chunks.iter().find(|ch| ch.group != ch.id).unwrap();
+        let members = c.group_members(dup.group);
+        assert!(members.contains(&dup.id));
+        assert!(members.contains(&dup.group));
+        assert!(members.len() >= 2);
+    }
+
+    #[test]
+    fn chunk_chars_near_mean() {
+        let c = tiny();
+        let mean = c.total_chars() as f64 / c.len() as f64;
+        let target = DatasetProfile::tiny().chunk_chars_mean as f64;
+        assert!(
+            (mean - target).abs() / target < 0.25,
+            "mean {mean} vs target {target}"
+        );
+    }
+}

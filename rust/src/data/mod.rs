@@ -1,0 +1,11 @@
+//! Workload substrate: deterministic synthetic BEIR-like corpora and query
+//! workloads (DESIGN.md §3 documents the substitution for the real BEIR
+//! datasets).
+
+pub mod corpus;
+pub mod queries;
+pub mod rng;
+
+pub use corpus::{Chunk, Corpus};
+pub use queries::{Query, Workload};
+pub use rng::{Rng, Zipf};

@@ -1,0 +1,152 @@
+//! Embedding generation service: text → unit vectors through the compiled
+//! PJRT executables. This is the compute EdgeRAG schedules, prices, and
+//! caches — online embedding generation (paper §3.2/§4) all flows through
+//! [`Embedder::embed_texts`].
+
+pub mod tokenizer;
+
+use anyhow::Result;
+
+use crate::runtime::{ComputeHandle, Tensor};
+use crate::vecmath::EmbeddingMatrix;
+
+/// Which Layer-2 model embeds text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EmbedderBackend {
+    /// Hashed bag-of-tokens × learned projection (Pallas `projection`
+    /// kernel). Fast path; used for the large-scale experiments.
+    Projection,
+    /// 4-layer transformer encoder (Pallas `attention` kernel), gte-style
+    /// mean-pool + L2 norm. Used by the e2e example / quickstart.
+    Transformer,
+}
+
+impl EmbedderBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            EmbedderBackend::Projection => "projection",
+            EmbedderBackend::Transformer => "transformer",
+        }
+    }
+}
+
+/// Embedding service over the compute executor, with shape-bucketed
+/// batching.
+#[derive(Clone)]
+pub struct Embedder {
+    compute: ComputeHandle,
+    backend: EmbedderBackend,
+    proj_batches: Vec<usize>,
+    enc_batches: Vec<usize>,
+    vocab: usize,
+    enc_seq: usize,
+    dim: usize,
+}
+
+impl Embedder {
+    pub fn new(compute: ComputeHandle, backend: EmbedderBackend) -> Self {
+        let m = compute.manifest();
+        Embedder {
+            proj_batches: m.proj_batches.clone(),
+            enc_batches: m.enc_batches.clone(),
+            vocab: m.vocab,
+            enc_seq: m.enc_seq,
+            dim: m.dim,
+            compute,
+            backend,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn backend(&self) -> EmbedderBackend {
+        self.backend
+    }
+
+    /// Embed a batch of texts into an `EmbeddingMatrix` (one unit vector
+    /// per text, row order preserved). Internally splits into the largest
+    /// compiled batch bucket and pads the remainder.
+    pub fn embed_texts(&self, texts: &[&str]) -> Result<EmbeddingMatrix> {
+        let mut out = EmbeddingMatrix::with_capacity(self.dim, texts.len());
+        match self.backend {
+            EmbedderBackend::Projection => self.embed_projection(texts, &mut out)?,
+            EmbedderBackend::Transformer => self.embed_transformer(texts, &mut out)?,
+        }
+        Ok(out)
+    }
+
+    pub fn embed_one(&self, text: &str) -> Result<Vec<f32>> {
+        let m = self.embed_texts(&[text])?;
+        Ok(m.row(0).to_vec())
+    }
+
+    /// Largest compiled bucket ≤ remaining, or the smallest bucket
+    /// (padding) when remaining is below every bucket.
+    fn pick_bucket(buckets: &[usize], remaining: usize) -> usize {
+        buckets
+            .iter()
+            .copied()
+            .filter(|&b| b <= remaining)
+            .max()
+            .unwrap_or_else(|| buckets.iter().copied().min().unwrap())
+    }
+
+    fn embed_projection(&self, texts: &[&str], out: &mut EmbeddingMatrix) -> Result<()> {
+        let mut i = 0;
+        while i < texts.len() {
+            let b = Self::pick_bucket(&self.proj_batches, texts.len() - i);
+            let take = b.min(texts.len() - i);
+            let mut feats = vec![0.0f32; b * self.vocab];
+            for (j, text) in texts[i..i + take].iter().enumerate() {
+                tokenizer::features_into(
+                    text,
+                    &mut feats[j * self.vocab..(j + 1) * self.vocab],
+                );
+            }
+            let res = self.compute.run(
+                &format!("proj_{b}"),
+                vec![Tensor::F32(feats, vec![b, self.vocab])],
+            )?;
+            for j in 0..take {
+                out.push(&res[0][j * self.dim..(j + 1) * self.dim]);
+            }
+            i += take;
+        }
+        Ok(())
+    }
+
+    fn embed_transformer(&self, texts: &[&str], out: &mut EmbeddingMatrix) -> Result<()> {
+        let mut i = 0;
+        while i < texts.len() {
+            let b = Self::pick_bucket(&self.enc_batches, texts.len() - i);
+            let take = b.min(texts.len() - i);
+            let mut ids = vec![0i32; b * self.enc_seq];
+            let mut mask = vec![0.0f32; b * self.enc_seq];
+            for (j, text) in texts[i..i + take].iter().enumerate() {
+                let (tids, tmask) = tokenizer::sequence(text, self.enc_seq);
+                ids[j * self.enc_seq..(j + 1) * self.enc_seq].copy_from_slice(&tids);
+                mask[j * self.enc_seq..(j + 1) * self.enc_seq].copy_from_slice(&tmask);
+            }
+            // Padding rows still flow through the encoder; give them a
+            // valid CLS so layernorm/softmax see sane inputs, then drop.
+            for j in take..b {
+                ids[j * self.enc_seq] = tokenizer::CLS_ID;
+                mask[j * self.enc_seq] = 1.0;
+            }
+            let res = self.compute.run(
+                &format!("enc_{b}"),
+                vec![
+                    Tensor::I32(ids, vec![b, self.enc_seq]),
+                    Tensor::F32(mask, vec![b, self.enc_seq]),
+                ],
+            )?;
+            for j in 0..take {
+                out.push(&res[0][j * self.dim..(j + 1) * self.dim]);
+            }
+            i += take;
+        }
+        Ok(())
+    }
+}

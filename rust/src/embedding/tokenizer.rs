@@ -1,0 +1,148 @@
+//! Deterministic hashed tokenizer — the rust mirror of
+//! `python/compile/tokenizer.py`. The two must agree bit-for-bit: rust
+//! tokenizes on the serving path, python at kernel-validation time.
+//! Cross-checked by `tests/golden/tokenizer.json`.
+
+pub const VOCAB: usize = 4096;
+pub const PAD_ID: i32 = 0;
+pub const CLS_ID: i32 = 1;
+pub const SEQ_LEN: usize = 64;
+
+const FNV_OFFSET: u32 = 0x811C_9DC5;
+const FNV_PRIME: u32 = 0x0100_0193;
+
+/// FNV-1a 32-bit hash.
+pub fn fnv1a32(data: &[u8]) -> u32 {
+    let mut h = FNV_OFFSET;
+    for &b in data {
+        h ^= b as u32;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Lowercased alphanumeric-run words (ascii-only alnum, like the python
+/// side's `ch.isascii() and ch.isalnum()`).
+pub fn words(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars() {
+        let lc = ch.to_ascii_lowercase();
+        if lc.is_ascii_alphanumeric() {
+            cur.push(lc);
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+pub fn token_id(word: &str) -> i32 {
+    2 + (fnv1a32(word.as_bytes()) % (VOCAB as u32 - 2)) as i32
+}
+
+pub fn token_ids(text: &str) -> Vec<i32> {
+    words(text).iter().map(|w| token_id(w)).collect()
+}
+
+/// Bag-of-tokens count features, f32[VOCAB] — input to the projection
+/// embedder. Raw counts are exact in f32, so python/rust agree exactly.
+pub fn features(text: &str) -> Vec<f32> {
+    let mut f = vec![0.0f32; VOCAB];
+    for tid in token_ids(text) {
+        f[tid as usize] += 1.0;
+    }
+    f
+}
+
+/// Accumulate features for `text` into an existing buffer (zero-alloc path
+/// for batched embedding generation).
+pub fn features_into(text: &str, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), VOCAB);
+    out.fill(0.0);
+    for tid in token_ids(text) {
+        out[tid as usize] += 1.0;
+    }
+}
+
+/// `[CLS] + ids` padded/truncated to `seq_len` → (ids, mask).
+pub fn sequence(text: &str, seq_len: usize) -> (Vec<i32>, Vec<f32>) {
+    let mut ids = vec![PAD_ID; seq_len];
+    let mut mask = vec![0.0f32; seq_len];
+    ids[0] = CLS_ID;
+    mask[0] = 1.0;
+    for (i, tid) in token_ids(text).into_iter().take(seq_len - 1).enumerate() {
+        ids[i + 1] = tid;
+        mask[i + 1] = 1.0;
+    }
+    (ids, mask)
+}
+
+/// Token count of a text under this tokenizer (used for prompt budgeting).
+pub fn count_tokens(text: &str) -> usize {
+    words(text).len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_known_values() {
+        assert_eq!(fnv1a32(b""), 0x811C_9DC5);
+        assert_eq!(fnv1a32(b"a"), 0xE40C_292C);
+        assert_eq!(fnv1a32(b"foobar"), 0xBF9C_F968);
+    }
+
+    #[test]
+    fn words_split_and_lowercase() {
+        assert_eq!(words("Hello, World!"), vec!["hello", "world"]);
+        assert_eq!(words("  a-b_c  "), vec!["a", "b", "c"]);
+        assert_eq!(words(""), Vec::<String>::new());
+    }
+
+    #[test]
+    fn ids_in_range() {
+        for id in token_ids("the quick brown fox 123") {
+            assert!((2..VOCAB as i32).contains(&id));
+        }
+    }
+
+    #[test]
+    fn features_sum_to_token_count() {
+        let text = "repeated repeated words words words";
+        let f = features(text);
+        assert_eq!(f.iter().sum::<f32>(), 5.0);
+        let ids = token_ids(text);
+        assert_eq!(f[ids[0] as usize], 2.0);
+        assert_eq!(f[ids[2] as usize], 3.0);
+    }
+
+    #[test]
+    fn features_into_matches_features() {
+        let mut buf = vec![7.0f32; VOCAB];
+        features_into("alpha beta gamma", &mut buf);
+        assert_eq!(buf, features("alpha beta gamma"));
+    }
+
+    #[test]
+    fn sequence_layout_and_truncation() {
+        let (ids, mask) = sequence("hello world", 8);
+        assert_eq!(ids[0], CLS_ID);
+        assert_eq!(&mask[..3], &[1.0, 1.0, 1.0]);
+        assert_eq!(mask[3..].iter().sum::<f32>(), 0.0);
+
+        let long: String = (0..100).map(|i| format!("w{i} ")).collect();
+        let (ids, mask) = sequence(&long, 16);
+        assert_eq!(ids.len(), 16);
+        assert_eq!(mask.iter().sum::<f32>(), 16.0);
+    }
+
+    #[test]
+    fn case_insensitive() {
+        assert_eq!(token_ids("EdgeRAG Rules"), token_ids("edgerag rules"));
+    }
+}

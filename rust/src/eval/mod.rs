@@ -1,0 +1,11 @@
+//! Evaluation: retrieval-quality metrics, the experiment harness that
+//! regenerates every paper table/figure, and report rendering.
+
+pub mod experiments;
+pub mod harness;
+pub mod recall;
+pub mod report;
+
+pub use harness::{run_workload, RunOptions, RunReport};
+pub use recall::{precision_at_k, recall_at_k, QualityAccumulator, QualitySummary};
+pub use report::Table;

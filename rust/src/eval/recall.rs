@@ -1,0 +1,112 @@
+//! BEIR-style retrieval-quality metrics: precision@k and recall@k against
+//! the workload's ground-truth qrels (paper Fig. 10).
+
+use std::collections::HashSet;
+
+/// recall@k: fraction of the relevant set that was retrieved.
+pub fn recall_at_k(retrieved: &[u32], relevant: &[u32]) -> f64 {
+    if relevant.is_empty() {
+        return 1.0;
+    }
+    let rel: HashSet<u32> = relevant.iter().copied().collect();
+    let hit = retrieved.iter().filter(|id| rel.contains(id)).count();
+    hit as f64 / rel.len() as f64
+}
+
+/// precision@k: fraction of retrieved chunks that are relevant.
+pub fn precision_at_k(retrieved: &[u32], relevant: &[u32]) -> f64 {
+    if retrieved.is_empty() {
+        return 0.0;
+    }
+    let rel: HashSet<u32> = relevant.iter().copied().collect();
+    let hit = retrieved.iter().filter(|id| rel.contains(id)).count();
+    hit as f64 / retrieved.len() as f64
+}
+
+/// Aggregated quality over a workload.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct QualitySummary {
+    pub recall: f64,
+    pub precision: f64,
+    pub queries: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct QualityAccumulator {
+    recall_sum: f64,
+    precision_sum: f64,
+    n: usize,
+}
+
+impl QualityAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, retrieved: &[u32], relevant: &[u32]) {
+        self.recall_sum += recall_at_k(retrieved, relevant);
+        self.precision_sum += precision_at_k(retrieved, relevant);
+        self.n += 1;
+    }
+
+    pub fn summary(&self) -> QualitySummary {
+        let n = self.n.max(1) as f64;
+        QualitySummary {
+            recall: self.recall_sum / n,
+            precision: self.precision_sum / n,
+            queries: self.n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_retrieval() {
+        assert_eq!(recall_at_k(&[1, 2], &[1, 2]), 1.0);
+        assert_eq!(precision_at_k(&[1, 2], &[1, 2]), 1.0);
+    }
+
+    #[test]
+    fn partial_recall() {
+        assert_eq!(recall_at_k(&[1, 9, 8], &[1, 2]), 0.5);
+        assert!((precision_at_k(&[1, 9, 8], &[1, 2]) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_sets() {
+        assert_eq!(recall_at_k(&[5, 6], &[1, 2]), 0.0);
+        assert_eq!(precision_at_k(&[5, 6], &[1, 2]), 0.0);
+    }
+
+    #[test]
+    fn empty_edge_cases() {
+        assert_eq!(recall_at_k(&[], &[1]), 0.0);
+        assert_eq!(recall_at_k(&[1], &[]), 1.0);
+        assert_eq!(precision_at_k(&[], &[1]), 0.0);
+    }
+
+    #[test]
+    fn recall_precision_tradeoff_with_k() {
+        // Retrieving more chunks raises recall, lowers precision — the
+        // Fig. 10 trade-off.
+        let relevant = vec![1u32, 2];
+        let k3 = &[1u32, 7, 8][..];
+        let k8 = &[1u32, 7, 8, 2, 9, 10, 11, 12][..];
+        assert!(recall_at_k(k8, &relevant) > recall_at_k(k3, &relevant));
+        assert!(precision_at_k(k8, &relevant) < precision_at_k(k3, &relevant));
+    }
+
+    #[test]
+    fn accumulator_averages() {
+        let mut acc = QualityAccumulator::new();
+        acc.add(&[1], &[1]);       // r=1, p=1
+        acc.add(&[9], &[1, 2]);    // r=0, p=0
+        let s = acc.summary();
+        assert_eq!(s.queries, 2);
+        assert!((s.recall - 0.5).abs() < 1e-12);
+        assert!((s.precision - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,228 @@
+//! Shared two-level index structure: first-level centroids + per-cluster
+//! metadata (paper §5.1).
+//!
+//! The metadata mirrors what EdgeRAG keeps resident: for every cluster the
+//! chunk references, total text size, and the *profiled embedding
+//! generation latency* computed at indexing time (used by selective
+//! storage and the cost-aware cache). Actual second-level embeddings are
+//! deliberately NOT stored here — each index configuration decides where
+//! they live (memory / storage / generated online).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::DeviceProfile;
+use crate::data::Corpus;
+use crate::embedding::Embedder;
+use crate::simtime::SimDuration;
+use crate::vecmath::EmbeddingMatrix;
+
+/// Per-cluster resident metadata.
+#[derive(Debug, Clone)]
+pub struct ClusterMeta {
+    pub id: u32,
+    /// Global chunk ids of the cluster's members, in gather order.
+    pub chunk_ids: Vec<u32>,
+    /// Total characters of member chunk texts (gen-cost driver).
+    pub chars: u64,
+    /// Profiled embedding-generation latency (paper Fig. 5 quantity).
+    pub gen_cost: SimDuration,
+}
+
+impl ClusterMeta {
+    pub fn len(&self) -> usize {
+        self.chunk_ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunk_ids.is_empty()
+    }
+
+    /// Bytes of this cluster's embeddings (f32 × dim × members).
+    pub fn emb_bytes(&self, dim: usize) -> u64 {
+        (self.chunk_ids.len() * dim * 4) as u64
+    }
+}
+
+/// First-level centroids + second-level metadata.
+#[derive(Debug)]
+pub struct ClusterSet {
+    pub centroids: EmbeddingMatrix,
+    pub clusters: Vec<ClusterMeta>,
+}
+
+impl ClusterSet {
+    /// Assemble from a k-means assignment over the corpus.
+    pub fn build(
+        corpus: &Corpus,
+        centroids: EmbeddingMatrix,
+        assignment: &[u32],
+        device: &DeviceProfile,
+    ) -> ClusterSet {
+        assert_eq!(assignment.len(), corpus.len());
+        let k = centroids.len();
+        let mut clusters: Vec<ClusterMeta> = (0..k)
+            .map(|id| ClusterMeta {
+                id: id as u32,
+                chunk_ids: Vec::new(),
+                chars: 0,
+                gen_cost: SimDuration::ZERO,
+            })
+            .collect();
+        for (i, &a) in assignment.iter().enumerate() {
+            let c = &mut clusters[a as usize];
+            c.chunk_ids.push(i as u32);
+            c.chars += corpus.chunks[i].chars();
+        }
+        for c in &mut clusters {
+            c.gen_cost = device.embed_gen_cost(c.chars);
+        }
+        ClusterSet {
+            centroids,
+            clusters,
+        }
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// Bytes the always-resident first level occupies.
+    pub fn centroid_bytes(&self) -> u64 {
+        self.centroids.bytes()
+    }
+
+    /// Total second-level embedding bytes (what the IVF baseline keeps in
+    /// memory and EdgeRAG prunes).
+    pub fn total_emb_bytes(&self, dim: usize) -> u64 {
+        self.clusters.iter().map(|c| c.emb_bytes(dim)).sum()
+    }
+}
+
+/// Where a cluster's second-level embeddings come from when needed.
+///
+/// `Prebuilt` reuses the build-time embedding matrix — valid because
+/// generation is deterministic (verified by `edge_vs_oracle` tests), and
+/// necessary to keep figure-scale benchmarks tractable on this testbed.
+/// `Live` really re-runs the embedding model through PJRT, exactly like a
+/// deployment would.
+#[derive(Clone)]
+pub enum EmbedSource {
+    Prebuilt(Arc<EmbeddingMatrix>),
+    Live {
+        embedder: Embedder,
+        texts: Arc<Vec<String>>,
+    },
+}
+
+impl EmbedSource {
+    /// Materialize the embeddings of `meta`'s member chunks (gather order).
+    pub fn cluster_embeddings(&self, meta: &ClusterMeta) -> Result<EmbeddingMatrix> {
+        match self {
+            EmbedSource::Prebuilt(all) => {
+                let mut m = EmbeddingMatrix::with_capacity(all.dim, meta.len());
+                for &cid in &meta.chunk_ids {
+                    m.push(all.row(cid as usize));
+                }
+                Ok(m)
+            }
+            EmbedSource::Live { embedder, texts } => {
+                let refs: Vec<&str> = meta
+                    .chunk_ids
+                    .iter()
+                    .map(|&cid| texts[cid as usize].as_str())
+                    .collect();
+                embedder.embed_texts(&refs)
+            }
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            EmbedSource::Prebuilt(m) => m.dim,
+            EmbedSource::Live { embedder, .. } => embedder.dim(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetProfile;
+    use crate::data::Rng;
+
+    fn fake_set(n_chunks: usize, k: usize) -> (Corpus, ClusterSet) {
+        let mut p = DatasetProfile::tiny();
+        p.n_chunks = n_chunks;
+        let corpus = Corpus::generate(&p);
+        let dim = 8;
+        let mut rng = Rng::new(5);
+        let mut centroids = EmbeddingMatrix::new(dim);
+        for _ in 0..k {
+            let row: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            centroids.push(&row);
+        }
+        let assignment: Vec<u32> = (0..n_chunks).map(|i| (i % k) as u32).collect();
+        let set = ClusterSet::build(
+            &corpus,
+            centroids,
+            &assignment,
+            &DeviceProfile::jetson_orin_nano(),
+        );
+        (corpus, set)
+    }
+
+    #[test]
+    fn members_partition_the_corpus() {
+        let (corpus, set) = fake_set(128, 7);
+        let mut seen = vec![false; corpus.len()];
+        for c in &set.clusters {
+            for &id in &c.chunk_ids {
+                assert!(!seen[id as usize], "chunk {id} in two clusters");
+                seen[id as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "chunk missing from all clusters");
+    }
+
+    #[test]
+    fn chars_and_gen_cost_consistent() {
+        let (corpus, set) = fake_set(64, 4);
+        let dev = DeviceProfile::jetson_orin_nano();
+        for c in &set.clusters {
+            let want: u64 = c
+                .chunk_ids
+                .iter()
+                .map(|&id| corpus.chunks[id as usize].chars())
+                .sum();
+            assert_eq!(c.chars, want);
+            assert_eq!(c.gen_cost, dev.embed_gen_cost(want));
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let (_, set) = fake_set(100, 5);
+        let dim = 8;
+        assert_eq!(set.total_emb_bytes(dim), (100 * dim * 4) as u64);
+        assert_eq!(set.centroid_bytes(), (5 * dim * 4) as u64);
+    }
+
+    #[test]
+    fn prebuilt_source_gathers_rows() {
+        let (_, set) = fake_set(32, 3);
+        let dim = 8;
+        let mut all = EmbeddingMatrix::new(dim);
+        for i in 0..32 {
+            all.push(&vec![i as f32; dim]);
+        }
+        let src = EmbedSource::Prebuilt(Arc::new(all));
+        let c = &set.clusters[1];
+        let m = src.cluster_embeddings(c).unwrap();
+        assert_eq!(m.len(), c.len());
+        for (j, &cid) in c.chunk_ids.iter().enumerate() {
+            assert_eq!(m.row(j)[0], cid as f32);
+        }
+    }
+}

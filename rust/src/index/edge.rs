@@ -1,0 +1,613 @@
+//! The EdgeRAG index (paper §5, Table 4 rows "IVF+Gen", "IVF+Gen+Load",
+//! "EdgeRAG").
+//!
+//! Second-level embeddings are pruned from memory. On a probe, embeddings
+//! come from (in priority order, mirroring Fig. 9):
+//!
+//! 1. the **blob store** — clusters whose profiled generation cost exceeds
+//!    the SLO-derived limit were precomputed at indexing time (§4.1,
+//!    Algorithm 1) and load as contiguous blobs;
+//! 2. the **cost-aware cache** (EdgeRAG only) — previously generated
+//!    embeddings, kept under Algorithm 2's `genLatency × counter` policy,
+//!    gated by Algorithm 3's adaptive threshold;
+//! 3. **online generation** — the embedding model re-embeds the cluster's
+//!    chunks (charged at the device's generation rate; numerics through
+//!    the real PJRT embedder or the verified-equal prebuilt matrix).
+
+use anyhow::Result;
+
+use crate::cache::{CacheStats, CostAwareCache, ThresholdController};
+use crate::config::{DeviceProfile, IndexKind, RetrievalConfig};
+use crate::index::{
+    ClusterSet, EmbedSource, Scorer, SearchEvents, SearchOutcome, SharedMemory, VectorIndex,
+};
+use crate::simtime::{Component, LatencyLedger, SimDuration};
+use crate::storage::{BlobStore, Region};
+use crate::vecmath;
+
+/// Which optional stages are enabled (Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EdgeFeatures {
+    /// Precompute + load heavy tail clusters from storage (§4.1).
+    pub selective_storage: bool,
+    /// Cost-aware adaptive caching (§4.2).
+    pub caching: bool,
+}
+
+impl EdgeFeatures {
+    pub fn for_kind(kind: IndexKind) -> EdgeFeatures {
+        match kind {
+            IndexKind::IvfGen => EdgeFeatures {
+                selective_storage: false,
+                caching: false,
+            },
+            IndexKind::IvfGenLoad => EdgeFeatures {
+                selective_storage: true,
+                caching: false,
+            },
+            IndexKind::EdgeRag => EdgeFeatures {
+                selective_storage: true,
+                caching: true,
+            },
+            other => panic!("EdgeIndex does not implement {other:?}"),
+        }
+    }
+}
+
+pub struct EdgeIndex {
+    kind: IndexKind,
+    features: EdgeFeatures,
+    pub(crate) clusters: ClusterSet,
+    pub(crate) source: EmbedSource,
+    pub(crate) blob: Option<BlobStore>,
+    pub(crate) cache: Option<CostAwareCache>,
+    controller: ThresholdController,
+    /// When false the controller's threshold is pinned (Fig. 7 sweeps).
+    adaptive: bool,
+    pub(crate) scorer: Scorer,
+    pub(crate) memory: SharedMemory,
+    pub(crate) device: DeviceProfile,
+    nprobe: usize,
+    /// Did the previous search miss the cache at least once? (Alg. 3 input)
+    last_had_miss: bool,
+    /// Online-update state (§5.4): chunks inserted after the initial
+    /// build (text + embedding), per-cluster liveness (merged clusters
+    /// become tombstones), chunk → cluster routing, and the SLO-derived
+    /// storage limit insertions re-evaluate against.
+    pub(crate) dynamic: std::collections::HashMap<u32, (String, Vec<f32>)>,
+    pub(crate) active: Vec<bool>,
+    pub(crate) chunk_cluster: std::collections::HashMap<u32, u32>,
+    pub(crate) store_limit: SimDuration,
+}
+
+impl EdgeIndex {
+    /// Build the index. When `selective_storage` is on, clusters whose
+    /// profiled gen cost exceeds `store_limit` are embedded now and
+    /// persisted to `blob` (Algorithm 1 / Fig. 8 step 7).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        kind: IndexKind,
+        clusters: ClusterSet,
+        source: EmbedSource,
+        blob: Option<BlobStore>,
+        scorer: Scorer,
+        memory: SharedMemory,
+        device: DeviceProfile,
+        retrieval: &RetrievalConfig,
+        store_limit: SimDuration,
+        slo: SimDuration,
+    ) -> Result<Self> {
+        let features = EdgeFeatures::for_kind(kind);
+        let blob = if features.selective_storage {
+            let store = blob.expect("selective storage requires a BlobStore");
+            store.clear()?;
+            for meta in &clusters.clusters {
+                if meta.gen_cost > store_limit && !meta.is_empty() {
+                    let emb = source.cluster_embeddings(meta)?;
+                    store.put(meta.id, &emb)?;
+                }
+            }
+            Some(store)
+        } else {
+            None
+        };
+        let cache = features.caching.then(|| {
+            CostAwareCache::new(retrieval.cache_capacity_bytes, retrieval.cache_decay)
+        });
+        let active = vec![true; clusters.n_clusters()];
+        let mut chunk_cluster = std::collections::HashMap::new();
+        for meta in &clusters.clusters {
+            for &cid in &meta.chunk_ids {
+                chunk_cluster.insert(cid, meta.id);
+            }
+        }
+        Ok(EdgeIndex {
+            kind,
+            features,
+            clusters,
+            source,
+            blob,
+            cache,
+            controller: ThresholdController::new(
+                retrieval.latency_ewma_alpha,
+                retrieval.threshold_step_ms,
+                slo.as_millis_f64(),
+            ),
+            adaptive: true,
+            scorer,
+            memory,
+            device,
+            nprobe: retrieval.nprobe,
+            last_had_miss: false,
+            dynamic: std::collections::HashMap::new(),
+            active,
+            chunk_cluster,
+            store_limit,
+        })
+    }
+
+    pub fn clusters(&self) -> &ClusterSet {
+        &self.clusters
+    }
+
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        self.cache.as_ref().map(|c| c.stats())
+    }
+
+    pub fn cache_used_bytes(&self) -> u64 {
+        self.cache.as_ref().map_or(0, |c| c.used_bytes())
+    }
+
+    pub fn stored_clusters(&self) -> usize {
+        self.blob.as_ref().map_or(0, |b| b.len())
+    }
+
+    pub fn stored_bytes(&self) -> u64 {
+        self.blob.as_ref().map_or(0, |b| b.total_bytes())
+    }
+
+    pub fn threshold_ms(&self) -> f64 {
+        self.controller.threshold_ms()
+    }
+
+    pub fn set_nprobe(&mut self, nprobe: usize) {
+        self.nprobe = nprobe;
+    }
+
+    /// Pin the caching threshold to a fixed value and disable adaptation
+    /// (the Fig. 7 sweep).
+    pub fn pin_threshold(&mut self, threshold_ms: f64) {
+        self.adaptive = false;
+        self.controller.pin(threshold_ms);
+        if let Some(cache) = &mut self.cache {
+            for v in cache.evict_below(threshold_ms) {
+                self.memory.lock().unwrap().release(Region::Cache(v));
+            }
+        }
+    }
+
+    /// Gather a cluster's embeddings, consulting the online-update overlay
+    /// for chunks inserted after the initial build (§5.4).
+    pub(crate) fn gather(&self, c: u32) -> Result<crate::vecmath::EmbeddingMatrix> {
+        let meta = &self.clusters.clusters[c as usize];
+        if self.dynamic.is_empty() {
+            return self.source.cluster_embeddings(meta);
+        }
+        let dim = self.scorer.dim();
+        let mut m = crate::vecmath::EmbeddingMatrix::with_capacity(dim, meta.len());
+        // Static members come from the source in one gather; dynamic rows
+        // are spliced in positionally.
+        let static_meta = crate::index::ClusterMeta {
+            id: meta.id,
+            chunk_ids: meta
+                .chunk_ids
+                .iter()
+                .copied()
+                .filter(|id| !self.dynamic.contains_key(id))
+                .collect(),
+            chars: 0,
+            gen_cost: crate::simtime::SimDuration::ZERO,
+        };
+        let static_emb = self.source.cluster_embeddings(&static_meta)?;
+        let mut si = 0;
+        for &cid in &meta.chunk_ids {
+            if let Some((_, emb)) = self.dynamic.get(&cid) {
+                m.push(emb);
+            } else {
+                m.push(static_emb.row(si));
+                si += 1;
+            }
+        }
+        Ok(m)
+    }
+
+    /// Centroid scores with merged-cluster tombstones masked out.
+    pub(crate) fn probe(&self, query: &[f32], nprobe: usize) -> Result<Vec<(usize, f32)>> {
+        let mut scores = self.scorer.scores(query, &self.clusters.centroids)?;
+        for (i, s) in scores.iter_mut().enumerate() {
+            if !self.active[i] {
+                *s = f32::NEG_INFINITY;
+            }
+        }
+        Ok(vecmath::top_k(&scores, scores.len(), nprobe))
+    }
+
+    /// Obtain one probed cluster's embeddings per the Fig. 9 decision
+    /// chain, charging the appropriate component.
+    fn materialize(
+        &mut self,
+        c: u32,
+        ledger: &mut LatencyLedger,
+        events: &mut SearchEvents,
+    ) -> Result<std::sync::Arc<crate::vecmath::EmbeddingMatrix>> {
+        let meta = &self.clusters.clusters[c as usize];
+        let dim = self.scorer.dim();
+        let emb_bytes = meta.emb_bytes(dim);
+
+        // (2) precomputed in storage?
+        if let Some(blob) = &self.blob {
+            if blob.contains(c) {
+                ledger.charge(
+                    Component::StorageLoad,
+                    self.device.storage_read_cost(emb_bytes, true),
+                );
+                events.loaded += 1;
+                return Ok(std::sync::Arc::new(blob.get(c)?));
+            }
+        }
+
+        // (4) embedding cache?
+        if let Some(cache) = &mut self.cache {
+            if let Some(hit) = cache.access(c) {
+                // Embeddings already in memory: only a residency touch.
+                // `hit` is an Arc — no matrix copy on the hot path.
+                events.cache_hits += 1;
+                ledger.charge(Component::CacheHit, self.device.mem_scan_cost(0));
+                self.memory.lock().unwrap().touch(Region::Cache(c), hit.bytes());
+                return Ok(hit);
+            }
+            self.last_had_miss = true;
+        }
+
+        // (4b) generate online.
+        let gen_cost = meta.gen_cost;
+        ledger.charge(Component::EmbedGen, gen_cost);
+        events.generated += 1;
+        let emb = std::sync::Arc::new(self.gather(c)?);
+
+        if let Some(cache) = &mut self.cache {
+            let gen_ms = gen_cost.as_millis_f64();
+            if self.controller.should_cache(gen_ms) {
+                let evicted = cache.insert(c, emb.clone(), gen_ms);
+                let mut mem = self.memory.lock().unwrap();
+                for v in evicted {
+                    mem.release(Region::Cache(v));
+                }
+                mem.install(Region::Cache(c), emb.bytes());
+            } else {
+                cache.note_rejected();
+            }
+        }
+        Ok(emb)
+    }
+}
+
+impl VectorIndex for EdgeIndex {
+    fn kind(&self) -> IndexKind {
+        self.kind
+    }
+
+    fn search(&mut self, query: &[f32], k: usize) -> Result<SearchOutcome> {
+        let mut ledger = LatencyLedger::new();
+        let mut events = SearchEvents::default();
+        self.last_had_miss = false;
+
+        // (1) centroid probe — first level always resident.
+        ledger.charge(
+            Component::CentroidProbe,
+            self.device.mem_scan_cost(self.clusters.centroid_bytes()),
+        );
+        let probes = self.probe(query, self.nprobe)?;
+
+        let mut all_hits: Vec<(u32, f32)> = Vec::new();
+        let mut probed = Vec::with_capacity(probes.len());
+        let dim = self.scorer.dim();
+        for (ci, _) in probes {
+            let c = ci as u32;
+            probed.push(c);
+            if self.clusters.clusters[ci].is_empty() {
+                continue;
+            }
+            let emb = self.materialize(c, &mut ledger, &mut events)?;
+            let meta = &self.clusters.clusters[ci];
+
+            // (6) in-cluster search.
+            ledger.charge(
+                Component::ClusterSearch,
+                self.device.mem_scan_cost(meta.emb_bytes(dim)),
+            );
+            let local = self.scorer.top_k(query, &emb, k)?;
+            for (li, s) in local {
+                all_hits.push((meta.chunk_ids[li], s));
+            }
+        }
+
+        let scores: Vec<f32> = all_hits.iter().map(|&(_, s)| s).collect();
+        let top = vecmath::top_k(&scores, all_hits.len(), k);
+        let hits = top.into_iter().map(|(i, s)| (all_hits[i].0, s)).collect();
+
+        Ok(SearchOutcome {
+            hits,
+            ledger,
+            probed,
+            events,
+        })
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        // Centroids + per-cluster metadata + cache contents. The pruned
+        // second level is the whole point: it does NOT appear here.
+        let meta_bytes: u64 = self
+            .clusters
+            .clusters
+            .iter()
+            .map(|m| (m.chunk_ids.len() * 4 + 32) as u64)
+            .sum();
+        self.clusters.centroid_bytes() + meta_bytes + self.cache_used_bytes()
+    }
+
+    fn feedback(&mut self, retrieval: SimDuration) {
+        if !self.features.caching || !self.adaptive {
+            return;
+        }
+        self.controller
+            .observe(self.last_had_miss, retrieval.as_millis_f64());
+        // Enforce the (possibly raised) threshold on current contents.
+        let threshold = self.controller.threshold_ms();
+        if let Some(cache) = &mut self.cache {
+            for v in cache.evict_below(threshold) {
+                self.memory.lock().unwrap().release(Region::Cache(v));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetProfile;
+    use crate::data::Corpus;
+    use crate::embedding::{Embedder, EmbedderBackend};
+    use crate::index::kmeans::{kmeans, KMeansConfig};
+    use crate::index::shared_memory;
+    use crate::testutil::shared_compute;
+    use crate::vecmath::EmbeddingMatrix;
+    use std::sync::Arc;
+
+    struct Fixture {
+        corpus: Corpus,
+        emb: Arc<EmbeddingMatrix>,
+        device: DeviceProfile,
+        scorer: Scorer,
+        embedder: Embedder,
+    }
+
+    fn fixture() -> Fixture {
+        let profile = DatasetProfile::tiny();
+        let corpus = Corpus::generate(&profile);
+        let compute = shared_compute();
+        let embedder = Embedder::new(compute.clone(), EmbedderBackend::Projection);
+        let emb = Arc::new(embedder.embed_texts(&corpus.texts()).unwrap());
+        Fixture {
+            corpus,
+            emb,
+            device: DeviceProfile::jetson_orin_nano(),
+            scorer: Scorer::new(compute),
+            embedder,
+        }
+    }
+
+    fn cluster_set(f: &Fixture) -> ClusterSet {
+        let km = kmeans(
+            &f.emb,
+            &KMeansConfig {
+                n_clusters: 8,
+                iterations: 5,
+                seed: 1,
+                init: None,
+            },
+            &f.scorer,
+        )
+        .unwrap();
+        ClusterSet::build(&f.corpus, km.centroids, &km.assignment, &f.device)
+    }
+
+    fn blob_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("edgerag-edge-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn build(f: &Fixture, kind: IndexKind, tag: &str, store_limit_ms: u64) -> EdgeIndex {
+        let set = cluster_set(f);
+        let blob = kind
+            .uses_storage()
+            .then(|| BlobStore::open(&blob_dir(tag), f.scorer.dim()).unwrap());
+        EdgeIndex::build(
+            kind,
+            set,
+            EmbedSource::Prebuilt(f.emb.clone()),
+            blob,
+            f.scorer.clone(),
+            shared_memory(64 << 20),
+            f.device.clone(),
+            &RetrievalConfig {
+                nprobe: 4,
+                ..Default::default()
+            },
+            SimDuration::from_millis(store_limit_ms),
+            SimDuration::from_millis(1_000),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn ivf_gen_always_generates() {
+        let f = fixture();
+        let mut idx = build(&f, IndexKind::IvfGen, "gen", 0);
+        let q = f.emb.row(3).to_vec();
+        let out = idx.search(&q, 5).unwrap();
+        assert_eq!(out.events.generated, out.probed.len());
+        assert_eq!(out.events.loaded, 0);
+        assert_eq!(out.events.cache_hits, 0);
+        assert!(out.ledger.component(Component::EmbedGen).as_millis() > 0);
+    }
+
+    #[test]
+    fn matches_ivf_results_exactly() {
+        // Paper §6.3.1: EdgeRAG "produces identical retrieval results to
+        // the two-level IVF index".
+        let f = fixture();
+        let set = cluster_set(&f);
+        let source = EmbedSource::Prebuilt(f.emb.clone());
+        let cluster_embs: Vec<EmbeddingMatrix> = set
+            .clusters
+            .iter()
+            .map(|m| source.cluster_embeddings(m).unwrap())
+            .collect();
+        let mut ivf = crate::index::IvfIndex::new(
+            cluster_set(&f),
+            cluster_embs,
+            f.scorer.clone(),
+            shared_memory(64 << 20),
+            f.device.clone(),
+            4,
+        );
+        let mut edge = build(&f, IndexKind::EdgeRag, "match", 100);
+        for i in [0usize, 17, 101, 300] {
+            let q = f.emb.row(i).to_vec();
+            let a = ivf.search(&q, 5).unwrap();
+            let b = edge.search(&q, 5).unwrap();
+            let ids_a: Vec<u32> = a.hits.iter().map(|h| h.0).collect();
+            let ids_b: Vec<u32> = b.hits.iter().map(|h| h.0).collect();
+            assert_eq!(ids_a, ids_b, "query {i}");
+        }
+    }
+
+    #[test]
+    fn live_generation_equals_prebuilt() {
+        // The oracle fast path is only legitimate because generation is
+        // deterministic: verify Live == Prebuilt end to end.
+        let f = fixture();
+        let set = cluster_set(&f);
+        let meta = set.clusters.iter().find(|m| m.len() >= 3).unwrap();
+        let live = EmbedSource::Live {
+            embedder: f.embedder.clone(),
+            texts: Arc::new(f.corpus.chunks.iter().map(|c| c.text.clone()).collect()),
+        };
+        let pre = EmbedSource::Prebuilt(f.emb.clone());
+        let a = live.cluster_embeddings(meta).unwrap();
+        let b = pre.cluster_embeddings(meta).unwrap();
+        assert_eq!(a.len(), b.len());
+        for i in 0..a.len() {
+            for (x, y) in a.row(i).iter().zip(b.row(i)) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn selective_storage_stores_only_heavy_tail() {
+        let f = fixture();
+        // store_limit 150ms ≈ the fixture's mean cluster gen cost: only
+        // the heavy tail persists.
+        let idx = build(&f, IndexKind::IvfGenLoad, "tail", 150);
+        let heavy = idx
+            .clusters
+            .clusters
+            .iter()
+            .filter(|m| m.gen_cost > SimDuration::from_millis(150) && !m.is_empty())
+            .count();
+        assert_eq!(idx.stored_clusters(), heavy);
+        assert!(heavy > 0, "fixture needs at least one heavy cluster");
+        assert!(heavy < idx.clusters.n_clusters(), "not everything stored");
+    }
+
+    #[test]
+    fn stored_clusters_load_instead_of_generate() {
+        let f = fixture();
+        let mut idx = build(&f, IndexKind::IvfGenLoad, "load", 20);
+        // Query near a heavy cluster's centroid: find a stored cluster and
+        // use one of its member chunks as the query.
+        let stored_id = (0..idx.clusters.n_clusters() as u32)
+            .find(|&c| idx.blob.as_ref().unwrap().contains(c))
+            .unwrap();
+        let member = idx.clusters.clusters[stored_id as usize].chunk_ids[0];
+        let q = f.emb.row(member as usize).to_vec();
+        let out = idx.search(&q, 3).unwrap();
+        assert!(out.events.loaded > 0, "no storage loads: {:?}", out.events);
+        assert!(out.ledger.component(Component::StorageLoad).as_nanos() > 0);
+    }
+
+    #[test]
+    fn cache_hits_on_repeat_queries() {
+        let f = fixture();
+        let mut idx = build(&f, IndexKind::EdgeRag, "cache", 1_000_000);
+        let q = f.emb.row(42).to_vec();
+        let cold = idx.search(&q, 3).unwrap();
+        idx.feedback(cold.ledger.total());
+        let warm = idx.search(&q, 3).unwrap();
+        assert!(cold.events.generated > 0);
+        assert!(warm.events.cache_hits > 0, "{:?}", warm.events);
+        assert!(
+            warm.ledger.total() < cold.ledger.total(),
+            "warm {} !< cold {}",
+            warm.ledger.total(),
+            cold.ledger.total()
+        );
+        let stats = idx.cache_stats().unwrap();
+        assert!(stats.hits >= 1 && stats.insertions >= 1);
+    }
+
+    #[test]
+    fn pinned_threshold_rejects_cheap_clusters() {
+        let f = fixture();
+        let mut idx = build(&f, IndexKind::EdgeRag, "pin", 1_000_000);
+        idx.pin_threshold(1e9); // nothing is expensive enough to cache
+        let q = f.emb.row(7).to_vec();
+        idx.search(&q, 3).unwrap();
+        let again = idx.search(&q, 3).unwrap();
+        assert_eq!(again.events.cache_hits, 0);
+        assert!(idx.cache_stats().unwrap().rejected_below_threshold > 0);
+    }
+
+    #[test]
+    fn adaptive_threshold_moves_with_feedback() {
+        let f = fixture();
+        let mut idx = build(&f, IndexKind::EdgeRag, "adapt", 1_000_000);
+        let q = f.emb.row(9).to_vec();
+        assert_eq!(idx.threshold_ms(), 0.0);
+        // Simulate slow misses: threshold should rise.
+        let out = idx.search(&q, 3).unwrap();
+        idx.feedback(out.ledger.total());
+        for i in 0..5 {
+            let q2 = f.emb.row(50 + i * 40).to_vec();
+            idx.search(&q2, 3).unwrap();
+            idx.feedback(SimDuration::from_millis(2_000 * (i as u64 + 1)));
+        }
+        assert!(idx.threshold_ms() > 0.0);
+    }
+
+    #[test]
+    fn resident_bytes_far_below_ivf() {
+        // The headline memory claim: pruned second level ⇒ resident
+        // footprint ≪ total embedding bytes.
+        let f = fixture();
+        let idx = build(&f, IndexKind::EdgeRag, "mem", 100);
+        assert!(idx.resident_bytes() < f.emb.bytes() / 2);
+    }
+}

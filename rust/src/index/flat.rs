@@ -1,0 +1,179 @@
+//! Flat index baseline: every chunk embedding in one array, every query a
+//! full linear scan (paper §2.3). Accurate but memory-hungry — the Fig. 3
+//! motivation case.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{DeviceProfile, IndexKind};
+use crate::index::{Scorer, SearchOutcome, SharedMemory, VectorIndex};
+use crate::simtime::{Component, LatencyLedger};
+use crate::storage::{Region, PAGE_BYTES};
+use crate::vecmath::EmbeddingMatrix;
+
+pub struct FlatIndex {
+    emb: Arc<EmbeddingMatrix>,
+    scorer: Scorer,
+    memory: SharedMemory,
+    device: DeviceProfile,
+}
+
+impl FlatIndex {
+    pub fn new(
+        emb: Arc<EmbeddingMatrix>,
+        scorer: Scorer,
+        memory: SharedMemory,
+        device: DeviceProfile,
+    ) -> Self {
+        FlatIndex {
+            emb,
+            scorer,
+            memory,
+            device,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.emb.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.emb.is_empty()
+    }
+
+    /// Load the embedding array into (modeled) memory — the flat
+    /// baseline's startup premise (Table 4: embeddings in Memory).
+    pub fn preload(&self) {
+        let mut mem = self.memory.lock().unwrap();
+        mem.touch_paged(Region::FlatPage, self.emb.bytes());
+    }
+}
+
+impl VectorIndex for FlatIndex {
+    fn kind(&self) -> IndexKind {
+        IndexKind::Flat
+    }
+
+    fn search(&mut self, query: &[f32], k: usize) -> Result<SearchOutcome> {
+        let mut ledger = LatencyLedger::new();
+        let bytes = self.emb.bytes();
+
+        // Residency: the scan walks the whole array; pages not resident
+        // fault in at sequential storage rate (the scan is sequential).
+        let faulted = {
+            let mut mem = self.memory.lock().unwrap();
+            mem.touch_paged(Region::FlatPage, bytes)
+        };
+        let mut events = super::SearchEvents::default();
+        if faulted > 0 {
+            events.thrash_faults = faulted.div_ceil(PAGE_BYTES) as usize;
+            ledger.charge(
+                Component::Thrash,
+                self.device.storage_read_cost(faulted, true),
+            );
+        }
+
+        // The scan itself: memory-bandwidth-bound similarity over all rows.
+        ledger.charge(Component::ClusterSearch, self.device.mem_scan_cost(bytes));
+
+        // Real numerics through the PJRT similarity kernel.
+        let top = self.scorer.top_k(query, &self.emb, k)?;
+        let hits = top.into_iter().map(|(i, s)| (i as u32, s)).collect();
+
+        Ok(SearchOutcome {
+            hits,
+            ledger,
+            probed: Vec::new(),
+            events,
+        })
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.emb.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::index::shared_memory;
+    use crate::testutil::shared_compute;
+
+    fn rows(dim: usize, n: usize, seed: u64) -> EmbeddingMatrix {
+        let mut rng = Rng::new(seed);
+        let mut m = EmbeddingMatrix::new(dim);
+        for _ in 0..n {
+            let mut row: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let norm = crate::vecmath::l2_norm(&row);
+            for v in &mut row {
+                *v /= norm;
+            }
+            m.push(&row);
+        }
+        m
+    }
+
+    #[test]
+    fn finds_planted_match_and_charges_scan() {
+        let scorer = Scorer::new(shared_compute());
+        let dim = scorer.dim();
+        let mut m = rows(dim, 500, 1);
+        let q: Vec<f32> = m.row(77).to_vec();
+        m.data[77 * dim] += 0.0; // identity row
+        let mut idx = FlatIndex::new(
+            Arc::new(m),
+            scorer,
+            shared_memory(1 << 30),
+            DeviceProfile::jetson_orin_nano(),
+        );
+        let out = idx.search(&q, 3).unwrap();
+        assert_eq!(out.hits[0].0, 77);
+        assert!(out.ledger.component(Component::ClusterSearch).as_nanos() > 0);
+    }
+
+    #[test]
+    fn thrashes_when_larger_than_memory() {
+        let scorer = Scorer::new(shared_compute());
+        let dim = scorer.dim();
+        let n = 4096; // 4 MiB of embeddings @ dim 256
+        let m = Arc::new(rows(dim, n, 2));
+        let small_mem = shared_memory(1 << 20); // 1 MiB budget
+        let mut idx = FlatIndex::new(
+            m,
+            scorer,
+            small_mem,
+            DeviceProfile::jetson_orin_nano(),
+        );
+        let q = vec![0.1f32; dim];
+        let a = idx.search(&q, 1).unwrap();
+        let b = idx.search(&q, 1).unwrap();
+        // Every scan must fault (working set 4× capacity) — sustained
+        // thrash, not just a cold start.
+        assert!(a.ledger.component(Component::Thrash).as_millis() > 0);
+        assert!(b.ledger.component(Component::Thrash).as_millis() > 0);
+        assert!(b.events.thrash_faults > 0);
+    }
+
+    #[test]
+    fn no_thrash_when_fits() {
+        let scorer = Scorer::new(shared_compute());
+        let dim = scorer.dim();
+        let m = Arc::new(rows(dim, 512, 3));
+        let mut idx = FlatIndex::new(
+            m,
+            scorer,
+            shared_memory(64 << 20),
+            DeviceProfile::jetson_orin_nano(),
+        );
+        let q = vec![0.1f32; dim];
+        idx.search(&q, 1).unwrap(); // cold faults
+        let warm = idx.search(&q, 1).unwrap();
+        assert_eq!(warm.ledger.component(Component::Thrash).as_nanos(), 0);
+    }
+}

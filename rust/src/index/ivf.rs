@@ -1,0 +1,251 @@
+//! Two-level IVF baseline (paper §2.3, Table 4 row "IVF"): first-level
+//! centroids + *all* second-level embeddings kept in memory. Fast when the
+//! database fits; thrashes catastrophically when it doesn't — the paper's
+//! primary comparison point.
+
+use anyhow::Result;
+
+use crate::config::{DeviceProfile, IndexKind};
+use crate::index::{ClusterSet, Scorer, SearchEvents, SearchOutcome, SharedMemory, VectorIndex};
+use crate::simtime::{Component, LatencyLedger};
+use crate::storage::Region;
+use crate::vecmath::{self, EmbeddingMatrix};
+
+pub struct IvfIndex {
+    clusters: ClusterSet,
+    /// Second-level embeddings per cluster — resident by design.
+    cluster_embs: Vec<EmbeddingMatrix>,
+    scorer: Scorer,
+    memory: SharedMemory,
+    device: DeviceProfile,
+    nprobe: usize,
+}
+
+impl IvfIndex {
+    pub fn new(
+        clusters: ClusterSet,
+        cluster_embs: Vec<EmbeddingMatrix>,
+        scorer: Scorer,
+        memory: SharedMemory,
+        device: DeviceProfile,
+        nprobe: usize,
+    ) -> Self {
+        assert_eq!(clusters.n_clusters(), cluster_embs.len());
+        IvfIndex {
+            clusters,
+            cluster_embs,
+            scorer,
+            memory,
+            device,
+            nprobe,
+        }
+    }
+
+    pub fn clusters(&self) -> &ClusterSet {
+        &self.clusters
+    }
+
+    pub fn set_nprobe(&mut self, nprobe: usize) {
+        self.nprobe = nprobe;
+    }
+
+    /// Load the whole second level into (modeled) memory — the IVF
+    /// baseline's startup premise (Table 4: embeddings in Memory). When
+    /// the index exceeds the budget this fills memory and the LRU churns
+    /// from the first query (steady-state thrash, not cold-start faults).
+    pub fn preload(&self) {
+        let dim = self.scorer.dim();
+        let mut mem = self.memory.lock().unwrap();
+        for meta in &self.clusters.clusters {
+            if !meta.is_empty() {
+                mem.touch(Region::Cluster(meta.id), meta.emb_bytes(dim));
+            }
+        }
+    }
+}
+
+impl VectorIndex for IvfIndex {
+    fn kind(&self) -> IndexKind {
+        IndexKind::Ivf
+    }
+
+    fn search(&mut self, query: &[f32], k: usize) -> Result<SearchOutcome> {
+        let mut ledger = LatencyLedger::new();
+        let mut events = SearchEvents::default();
+        let dim = self.scorer.dim();
+
+        // Level 1: centroid probe (centroids are always resident).
+        ledger.charge(
+            Component::CentroidProbe,
+            self.device.mem_scan_cost(self.clusters.centroid_bytes()),
+        );
+        let probes = self
+            .scorer
+            .top_k(query, &self.clusters.centroids, self.nprobe)?;
+
+        // Level 2: per-cluster in-memory search; non-resident clusters
+        // fault in scattered (mmap-style page-ins — the thrash case).
+        let mut all_hits: Vec<(u32, f32)> = Vec::new();
+        let mut probed = Vec::with_capacity(probes.len());
+        for (c, _) in probes {
+            let meta = &self.clusters.clusters[c];
+            probed.push(c as u32);
+            if meta.is_empty() {
+                continue;
+            }
+            let bytes = meta.emb_bytes(dim);
+            let faulted = self.memory.lock().unwrap().touch(Region::Cluster(c as u32), bytes);
+            if faulted > 0 {
+                events.thrash_faults += 1;
+                ledger.charge(Component::Thrash, self.device.thrash_cost(faulted));
+            }
+            ledger.charge(Component::ClusterSearch, self.device.mem_scan_cost(bytes));
+
+            let local = self.scorer.top_k(query, &self.cluster_embs[c], k)?;
+            for (li, s) in local {
+                all_hits.push((meta.chunk_ids[li], s));
+            }
+        }
+
+        let n = all_hits.len();
+        let scores: Vec<f32> = all_hits.iter().map(|&(_, s)| s).collect();
+        let top = vecmath::top_k(&scores, n, k);
+        let hits = top.into_iter().map(|(i, s)| (all_hits[i].0, s)).collect();
+
+        Ok(SearchOutcome {
+            hits,
+            ledger,
+            probed,
+            events,
+        })
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.clusters.centroid_bytes()
+            + self
+                .cluster_embs
+                .iter()
+                .map(|m| m.bytes())
+                .sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DatasetProfile, DeviceProfile};
+    use crate::data::Corpus;
+    use crate::embedding::{Embedder, EmbedderBackend};
+    use crate::index::kmeans::{kmeans, KMeansConfig};
+    use crate::index::{shared_memory, EmbedSource};
+    use crate::testutil::shared_compute;
+    use std::sync::Arc;
+
+    fn build_tiny() -> (Corpus, IvfIndex, Arc<EmbeddingMatrix>, Embedder) {
+        let profile = DatasetProfile::tiny();
+        let corpus = Corpus::generate(&profile);
+        let compute = shared_compute();
+        let embedder = Embedder::new(compute.clone(), EmbedderBackend::Projection);
+        let emb = Arc::new(embedder.embed_texts(&corpus.texts()).unwrap());
+        let scorer = Scorer::new(compute);
+        let km = kmeans(
+            &emb,
+            &KMeansConfig {
+                n_clusters: profile.n_topics,
+                iterations: 6,
+                seed: 1,
+                init: None,
+            },
+            &scorer,
+        )
+        .unwrap();
+        let device = DeviceProfile::jetson_orin_nano();
+        let set = ClusterSet::build(&corpus, km.centroids, &km.assignment, &device);
+        let source = EmbedSource::Prebuilt(emb.clone());
+        let cluster_embs: Vec<EmbeddingMatrix> = set
+            .clusters
+            .iter()
+            .map(|m| source.cluster_embeddings(m).unwrap())
+            .collect();
+        let idx = IvfIndex::new(
+            set,
+            cluster_embs,
+            scorer,
+            shared_memory(64 << 20),
+            device,
+            4,
+        );
+        (corpus, idx, emb, embedder)
+    }
+
+    #[test]
+    fn retrieves_target_chunk_for_derived_query() {
+        let (corpus, mut idx, _emb, embedder) = build_tiny();
+        // Query = exact text of a chunk: its own embedding must win.
+        let target = 100u32;
+        let q = embedder.embed_one(&corpus.chunks[target as usize].text).unwrap();
+        let out = idx.search(&q, 5).unwrap();
+        assert!(
+            out.hits.iter().any(|&(id, _)| id == target),
+            "target {target} not in top-5: {:?}",
+            out.hits
+        );
+        assert_eq!(out.probed.len(), 4);
+    }
+
+    #[test]
+    fn charges_centroid_and_cluster_components() {
+        let (_, mut idx, emb, _) = build_tiny();
+        let q = emb.row(0).to_vec();
+        let out = idx.search(&q, 3).unwrap();
+        assert!(out.ledger.component(Component::CentroidProbe).as_nanos() > 0);
+        assert!(out.ledger.component(Component::ClusterSearch).as_nanos() > 0);
+    }
+
+    #[test]
+    fn thrash_under_tight_memory() {
+        let (_, idx0, emb, _) = build_tiny();
+        // Rebuild with a memory budget far below the embedding size.
+        let mut idx = IvfIndex::new(
+            idx0.clusters,
+            idx0.cluster_embs,
+            idx0.scorer,
+            shared_memory(8 << 10), // 8 KiB
+            idx0.device,
+            4,
+        );
+        let q = emb.row(1).to_vec();
+        idx.search(&q, 3).unwrap();
+        let out = idx.search(&q, 3).unwrap();
+        assert!(out.events.thrash_faults > 0);
+        assert!(out.ledger.component(Component::Thrash).as_nanos() > 0);
+    }
+
+    #[test]
+    fn warm_clusters_do_not_refault() {
+        let (_, mut idx, emb, _) = build_tiny();
+        let q = emb.row(2).to_vec();
+        idx.search(&q, 3).unwrap();
+        let out = idx.search(&q, 3).unwrap();
+        assert_eq!(out.events.thrash_faults, 0);
+    }
+
+    #[test]
+    fn resident_bytes_counts_both_levels() {
+        let (_, idx, emb, _) = build_tiny();
+        assert!(idx.resident_bytes() > emb.bytes());
+    }
+
+    #[test]
+    fn hits_sorted_descending() {
+        let (_, mut idx, emb, _) = build_tiny();
+        let out = idx.search(emb.row(5), 10).unwrap();
+        for w in out.hits.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! K-means clustering for the IVF first level.
+//!
+//! The paper uses FAISS K-means (20 iterations, §6.2); this is the same
+//! algorithm — k-means++ seeding + Lloyd iterations — with the assignment
+//! step running through the PJRT similarity kernel (`Scorer::batch_scores`)
+//! and maximizing cosine similarity over unit vectors (equivalent to
+//! minimizing Euclidean distance on the unit sphere). Empty clusters are
+//! reseeded from the largest cluster's farthest members.
+
+use anyhow::Result;
+
+use crate::data::Rng;
+use crate::index::Scorer;
+use crate::vecmath::{self, EmbeddingMatrix};
+
+#[derive(Debug, Clone, Default)]
+pub struct KMeansConfig {
+    pub n_clusters: usize,
+    pub iterations: usize,
+    pub seed: u64,
+    /// Optional warm-start centroids (e.g. topic means for large corpora —
+    /// see `SystemBuilder::build_dataset`). Must have `n_clusters` rows;
+    /// skips k-means++ seeding.
+    pub init: Option<EmbeddingMatrix>,
+}
+
+impl KMeansConfig {
+    pub fn new(n_clusters: usize) -> Self {
+        KMeansConfig {
+            n_clusters,
+            iterations: 20, // paper §6.2
+            seed: 42,
+            init: None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct KMeansResult {
+    /// Unit-normalized centroids (n_clusters × dim).
+    pub centroids: EmbeddingMatrix,
+    /// Cluster id per input point.
+    pub assignment: Vec<u32>,
+}
+
+/// Run k-means over unit-vector `points`.
+pub fn kmeans(points: &EmbeddingMatrix, cfg: &KMeansConfig, scorer: &Scorer) -> Result<KMeansResult> {
+    let n = points.len();
+    let dim = points.dim;
+    let k = cfg.n_clusters.min(n).max(1);
+    let mut rng = Rng::new(cfg.seed);
+
+    let mut centroids = match &cfg.init {
+        Some(init) => {
+            assert_eq!(init.len(), k, "init must have n_clusters rows");
+            assert_eq!(init.dim, dim);
+            init.clone()
+        }
+        None => init_plus_plus(points, k, &mut rng),
+    };
+    let mut assignment = vec![0u32; n];
+
+    for _iter in 0..cfg.iterations {
+        // Assignment: argmax cosine via the PJRT kernel, chunking the
+        // centroid set through the batched scorer's row limit.
+        assign(points, &centroids, scorer, &mut assignment)?;
+
+        // Update: mean of members, re-normalized to the unit sphere.
+        let mut sums = vec![0.0f64; k * dim];
+        let mut counts = vec![0usize; k];
+        for (i, &a) in assignment.iter().enumerate() {
+            counts[a as usize] += 1;
+            let row = points.row(i);
+            let s = &mut sums[a as usize * dim..(a as usize + 1) * dim];
+            for (acc, v) in s.iter_mut().zip(row) {
+                *acc += *v as f64;
+            }
+        }
+        // Reseed empties from random points of the largest cluster.
+        let largest = (0..k).max_by_key(|&c| counts[c]).unwrap();
+        let mut new_centroids = EmbeddingMatrix::with_capacity(dim, k);
+        for c in 0..k {
+            if counts[c] == 0 {
+                let members: Vec<usize> = assignment
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &a)| a as usize == largest)
+                    .map(|(i, _)| i)
+                    .collect();
+                let pick = members[rng.below(members.len())];
+                new_centroids.push(points.row(pick));
+                continue;
+            }
+            let mut row: Vec<f32> = sums[c * dim..(c + 1) * dim]
+                .iter()
+                .map(|&v| (v / counts[c] as f64) as f32)
+                .collect();
+            let norm = vecmath::l2_norm(&row).max(1e-9);
+            for v in &mut row {
+                *v /= norm;
+            }
+            new_centroids.push(&row);
+        }
+        centroids = new_centroids;
+    }
+    assign(points, &centroids, scorer, &mut assignment)?;
+
+    Ok(KMeansResult {
+        centroids,
+        assignment,
+    })
+}
+
+fn assign(
+    points: &EmbeddingMatrix,
+    centroids: &EmbeddingMatrix,
+    scorer: &Scorer,
+    assignment: &mut [u32],
+) -> Result<()> {
+    let k = centroids.len();
+    let limit = scorer.max_batch_rows();
+    let mut best = vec![f32::NEG_INFINITY; points.len()];
+    let mut start = 0;
+    while start < k {
+        let take = (k - start).min(limit);
+        let mut sub = EmbeddingMatrix::with_capacity(centroids.dim, take);
+        for c in start..start + take {
+            sub.push(centroids.row(c));
+        }
+        let scores = scorer.batch_scores(points, &sub)?;
+        for (i, row) in scores.iter().enumerate() {
+            let local = vecmath::argmax(row);
+            if row[local] > best[i] {
+                best[i] = row[local];
+                assignment[i] = (start + local) as u32;
+            }
+        }
+        start += take;
+    }
+    Ok(())
+}
+
+/// k-means++ seeding: first centroid uniform, the rest proportional to
+/// (1 - max cosine similarity to the chosen set) — the spherical analogue
+/// of squared distance.
+fn init_plus_plus(points: &EmbeddingMatrix, k: usize, rng: &mut Rng) -> EmbeddingMatrix {
+    let n = points.len();
+    let dim = points.dim;
+    let mut centroids = EmbeddingMatrix::with_capacity(dim, k);
+    let first = rng.below(n);
+    centroids.push(points.row(first));
+    let mut best_sim = vec![f32::NEG_INFINITY; n];
+
+    while centroids.len() < k {
+        let newest = centroids.row(centroids.len() - 1);
+        let mut weights = Vec::with_capacity(n);
+        let mut total = 0.0f64;
+        for i in 0..n {
+            let s = vecmath::dot(points.row(i), newest);
+            if s > best_sim[i] {
+                best_sim[i] = s;
+            }
+            let w = ((1.0 - best_sim[i]) as f64).max(0.0);
+            let w = w * w;
+            weights.push(w);
+            total += w;
+        }
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.f64() * total;
+            let mut idx = n - 1;
+            for (i, w) in weights.iter().enumerate() {
+                if target < *w {
+                    idx = i;
+                    break;
+                }
+                target -= w;
+            }
+            idx
+        };
+        centroids.push(points.row(pick));
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::shared_compute;
+
+    /// Three well-separated synthetic direction groups.
+    fn grouped_points(dim: usize, per_group: usize) -> (EmbeddingMatrix, Vec<u32>) {
+        let mut rng = Rng::new(9);
+        let mut m = EmbeddingMatrix::new(dim);
+        let mut truth = Vec::new();
+        for g in 0..3u32 {
+            // group direction: one-hot-ish base + small noise
+            for _ in 0..per_group {
+                let mut row = vec![0.0f32; dim];
+                row[g as usize * 3] = 1.0;
+                for v in row.iter_mut() {
+                    *v += 0.05 * rng.normal() as f32;
+                }
+                let norm = vecmath::l2_norm(&row);
+                for v in row.iter_mut() {
+                    *v /= norm;
+                }
+                m.push(&row);
+                truth.push(g);
+            }
+        }
+        (m, truth)
+    }
+
+    #[test]
+    fn recovers_separated_groups() {
+        let scorer = Scorer::new(shared_compute());
+        let (points, truth) = grouped_points(scorer.dim(), 40);
+        let res = kmeans(
+            &points,
+            &KMeansConfig {
+                n_clusters: 3,
+                iterations: 10,
+                seed: 1,
+                init: None,
+            },
+            &scorer,
+        )
+        .unwrap();
+        // Every ground-truth group must map to exactly one k-means cluster.
+        for g in 0..3u32 {
+            let ids: std::collections::HashSet<u32> = truth
+                .iter()
+                .enumerate()
+                .filter(|(_, &t)| t == g)
+                .map(|(i, _)| res.assignment[i])
+                .collect();
+            assert_eq!(ids.len(), 1, "group {g} split across clusters");
+        }
+    }
+
+    #[test]
+    fn centroids_are_unit_norm() {
+        let scorer = Scorer::new(shared_compute());
+        let (points, _) = grouped_points(scorer.dim(), 20);
+        let res = kmeans(&points, &KMeansConfig::new(16), &scorer).unwrap();
+        for i in 0..res.centroids.len() {
+            let n = vecmath::l2_norm(res.centroids.row(i));
+            assert!((n - 1.0).abs() < 1e-3, "centroid {i} norm {n}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let scorer = Scorer::new(shared_compute());
+        let (points, _) = grouped_points(scorer.dim(), 15);
+        let cfg = KMeansConfig {
+            n_clusters: 4,
+            iterations: 5,
+            seed: 7,
+                init: None,
+            };
+        let a = kmeans(&points, &cfg, &scorer).unwrap();
+        let b = kmeans(&points, &cfg, &scorer).unwrap();
+        assert_eq!(a.assignment, b.assignment);
+    }
+
+    #[test]
+    fn k_larger_than_n_clamps() {
+        let scorer = Scorer::new(shared_compute());
+        let (points, _) = grouped_points(scorer.dim(), 2); // n=6
+        let res = kmeans(
+            &points,
+            &KMeansConfig {
+                n_clusters: 50,
+                iterations: 3,
+                seed: 3,
+                init: None,
+            },
+            &scorer,
+        )
+        .unwrap();
+        assert_eq!(res.centroids.len(), 6);
+        assert!(res.assignment.iter().all(|&a| a < 6));
+    }
+
+    #[test]
+    fn assignment_is_nearest_centroid() {
+        let scorer = Scorer::new(shared_compute());
+        let (points, _) = grouped_points(scorer.dim(), 20);
+        let res = kmeans(
+            &points,
+            &KMeansConfig {
+                n_clusters: 3,
+                iterations: 8,
+                seed: 2,
+                init: None,
+            },
+            &scorer,
+        )
+        .unwrap();
+        for i in (0..points.len()).step_by(7) {
+            let sims: Vec<f32> = (0..res.centroids.len())
+                .map(|c| vecmath::dot(points.row(i), res.centroids.row(c)))
+                .collect();
+            assert_eq!(
+                vecmath::argmax(&sims) as u32,
+                res.assignment[i],
+                "point {i} not assigned to nearest centroid"
+            );
+        }
+    }
+}

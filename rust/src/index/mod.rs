@@ -1,0 +1,80 @@
+//! Vector indexes: the flat baseline, the two-level IVF baseline, and the
+//! EdgeRAG index (pruned second level + online generation + selective
+//! storage + adaptive cache). One implementation per row of paper Table 4.
+
+pub mod clusters;
+pub mod edge;
+pub mod flat;
+pub mod ivf;
+pub mod kmeans;
+pub mod scorer;
+pub mod updates;
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+pub use clusters::{ClusterMeta, ClusterSet, EmbedSource};
+pub use edge::EdgeIndex;
+pub use flat::FlatIndex;
+pub use ivf::IvfIndex;
+pub use scorer::Scorer;
+
+use crate::config::IndexKind;
+use crate::simtime::{LatencyLedger, SimDuration};
+use crate::storage::MemoryModel;
+
+/// Memory model shared between an index and the LLM side of the pipeline
+/// (they contend for the same device DRAM — that contention *is* the
+/// paper's Fig. 3 phenomenon).
+pub type SharedMemory = Arc<Mutex<MemoryModel>>;
+
+pub fn shared_memory(capacity: u64) -> SharedMemory {
+    Arc::new(Mutex::new(MemoryModel::new(capacity)))
+}
+
+/// Event counts of one search (feeds Fig. 6/12 style analyses).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SearchEvents {
+    /// Clusters whose embeddings were generated online.
+    pub generated: usize,
+    /// Clusters loaded from the precomputed blob store.
+    pub loaded: usize,
+    /// Cluster embedding cache hits.
+    pub cache_hits: usize,
+    /// Residency faults charged (memory thrash events).
+    pub thrash_faults: usize,
+}
+
+/// Result of one vector search.
+#[derive(Debug, Clone, Default)]
+pub struct SearchOutcome {
+    /// (chunk id, score), descending.
+    pub hits: Vec<(u32, f32)>,
+    /// Modeled device-time breakdown of this search.
+    pub ledger: LatencyLedger,
+    /// Which clusters were probed (empty for flat).
+    pub probed: Vec<u32>,
+    pub events: SearchEvents,
+}
+
+/// The interface all five Table-4 configurations serve behind.
+pub trait VectorIndex: Send {
+    fn kind(&self) -> IndexKind;
+
+    /// Search for the `k` most similar chunks to an (already embedded)
+    /// query vector.
+    fn search(&mut self, query: &[f32], k: usize) -> Result<SearchOutcome>;
+
+    /// Bytes this configuration keeps memory-resident for the index
+    /// itself (Fig. 3's "embedded database size" bars).
+    fn resident_bytes(&self) -> u64;
+
+    /// Post-retrieval feedback with the query's total retrieval latency
+    /// (drives EdgeRAG's adaptive caching threshold; no-op for baselines).
+    fn feedback(&mut self, _retrieval: SimDuration) {}
+
+    /// Downcast support (the harness reaches EdgeRAG-specific state —
+    /// cache stats, threshold pinning — through the trait object).
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+}

@@ -1,0 +1,127 @@
+//! Similarity scoring service over the PJRT `sim_*` executables (the
+//! Pallas similarity kernel). Both IVF levels, the flat baseline scan and
+//! the k-means assignment step all score through here.
+
+use anyhow::Result;
+
+use crate::runtime::{ComputeHandle, Tensor};
+use crate::vecmath::{self, EmbeddingMatrix};
+
+#[derive(Clone)]
+pub struct Scorer {
+    compute: ComputeHandle,
+    sim_rows: Vec<usize>,
+    kmeans_batch: usize,
+    kmeans_rows: usize,
+    dim: usize,
+}
+
+impl Scorer {
+    pub fn new(compute: ComputeHandle) -> Self {
+        let m = compute.manifest();
+        Scorer {
+            sim_rows: m.sim_rows.clone(),
+            kmeans_batch: 32,
+            kmeans_rows: 512,
+            dim: m.dim,
+            compute,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Max rows scoreable against in one batched (k-means) call.
+    pub fn max_batch_rows(&self) -> usize {
+        self.kmeans_rows
+    }
+
+    fn bucket_for(&self, rows: usize) -> usize {
+        self.sim_rows
+            .iter()
+            .copied()
+            .find(|&b| b >= rows)
+            .unwrap_or_else(|| *self.sim_rows.last().unwrap())
+    }
+
+    /// Scores of one query against every row (chunking any size through
+    /// the compiled buckets; padding rows are sliced away).
+    pub fn scores(&self, q: &[f32], rows: &EmbeddingMatrix) -> Result<Vec<f32>> {
+        assert_eq!(q.len(), self.dim);
+        assert_eq!(rows.dim, self.dim);
+        let n = rows.len();
+        let max_bucket = *self.sim_rows.last().unwrap();
+        let mut out = Vec::with_capacity(n);
+        let mut start = 0;
+        while start < n {
+            let take = (n - start).min(max_bucket);
+            let bucket = self.bucket_for(take);
+            let mut chunk = Vec::with_capacity(bucket * self.dim);
+            chunk.extend_from_slice(&rows.data[start * self.dim..(start + take) * self.dim]);
+            chunk.resize(bucket * self.dim, 0.0);
+            let res = self.compute.run(
+                &format!("sim_1x{bucket}"),
+                vec![
+                    Tensor::F32(q.to_vec(), vec![1, self.dim]),
+                    Tensor::F32(chunk, vec![bucket, self.dim]),
+                ],
+            )?;
+            out.extend_from_slice(&res[0][..take]);
+            start += take;
+        }
+        Ok(out)
+    }
+
+    /// Top-k (index, score) of one query against rows, descending.
+    pub fn top_k(
+        &self,
+        q: &[f32],
+        rows: &EmbeddingMatrix,
+        k: usize,
+    ) -> Result<Vec<(usize, f32)>> {
+        let scores = self.scores(q, rows)?;
+        Ok(vecmath::top_k(&scores, rows.len(), k))
+    }
+
+    /// Batched scores for the k-means assignment step: up to 32 points ×
+    /// up to 512 centroids per call. Returns a row-major (points × n)
+    /// score matrix.
+    pub fn batch_scores(
+        &self,
+        points: &EmbeddingMatrix,
+        centroids: &EmbeddingMatrix,
+    ) -> Result<Vec<Vec<f32>>> {
+        assert_eq!(points.dim, self.dim);
+        assert_eq!(centroids.dim, self.dim);
+        let n = centroids.len();
+        assert!(
+            n <= self.kmeans_rows,
+            "batch_scores supports ≤{} centroids",
+            self.kmeans_rows
+        );
+        let cent_pad = centroids.padded(self.kmeans_rows);
+        let artifact = format!("sim_{}x{}", self.kmeans_batch, self.kmeans_rows);
+
+        let mut out: Vec<Vec<f32>> = Vec::with_capacity(points.len());
+        let mut start = 0;
+        while start < points.len() {
+            let take = (points.len() - start).min(self.kmeans_batch);
+            let mut batch = Vec::with_capacity(self.kmeans_batch * self.dim);
+            batch.extend_from_slice(&points.data[start * self.dim..(start + take) * self.dim]);
+            batch.resize(self.kmeans_batch * self.dim, 0.0);
+            let res = self.compute.run(
+                &artifact,
+                vec![
+                    Tensor::F32(batch, vec![self.kmeans_batch, self.dim]),
+                    Tensor::F32(cent_pad.clone(), vec![self.kmeans_rows, self.dim]),
+                ],
+            )?;
+            for j in 0..take {
+                out.push(res[0][j * self.kmeans_rows..j * self.kmeans_rows + n].to_vec());
+            }
+            start += take;
+        }
+        Ok(out)
+    }
+}

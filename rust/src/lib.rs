@@ -1,0 +1,34 @@
+//! EdgeRAG: online-indexed retrieval-augmented generation for edge devices.
+//!
+//! Reproduction of "EdgeRAG: Online-Indexed RAG for Edge Devices"
+//! (Seemakhupt, Liu, Khan — 2024). Three-layer architecture:
+//!
+//! * **Layer 3 (this crate)** — the rust serving coordinator: two-level IVF
+//!   index with pruned second-level embeddings, online embedding generation,
+//!   selective tail-cluster storage, cost-aware adaptive caching, SLO-aware
+//!   retrieval pipeline and request server.
+//! * **Layer 2 (`python/compile/model.py`)** — JAX compute graphs (embedding
+//!   model forward pass, similarity scorers, LLM prefill proxy), AOT-lowered
+//!   to HLO text at build time.
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for the
+//!   similarity/search and projection hot spots, lowered into the same HLO.
+//!
+//! Python never runs on the request path: the rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) once at
+//! startup and serves from compiled executables.
+
+pub mod cache;
+pub mod config;
+pub mod data;
+pub mod embedding;
+pub mod coordinator;
+pub mod eval;
+pub mod index;
+pub mod json;
+pub mod llm;
+pub mod runtime;
+pub mod server;
+pub mod simtime;
+pub mod storage;
+pub mod testutil;
+pub mod vecmath;

@@ -1,0 +1,9 @@
+//! LLM-side substrate: prompt assembly, prefill (the "first token" half of
+//! TTFT), and the generation-quality proxy that substitutes for the
+//! paper's GPT-4o judge (DESIGN.md §3).
+
+pub mod prefill;
+pub mod quality;
+
+pub use prefill::{Llm, PrefillOutcome};
+pub use quality::generation_score;

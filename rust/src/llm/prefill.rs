@@ -1,0 +1,213 @@
+//! LLM prefill: prompt assembly + the first-token half of TTFT.
+//!
+//! TTFT = retrieval + prefill (paper §6.3.4; decode is excluded there too).
+//! Prefill cost is linear in prompt tokens at the device's prefill rate,
+//! plus a model-reload penalty when memory pressure evicted weight pages
+//! (the Fig. 3 "first token latency" blow-up for thrashing configs).
+//!
+//! A real compiled decoder graph (`prefill_1`) can be executed per request
+//! (`real_prefill`), proving the full three-layer path; the figure-scale
+//! benches keep it off since its *cost* is what the device model charges.
+
+use anyhow::Result;
+
+use crate::config::DeviceProfile;
+use crate::embedding::tokenizer;
+use crate::index::SharedMemory;
+use crate::runtime::{ComputeHandle, Tensor};
+use crate::simtime::{Component, LatencyLedger};
+use crate::storage::Region;
+
+/// Result of the prefill stage.
+#[derive(Debug, Clone)]
+pub struct PrefillOutcome {
+    pub prompt_tokens: usize,
+    /// Top predicted first-token id (only when `real_prefill` is on).
+    pub first_token: Option<i32>,
+    /// Bytes of LLM weights that had to be reloaded from storage.
+    pub reloaded_bytes: u64,
+}
+
+/// The serving-side LLM wrapper.
+pub struct Llm {
+    device: DeviceProfile,
+    memory: SharedMemory,
+    compute: Option<ComputeHandle>,
+    max_prompt_tokens: usize,
+}
+
+impl Llm {
+    pub fn new(
+        device: DeviceProfile,
+        memory: SharedMemory,
+        compute: Option<ComputeHandle>,
+        max_prompt_tokens: usize,
+    ) -> Self {
+        Llm {
+            device,
+            memory,
+            compute,
+            max_prompt_tokens,
+        }
+    }
+
+    /// Assemble the generation prompt: query + retrieved chunks, truncated
+    /// to the prompt budget (token counting via the serving tokenizer).
+    pub fn build_prompt(&self, query: &str, chunks: &[&str]) -> String {
+        let mut prompt = String::with_capacity(256);
+        prompt.push_str("question: ");
+        prompt.push_str(query);
+        prompt.push_str(" context:");
+        let mut tokens = tokenizer::count_tokens(&prompt);
+        for chunk in chunks {
+            let t = tokenizer::count_tokens(chunk);
+            if tokens + t > self.max_prompt_tokens {
+                break;
+            }
+            prompt.push(' ');
+            prompt.push_str(chunk);
+            tokens += t;
+        }
+        prompt
+    }
+
+    /// Run prefill: touch model weights (charging reloads under memory
+    /// pressure), charge the prefill rate, optionally execute the real
+    /// compiled decoder graph.
+    pub fn prefill(
+        &self,
+        prompt: &str,
+        ledger: &mut LatencyLedger,
+        real_prefill: bool,
+    ) -> Result<PrefillOutcome> {
+        // Weight residency: thrashing retrieval configs evict LLM pages.
+        let reloaded = {
+            let mut mem = self.memory.lock().unwrap();
+            mem.touch_paged(Region::LlmPage, self.device.llm_weight_bytes)
+        };
+        if reloaded > 0 {
+            ledger.charge(
+                Component::ModelReload,
+                self.device.storage_read_cost(reloaded, true),
+            );
+        }
+
+        let prompt_tokens = tokenizer::count_tokens(prompt).max(1);
+        ledger.charge(
+            Component::Prefill,
+            self.device.prefill_cost(prompt_tokens as u64),
+        );
+
+        let first_token = if real_prefill {
+            let compute = self
+                .compute
+                .as_ref()
+                .expect("real_prefill requires a compute handle");
+            let seq = compute.manifest().prefill_seq;
+            let mut ids = vec![0i32; seq];
+            ids[0] = tokenizer::CLS_ID;
+            for (i, tid) in tokenizer::token_ids(prompt)
+                .into_iter()
+                .take(seq - 1)
+                .enumerate()
+            {
+                ids[i + 1] = tid;
+            }
+            let out = compute.run("prefill_1", vec![Tensor::I32(ids, vec![1, seq])])?;
+            let logits = &out[0];
+            let argmax = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32);
+            argmax
+        } else {
+            None
+        };
+
+        Ok(PrefillOutcome {
+            prompt_tokens,
+            first_token,
+            reloaded_bytes: reloaded,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::shared_memory;
+
+    fn llm(mem_bytes: u64) -> Llm {
+        Llm::new(
+            DeviceProfile::jetson_orin_nano(),
+            shared_memory(mem_bytes),
+            None,
+            64,
+        )
+    }
+
+    #[test]
+    fn prompt_includes_query_and_chunks() {
+        let l = llm(1 << 30);
+        let p = l.build_prompt("what is x", &["alpha beta", "gamma delta"]);
+        assert!(p.contains("what is x"));
+        assert!(p.contains("alpha beta"));
+        assert!(p.contains("gamma delta"));
+    }
+
+    #[test]
+    fn prompt_truncates_to_budget() {
+        let l = llm(1 << 30);
+        let long: String = (0..200).map(|i| format!("w{i} ")).collect();
+        let p = l.build_prompt("q", &[&long, "must not appear"]);
+        assert!(tokenizer::count_tokens(&p) <= 64);
+        assert!(!p.contains("must not appear"));
+    }
+
+    #[test]
+    fn prefill_charges_linear_cost() {
+        let l = llm(1 << 30);
+        let mut la = LatencyLedger::new();
+        let mut lb = LatencyLedger::new();
+        let short: String = (0..50).map(|i| format!("w{i} ")).collect();
+        let long: String = (0..500).map(|i| format!("w{i} ")).collect();
+        l.prefill(&short, &mut la, false).unwrap();
+        // warm: weights already resident; only prefill differs
+        l.prefill(&long, &mut lb, false).unwrap();
+        let a = la.component(Component::Prefill);
+        let b = lb.component(Component::Prefill);
+        assert!(b.as_nanos() > 9 * a.as_nanos());
+    }
+
+    #[test]
+    fn cold_start_pays_model_reload_once() {
+        let l = llm(1 << 30);
+        let mut first = LatencyLedger::new();
+        let mut second = LatencyLedger::new();
+        l.prefill("hello world", &mut first, false).unwrap();
+        l.prefill("hello again", &mut second, false).unwrap();
+        assert!(first.component(Component::ModelReload).as_millis() > 0);
+        assert_eq!(second.component(Component::ModelReload).as_nanos(), 0);
+    }
+
+    #[test]
+    fn eviction_pressure_forces_reload() {
+        let device = DeviceProfile::jetson_orin_nano();
+        let mem = shared_memory(device.llm_weight_bytes + (2 << 20));
+        let l = Llm::new(device.clone(), mem.clone(), None, 2048);
+        let mut ledger = LatencyLedger::new();
+        l.prefill("warm up", &mut ledger, false).unwrap();
+        // Index activity streams enough clusters to evict model pages.
+        {
+            let mut m = mem.lock().unwrap();
+            for c in 0..64u32 {
+                m.touch(Region::Cluster(c), 1 << 20);
+            }
+        }
+        let mut after = LatencyLedger::new();
+        let out = l.prefill("query again", &mut after, false).unwrap();
+        assert!(out.reloaded_bytes > 0);
+        assert!(after.component(Component::ModelReload).as_millis() > 0);
+    }
+}

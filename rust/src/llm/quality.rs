@@ -1,0 +1,145 @@
+//! Generation-quality proxy — the substitute for the paper's GPT-4o judge
+//! (Fig. 11; DESIGN.md §3).
+//!
+//! The paper uses an LLM judge only to demonstrate that IVF-class
+//! retrieval (lower precision, normalized recall) still yields generation
+//! quality within ~5% of the flat baseline — i.e., quality is a monotone,
+//! saturating function of whether the *relevant* context made it into the
+//! prompt. We model exactly that: a deterministic 0–100 score combining
+//! (a) whether any ground-truth-relevant chunk was retrieved, and (b) the
+//! lexical overlap between the best retrieved chunk and the gold chunk —
+//! saturating, so extra irrelevant chunks (precision loss) barely move it,
+//! mirroring the judge's behaviour the paper reports ("the generation
+//! model is capable of filtering out irrelevant information").
+
+use std::collections::HashSet;
+
+use crate::data::Corpus;
+use crate::embedding::tokenizer;
+
+/// Token-set overlap (Jaccard) between two texts under the serving
+/// tokenizer.
+fn jaccard(a: &str, b: &str) -> f64 {
+    let sa: HashSet<i32> = tokenizer::token_ids(a).into_iter().collect();
+    let sb: HashSet<i32> = tokenizer::token_ids(b).into_iter().collect();
+    if sa.is_empty() || sb.is_empty() {
+        return 0.0;
+    }
+    let inter = sa.intersection(&sb).count() as f64;
+    let union = sa.union(&sb).count() as f64;
+    inter / union
+}
+
+/// Score one answer's grounding: retrieved chunk ids vs. the query's
+/// ground truth. Returns 0–100.
+pub fn generation_score(
+    corpus: &Corpus,
+    retrieved: &[u32],
+    relevant: &[u32],
+    target_chunk: u32,
+) -> f64 {
+    if retrieved.is_empty() {
+        return 0.0;
+    }
+    let relevant_set: HashSet<u32> = relevant.iter().copied().collect();
+    let hit = retrieved.iter().any(|id| relevant_set.contains(id));
+
+    // Best lexical grounding among retrieved chunks vs. the gold chunk.
+    let gold = &corpus.chunks[target_chunk as usize].text;
+    let best_overlap = retrieved
+        .iter()
+        .map(|&id| jaccard(&corpus.chunks[id as usize].text, gold))
+        .fold(0.0f64, f64::max);
+
+    // Saturating combination: a direct hit dominates; partial overlap
+    // (near-duplicates, same-topic chunks) recovers most of the score —
+    // the "LLM filters irrelevant context" effect.
+    let base = if hit { 70.0 } else { 0.0 };
+    base + 30.0 * best_overlap
+}
+
+/// Mean generation score over a full workload result set.
+pub fn mean_generation_score(
+    corpus: &Corpus,
+    results: &[(Vec<u32>, Vec<u32>, u32)], // (retrieved, relevant, target)
+) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results
+        .iter()
+        .map(|(ret, rel, t)| generation_score(corpus, ret, rel, *t))
+        .sum::<f64>()
+        / results.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetProfile;
+
+    fn corpus() -> Corpus {
+        Corpus::generate(&DatasetProfile::tiny())
+    }
+
+    #[test]
+    fn perfect_retrieval_scores_100() {
+        let c = corpus();
+        let target = 10u32;
+        let s = generation_score(&c, &[target], &[target], target);
+        assert!((s - 100.0).abs() < 1e-9, "score {s}");
+    }
+
+    #[test]
+    fn empty_retrieval_scores_0() {
+        let c = corpus();
+        assert_eq!(generation_score(&c, &[], &[1], 1), 0.0);
+    }
+
+    #[test]
+    fn irrelevant_retrieval_scores_low() {
+        let c = corpus();
+        // pick chunks from a different topic than the target
+        let target = 0u32;
+        let far: Vec<u32> = c
+            .chunks
+            .iter()
+            .filter(|ch| ch.topic != c.chunks[0].topic)
+            .take(5)
+            .map(|ch| ch.id)
+            .collect();
+        let s = generation_score(&c, &far, &[target], target);
+        assert!(s < 40.0, "score {s}");
+    }
+
+    #[test]
+    fn extra_irrelevant_chunks_do_not_hurt() {
+        // The paper's Fig. 11 point: precision loss ≠ quality loss.
+        let c = corpus();
+        let target = 20u32;
+        let clean = generation_score(&c, &[target], &[target], target);
+        let noisy = generation_score(&c, &[5, 300, target, 400, 17], &[target], target);
+        assert!((clean - noisy).abs() < 1e-9);
+    }
+
+    #[test]
+    fn near_duplicate_recovers_most_of_the_score() {
+        let c = corpus();
+        let dup = c.chunks.iter().find(|ch| ch.group != ch.id).unwrap();
+        let orig = dup.group;
+        // Retrieved the duplicate instead of the exact target chunk.
+        let s = generation_score(&c, &[dup.id], &[orig, dup.id], orig);
+        assert!(s > 85.0, "near-duplicate score {s}");
+    }
+
+    #[test]
+    fn mean_over_workload() {
+        let c = corpus();
+        let results = vec![
+            (vec![1u32], vec![1u32], 1u32),
+            (vec![], vec![2u32], 2u32),
+        ];
+        let m = mean_generation_score(&c, &results);
+        assert!((m - 50.0).abs() < 1.0, "mean {m}");
+    }
+}

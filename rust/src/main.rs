@@ -1,0 +1,293 @@
+//! `edgerag` — the CLI launcher.
+//!
+//! Subcommands:
+//!   serve    start the serving coordinator on a TCP port
+//!   query    send one query to a running server
+//!   bench    regenerate a paper table/figure (see DESIGN.md §5)
+//!   build    pre-build dataset caches (embeddings + clustering)
+//!   tune     nprobe tuning against the flat baseline (paper §6.2)
+//!   config   print the default system config as JSON
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
+use edgerag::coordinator::builder::SystemBuilder;
+use edgerag::embedding::EmbedderBackend;
+use edgerag::eval::experiments::{self, ExperimentCtx, DEFAULT_QUERY_LIMIT};
+use edgerag::json::Value;
+use edgerag::runtime::ComputeHandle;
+use edgerag::server::{Client, Server};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny argv parser: positional command + `--key value` / `--flag` pairs.
+struct Args {
+    command: String,
+    positional: Vec<String>,
+    named: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut argv = std::env::args().skip(1);
+        let command = argv.next().unwrap_or_else(|| "help".into());
+        let mut positional = Vec::new();
+        let mut named = HashMap::new();
+        let rest: Vec<String> = argv.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            if let Some(key) = rest[i].strip_prefix("--") {
+                let is_flag = i + 1 >= rest.len() || rest[i + 1].starts_with("--");
+                if is_flag {
+                    named.insert(key.to_string(), "true".into());
+                    i += 1;
+                } else {
+                    named.insert(key.to_string(), rest[i + 1].clone());
+                    i += 2;
+                }
+            } else {
+                positional.push(rest[i].clone());
+                i += 1;
+            }
+        }
+        Args {
+            command,
+            positional,
+            named,
+        }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.named.get(key).map(|s| s.as_str())
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.get(key) == Some("true")
+    }
+}
+
+fn builder_from(args: &Args) -> Result<SystemBuilder> {
+    let artifacts = args.get("artifacts").unwrap_or("artifacts");
+    let compute = ComputeHandle::start(std::path::Path::new(artifacts))
+        .context("starting compute executor (run `make artifacts` first)")?;
+    let device = match args.get("device") {
+        Some(name) => {
+            DeviceProfile::by_name(name).with_context(|| format!("unknown device `{name}`"))?
+        }
+        None => DeviceProfile::jetson_orin_nano(),
+    };
+    let mut b = SystemBuilder::new(compute, device);
+    if let Some(np) = args.get("nprobe") {
+        b.retrieval.nprobe = np.parse().context("bad --nprobe")?;
+    }
+    if let Some(k) = args.get("top-k") {
+        b.retrieval.top_k = k.parse().context("bad --top-k")?;
+    }
+    if args.flag("transformer") {
+        b.options.backend = EmbedderBackend::Transformer;
+    }
+    if args.flag("live-generation") {
+        b.options.prebuilt_generation = false;
+    }
+    if args.flag("real-prefill") {
+        b.options.real_prefill = true;
+    }
+    Ok(b)
+}
+
+fn dataset_from(args: &Args) -> Result<DatasetProfile> {
+    let name = args.get("dataset").unwrap_or("tiny");
+    DatasetProfile::by_name(name).with_context(|| format!("unknown dataset `{name}`"))
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse();
+    match args.command.as_str() {
+        "serve" => serve(&args),
+        "query" => query(&args),
+        "stats" => stats(&args),
+        "bench" => bench(&args),
+        "build" => build(&args),
+        "tune" => tune(&args),
+        "config" => config(&args),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            bail!("unknown command `{other}`")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "edgerag — online-indexed RAG for edge devices (paper reproduction)
+
+USAGE: edgerag <command> [--options]
+
+COMMANDS
+  serve   --dataset NAME --index KIND [--port P] [--device D]
+          [--transformer] [--real-prefill] [--live-generation]
+  query   --text \"...\" [--port P]
+  stats   [--port P]
+  bench   <table2|fig3|fig4|fig5|fig7|fig10|fig12|fig13|breakdown|
+           headline|ablation-storage|ablation-decay|all>
+          [--dataset NAME] [--full] [--limit N] [--device D]
+  build   [--dataset NAME|--all]        pre-build dataset caches
+  tune    --dataset NAME                nprobe normalization vs flat
+  config                                print default config JSON
+
+INDEX KINDS: flat ivf ivf+gen ivf+gen+load edgerag
+DATASETS:    tiny scidocs fiqa quora nq hotpotqa fever"
+    );
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let builder = builder_from(args)?;
+    let dataset = dataset_from(args)?;
+    let kind = match args.get("index") {
+        Some(k) => IndexKind::by_name(k).with_context(|| format!("unknown index `{k}`"))?,
+        None => IndexKind::EdgeRag,
+    };
+    let port = args.get("port").unwrap_or("7313");
+    eprintln!("building dataset `{}` ({} chunks)…", dataset.name, dataset.n_chunks);
+    let built = builder.build_dataset(&dataset)?;
+    let pipeline = builder.pipeline(&built, kind)?;
+    let addr = format!("127.0.0.1:{port}");
+    let server = Server::bind(&addr, pipeline, builder.embedder())?;
+    eprintln!(
+        "serving `{}` with {} index on {addr} (device: {})",
+        dataset.name,
+        kind.name(),
+        builder.device.name
+    );
+    server.run()
+}
+
+fn query(args: &Args) -> Result<()> {
+    let port = args.get("port").unwrap_or("7313");
+    let text = args.get("text").context("--text required")?;
+    let mut client = Client::connect(&format!("127.0.0.1:{port}"))?;
+    let resp = client.query(text)?;
+    println!("{}", resp.pretty());
+    Ok(())
+}
+
+fn stats(args: &Args) -> Result<()> {
+    let port = args.get("port").unwrap_or("7313");
+    let mut client = Client::connect(&format!("127.0.0.1:{port}"))?;
+    let resp = client.call(&Value::object(vec![("op", Value::str("stats"))]))?;
+    println!("{}", resp.pretty());
+    Ok(())
+}
+
+fn bench(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("headline");
+    let builder = builder_from(args)?;
+    let query_limit = if args.flag("full") {
+        None
+    } else {
+        Some(
+            args.get("limit")
+                .map(|l| l.parse())
+                .transpose()
+                .context("bad --limit")?
+                .unwrap_or(DEFAULT_QUERY_LIMIT),
+        )
+    };
+    let ctx = ExperimentCtx {
+        builder,
+        query_limit,
+    };
+    let ds = |default: &str| {
+        args.get("dataset")
+            .map(String::from)
+            .unwrap_or_else(|| default.to_string())
+    };
+    match what {
+        "table2" => experiments::table2(&ctx).map(drop),
+        "fig3" => experiments::fig3(&ctx).map(drop),
+        "fig4" => experiments::fig4(&ctx).map(drop),
+        "fig5" => experiments::fig5(&ctx, &ds("nq")).map(drop),
+        "fig7" => experiments::fig7(&ctx, &ds("fever")).map(drop),
+        "fig10" | "fig11" => experiments::fig10_11(&ctx).map(drop),
+        "fig12" => experiments::fig12(&ctx, &ds("nq")).map(drop),
+        "fig13" => experiments::fig13(&ctx).map(drop),
+        "breakdown" | "fig6" => experiments::breakdown(&ctx, &ds("nq")).map(drop),
+        "headline" => experiments::headline(&ctx).map(drop),
+        "ablation-storage" => experiments::ablation_storage(&ctx, &ds("fever")).map(drop),
+        "ablation-decay" => experiments::ablation_decay(&ctx, &ds("fever")).map(drop),
+        "all" => {
+            experiments::table2(&ctx)?;
+            experiments::fig3(&ctx)?;
+            experiments::fig4(&ctx)?;
+            experiments::fig5(&ctx, "nq")?;
+            experiments::breakdown(&ctx, "nq")?;
+            experiments::fig7(&ctx, "fever")?;
+            experiments::fig10_11(&ctx)?;
+            experiments::fig12(&ctx, "nq")?;
+            experiments::fig13(&ctx)?;
+            experiments::headline(&ctx)?;
+            experiments::ablation_storage(&ctx, "fever")?;
+            experiments::ablation_decay(&ctx, "fever")?;
+            Ok(())
+        }
+        other => bail!("unknown bench `{other}` (see `edgerag help`)"),
+    }
+}
+
+fn build(args: &Args) -> Result<()> {
+    let builder = builder_from(args)?;
+    let datasets: Vec<DatasetProfile> = if args.flag("all") {
+        DatasetProfile::beir_suite()
+    } else {
+        vec![dataset_from(args)?]
+    };
+    for p in datasets {
+        let t = std::time::Instant::now();
+        let built = builder.build_dataset(&p)?;
+        println!(
+            "built `{}`: {} chunks, {} clusters, {:.1}s",
+            p.name,
+            built.corpus.len(),
+            built.centroids.len(),
+            t.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+fn tune(args: &Args) -> Result<()> {
+    let builder = builder_from(args)?;
+    let dataset = dataset_from(args)?;
+    let built = builder.build_dataset(&dataset)?;
+    let sample = args
+        .get("sample")
+        .map(|s| s.parse())
+        .transpose()
+        .context("bad --sample")?
+        .unwrap_or(100);
+    let np = edgerag::eval::harness::tune_nprobe(&builder, &built, 0.05, sample)?;
+    println!("dataset `{}`: nprobe = {np} normalizes recall to flat (±5%)", dataset.name);
+    Ok(())
+}
+
+fn config(args: &Args) -> Result<()> {
+    let dataset = dataset_from(args)?;
+    let cfg = edgerag::config::SystemConfig::new(dataset, IndexKind::EdgeRag);
+    println!("{}", cfg.to_json().pretty());
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! A compiled PJRT executable plus its pre-uploaded weights.
+//!
+//! Weights are uploaded to the device once at load time and passed by
+//! buffer on every call (`execute_b`), so the request path never re-copies
+//! model parameters — only the (small) activations cross the host/device
+//! boundary per call.
+
+use anyhow::{bail, Context, Result};
+use xla::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{ArtifactSpec, DType, InputKind, Manifest, TensorSpec};
+
+/// A host-side tensor argument for one execution.
+#[derive(Debug, Clone, Copy)]
+pub enum HostTensor<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl<'a> HostTensor<'a> {
+    fn shape(&self) -> &'a [usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(d, _) => d.len(),
+            HostTensor::I32(d, _) => d.len(),
+        }
+    }
+
+    fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I32(..) => DType::I32,
+        }
+    }
+
+    fn upload(&self, client: &PjRtClient) -> Result<PjRtBuffer> {
+        Ok(match self {
+            HostTensor::F32(data, dims) => {
+                client.buffer_from_host_buffer(data, dims, None)?
+            }
+            HostTensor::I32(data, dims) => {
+                client.buffer_from_host_buffer(data, dims, None)?
+            }
+        })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+    /// Pre-uploaded weight buffers, positionally aligned with the weight
+    /// entries of `spec.inputs`.
+    weights: Vec<PjRtBuffer>,
+}
+
+impl Executable {
+    /// Compile `spec` on `client`, loading + uploading its weight blobs.
+    pub fn load(client: &PjRtClient, manifest: &Manifest, spec: &ArtifactSpec) -> Result<Self> {
+        let path = manifest.hlo_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+
+        let mut weights = Vec::new();
+        for input in spec.inputs.iter().filter(|i| i.kind == InputKind::Weight) {
+            let host = manifest.read_weights(input)?;
+            weights.push(client.buffer_from_host_buffer(&host, &input.shape, None)?);
+        }
+        Ok(Executable {
+            spec: spec.clone(),
+            exe,
+            weights,
+        })
+    }
+
+    fn check_input(spec: &TensorSpec, arg: &HostTensor, name: &str, pos: usize) -> Result<()> {
+        if arg.dtype() != spec.dtype {
+            bail!("{name} input {pos}: dtype mismatch");
+        }
+        if arg.shape() != spec.shape.as_slice() || arg.len() != spec.elements() {
+            bail!(
+                "{name} input {pos}: shape {:?} != spec {:?}",
+                arg.shape(),
+                spec.shape
+            );
+        }
+        Ok(())
+    }
+
+    /// Execute with runtime inputs (weights are implicit). Returns the
+    /// flattened f32 contents of each output, in manifest order.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<Vec<f32>>> {
+        let client = self.exe.client();
+        let runtime_specs: Vec<&TensorSpec> = self.spec.runtime_inputs().collect();
+        if inputs.len() != runtime_specs.len() {
+            bail!(
+                "{}: {} inputs given, {} expected",
+                self.spec.name,
+                inputs.len(),
+                runtime_specs.len()
+            );
+        }
+
+        // Assemble the full positional argument list: weights (already on
+        // device) and activations (uploaded now), in spec order.
+        let mut uploaded = Vec::with_capacity(inputs.len());
+        for (spec, arg) in runtime_specs.iter().zip(inputs) {
+            Self::check_input(spec, arg, &self.spec.name, uploaded.len())?;
+            uploaded.push(arg.upload(client)?);
+        }
+        let mut args: Vec<&PjRtBuffer> = Vec::with_capacity(self.spec.inputs.len());
+        let (mut wi, mut ai) = (0, 0);
+        for input in &self.spec.inputs {
+            match input.kind {
+                InputKind::Weight => {
+                    args.push(&self.weights[wi]);
+                    wi += 1;
+                }
+                InputKind::Input => {
+                    args.push(&uploaded[ai]);
+                    ai += 1;
+                }
+            }
+        }
+
+        let result = self.exe.execute_b(&args)?;
+        // aot.py lowers with return_tuple=True → a single tuple output.
+        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+        if tuple.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: {} outputs, {} expected",
+                self.spec.name,
+                tuple.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            outs.push(lit.to_vec::<f32>()?);
+        }
+        Ok(outs)
+    }
+}

@@ -1,0 +1,264 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. `artifacts/manifest.json` lists every AOT-lowered HLO
+//! module, its input specs (weight blobs vs. runtime inputs) and output
+//! shapes.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::{self, Value};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype `{other}`"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InputKind {
+    /// Loaded once from `file` at startup, uploaded to the device and
+    /// reused across calls.
+    Weight,
+    /// Provided by the caller on every execution.
+    Input,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub kind: InputKind,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    pub file: Option<String>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<TensorSpec> {
+        let kind = match v.req("kind")?.as_str() {
+            Some("weight") => InputKind::Weight,
+            Some("input") => InputKind::Input,
+            other => bail!("bad input kind {other:?}"),
+        };
+        Ok(TensorSpec {
+            kind,
+            dtype: DType::parse(v.req("dtype")?.as_str().context("dtype not a string")?)?,
+            shape: parse_shape(v.req("shape")?)?,
+            file: v.get("file").and_then(|f| f.as_str()).map(String::from),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct OutputSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<OutputSpec>,
+}
+
+impl ArtifactSpec {
+    pub fn runtime_inputs(&self) -> impl Iterator<Item = &TensorSpec> {
+        self.inputs.iter().filter(|i| i.kind == InputKind::Input)
+    }
+}
+
+fn parse_shape(v: &Value) -> Result<Vec<usize>> {
+    v.as_array()
+        .context("shape not an array")?
+        .iter()
+        .map(|d| d.as_usize().context("shape dim not an integer"))
+        .collect()
+}
+
+fn parse_usize_list(v: &Value) -> Result<Vec<usize>> {
+    parse_shape(v)
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dim: usize,
+    pub vocab: usize,
+    pub enc_seq: usize,
+    pub prefill_seq: usize,
+    pub sim_rows: Vec<usize>,
+    pub proj_batches: Vec<usize>,
+    pub enc_batches: Vec<usize>,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {} — run `make artifacts` first", path.display())
+        })?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+
+        let mut artifacts = Vec::new();
+        for a in v.req("artifacts")?.as_array().context("artifacts not an array")? {
+            let inputs = a
+                .req("inputs")?
+                .as_array()
+                .context("inputs not an array")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_array()
+                .context("outputs not an array")?
+                .iter()
+                .map(|o| {
+                    Ok(OutputSpec {
+                        dtype: o
+                            .req("dtype")?
+                            .as_str()
+                            .context("output dtype")?
+                            .to_string(),
+                        shape: parse_shape(o.req("shape")?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                name: a.req("name")?.as_str().context("name")?.to_string(),
+                hlo: a.req("hlo")?.as_str().context("hlo")?.to_string(),
+                inputs,
+                outputs,
+            });
+        }
+
+        Ok(Manifest {
+            dim: v.req("dim")?.as_usize().context("dim")?,
+            vocab: v.req("vocab")?.as_usize().context("vocab")?,
+            enc_seq: v.req("enc_seq")?.as_usize().context("enc_seq")?,
+            prefill_seq: v.req("prefill_seq")?.as_usize().context("prefill_seq")?,
+            sim_rows: parse_usize_list(v.req("sim_rows")?)?,
+            proj_batches: parse_usize_list(v.req("proj_batches")?)?,
+            enc_batches: parse_usize_list(v.req("enc_batches")?)?,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        match self.artifacts.iter().find(|a| a.name == name) {
+            Some(a) => Ok(a),
+            None => bail!("artifact `{name}` not in manifest"),
+        }
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.hlo)
+    }
+
+    /// Read a weight blob (flat little-endian f32) for a weight input.
+    pub fn read_weights(&self, spec: &TensorSpec) -> Result<Vec<f32>> {
+        let file = spec.file.as_ref().context("weight input without a file")?;
+        let path = self.dir.join(file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading weights {}", path.display()))?;
+        if bytes.len() != spec.elements() * 4 {
+            bail!(
+                "{}: expected {} f32 ({} bytes), found {} bytes",
+                path.display(),
+                spec.elements(),
+                spec.elements() * 4,
+                bytes.len()
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Smallest similarity bucket with at least `rows` rows, if any.
+    pub fn sim_bucket(&self, rows: usize) -> Option<usize> {
+        self.sim_rows.iter().copied().find(|&r| r >= rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&manifest_dir()).expect("make artifacts first");
+        assert_eq!(m.dim, 256);
+        assert_eq!(m.vocab, 4096);
+        assert!(m.artifacts.len() >= 10);
+        for a in &m.artifacts {
+            assert!(m.hlo_path(a).exists(), "{} missing", a.hlo);
+            assert!(!a.outputs.is_empty());
+        }
+    }
+
+    #[test]
+    fn weight_blobs_match_specs() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        for a in &m.artifacts {
+            for i in a.inputs.iter().filter(|i| i.kind == InputKind::Weight) {
+                let w = m.read_weights(i).unwrap();
+                assert_eq!(w.len(), i.elements());
+                assert!(w.iter().all(|x| x.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn sim_bucket_selection() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        assert_eq!(m.sim_bucket(1), Some(128));
+        assert_eq!(m.sim_bucket(128), Some(128));
+        assert_eq!(m.sim_bucket(129), Some(256));
+        assert_eq!(m.sim_bucket(4096), Some(4096));
+        assert_eq!(m.sim_bucket(5000), None);
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        assert!(m.get("nope").is_err());
+        assert!(m.get("sim_1x128").is_ok());
+    }
+
+    #[test]
+    fn enc_artifacts_have_weight_plus_two_inputs() {
+        let m = Manifest::load(&manifest_dir()).unwrap();
+        let enc = m.get("enc_8").unwrap();
+        assert_eq!(enc.inputs.len(), 3);
+        assert_eq!(enc.inputs[0].kind, InputKind::Weight);
+        assert_eq!(enc.runtime_inputs().count(), 2);
+        assert_eq!(enc.outputs[0].shape, vec![8, 256]);
+    }
+}

@@ -1,0 +1,78 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`) and serves compiled executables to the
+//! coordinator. Python is never on this path — artifacts are plain HLO
+//! text compiled through the PJRT C API at startup.
+//!
+//! Executables are compiled lazily on first use and memoized: tests and
+//! tools that touch one model don't pay for compiling all eleven.
+
+mod executable;
+pub mod manifest;
+pub mod service;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+pub use executable::{Executable, HostTensor};
+pub use manifest::{ArtifactSpec, DType, InputKind, Manifest};
+pub use service::{ComputeHandle, Tensor};
+
+/// The process-wide PJRT runtime: one CPU client + compiled-executable
+/// registry keyed by artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    pub fn load(artifacts_dir: &Path) -> Result<Arc<Runtime>> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Arc::new(Runtime {
+            client,
+            manifest,
+            compiled: Mutex::new(HashMap::new()),
+        }))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn dim(&self) -> usize {
+        self.manifest.dim
+    }
+
+    /// Fetch (compiling on first use) the executable for `name`.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.compiled.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        // Compile outside the lock: compilation can take hundreds of ms and
+        // other artifacts shouldn't block on it.
+        let spec = self.manifest.get(name)?.clone();
+        let exe = Arc::new(Executable::load(&self.client, &self.manifest, &spec)?);
+        let mut map = self.compiled.lock().unwrap();
+        let entry = map.entry(name.to_string()).or_insert_with(|| exe.clone());
+        Ok(entry.clone())
+    }
+
+    /// Eagerly compile every artifact (server startup path).
+    pub fn warmup(&self) -> Result<()> {
+        let names: Vec<String> =
+            self.manifest.artifacts.iter().map(|a| a.name.clone()).collect();
+        for name in names {
+            self.executable(&name)?;
+        }
+        Ok(())
+    }
+
+    /// Number of executables compiled so far.
+    pub fn compiled_count(&self) -> usize {
+        self.compiled.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,168 @@
+//! Compute-executor thread: the serving-engine pattern.
+//!
+//! The `xla` crate's PJRT handles are `Rc`-based (single-threaded), so all
+//! PJRT state — client, compiled executables, uploaded weights — lives on
+//! one dedicated executor thread. Coordinator/server threads hold a cheap
+//! [`ComputeHandle`] (`Clone + Send + Sync`) and submit jobs over a
+//! channel; replies come back on per-call channels. This mirrors how
+//! production servers isolate an inference engine behind a submission
+//! queue.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{HostTensor, Manifest, Runtime};
+
+/// An owned tensor argument crossing the thread boundary.
+#[derive(Debug, Clone)]
+pub enum Tensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Tensor {
+    fn as_host(&self) -> HostTensor<'_> {
+        match self {
+            Tensor::F32(d, s) => HostTensor::F32(d, s),
+            Tensor::I32(d, s) => HostTensor::I32(d, s),
+        }
+    }
+}
+
+enum Job {
+    Run {
+        artifact: String,
+        inputs: Vec<Tensor>,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Warmup {
+        reply: mpsc::Sender<Result<()>>,
+    },
+    Shutdown,
+}
+
+struct Shared {
+    tx: mpsc::Sender<Job>,
+    manifest: Manifest,
+    calls: AtomicU64,
+    join: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+/// Handle to the compute executor. Cloneable and thread-safe; dropping the
+/// last handle shuts the executor down.
+#[derive(Clone)]
+pub struct ComputeHandle {
+    shared: Arc<Shared>,
+}
+
+impl ComputeHandle {
+    /// Spawn the executor thread and load the artifact manifest.
+    pub fn start(artifacts_dir: &Path) -> Result<ComputeHandle> {
+        // Parse the manifest on the caller thread too (it's cheap) so the
+        // handle can answer shape/bucket questions without a round-trip.
+        let manifest = Manifest::load(artifacts_dir)?;
+        let dir: PathBuf = artifacts_dir.to_path_buf();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+        let join = std::thread::Builder::new()
+            .name("edgerag-compute".into())
+            .spawn(move || executor_loop(&dir, rx, ready_tx))
+            .context("spawning compute thread")?;
+
+        ready_rx
+            .recv()
+            .context("compute thread died during startup")??;
+
+        Ok(ComputeHandle {
+            shared: Arc::new(Shared {
+                tx,
+                manifest,
+                calls: AtomicU64::new(0),
+                join: std::sync::Mutex::new(Some(join)),
+            }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.shared.manifest
+    }
+
+    pub fn dim(&self) -> usize {
+        self.shared.manifest.dim
+    }
+
+    /// Total executions submitted through this service.
+    pub fn calls(&self) -> u64 {
+        self.shared.calls.load(Ordering::Relaxed)
+    }
+
+    /// Execute an artifact with owned inputs; blocks for the result.
+    pub fn run(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Vec<f32>>> {
+        self.shared.calls.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        self.shared
+            .tx
+            .send(Job::Run {
+                artifact: artifact.to_string(),
+                inputs,
+                reply,
+            })
+            .map_err(|_| anyhow!("compute thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("compute thread dropped reply"))?
+    }
+
+    /// Eagerly compile all artifacts (server startup).
+    pub fn warmup(&self) -> Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.shared
+            .tx
+            .send(Job::Warmup { reply })
+            .map_err(|_| anyhow!("compute thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("compute thread dropped reply"))?
+    }
+}
+
+impl Drop for Shared {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Job::Shutdown);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn executor_loop(dir: &Path, rx: mpsc::Receiver<Job>, ready: mpsc::Sender<Result<()>>) {
+    let runtime = match Runtime::load(dir) {
+        Ok(rt) => {
+            let _ = ready.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Run {
+                artifact,
+                inputs,
+                reply,
+            } => {
+                let res = runtime.executable(&artifact).and_then(|exe| {
+                    let host: Vec<HostTensor> = inputs.iter().map(|t| t.as_host()).collect();
+                    exe.run(&host)
+                });
+                let _ = reply.send(res);
+            }
+            Job::Warmup { reply } => {
+                let _ = reply.send(runtime.warmup());
+            }
+            Job::Shutdown => break,
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Request server: a line-delimited JSON protocol over TCP.
+//!
+//! The crate cache has no async runtime, so the server is thread-based:
+//! one acceptor + one handler thread per connection, all funneling into
+//! the single-threaded serving pipeline (edge devices serve one query at a
+//! time; the interesting concurrency — compute — lives on the PJRT
+//! executor thread).
+//!
+//! Protocol (one JSON object per line):
+//!   {"op":"query","text":"..."}      → hits + latency breakdown
+//!   {"op":"insert","text":"..."}     → {"id": N, "cluster": C}
+//!   {"op":"remove","id":N}           → {"removed": bool}
+//!   {"op":"stats"}                   → serving metrics
+//!   {"op":"ping"}                    → {"ok": true}
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{RagPipeline, TextStore};
+use crate::embedding::Embedder;
+use crate::index::EdgeIndex;
+use crate::json::{self, Value};
+use crate::simtime::Component;
+
+/// Shared server state.
+pub struct ServerState {
+    pub pipeline: Mutex<RagPipeline>,
+    pub embedder: Embedder,
+    /// Shared with the pipeline: inserted chunks' text goes here so prompt
+    /// assembly can fetch it (ids are allocated by the store).
+    texts: TextStore,
+    running: AtomicBool,
+}
+
+pub struct Server {
+    state: Arc<ServerState>,
+    listener: TcpListener,
+}
+
+impl Server {
+    /// Bind on `addr` (e.g. "127.0.0.1:7313").
+    pub fn bind(addr: &str, pipeline: RagPipeline, embedder: Embedder) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let texts = pipeline.texts();
+        Ok(Server {
+            state: Arc::new(ServerState {
+                pipeline: Mutex::new(pipeline),
+                embedder,
+                texts,
+                running: AtomicBool::new(true),
+            }),
+            listener,
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until `shutdown` op (blocking).
+    pub fn run(&self) -> Result<()> {
+        for stream in self.listener.incoming() {
+            if !self.state.running.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let state = self.state.clone();
+            std::thread::spawn(move || {
+                let _ = handle_connection(stream, &state);
+            });
+        }
+        Ok(())
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(());
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let response = match dispatch(trimmed, state) {
+            Ok(v) => v,
+            Err(e) => Value::object(vec![("error", Value::str(format!("{e:#}")))]),
+        };
+        writeln!(out, "{response}")?;
+        if trimmed.contains("\"shutdown\"") {
+            state.running.store(false, Ordering::SeqCst);
+            // poke the acceptor loop awake
+            let _ = TcpStream::connect(out.local_addr()?);
+            return Ok(());
+        }
+    }
+}
+
+fn dispatch(line: &str, state: &ServerState) -> Result<Value> {
+    let req = json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
+    let op = req.req("op")?.as_str().context("op must be a string")?;
+    match op {
+        "ping" => Ok(Value::object(vec![("ok", true.into())])),
+        "shutdown" => Ok(Value::object(vec![("ok", true.into())])),
+        "query" => {
+            let text = req.req("text")?.as_str().context("text")?;
+            let mut p = state.pipeline.lock().unwrap();
+            let out = p.handle(text)?;
+            let hits = Value::array(out.hits.iter().map(|&(id, score)| {
+                Value::object(vec![
+                    ("chunk", id.into()),
+                    ("score", (score as f64).into()),
+                ])
+            }));
+            Ok(Value::object(vec![
+                ("hits", hits),
+                ("retrieval_ms", out.retrieval.as_millis_f64().into()),
+                ("ttft_ms", out.ttft.as_millis_f64().into()),
+                (
+                    "embed_gen_ms",
+                    out.breakdown.get(Component::EmbedGen).as_millis_f64().into(),
+                ),
+                ("prompt_tokens", out.prompt_tokens.into()),
+                ("cache_hits", out.events.cache_hits.into()),
+                ("generated", out.events.generated.into()),
+                ("loaded", out.events.loaded.into()),
+                ("wall_us", (out.wall.as_micros() as u64).into()),
+            ]))
+        }
+        "insert" => {
+            let text = req.req("text")?.as_str().context("text")?;
+            let emb = state.embedder.embed_one(text)?;
+            let mut p = state.pipeline.lock().unwrap();
+            // Allocate the id from the shared text store while holding the
+            // pipeline lock, so ids and index state stay consistent.
+            let id = state.texts.push(text.to_string());
+            let edge = p
+                .index_mut()
+                .as_any_mut()
+                .downcast_mut::<EdgeIndex>()
+                .context("insert requires an EdgeRAG index")?;
+            let cluster = edge.insert_chunk(id, text, &emb)?;
+            Ok(Value::object(vec![
+                ("id", id.into()),
+                ("cluster", cluster.into()),
+            ]))
+        }
+        "remove" => {
+            let id = req.req("id")?.as_u64().context("id")? as u32;
+            let mut p = state.pipeline.lock().unwrap();
+            let edge = p
+                .index_mut()
+                .as_any_mut()
+                .downcast_mut::<EdgeIndex>()
+                .context("remove requires an EdgeRAG index")?;
+            let removed = edge.remove_chunk(id)?;
+            Ok(Value::object(vec![("removed", removed.into())]))
+        }
+        "stats" => {
+            let mut p = state.pipeline.lock().unwrap();
+            let queries = p.metrics().queries();
+            let resident = p.index().resident_bytes();
+            let (hit_rate, threshold) = match p
+                .index_mut()
+                .as_any_mut()
+                .downcast_mut::<EdgeIndex>()
+            {
+                Some(e) => (
+                    e.cache_stats().map(|s| s.hit_rate()).unwrap_or(0.0),
+                    e.threshold_ms(),
+                ),
+                None => (0.0, 0.0),
+            };
+            let m = p.metrics_mut();
+            Ok(Value::object(vec![
+                ("queries", queries.into()),
+                ("retrieval_p50_ms", m.retrieval.percentile(50.0).as_millis_f64().into()),
+                ("retrieval_p95_ms", m.retrieval.percentile(95.0).as_millis_f64().into()),
+                ("ttft_p50_ms", m.ttft.percentile(50.0).as_millis_f64().into()),
+                ("ttft_p95_ms", m.ttft.percentile(95.0).as_millis_f64().into()),
+                ("resident_bytes", resident.into()),
+                ("cache_hit_rate", hit_rate.into()),
+                ("threshold_ms", threshold.into()),
+            ]))
+        }
+        other => anyhow::bail!("unknown op `{other}`"),
+    }
+}
+
+/// Minimal blocking client for the line-JSON protocol (used by the CLI and
+/// tests).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn call(&mut self, request: &Value) -> Result<Value> {
+        writeln!(self.writer, "{request}")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
+    }
+
+    pub fn query(&mut self, text: &str) -> Result<Value> {
+        self.call(&Value::object(vec![
+            ("op", Value::str("query")),
+            ("text", Value::str(text)),
+        ]))
+    }
+}

@@ -1,0 +1,278 @@
+//! Virtual time: deterministic latency accounting for the device model.
+//!
+//! EdgeRAG's figures are about *device-scale* latencies (Jetson Orin Nano +
+//! SD card), which this testbed cannot produce natively. Instead, every
+//! component charges its modeled cost to a [`LatencyLedger`]; the retrieval
+//! pipeline sums per-component charges into a deterministic, reproducible
+//! latency breakdown. Real PJRT compute provides the *numerics* (which
+//! embeddings, which scores, what recall) while the ledger provides the
+//! *timing* — see DESIGN.md §7 ("virtual clock, real numerics").
+
+use std::fmt;
+use std::ops::{Add, AddAssign};
+use std::time::Duration;
+
+/// A span of modeled device time, in nanoseconds.
+///
+/// Thin wrapper over `u64` so device-model code cannot accidentally mix
+/// wall-clock and modeled durations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct SimDuration(pub u64);
+
+impl SimDuration {
+    pub const ZERO: SimDuration = SimDuration(0);
+
+    pub fn from_nanos(ns: u64) -> Self {
+        SimDuration(ns)
+    }
+    pub fn from_micros(us: u64) -> Self {
+        SimDuration(us * 1_000)
+    }
+    pub fn from_millis(ms: u64) -> Self {
+        SimDuration(ms * 1_000_000)
+    }
+    /// From fractional seconds (rates are naturally expressed in units/s).
+    pub fn from_secs_f64(s: f64) -> Self {
+        SimDuration((s.max(0.0) * 1e9).round() as u64)
+    }
+
+    pub fn as_nanos(self) -> u64 {
+        self.0
+    }
+    pub fn as_micros(self) -> u64 {
+        self.0 / 1_000
+    }
+    pub fn as_millis(self) -> u64 {
+        self.0 / 1_000_000
+    }
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+    pub fn as_millis_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    pub fn saturating_sub(self, rhs: SimDuration) -> SimDuration {
+        SimDuration(self.0.saturating_sub(rhs.0))
+    }
+
+    pub fn to_std(self) -> Duration {
+        Duration::from_nanos(self.0)
+    }
+}
+
+impl Add for SimDuration {
+    type Output = SimDuration;
+    fn add(self, rhs: SimDuration) -> SimDuration {
+        SimDuration(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimDuration {
+    fn add_assign(&mut self, rhs: SimDuration) {
+        self.0 += rhs.0;
+    }
+}
+
+impl fmt::Display for SimDuration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ms = self.as_millis_f64();
+        if ms >= 1000.0 {
+            write!(f, "{:.2}s", ms / 1000.0)
+        } else if ms >= 1.0 {
+            write!(f, "{ms:.1}ms")
+        } else {
+            write!(f, "{}µs", self.as_micros())
+        }
+    }
+}
+
+/// Where modeled time was spent during one retrieval — the categories of
+/// the paper's Figure 3 / Figure 6 breakdowns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Component {
+    /// Level-1 centroid probe (vector similarity vs centroids).
+    CentroidProbe,
+    /// Level-2 in-cluster similarity search.
+    ClusterSearch,
+    /// Online embedding generation (the paper's step 2).
+    EmbedGen,
+    /// Loading precomputed cluster embeddings from flash (step 3).
+    StorageLoad,
+    /// Embedding-cache hit service (step 4).
+    CacheHit,
+    /// Memory-thrash page-in penalties (baseline configs).
+    Thrash,
+    /// Query embedding generation.
+    QueryEmbed,
+    /// Fetching the matched data chunks' text.
+    ChunkFetch,
+    /// LLM prefill (first-token latency).
+    Prefill,
+    /// LLM weight reload after eviction under memory pressure.
+    ModelReload,
+}
+
+impl Component {
+    pub const ALL: [Component; 10] = [
+        Component::CentroidProbe,
+        Component::ClusterSearch,
+        Component::EmbedGen,
+        Component::StorageLoad,
+        Component::CacheHit,
+        Component::Thrash,
+        Component::QueryEmbed,
+        Component::ChunkFetch,
+        Component::Prefill,
+        Component::ModelReload,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Component::CentroidProbe => "centroid_probe",
+            Component::ClusterSearch => "cluster_search",
+            Component::EmbedGen => "embed_gen",
+            Component::StorageLoad => "storage_load",
+            Component::CacheHit => "cache_hit",
+            Component::Thrash => "thrash",
+            Component::QueryEmbed => "query_embed",
+            Component::ChunkFetch => "chunk_fetch",
+            Component::Prefill => "prefill",
+            Component::ModelReload => "model_reload",
+        }
+    }
+}
+
+/// Per-request accumulator of modeled time, split by component.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyLedger {
+    charges: Vec<(Component, SimDuration)>,
+}
+
+impl LatencyLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn charge(&mut self, component: Component, d: SimDuration) {
+        if d > SimDuration::ZERO {
+            self.charges.push((component, d));
+        }
+    }
+
+    /// Total modeled time across all components.
+    pub fn total(&self) -> SimDuration {
+        self.charges
+            .iter()
+            .fold(SimDuration::ZERO, |acc, (_, d)| acc + *d)
+    }
+
+    /// Time attributed to one component.
+    pub fn component(&self, c: Component) -> SimDuration {
+        self.charges
+            .iter()
+            .filter(|(cc, _)| *cc == c)
+            .fold(SimDuration::ZERO, |acc, (_, d)| acc + *d)
+    }
+
+    /// Retrieval-only portion (everything except prefill/model-reload).
+    pub fn retrieval(&self) -> SimDuration {
+        self.total()
+            .saturating_sub(self.component(Component::Prefill))
+            .saturating_sub(self.component(Component::ModelReload))
+    }
+
+    pub fn merge(&mut self, other: &LatencyLedger) {
+        self.charges.extend_from_slice(&other.charges);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.charges.is_empty()
+    }
+}
+
+const ALL_LEN: usize = Component::ALL.len();
+
+/// Compact fixed breakdown derived from a ledger; what metrics store.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Breakdown {
+    pub by_component: [u64; ALL_LEN], // nanoseconds, indexed by ALL order
+}
+
+impl Breakdown {
+    pub fn from_ledger(l: &LatencyLedger) -> Self {
+        let mut b = Breakdown::default();
+        for (i, c) in Component::ALL.iter().enumerate() {
+            b.by_component[i] = l.component(*c).as_nanos();
+        }
+        b
+    }
+
+    pub fn get(&self, c: Component) -> SimDuration {
+        let idx = Component::ALL.iter().position(|x| *x == c).unwrap();
+        SimDuration(self.by_component[idx])
+    }
+
+    pub fn total(&self) -> SimDuration {
+        SimDuration(self.by_component.iter().sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_conversions() {
+        assert_eq!(SimDuration::from_millis(3).as_micros(), 3_000);
+        assert_eq!(SimDuration::from_secs_f64(0.5).as_millis(), 500);
+        assert_eq!(SimDuration::from_micros(1500).as_millis(), 1);
+        assert_eq!(SimDuration::from_secs_f64(-1.0), SimDuration::ZERO);
+    }
+
+    #[test]
+    fn duration_display() {
+        assert_eq!(SimDuration::from_millis(2500).to_string(), "2.50s");
+        assert_eq!(SimDuration::from_millis(12).to_string(), "12.0ms");
+        assert_eq!(SimDuration::from_micros(250).to_string(), "250µs");
+    }
+
+    #[test]
+    fn ledger_totals_and_components() {
+        let mut l = LatencyLedger::new();
+        l.charge(Component::EmbedGen, SimDuration::from_millis(100));
+        l.charge(Component::EmbedGen, SimDuration::from_millis(50));
+        l.charge(Component::Prefill, SimDuration::from_millis(200));
+        assert_eq!(l.total(), SimDuration::from_millis(350));
+        assert_eq!(l.component(Component::EmbedGen), SimDuration::from_millis(150));
+        assert_eq!(l.retrieval(), SimDuration::from_millis(150));
+    }
+
+    #[test]
+    fn zero_charges_ignored() {
+        let mut l = LatencyLedger::new();
+        l.charge(Component::Thrash, SimDuration::ZERO);
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn breakdown_roundtrip() {
+        let mut l = LatencyLedger::new();
+        l.charge(Component::CentroidProbe, SimDuration::from_micros(42));
+        l.charge(Component::StorageLoad, SimDuration::from_millis(7));
+        let b = Breakdown::from_ledger(&l);
+        assert_eq!(b.get(Component::CentroidProbe).as_micros(), 42);
+        assert_eq!(b.get(Component::StorageLoad).as_millis(), 7);
+        assert_eq!(b.total(), l.total());
+    }
+
+    #[test]
+    fn ledger_merge() {
+        let mut a = LatencyLedger::new();
+        a.charge(Component::EmbedGen, SimDuration::from_millis(1));
+        let mut b = LatencyLedger::new();
+        b.charge(Component::CacheHit, SimDuration::from_millis(2));
+        a.merge(&b);
+        assert_eq!(a.total(), SimDuration::from_millis(3));
+    }
+}

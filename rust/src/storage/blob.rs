@@ -1,0 +1,223 @@
+//! On-disk blob store for precomputed cluster embeddings.
+//!
+//! EdgeRAG's selective index storage (paper §4.1) persists the embeddings
+//! of heavy tail clusters at indexing time. This store writes real files
+//! (one per cluster, contiguous f32 rows) so state survives restarts;
+//! retrieval-time read *latency* is modeled by the
+//! [`StorageDevice`](super::StorageDevice) since this testbed's disk is
+//! not an SD card.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::vecmath::EmbeddingMatrix;
+
+/// Persistent store of per-cluster embedding blobs.
+#[derive(Debug)]
+pub struct BlobStore {
+    dir: PathBuf,
+    dim: usize,
+    /// Blob sizes by cluster id (index kept in memory, like the paper's
+    /// first-level references to stored second-level indexes).
+    sizes: Mutex<HashMap<u32, u64>>,
+}
+
+impl BlobStore {
+    /// Open (creating if needed) a blob store rooted at `dir`.
+    pub fn open(dir: &Path, dim: usize) -> Result<BlobStore> {
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating blob dir {}", dir.display()))?;
+        let mut sizes = HashMap::new();
+        for entry in fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(id) = name
+                .strip_prefix("cluster_")
+                .and_then(|s| s.strip_suffix(".emb"))
+                .and_then(|s| s.parse::<u32>().ok())
+            {
+                sizes.insert(id, entry.metadata()?.len());
+            }
+        }
+        Ok(BlobStore {
+            dir: dir.to_path_buf(),
+            dim,
+            sizes: Mutex::new(sizes),
+        })
+    }
+
+    fn path(&self, cluster: u32) -> PathBuf {
+        self.dir.join(format!("cluster_{cluster}.emb"))
+    }
+
+    pub fn contains(&self, cluster: u32) -> bool {
+        self.sizes.lock().unwrap().contains_key(&cluster)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sizes.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Size in bytes of a stored blob (None if absent).
+    pub fn blob_bytes(&self, cluster: u32) -> Option<u64> {
+        self.sizes.lock().unwrap().get(&cluster).copied()
+    }
+
+    /// Total bytes across all stored blobs.
+    pub fn total_bytes(&self) -> u64 {
+        self.sizes.lock().unwrap().values().sum()
+    }
+
+    /// Persist a cluster's embeddings as one contiguous blob.
+    pub fn put(&self, cluster: u32, emb: &EmbeddingMatrix) -> Result<()> {
+        if emb.dim != self.dim {
+            bail!("blob dim {} != store dim {}", emb.dim, self.dim);
+        }
+        let mut bytes = Vec::with_capacity(emb.data.len() * 4);
+        for v in &emb.data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let path = self.path(cluster);
+        fs::write(&path, &bytes)
+            .with_context(|| format!("writing blob {}", path.display()))?;
+        self.sizes
+            .lock()
+            .unwrap()
+            .insert(cluster, bytes.len() as u64);
+        Ok(())
+    }
+
+    /// Load a cluster's embeddings.
+    pub fn get(&self, cluster: u32) -> Result<EmbeddingMatrix> {
+        let path = self.path(cluster);
+        let bytes =
+            fs::read(&path).with_context(|| format!("reading blob {}", path.display()))?;
+        if bytes.len() % (self.dim * 4) != 0 {
+            bail!(
+                "blob {} has {} bytes, not a multiple of row size {}",
+                path.display(),
+                bytes.len(),
+                self.dim * 4
+            );
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(EmbeddingMatrix {
+            dim: self.dim,
+            data,
+        })
+    }
+
+    /// Remove a blob (EdgeRAG removal path, §5.4).
+    pub fn remove(&self, cluster: u32) -> Result<()> {
+        let path = self.path(cluster);
+        if path.exists() {
+            fs::remove_file(&path)?;
+        }
+        self.sizes.lock().unwrap().remove(&cluster);
+        Ok(())
+    }
+
+    /// Delete everything (rebuild path).
+    pub fn clear(&self) -> Result<()> {
+        let ids: Vec<u32> = self.sizes.lock().unwrap().keys().copied().collect();
+        for id in ids {
+            self.remove(id)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "edgerag-blob-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample(dim: usize, n: usize) -> EmbeddingMatrix {
+        let mut m = EmbeddingMatrix::new(dim);
+        for i in 0..n {
+            let row: Vec<f32> = (0..dim).map(|j| (i * dim + j) as f32 * 0.5).collect();
+            m.push(&row);
+        }
+        m
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let dir = tmpdir("roundtrip");
+        let store = BlobStore::open(&dir, 8).unwrap();
+        let emb = sample(8, 5);
+        store.put(3, &emb).unwrap();
+        assert!(store.contains(3));
+        assert_eq!(store.blob_bytes(3), Some(5 * 8 * 4));
+        let back = store.get(3).unwrap();
+        assert_eq!(back.data, emb.data);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reopen_recovers_index() {
+        let dir = tmpdir("reopen");
+        {
+            let store = BlobStore::open(&dir, 4).unwrap();
+            store.put(1, &sample(4, 2)).unwrap();
+            store.put(9, &sample(4, 7)).unwrap();
+        }
+        let store = BlobStore::open(&dir, 4).unwrap();
+        assert_eq!(store.len(), 2);
+        assert!(store.contains(1) && store.contains(9));
+        assert_eq!(store.get(9).unwrap().len(), 7);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn remove_and_clear() {
+        let dir = tmpdir("remove");
+        let store = BlobStore::open(&dir, 4).unwrap();
+        store.put(1, &sample(4, 1)).unwrap();
+        store.put(2, &sample(4, 2)).unwrap();
+        store.remove(1).unwrap();
+        assert!(!store.contains(1));
+        assert!(store.get(1).is_err());
+        store.clear().unwrap();
+        assert!(store.is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let dir = tmpdir("dim");
+        let store = BlobStore::open(&dir, 4).unwrap();
+        assert!(store.put(0, &sample(8, 1)).is_err());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn total_bytes_tracks_blobs() {
+        let dir = tmpdir("total");
+        let store = BlobStore::open(&dir, 4).unwrap();
+        store.put(1, &sample(4, 3)).unwrap();
+        store.put(2, &sample(4, 5)).unwrap();
+        assert_eq!(store.total_bytes(), (3 + 5) * 4 * 4);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

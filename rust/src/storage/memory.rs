@@ -1,0 +1,277 @@
+//! Memory budget + thrash model.
+//!
+//! The paper's central observation (§3.1, Fig. 3): when the embedding
+//! database exceeds device memory, both Flat and IVF baselines thrash —
+//! every access to a paged-out region pays storage-rate page-ins, and the
+//! generation model itself gets evicted, inflating first-token latency.
+//!
+//! This model tracks resident regions under a fixed capacity with LRU
+//! eviction at page granularity. Callers convert faulted bytes into
+//! modeled latency through the [`StorageDevice`](super::StorageDevice).
+
+use std::collections::HashMap;
+
+/// A unit of residency accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Region {
+    /// One page of the generation model's weights.
+    LlmPage(u32),
+    /// The level-1 centroid table (small; effectively always hot).
+    Centroids,
+    /// One cluster's second-level embeddings (IVF baseline residency).
+    Cluster(u32),
+    /// One cached generated-embedding entry (EdgeRAG cache accounting).
+    Cache(u32),
+    /// One page of the flat index's embedding array.
+    FlatPage(u32),
+}
+
+#[derive(Debug)]
+struct Entry {
+    bytes: u64,
+    last_use: u64,
+}
+
+/// LRU-evicting residency model under a byte capacity.
+#[derive(Debug)]
+pub struct MemoryModel {
+    capacity: u64,
+    used: u64,
+    clock: u64,
+    resident: HashMap<Region, Entry>,
+    faults: u64,
+    fault_bytes: u64,
+    evictions: u64,
+}
+
+/// Page size for LLM-weight and flat-index residency accounting.
+pub const PAGE_BYTES: u64 = 1 << 20;
+
+impl MemoryModel {
+    pub fn new(capacity: u64) -> Self {
+        MemoryModel {
+            capacity,
+            used: 0,
+            clock: 0,
+            resident: HashMap::new(),
+            faults: 0,
+            fault_bytes: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    pub fn is_resident(&self, r: Region) -> bool {
+        self.resident.contains_key(&r)
+    }
+
+    pub fn faults(&self) -> u64 {
+        self.faults
+    }
+
+    pub fn fault_bytes(&self) -> u64 {
+        self.fault_bytes
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Access `r` (sized `bytes`). Returns the number of bytes that had to
+    /// be faulted in (0 on a residency hit). Evicts LRU entries as needed;
+    /// an access larger than capacity still faults its full size but only
+    /// the tail that fits stays resident.
+    pub fn touch(&mut self, r: Region, bytes: u64) -> u64 {
+        self.clock += 1;
+        if let Some(e) = self.resident.get_mut(&r) {
+            e.last_use = self.clock;
+            return 0;
+        }
+        self.faults += 1;
+        self.fault_bytes += bytes;
+        let keep = bytes.min(self.capacity);
+        self.make_room(keep, Some(r));
+        self.used += keep;
+        self.resident.insert(
+            r,
+            Entry {
+                bytes: keep,
+                last_use: self.clock,
+            },
+        );
+        bytes
+    }
+
+    /// Access that never faults storage (freshly generated data being
+    /// installed, e.g. cache inserts). Still consumes capacity and may
+    /// evict others. Returns bytes evicted to make room.
+    pub fn install(&mut self, r: Region, bytes: u64) -> u64 {
+        self.clock += 1;
+        if let Some(e) = self.resident.get_mut(&r) {
+            e.last_use = self.clock;
+            return 0;
+        }
+        let keep = bytes.min(self.capacity);
+        let evicted = self.make_room(keep, Some(r));
+        self.used += keep;
+        self.resident.insert(
+            r,
+            Entry {
+                bytes: keep,
+                last_use: self.clock,
+            },
+        );
+        evicted
+    }
+
+    /// Explicitly drop a region (cache eviction, index removal).
+    pub fn release(&mut self, r: Region) {
+        if let Some(e) = self.resident.remove(&r) {
+            self.used -= e.bytes;
+        }
+    }
+
+    fn make_room(&mut self, bytes: u64, skip: Option<Region>) -> u64 {
+        let mut evicted = 0;
+        while self.used + bytes > self.capacity {
+            let victim = self
+                .resident
+                .iter()
+                .filter(|(r, _)| Some(**r) != skip)
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(r, _)| *r);
+            match victim {
+                Some(v) => {
+                    let e = self.resident.remove(&v).unwrap();
+                    self.used -= e.bytes;
+                    evicted += e.bytes;
+                    self.evictions += 1;
+                }
+                None => break,
+            }
+        }
+        evicted
+    }
+
+    /// Touch all pages of a paged range (LLM weights, flat index), returning
+    /// total faulted bytes. `base` distinguishes ranges.
+    pub fn touch_paged<F: Fn(u32) -> Region>(&mut self, make: F, total: u64) -> u64 {
+        let mut faulted = 0;
+        let pages = total.div_ceil(PAGE_BYTES);
+        for p in 0..pages {
+            let sz = PAGE_BYTES.min(total - p * PAGE_BYTES);
+            faulted += if self.touch(make(p as u32), sz) > 0 { sz } else { 0 };
+        }
+        faulted
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.faults = 0;
+        self.fault_bytes = 0;
+        self.evictions = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_touch() {
+        let mut m = MemoryModel::new(10 * PAGE_BYTES);
+        assert_eq!(m.touch(Region::Cluster(1), PAGE_BYTES), PAGE_BYTES);
+        assert_eq!(m.touch(Region::Cluster(1), PAGE_BYTES), 0);
+        assert_eq!(m.faults(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut m = MemoryModel::new(2 * PAGE_BYTES);
+        m.touch(Region::Cluster(1), PAGE_BYTES);
+        m.touch(Region::Cluster(2), PAGE_BYTES);
+        m.touch(Region::Cluster(1), PAGE_BYTES); // refresh 1
+        m.touch(Region::Cluster(3), PAGE_BYTES); // evicts 2 (LRU)
+        assert!(m.is_resident(Region::Cluster(1)));
+        assert!(!m.is_resident(Region::Cluster(2)));
+        assert!(m.is_resident(Region::Cluster(3)));
+    }
+
+    #[test]
+    fn thrash_when_working_set_exceeds_capacity() {
+        // The Fig. 3 phenomenon: a cycle over capacity+1 regions faults on
+        // every single access.
+        let mut m = MemoryModel::new(3 * PAGE_BYTES);
+        let mut faults = 0;
+        for round in 0..4 {
+            for c in 0..4u32 {
+                if m.touch(Region::Cluster(c), PAGE_BYTES) > 0 && round > 0 {
+                    faults += 1;
+                }
+            }
+        }
+        assert_eq!(faults, 12, "every post-warmup access must fault");
+    }
+
+    #[test]
+    fn working_set_within_capacity_never_refaults() {
+        let mut m = MemoryModel::new(4 * PAGE_BYTES);
+        for _ in 0..3 {
+            for c in 0..4u32 {
+                m.touch(Region::Cluster(c), PAGE_BYTES);
+            }
+        }
+        assert_eq!(m.faults(), 4); // only cold misses
+    }
+
+    #[test]
+    fn release_frees_capacity() {
+        let mut m = MemoryModel::new(PAGE_BYTES);
+        m.touch(Region::Cache(1), PAGE_BYTES);
+        assert_eq!(m.used_bytes(), PAGE_BYTES);
+        m.release(Region::Cache(1));
+        assert_eq!(m.used_bytes(), 0);
+        assert_eq!(m.touch(Region::Cache(2), PAGE_BYTES), PAGE_BYTES);
+        assert_eq!(m.evictions(), 0, "no eviction needed after release");
+    }
+
+    #[test]
+    fn oversized_touch_keeps_capacity_invariant() {
+        let mut m = MemoryModel::new(2 * PAGE_BYTES);
+        let faulted = m.touch(Region::Cluster(9), 5 * PAGE_BYTES);
+        assert_eq!(faulted, 5 * PAGE_BYTES);
+        assert!(m.used_bytes() <= m.capacity());
+    }
+
+    #[test]
+    fn paged_touch_faults_only_missing_pages() {
+        let mut m = MemoryModel::new(64 * PAGE_BYTES);
+        let total = 10 * PAGE_BYTES + 1234;
+        let f1 = m.touch_paged(Region::LlmPage, total);
+        assert_eq!(f1, total);
+        let f2 = m.touch_paged(Region::LlmPage, total);
+        assert_eq!(f2, 0);
+        // evict one page; only that page refaults
+        m.release(Region::LlmPage(3));
+        let f3 = m.touch_paged(Region::LlmPage, total);
+        assert_eq!(f3, PAGE_BYTES);
+    }
+
+    #[test]
+    fn llm_evicted_by_cluster_pressure() {
+        // LLM resident; streaming clusters through a tight budget evicts it.
+        let mut m = MemoryModel::new(8 * PAGE_BYTES);
+        m.touch_paged(Region::LlmPage, 6 * PAGE_BYTES);
+        for c in 0..8u32 {
+            m.touch(Region::Cluster(c), PAGE_BYTES);
+        }
+        let refault = m.touch_paged(Region::LlmPage, 6 * PAGE_BYTES);
+        assert!(refault > 0, "model must have been partially evicted");
+    }
+}

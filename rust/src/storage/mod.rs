@@ -1,0 +1,11 @@
+//! Storage substrate: the modeled flash device, the real on-disk blob
+//! store for precomputed cluster embeddings, and the memory-budget /
+//! thrash model.
+
+pub mod blob;
+pub mod device;
+pub mod memory;
+
+pub use blob::BlobStore;
+pub use device::StorageDevice;
+pub use memory::{MemoryModel, Region, PAGE_BYTES};

@@ -1,0 +1,24 @@
+//! Shared fixtures for tests, benches and examples: one compute executor
+//! per process (PJRT client construction is expensive; all PJRT state
+//! lives on the executor thread — see `runtime::service`).
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use crate::runtime::ComputeHandle;
+
+/// Repository-root artifacts directory (works from tests/benches/examples).
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The process-wide shared compute handle. Panics if `make artifacts` has
+/// not been run.
+pub fn shared_compute() -> ComputeHandle {
+    static RT: OnceLock<ComputeHandle> = OnceLock::new();
+    RT.get_or_init(|| {
+        ComputeHandle::start(&artifacts_dir())
+            .expect("starting compute executor — run `make artifacts` first")
+    })
+    .clone()
+}

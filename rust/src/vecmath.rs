@@ -1,0 +1,191 @@
+//! Dense vector storage + small CPU-side helpers.
+//!
+//! The heavy scoring math runs through the PJRT executables (Pallas
+//! similarity kernel); this module provides the host-side containers and
+//! the cheap glue (top-k selection, normalization checks, reference dot
+//! products for tests).
+
+/// A row-major matrix of embeddings (n × dim, f32).
+#[derive(Debug, Clone, Default)]
+pub struct EmbeddingMatrix {
+    pub dim: usize,
+    pub data: Vec<f32>,
+}
+
+impl EmbeddingMatrix {
+    pub fn new(dim: usize) -> Self {
+        EmbeddingMatrix { dim, data: Vec::new() }
+    }
+
+    pub fn with_capacity(dim: usize, rows: usize) -> Self {
+        EmbeddingMatrix {
+            dim,
+            data: Vec::with_capacity(dim * rows),
+        }
+    }
+
+    pub fn from_rows(dim: usize, rows: &[Vec<f32>]) -> Self {
+        let mut m = Self::with_capacity(dim, rows.len());
+        for r in rows {
+            m.push(r);
+        }
+        m
+    }
+
+    pub fn len(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.data.len() / self.dim
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    pub fn push(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.dim);
+        self.data.extend_from_slice(row);
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    pub fn remove_row(&mut self, i: usize) {
+        let start = i * self.dim;
+        self.data.drain(start..start + self.dim);
+    }
+
+    /// Flat data padded with zero rows up to `rows` (bucketed PJRT calls).
+    pub fn padded(&self, rows: usize) -> Vec<f32> {
+        assert!(rows >= self.len());
+        let mut out = Vec::with_capacity(rows * self.dim);
+        out.extend_from_slice(&self.data);
+        out.resize(rows * self.dim, 0.0);
+        out
+    }
+
+    pub fn iter_rows(&self) -> impl Iterator<Item = &[f32]> {
+        self.data.chunks_exact(self.dim.max(1))
+    }
+}
+
+/// Reference dot product (tests / fallbacks).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn l2_norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Indices + scores of the k largest entries, descending (stable on ties
+/// by lower index). Scores for padded rows can be excluded by passing the
+/// true `n`.
+pub fn top_k(scores: &[f32], n: usize, k: usize) -> Vec<(usize, f32)> {
+    let n = n.min(scores.len());
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    // Simple selection into a small sorted buffer: k is tiny (≤ tens) on
+    // every call site, so this beats building a heap of n.
+    let mut best: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
+    for (i, &s) in scores[..n].iter().enumerate() {
+        if best.len() < k || s > best[k - 1].1 {
+            let pos = best
+                .iter()
+                .position(|&(_, bs)| s > bs)
+                .unwrap_or(best.len());
+            best.insert(pos, (i, s));
+            if best.len() > k {
+                best.pop();
+            }
+        }
+    }
+    best
+}
+
+/// argmax with index (assignment step of k-means).
+pub fn argmax(scores: &[f32]) -> usize {
+    let mut bi = 0;
+    let mut bs = f32::NEG_INFINITY;
+    for (i, &s) in scores.iter().enumerate() {
+        if s > bs {
+            bs = s;
+            bi = i;
+        }
+    }
+    bi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_roundtrip() {
+        let mut m = EmbeddingMatrix::new(3);
+        m.push(&[1.0, 2.0, 3.0]);
+        m.push(&[4.0, 5.0, 6.0]);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.bytes(), 24);
+    }
+
+    #[test]
+    fn matrix_remove() {
+        let mut m = EmbeddingMatrix::from_rows(2, &[vec![1., 1.], vec![2., 2.], vec![3., 3.]]);
+        m.remove_row(1);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.row(1), &[3.0, 3.0]);
+    }
+
+    #[test]
+    fn padded_appends_zero_rows() {
+        let m = EmbeddingMatrix::from_rows(2, &[vec![1., 2.]]);
+        let p = m.padded(3);
+        assert_eq!(p, vec![1., 2., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn top_k_orders_descending() {
+        let scores = [0.1, 0.9, 0.5, 0.7];
+        let t = top_k(&scores, 4, 2);
+        assert_eq!(t, vec![(1, 0.9), (3, 0.7)]);
+    }
+
+    #[test]
+    fn top_k_excludes_padding() {
+        let scores = [0.1, 0.2, 99.0, 98.0]; // rows 2..3 are padding
+        let t = top_k(&scores, 2, 2);
+        assert_eq!(t[0].0, 1);
+        assert_eq!(t[1].0, 0);
+    }
+
+    #[test]
+    fn top_k_k_larger_than_n() {
+        let t = top_k(&[0.3, 0.1], 2, 10);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn top_k_ties_prefer_lower_index() {
+        let t = top_k(&[0.5, 0.5, 0.5], 3, 2);
+        assert_eq!(t[0].0, 0);
+        assert_eq!(t[1].0, 1);
+    }
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

@@ -1,0 +1,67 @@
+//! Cross-language embedding contract: rust (tokenizer → PJRT-compiled
+//! HLO with the Pallas kernels) must produce the same vectors python
+//! (tokenizer → jax/Pallas interpret) produced for the golden texts in
+//! `tests/golden/embeddings.json`. This pins the ENTIRE build-vs-serve
+//! path: tokenizer parity, weight-blob loading, HLO lowering, PJRT
+//! execution.
+
+use edgerag::embedding::{Embedder, EmbedderBackend};
+use edgerag::json;
+use edgerag::testutil::shared_compute;
+
+fn golden() -> json::Value {
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/embeddings.json");
+    json::parse(&std::fs::read_to_string(path).expect("golden file")).unwrap()
+}
+
+fn check(backend: EmbedderBackend, key: &str, tol: f32) {
+    let g = golden();
+    let texts: Vec<String> = g
+        .get("texts")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_str().unwrap().to_string())
+        .collect();
+    let want: Vec<Vec<f32>> = g
+        .get(key)
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|row| {
+            row.as_array()
+                .unwrap()
+                .iter()
+                .map(|v| v.as_f64().unwrap() as f32)
+                .collect()
+        })
+        .collect();
+
+    let emb = Embedder::new(shared_compute(), backend);
+    let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+    let got = emb.embed_texts(&refs).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, wrow) in want.iter().enumerate() {
+        let grow = got.row(i);
+        assert_eq!(grow.len(), wrow.len());
+        for (j, (a, b)) in grow.iter().zip(wrow).enumerate() {
+            assert!(
+                (a - b).abs() < tol,
+                "{key} text {i} dim {j}: rust {a} vs python {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn projection_matches_python() {
+    check(EmbedderBackend::Projection, "projection", 2e-5);
+}
+
+#[test]
+fn transformer_matches_python() {
+    check(EmbedderBackend::Transformer, "encoder", 5e-5);
+}

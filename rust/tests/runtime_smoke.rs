@@ -1,0 +1,199 @@
+//! Integration: the AOT bridge end-to-end — rust loads the HLO artifacts
+//! python lowered, compiles them through PJRT, executes, and the numerics
+//! match CPU reference computations (which themselves match the pure-jnp
+//! oracles validated by `python/tests/`).
+
+use edgerag::embedding::{tokenizer, Embedder, EmbedderBackend};
+use edgerag::index::Scorer;
+use edgerag::runtime::Tensor;
+use edgerag::testutil::shared_compute;
+use edgerag::vecmath::{self, EmbeddingMatrix};
+
+fn deterministic_rows(dim: usize, n: usize, seed: u64) -> EmbeddingMatrix {
+    let mut rng = edgerag::data::Rng::new(seed);
+    let mut m = EmbeddingMatrix::new(dim);
+    for _ in 0..n {
+        let row: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        m.push(&row);
+    }
+    m
+}
+
+#[test]
+fn sim_artifact_matches_cpu_dot() {
+    let compute = shared_compute();
+    let dim = compute.dim();
+    let rows = deterministic_rows(dim, 100, 1);
+    let q = deterministic_rows(dim, 1, 2);
+
+    let mut padded = rows.data.clone();
+    padded.resize(128 * dim, 0.0);
+    let out = compute
+        .run(
+            "sim_1x128",
+            vec![
+                Tensor::F32(q.data.clone(), vec![1, dim]),
+                Tensor::F32(padded, vec![128, dim]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out[0].len(), 128);
+    for i in 0..100 {
+        let want = vecmath::dot(q.row(0), rows.row(i));
+        assert!(
+            (out[0][i] - want).abs() < 1e-3 * want.abs().max(1.0),
+            "row {i}: {} vs {}",
+            out[0][i],
+            want
+        );
+    }
+}
+
+#[test]
+fn scorer_chunks_large_inputs_correctly() {
+    let compute = shared_compute();
+    let scorer = Scorer::new(compute);
+    let dim = scorer.dim();
+    // 5000 rows > the largest (4096) bucket forces multi-call chunking.
+    let rows = deterministic_rows(dim, 5000, 3);
+    let q = deterministic_rows(dim, 1, 4);
+    let scores = scorer.scores(q.row(0), &rows).unwrap();
+    assert_eq!(scores.len(), 5000);
+    for &i in &[0usize, 127, 128, 4095, 4096, 4999] {
+        let want = vecmath::dot(q.row(0), rows.row(i));
+        assert!(
+            (scores[i] - want).abs() < 1e-3 * want.abs().max(1.0),
+            "row {i}"
+        );
+    }
+}
+
+#[test]
+fn scorer_top_k_finds_planted_neighbor() {
+    let compute = shared_compute();
+    let scorer = Scorer::new(compute);
+    let dim = scorer.dim();
+    let mut rows = deterministic_rows(dim, 300, 5);
+    let q = deterministic_rows(dim, 1, 6);
+    // Plant an exact copy of the query at row 123: must rank first.
+    let target: Vec<f32> = q.row(0).to_vec();
+    rows.data[123 * dim..124 * dim].copy_from_slice(&target);
+    let top = scorer.top_k(q.row(0), &rows, 5).unwrap();
+    assert_eq!(top[0].0, 123);
+    assert_eq!(top.len(), 5);
+}
+
+#[test]
+fn projection_embedder_unit_norm_and_deterministic() {
+    let compute = shared_compute();
+    let emb = Embedder::new(compute, EmbedderBackend::Projection);
+    let texts = vec![
+        "the quick brown fox",
+        "retrieval augmented generation on edge devices",
+        "a completely different sentence about storage",
+    ];
+    let a = emb.embed_texts(&texts).unwrap();
+    let b = emb.embed_texts(&texts).unwrap();
+    assert_eq!(a.len(), 3);
+    for i in 0..3 {
+        let norm = vecmath::l2_norm(a.row(i));
+        assert!((norm - 1.0).abs() < 1e-3, "row {i} norm {norm}");
+        assert_eq!(a.row(i), b.row(i), "must be deterministic");
+    }
+}
+
+#[test]
+fn projection_batching_invariant() {
+    // Embedding 40 texts (32-bucket + padded 1-buckets) must equal
+    // embedding them one at a time.
+    let compute = shared_compute();
+    let emb = Embedder::new(compute, EmbedderBackend::Projection);
+    let texts: Vec<String> = (0..40)
+        .map(|i| format!("text number {i} with words w{} w{}", i * 7 % 13, i % 5))
+        .collect();
+    let refs: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
+    let batched = emb.embed_texts(&refs).unwrap();
+    for i in [0usize, 15, 31, 32, 39] {
+        let single = emb.embed_one(&texts[i]).unwrap();
+        for (a, b) in batched.row(i).iter().zip(&single) {
+            assert!((a - b).abs() < 1e-4, "text {i} differs");
+        }
+    }
+}
+
+#[test]
+fn similar_texts_embed_closer_than_dissimilar() {
+    let compute = shared_compute();
+    let emb = Embedder::new(compute, EmbedderBackend::Projection);
+    let base = "cluster embeddings are generated online during retrieval";
+    let near = "cluster embeddings generated online during the retrieval";
+    let far = "bananas oranges apples pears grapes melons";
+    let m = emb.embed_texts(&[base, near, far]).unwrap();
+    let sim_near = vecmath::dot(m.row(0), m.row(1));
+    let sim_far = vecmath::dot(m.row(0), m.row(2));
+    assert!(
+        sim_near > sim_far + 0.2,
+        "near {sim_near} vs far {sim_far}"
+    );
+}
+
+#[test]
+fn transformer_embedder_works_and_differs_from_projection() {
+    let compute = shared_compute();
+    let enc = Embedder::new(compute.clone(), EmbedderBackend::Transformer);
+    let texts = vec!["edge devices run small language models", "hello world"];
+    let m = enc.embed_texts(&texts).unwrap();
+    assert_eq!(m.len(), 2);
+    for i in 0..2 {
+        assert!((vecmath::l2_norm(m.row(i)) - 1.0).abs() < 1e-3);
+    }
+    // semantic structure: a text is closer to itself re-embedded than to
+    // the other text
+    let again = enc.embed_texts(&[texts[0]]).unwrap();
+    let self_sim = vecmath::dot(m.row(0), again.row(0));
+    let cross = vecmath::dot(m.row(0), m.row(1));
+    assert!(self_sim > 0.999 && cross < self_sim);
+}
+
+#[test]
+fn prefill_artifact_runs() {
+    let compute = shared_compute();
+    let m = compute.manifest();
+    let seq = m.prefill_seq;
+    let mut ids = vec![0i32; seq];
+    for (i, tid) in tokenizer::token_ids("what is the capital of france")
+        .into_iter()
+        .enumerate()
+    {
+        ids[i + 1] = tid;
+    }
+    ids[0] = tokenizer::CLS_ID;
+    let out = compute
+        .run("prefill_1", vec![Tensor::I32(ids, vec![1, seq])])
+        .unwrap();
+    assert_eq!(out[0].len(), m.vocab);
+    assert!(out[0].iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn batch_scores_matches_single_scores() {
+    let compute = shared_compute();
+    let scorer = Scorer::new(compute);
+    let dim = scorer.dim();
+    let points = deterministic_rows(dim, 40, 7);
+    let cents = deterministic_rows(dim, 50, 8);
+    let batch = scorer.batch_scores(&points, &cents).unwrap();
+    assert_eq!(batch.len(), 40);
+    assert_eq!(batch[0].len(), 50);
+    for i in [0usize, 31, 39] {
+        let single = scorer.scores(points.row(i), &cents).unwrap();
+        for j in 0..50 {
+            assert!(
+                (batch[i][j] - single[j]).abs() < 1e-3,
+                "point {i} cent {j}: {} vs {}",
+                batch[i][j],
+                single[j]
+            );
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Integration over the TCP serving layer: real sockets, the line-JSON
+//! protocol, concurrent clients, online updates through the wire.
+
+use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
+use edgerag::coordinator::builder::SystemBuilder;
+use edgerag::json::Value;
+use edgerag::server::{Client, Server};
+use edgerag::testutil::shared_compute;
+
+fn spawn_server() -> (std::net::SocketAddr, usize) {
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    b.retrieval.nprobe = 4;
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let n = built.corpus.len();
+    let pipeline = b.pipeline(&built, IndexKind::EdgeRag).unwrap();
+    let server = Server::bind("127.0.0.1:0", pipeline, b.embedder()).unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || server.run().unwrap());
+    (addr, n)
+}
+
+#[test]
+fn full_protocol_roundtrip() {
+    let (addr, corpus_len) = spawn_server();
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+
+    // ping
+    let pong = c.call(&Value::object(vec![("op", Value::str("ping"))])).unwrap();
+    assert_eq!(pong.get("ok").and_then(|v| v.as_bool()), Some(true));
+
+    // query
+    let resp = c.query("c1 c2 some words t0w1 t0w2").unwrap();
+    let hits = resp.get("hits").unwrap().as_array().unwrap();
+    assert!(!hits.is_empty());
+    assert!(resp.get("retrieval_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert!(resp.get("ttft_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    // insert + retrieve it
+    let ins = c
+        .call(&Value::object(vec![
+            ("op", Value::str("insert")),
+            ("text", Value::str("completely unique marker xqzzy document")),
+        ]))
+        .unwrap();
+    let id = ins.get("id").unwrap().as_u64().unwrap();
+    assert!(id >= corpus_len as u64);
+    let found = c.query("unique marker xqzzy").unwrap();
+    let ids: Vec<u64> = found
+        .get("hits")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|h| h.get("chunk").unwrap().as_u64().unwrap())
+        .collect();
+    assert!(ids.contains(&id), "{ids:?} missing {id}");
+
+    // remove + verify gone
+    let rem = c
+        .call(&Value::object(vec![
+            ("op", Value::str("remove")),
+            ("id", Value::num(id as f64)),
+        ]))
+        .unwrap();
+    assert_eq!(rem.get("removed").and_then(|v| v.as_bool()), Some(true));
+    let after = c.query("unique marker xqzzy").unwrap();
+    let ids: Vec<u64> = after
+        .get("hits")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|h| h.get("chunk").unwrap().as_u64().unwrap())
+        .collect();
+    assert!(!ids.contains(&id));
+
+    // stats
+    let stats = c.call(&Value::object(vec![("op", Value::str("stats"))])).unwrap();
+    assert!(stats.get("queries").unwrap().as_u64().unwrap() >= 3);
+
+    // bad request surfaces an error, not a disconnect
+    let err = c.call(&Value::object(vec![("op", Value::str("nope"))])).unwrap();
+    assert!(err.get("error").is_some());
+    // connection still usable
+    let pong = c.call(&Value::object(vec![("op", Value::str("ping"))])).unwrap();
+    assert_eq!(pong.get("ok").and_then(|v| v.as_bool()), Some(true));
+}
+
+#[test]
+fn concurrent_clients_are_serialized_safely() {
+    let (addr, _) = spawn_server();
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            for i in 0..5 {
+                let resp = c.query(&format!("thread {t} query {i} c3 c4")).unwrap();
+                assert!(resp.get("hits").is_some(), "{resp}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}

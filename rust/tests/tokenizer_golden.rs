@@ -1,0 +1,57 @@
+//! Cross-language tokenizer contract: rust must produce exactly the ids in
+//! `tests/golden/tokenizer.json`, which `python/tests/test_tokenizer.py`
+//! validates against the python implementation. Any drift between the two
+//! sides breaks embedding equality between build time and serving time.
+
+use edgerag::embedding::tokenizer;
+use edgerag::json;
+
+#[test]
+fn matches_python_golden_vectors() {
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/tokenizer.json");
+    let text = std::fs::read_to_string(path).expect("golden file");
+    let cases = json::parse(&text).unwrap();
+    let cases = cases.as_array().expect("array");
+    assert!(cases.len() >= 8);
+    for case in cases {
+        let text = case.get("text").unwrap().as_str().unwrap();
+        let want: Vec<i32> = case
+            .get("ids")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as i32)
+            .collect();
+        assert_eq!(tokenizer::token_ids(text), want, "text: {text:?}");
+    }
+}
+
+#[test]
+fn randomized_invariants() {
+    // Property-style sweep (deterministic Rng substitutes for proptest,
+    // which is unavailable offline): ids in range, features consistent.
+    let mut rng = edgerag::data::Rng::new(99);
+    for _ in 0..500 {
+        let len = rng.below(120);
+        let text: String = (0..len)
+            .map(|_| {
+                let c = rng.below(90) as u8 + 33;
+                c as char
+            })
+            .collect();
+        let ids = tokenizer::token_ids(&text);
+        for &id in &ids {
+            assert!((2..tokenizer::VOCAB as i32).contains(&id));
+        }
+        let f = tokenizer::features(&text);
+        assert_eq!(f.iter().sum::<f32>() as usize, ids.len());
+        let (seq, mask) = tokenizer::sequence(&text, 16);
+        assert_eq!(seq.len(), 16);
+        assert_eq!(
+            mask.iter().sum::<f32>() as usize,
+            (ids.len() + 1).min(16)
+        );
+    }
+}
