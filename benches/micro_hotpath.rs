@@ -123,7 +123,7 @@ fn main() {
     //    time on the tiny dataset as the upper bound.
     let ctx = common::ctx();
     let built = ctx.build("tiny").expect("build tiny");
-    let mut pipeline = ctx
+    let pipeline = ctx
         .builder
         .pipeline(&built, edgerag::config::IndexKind::EdgeRag)
         .unwrap();

@@ -1,17 +1,29 @@
 //! Online indexing lifecycle (paper §5.4): continuous insertion and
 //! removal against a live EdgeRAG index — cluster growth re-triggering
 //! selective storage, shrinkage triggering merges, and retrieval staying
-//! correct throughout.
+//! correct throughout. Mutations take the engine's index write lease;
+//! searches use the shared read path.
 //!
 //!     cargo run --release --example online_updates
 
 use anyhow::Result;
 use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
 use edgerag::coordinator::builder::SystemBuilder;
+use edgerag::coordinator::Engine;
 use edgerag::data::Rng;
-use edgerag::index::{EdgeIndex, VectorIndex};
+use edgerag::index::EdgeIndex;
 use edgerag::runtime::ComputeHandle;
 use edgerag::testutil::artifacts_dir;
+
+/// Run `f` against the EdgeRAG index under the exclusive write lease.
+fn with_edge<R>(engine: &Engine, f: impl FnOnce(&mut EdgeIndex) -> R) -> R {
+    let mut index = engine.index_mut();
+    let edge = index
+        .as_any_mut()
+        .downcast_mut::<EdgeIndex>()
+        .expect("EdgeRAG index");
+    f(edge)
+}
 
 fn main() -> Result<()> {
     println!("== online_updates: §5.4 insertion/removal lifecycle ==");
@@ -23,23 +35,20 @@ fn main() -> Result<()> {
     let profile = DatasetProfile::tiny();
     let built = builder.build_dataset(&profile)?;
     let embedder = builder.embedder();
-    let mut pipeline = builder.pipeline(&built, IndexKind::EdgeRag)?;
+    let pipeline = builder.pipeline(&built, IndexKind::EdgeRag)?;
 
-    let stats = |p: &mut edgerag::coordinator::RagPipeline, tag: &str| {
-        let e = p
-            .index_mut()
-            .as_any_mut()
-            .downcast_mut::<EdgeIndex>()
-            .unwrap();
-        println!(
-            "[{tag}] active clusters {}, stored blobs {} ({} bytes), resident {} bytes",
-            e.active_clusters(),
-            e.stored_clusters(),
-            e.stored_bytes(),
-            0
-        );
+    let stats = |p: &Engine, tag: &str| {
+        with_edge(p, |e| {
+            println!(
+                "[{tag}] active clusters {}, stored blobs {} ({} bytes), resident {} bytes",
+                e.active_clusters(),
+                e.stored_clusters(),
+                e.stored_bytes(),
+                0
+            );
+        });
     };
-    stats(&mut pipeline, "initial");
+    stats(&pipeline, "initial");
 
     // Phase 1: ingest a stream of new documents.
     let mut rng = Rng::new(2024);
@@ -53,28 +62,26 @@ fn main() -> Result<()> {
             rng.below(48),
         );
         let emb = embedder.embed_one(&text)?;
-        let edge = pipeline
-            .index_mut()
-            .as_any_mut()
-            .downcast_mut::<EdgeIndex>()
-            .unwrap();
-        let cluster = edge.insert_chunk(next_id, &text, &emb)?;
+        let cluster = with_edge(&pipeline, |e| e.insert_chunk(next_id, &text, &emb))?;
         inserted.push((next_id, text, cluster));
         next_id += 1;
     }
-    stats(&mut pipeline, "after 60 inserts");
+    stats(&pipeline, "after 60 inserts");
 
-    // Verify each inserted doc is retrievable by its own content.
+    // Verify each inserted doc is retrievable by its own content —
+    // through the shared read path, like a live query would be. The
+    // commit applies the search's deferred cache admissions; skipping it
+    // would silently leave the adaptive cache cold.
+    let search_ids = |p: &Engine, text: &str| -> Result<Vec<u32>> {
+        let emb = embedder.embed_one(text)?;
+        let index = p.index();
+        let out = index.search(&emb, 5)?;
+        index.commit(&out.cache_intent, out.ledger.retrieval());
+        Ok(out.hits.iter().map(|h| h.0).collect())
+    };
     let mut found = 0;
     for (id, text, _) in &inserted {
-        let emb = embedder.embed_one(text)?;
-        let edge = pipeline
-            .index_mut()
-            .as_any_mut()
-            .downcast_mut::<EdgeIndex>()
-            .unwrap();
-        let out = edge.search(&emb, 5)?;
-        if out.hits.iter().any(|h| h.0 == *id) {
+        if search_ids(&pipeline, text)?.contains(id) {
             found += 1;
         }
     }
@@ -84,35 +91,22 @@ fn main() -> Result<()> {
     // Phase 2: remove half of them again (plus drain one small cluster to
     // force a merge).
     for (id, _, _) in inserted.iter().take(30) {
-        let edge = pipeline
-            .index_mut()
-            .as_any_mut()
-            .downcast_mut::<EdgeIndex>()
-            .unwrap();
-        assert!(edge.remove_chunk(*id)?);
+        let removed = with_edge(&pipeline, |e| e.remove_chunk(*id))?;
+        assert!(removed);
     }
-    stats(&mut pipeline, "after 30 removals");
+    stats(&pipeline, "after 30 removals");
 
     // Removed docs must be gone; survivors must remain.
-    let edge_check = |p: &mut edgerag::coordinator::RagPipeline, id: u32, text: &str| -> Result<bool> {
-        let emb = embedder.embed_one(text)?;
-        let edge = p
-            .index_mut()
-            .as_any_mut()
-            .downcast_mut::<EdgeIndex>()
-            .unwrap();
-        Ok(edge.search(&emb, 5)?.hits.iter().any(|h| h.0 == id))
-    };
     let mut stale = 0;
     for (id, text, _) in inserted.iter().take(30) {
-        if edge_check(&mut pipeline, *id, text)? {
+        if search_ids(&pipeline, text)?.contains(id) {
             stale += 1;
         }
     }
     assert_eq!(stale, 0, "{stale} removed docs still retrievable");
     let mut survivors = 0;
     for (id, text, _) in inserted.iter().skip(30) {
-        if edge_check(&mut pipeline, *id, text)? {
+        if search_ids(&pipeline, text)?.contains(id) {
             survivors += 1;
         }
     }

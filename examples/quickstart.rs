@@ -36,7 +36,7 @@ fn main() -> Result<()> {
         profile.name, profile.n_chunks, profile.n_topics
     );
     let built = builder.build_dataset(&profile)?;
-    let mut pipeline = builder.pipeline(&built, IndexKind::EdgeRag)?;
+    let pipeline = builder.pipeline(&built, IndexKind::EdgeRag)?;
 
     // Take three workload queries + one ad-hoc query.
     let mut texts: Vec<String> = built
@@ -72,13 +72,14 @@ fn main() -> Result<()> {
         again.events.cache_hits, again.retrieval
     );
 
-    let m = pipeline.metrics_mut();
+    let m = pipeline.metrics();
+    let retrieval = m.retrieval();
     println!(
         "\nserved {} queries: retrieval p50 {} p95 {}, ttft p95 {}",
         m.queries(),
-        m.retrieval.percentile(50.0),
-        m.retrieval.percentile(95.0),
-        m.ttft.percentile(95.0),
+        retrieval.percentile(50.0),
+        retrieval.percentile(95.0),
+        m.ttft().percentile(95.0),
     );
     println!("\nquickstart OK");
     Ok(())

@@ -5,8 +5,25 @@
 //! `genLatency × useCounter` (cheap-to-regenerate AND rarely used first);
 //! counters decay multiplicatively after every access so the policy tracks
 //! shifting query mixes.
+//!
+//! ## Read path vs mutation path
+//!
+//! The concurrent serving engine guards this structure with an `RwLock`
+//! and splits every lookup in two:
+//!
+//! * [`CostAwareCache::peek`] — `&self`, safe under a read lock: returns
+//!   the cached `Arc` (or `None`) and records hit/miss statistics through
+//!   atomics, so many queries can probe the cache simultaneously;
+//! * [`CostAwareCache::touch`] / [`CostAwareCache::advance_epoch`] /
+//!   [`CostAwareCache::insert`] — `&mut self`, applied at commit time
+//!   under the write lock, replaying the counter bumps and decay epochs
+//!   the peeks deferred.
+//!
+//! [`CostAwareCache::access`] remains the classic combined hit path
+//! (peek + touch in one call) for single-threaded callers and tests.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::vecmath::EmbeddingMatrix;
@@ -53,6 +70,29 @@ impl CacheStats {
     }
 }
 
+/// Internal atomic counters so the lock-free read path can record
+/// hits/misses through `&self`.
+#[derive(Debug, Default)]
+struct AtomicStats {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    insertions: AtomicU64,
+    evictions: AtomicU64,
+    rejected_below_threshold: AtomicU64,
+}
+
+impl AtomicStats {
+    fn snapshot(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            rejected_below_threshold: self.rejected_below_threshold.load(Ordering::Relaxed),
+        }
+    }
+}
+
 /// The cost-aware LFU cache over generated cluster embeddings.
 ///
 /// Algorithm 2's trailing "decay every counter after each access" loop is
@@ -68,7 +108,7 @@ pub struct CostAwareCache {
     decay: f64,
     epoch: u64,
     entries: HashMap<u32, Entry>,
-    stats: CacheStats,
+    stats: AtomicStats,
 }
 
 impl CostAwareCache {
@@ -80,7 +120,7 @@ impl CostAwareCache {
             decay,
             epoch: 0,
             entries: HashMap::new(),
-            stats: CacheStats::default(),
+            stats: AtomicStats::default(),
         }
     }
 
@@ -101,33 +141,61 @@ impl CostAwareCache {
     }
 
     pub fn stats(&self) -> CacheStats {
-        self.stats
+        self.stats.snapshot()
     }
 
     pub fn contains(&self, cluster: u32) -> bool {
         self.entries.contains_key(&cluster)
     }
 
-    /// Look up a cluster's embeddings. On hit, bumps the entry's counter;
-    /// the global decay epoch advances either way (Algorithm 2's trailing
-    /// decay loop, applied lazily).
-    pub fn access(&mut self, cluster: u32) -> Option<Arc<EmbeddingMatrix>> {
-        let now = self.epoch;
-        let decay = self.decay;
-        let out = match self.entries.get_mut(&cluster) {
+    /// Read-path lookup: returns the cached embeddings without mutating
+    /// LFU state, counting the hit/miss atomically. The counter bump and
+    /// decay-epoch advance are deferred to [`touch`](Self::touch) /
+    /// [`advance_epoch`](Self::advance_epoch) at commit time.
+    pub fn peek(&self, cluster: u32) -> Option<Arc<EmbeddingMatrix>> {
+        match self.entries.get(&cluster) {
             Some(e) => {
-                self.stats.hits += 1;
-                e.counter = e.counter_at(now, decay) + 1.0;
-                e.epoch = now;
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
                 Some(e.emb.clone())
             }
             None => {
-                self.stats.misses += 1;
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
-        };
-        self.epoch += 1; // every access decays all counters once
-        out
+        }
+    }
+
+    /// Commit-path half of a hit: bump the entry's (lazily decayed) use
+    /// counter and advance the global decay epoch by one access. A no-op
+    /// counter-wise if the entry was removed in between (stale touch).
+    pub fn touch(&mut self, cluster: u32) {
+        let now = self.epoch;
+        let decay = self.decay;
+        if let Some(e) = self.entries.get_mut(&cluster) {
+            e.counter = e.counter_at(now, decay) + 1.0;
+            e.epoch = now;
+        }
+        self.epoch += 1;
+    }
+
+    /// Advance the decay epoch by `accesses` cache misses (Algorithm 2's
+    /// trailing decay loop also runs on misses).
+    pub fn advance_epoch(&mut self, accesses: u64) {
+        self.epoch += accesses;
+    }
+
+    /// Look up a cluster's embeddings. On hit, bumps the entry's counter;
+    /// the global decay epoch advances either way (Algorithm 2's trailing
+    /// decay loop, applied lazily). Combined peek + touch for
+    /// single-threaded callers.
+    pub fn access(&mut self, cluster: u32) -> Option<Arc<EmbeddingMatrix>> {
+        let hit = self.peek(cluster);
+        if hit.is_some() {
+            self.touch(cluster); // advances the epoch too
+        } else {
+            self.epoch += 1;
+        }
+        hit
     }
 
     /// Insert a freshly generated cluster (Algorithm 2 miss path), evicting
@@ -163,7 +231,7 @@ impl CostAwareCache {
             match victim {
                 Some(v) => {
                     self.remove(v);
-                    self.stats.evictions += 1;
+                    self.stats.evictions.fetch_add(1, Ordering::Relaxed);
                     evicted.push(v);
                 }
                 None => break,
@@ -180,13 +248,15 @@ impl CostAwareCache {
                 bytes,
             },
         );
-        self.stats.insertions += 1;
+        self.stats.insertions.fetch_add(1, Ordering::Relaxed);
         evicted
     }
 
     /// Count an insertion rejected by the adaptive threshold (Alg. 3 gate).
-    pub fn note_rejected(&mut self) {
-        self.stats.rejected_below_threshold += 1;
+    pub fn note_rejected(&self) {
+        self.stats
+            .rejected_below_threshold
+            .fetch_add(1, Ordering::Relaxed);
     }
 
     /// Remove one entry (threshold-driven eviction or cluster removal).
@@ -212,7 +282,7 @@ impl CostAwareCache {
             .collect();
         for v in &victims {
             self.remove(*v);
-            self.stats.evictions += 1;
+            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
         }
         victims
     }
@@ -293,6 +363,56 @@ mod tests {
     }
 
     #[test]
+    fn peek_then_touch_matches_access() {
+        // The split read/commit path must reproduce access()'s LFU state
+        // when replayed in probe order — both hit-then-miss and
+        // miss-then-hit (the decay epoch between them matters).
+        for miss_first in [false, true] {
+            let mut a = CostAwareCache::new(1000, 0.5);
+            let mut b = CostAwareCache::new(1000, 0.5);
+            a.insert(1, emb(1), 10.0);
+            b.insert(1, emb(1), 10.0);
+            // combined path
+            if miss_first {
+                a.access(9);
+                a.access(1);
+            } else {
+                a.access(1);
+                a.access(9);
+            }
+            // split path: peeks first (read lock), then ordered replay
+            if miss_first {
+                assert!(b.peek(9).is_none());
+                assert!(b.peek(1).is_some());
+                b.advance_epoch(1);
+                b.touch(1);
+            } else {
+                assert!(b.peek(1).is_some());
+                assert!(b.peek(9).is_none());
+                b.touch(1);
+                b.advance_epoch(1);
+            }
+            let wa = a.weights();
+            let wb = b.weights();
+            assert_eq!(wa.len(), wb.len());
+            assert!(
+                (wa[0].1 - wb[0].1).abs() < 1e-12,
+                "miss_first={miss_first}: {wa:?} vs {wb:?}"
+            );
+            assert_eq!(a.stats(), b.stats(), "miss_first={miss_first}");
+        }
+    }
+
+    #[test]
+    fn stale_touch_is_noop() {
+        let mut c = CostAwareCache::new(1000, 0.9);
+        c.insert(1, emb(1), 10.0);
+        c.remove(1);
+        c.touch(1); // entry gone: counter no-op, epoch still advances
+        assert!(!c.contains(1));
+    }
+
+    #[test]
     fn oversized_entry_not_cached() {
         let mut c = CostAwareCache::new(3 * row_bytes(), 0.9);
         c.insert(1, emb(1), 10.0);
@@ -350,5 +470,28 @@ mod tests {
         }
         let s = c.stats();
         assert!(s.hits > 0 && s.misses > 0 && s.evictions > 0);
+    }
+
+    #[test]
+    fn concurrent_peeks_count_stats() {
+        // peek is &self: many readers may probe simultaneously under a
+        // read lock; stats must not lose updates.
+        let mut c = CostAwareCache::new(1000, 0.9);
+        c.insert(1, emb(1), 10.0);
+        let c = std::sync::Arc::new(c);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..500 {
+                        assert!(c.peek(1).is_some());
+                        assert!(c.peek(2).is_none());
+                    }
+                });
+            }
+        });
+        let stats = c.stats();
+        assert_eq!(stats.hits, 2000);
+        assert_eq!(stats.misses, 2000);
     }
 }

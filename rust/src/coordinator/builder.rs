@@ -302,7 +302,9 @@ impl SystemBuilder {
         Ok((index, memory))
     }
 
-    /// Assemble the full serving pipeline for one configuration.
+    /// Assemble the full serving engine for one configuration. The result
+    /// is shared-ready: wrap it in an `Arc` and call `handle` from any
+    /// number of threads.
     pub fn pipeline(&self, built: &BuiltDataset, kind: IndexKind) -> Result<RagPipeline> {
         let (index, memory) = self.index(built, kind)?;
         let llm = Llm::new(

@@ -1,23 +1,48 @@
 //! Serving metrics: latency recording, percentiles, per-component
 //! breakdowns, SLO attainment. The figure benches read these; the server
 //! exposes them on its stats endpoint.
+//!
+//! ## Concurrency
+//!
+//! [`Metrics`] records through `&self` so the serving engine's worker
+//! pool never serializes on metrics: latency samples go to sharded
+//! mutex-striped buffers (a recorder touches one shard, picked by thread
+//! id, for a few nanoseconds), component sums and event counters are
+//! plain atomics. Reads take consistent *snapshots* ([`LatencySeries`])
+//! and compute percentiles without mutating anything, so the stats
+//! endpoint can be served from a shared reference.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
 
 use crate::simtime::{Breakdown, Component, SimDuration};
 
-/// A recorded latency series with exact percentile queries (we keep raw
+/// A latency series snapshot with exact percentile queries (we keep raw
 /// samples — workloads are ≤ thousands of queries, exactness beats
-/// HDR-style bucketing at this scale).
+/// HDR-style bucketing at this scale). All queries take `&self`: sorting
+/// happens on an internal copy, so snapshots can be shared freely.
 #[derive(Debug, Clone, Default)]
 pub struct LatencySeries {
     samples_ns: Vec<u64>,
+    /// True when `samples_ns` is known-sorted (snapshots sort once at
+    /// construction); percentile queries on a sorted series are O(1).
     sorted: bool,
 }
 
 impl LatencySeries {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Build a snapshot, sorting once so every subsequent percentile /
+    /// cdf query borrows instead of re-sorting.
+    pub fn from_nanos(mut samples_ns: Vec<u64>) -> Self {
+        samples_ns.sort_unstable();
+        LatencySeries {
+            samples_ns,
+            sorted: true,
+        }
     }
 
     pub fn record(&mut self, d: SimDuration) {
@@ -33,25 +58,29 @@ impl LatencySeries {
         self.samples_ns.is_empty()
     }
 
-    fn ensure_sorted(&mut self) {
-        if !self.sorted {
-            self.samples_ns.sort_unstable();
-            self.sorted = true;
+    fn sorted(&self) -> std::borrow::Cow<'_, [u64]> {
+        if self.sorted {
+            std::borrow::Cow::Borrowed(&self.samples_ns)
+        } else {
+            let mut v = self.samples_ns.clone();
+            v.sort_unstable();
+            std::borrow::Cow::Owned(v)
         }
     }
 
-    /// Exact percentile (nearest-rank), `p` in [0, 100].
-    pub fn percentile(&mut self, p: f64) -> SimDuration {
+    /// Exact percentile (nearest-rank), `p` in [0, 100]. Non-mutating:
+    /// safe on a shared snapshot.
+    pub fn percentile(&self, p: f64) -> SimDuration {
         if self.samples_ns.is_empty() {
             return SimDuration::ZERO;
         }
-        self.ensure_sorted();
-        let n = self.samples_ns.len();
+        let sorted = self.sorted();
+        let n = sorted.len();
         let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
-        SimDuration::from_nanos(self.samples_ns[rank.min(n) - 1])
+        SimDuration::from_nanos(sorted[rank.min(n) - 1])
     }
 
-    pub fn median(&mut self) -> SimDuration {
+    pub fn median(&self) -> SimDuration {
         self.percentile(50.0)
     }
 
@@ -63,9 +92,8 @@ impl LatencySeries {
         SimDuration::from_nanos((sum / self.samples_ns.len() as u128) as u64)
     }
 
-    pub fn max(&mut self) -> SimDuration {
-        self.ensure_sorted();
-        SimDuration::from_nanos(self.samples_ns.last().copied().unwrap_or(0))
+    pub fn max(&self) -> SimDuration {
+        SimDuration::from_nanos(self.samples_ns.iter().copied().max().unwrap_or(0))
     }
 
     /// Fraction of samples at or below `slo`.
@@ -82,58 +110,146 @@ impl LatencySeries {
     }
 
     /// CDF points (latency, cumulative fraction) — Fig. 12's distribution.
-    pub fn cdf(&mut self, points: usize) -> Vec<(SimDuration, f64)> {
+    pub fn cdf(&self, points: usize) -> Vec<(SimDuration, f64)> {
         if self.samples_ns.is_empty() {
             return Vec::new();
         }
-        self.ensure_sorted();
-        let n = self.samples_ns.len();
+        let sorted = self.sorted();
+        let n = sorted.len();
         (1..=points)
             .map(|i| {
                 let frac = i as f64 / points as f64;
                 let idx = ((frac * n as f64).ceil() as usize).min(n) - 1;
-                (SimDuration::from_nanos(self.samples_ns[idx]), frac)
+                (SimDuration::from_nanos(sorted[idx]), frac)
             })
             .collect()
     }
 }
 
+/// Mutex-striped sample sink: `record` locks one shard briefly, keyed by
+/// the calling thread, so concurrent recorders rarely contend.
+#[derive(Debug)]
+struct ShardedSeries {
+    shards: Vec<Mutex<Vec<u64>>>,
+}
+
+const SHARDS: usize = 8;
+
+impl ShardedSeries {
+    fn new() -> Self {
+        ShardedSeries {
+            shards: (0..SHARDS).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    fn shard_index() -> usize {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        std::thread::current().id().hash(&mut h);
+        (h.finish() as usize) % SHARDS
+    }
+
+    fn record(&self, ns: u64) {
+        self.shards[Self::shard_index()].lock().unwrap().push(ns);
+    }
+
+    /// Derived from the shards (no separate counter), so `len`, reads and
+    /// `clear` can never desync even when they race concurrent recorders.
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    fn snapshot(&self) -> LatencySeries {
+        let mut all = Vec::new();
+        for s in &self.shards {
+            all.extend_from_slice(&s.lock().unwrap());
+        }
+        LatencySeries::from_nanos(all)
+    }
+
+    fn clear(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
+const ALL_LEN: usize = Component::ALL.len();
+
 /// Full per-run metrics: TTFT + retrieval series, component sums, event
-/// counters.
-#[derive(Debug, Clone, Default)]
+/// counters. Recording is `&self` (lock-free or shard-striped) so the
+/// whole struct can live behind a shared reference in the serving engine.
+#[derive(Debug)]
 pub struct Metrics {
-    pub retrieval: LatencySeries,
-    pub ttft: LatencySeries,
-    component_ns: HashMap<&'static str, u64>,
-    counters: HashMap<&'static str, u64>,
+    retrieval: ShardedSeries,
+    ttft: ShardedSeries,
+    component_ns: [AtomicU64; ALL_LEN],
+    counters: RwLock<HashMap<&'static str, AtomicU64>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        Metrics {
+            retrieval: ShardedSeries::new(),
+            ttft: ShardedSeries::new(),
+            component_ns: std::array::from_fn(|_| AtomicU64::new(0)),
+            counters: RwLock::new(HashMap::new()),
+        }
     }
 
-    pub fn record_query(&mut self, breakdown: &Breakdown, retrieval: SimDuration, ttft: SimDuration) {
-        self.retrieval.record(retrieval);
-        self.ttft.record(ttft);
-        for c in Component::ALL {
-            let ns = breakdown.get(c).as_nanos();
+    pub fn record_query(&self, breakdown: &Breakdown, retrieval: SimDuration, ttft: SimDuration) {
+        self.retrieval.record(retrieval.as_nanos());
+        self.ttft.record(ttft.as_nanos());
+        for (i, c) in Component::ALL.iter().enumerate() {
+            let ns = breakdown.get(*c).as_nanos();
             if ns > 0 {
-                *self.component_ns.entry(c.name()).or_insert(0) += ns;
+                self.component_ns[i].fetch_add(ns, Ordering::Relaxed);
             }
         }
     }
 
-    pub fn bump(&mut self, counter: &'static str, by: u64) {
-        *self.counters.entry(counter).or_insert(0) += by;
+    pub fn bump(&self, counter: &'static str, by: u64) {
+        {
+            let map = self.counters.read().unwrap();
+            if let Some(a) = map.get(counter) {
+                a.fetch_add(by, Ordering::Relaxed);
+                return;
+            }
+        }
+        let mut map = self.counters.write().unwrap();
+        map.entry(counter)
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(by, Ordering::Relaxed);
     }
 
     pub fn counter(&self, counter: &str) -> u64 {
-        self.counters.get(counter).copied().unwrap_or(0)
+        self.counters
+            .read()
+            .unwrap()
+            .get(counter)
+            .map(|a| a.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Snapshot of the retrieval-latency series.
+    pub fn retrieval(&self) -> LatencySeries {
+        self.retrieval.snapshot()
+    }
+
+    /// Snapshot of the TTFT series.
+    pub fn ttft(&self) -> LatencySeries {
+        self.ttft.snapshot()
     }
 
     pub fn component_total(&self, c: Component) -> SimDuration {
-        SimDuration::from_nanos(self.component_ns.get(c.name()).copied().unwrap_or(0))
+        let idx = Component::ALL.iter().position(|x| *x == c).unwrap();
+        SimDuration::from_nanos(self.component_ns[idx].load(Ordering::Relaxed))
     }
 
     /// Mean per-query time in component `c`.
@@ -146,9 +262,15 @@ impl Metrics {
         self.retrieval.len()
     }
 
-    /// Drop all recorded samples/counters (post-warmup reset).
-    pub fn reset(&mut self) {
-        *self = Metrics::new();
+    /// Drop all recorded samples/counters (post-warmup reset). `&self` so
+    /// a shared engine can reset between measurement phases.
+    pub fn reset(&self) {
+        self.retrieval.clear();
+        self.ttft.clear();
+        for a in &self.component_ns {
+            a.store(0, Ordering::Relaxed);
+        }
+        self.counters.write().unwrap().clear();
     }
 }
 
@@ -183,6 +305,20 @@ mod tests {
     }
 
     #[test]
+    fn percentile_does_not_mutate() {
+        // The stats endpoint serves from a shared reference: queries must
+        // leave the snapshot untouched (insertion order preserved).
+        let mut s = LatencySeries::new();
+        for v in [50u64, 10, 30] {
+            s.record(ms(v));
+        }
+        let shared = &s;
+        assert_eq!(shared.median(), ms(30));
+        assert_eq!(shared.percentile(100.0), ms(50));
+        assert_eq!(shared.samples_ns, vec![ms(50).as_nanos(), ms(10).as_nanos(), ms(30).as_nanos()]);
+    }
+
+    #[test]
     fn slo_attainment_counts_boundary() {
         let mut s = LatencySeries::new();
         for v in [100u64, 200, 300, 400] {
@@ -211,7 +347,7 @@ mod tests {
 
     #[test]
     fn metrics_aggregate_components() {
-        let mut m = Metrics::new();
+        let m = Metrics::new();
         let mut l = LatencyLedger::new();
         l.charge(Component::EmbedGen, ms(100));
         l.charge(Component::Prefill, ms(50));
@@ -224,5 +360,31 @@ mod tests {
         m.bump("cache_hits", 3);
         assert_eq!(m.counter("cache_hits"), 3);
         assert_eq!(m.counter("nope"), 0);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let m = Metrics::new();
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let m = &m;
+                s.spawn(move || {
+                    let b = Breakdown::default();
+                    for i in 0..250u64 {
+                        m.record_query(&b, ms(t * 250 + i), ms(1));
+                        m.bump("ops", 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.queries(), 2000);
+        assert_eq!(m.counter("ops"), 2000);
+        let snap = m.retrieval();
+        assert_eq!(snap.len(), 2000);
+        // Every thread's max sample must be present in the merged snapshot.
+        assert_eq!(snap.max(), ms(7 * 250 + 249));
+        m.reset();
+        assert_eq!(m.queries(), 0);
+        assert_eq!(m.counter("ops"), 0);
     }
 }

@@ -8,5 +8,5 @@ pub mod texts;
 
 pub use builder::{BuildOptions, BuiltDataset, SystemBuilder};
 pub use metrics::{LatencySeries, Metrics};
-pub use retrieval::{QueryOutcome, RagPipeline};
+pub use retrieval::{Engine, QueryOutcome, RagPipeline};
 pub use texts::TextStore;

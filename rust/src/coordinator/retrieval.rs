@@ -1,7 +1,20 @@
-//! The retrieval pipeline (paper Fig. 9 + the prefill tail of Fig. 6):
+//! The serving engine (paper Fig. 9 + the prefill tail of Fig. 6):
 //! query embedding → index search → chunk fetch → prompt assembly →
 //! prefill. Produces the TTFT breakdown every figure is built from.
+//!
+//! ## Engine split
+//!
+//! [`Engine`] is the shared, immutable serving core: embedder, LLM, text
+//! store and metrics are all internally synchronized, and the index sits
+//! behind an `RwLock` whose read side is taken only for the (now
+//! `&self`) `VectorIndex::search` and `commit` calls. `handle` therefore
+//! takes `&self` — N worker threads drive N queries through one `Engine`
+//! concurrently, while online inserts/removes acquire the exclusive
+//! write lease via [`Engine::index_mut`]. All per-query state lives on
+//! the calling thread's stack ([`QueryOutcome`] et al.), never in the
+//! engine.
 
+use std::sync::{RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -32,9 +45,11 @@ pub struct QueryOutcome {
     pub wall: std::time::Duration,
 }
 
-/// The serving pipeline: owns one index configuration plus the shared LLM.
-pub struct RagPipeline {
-    index: Box<dyn VectorIndex>,
+/// The shared serving engine: owns one index configuration plus the
+/// shared LLM. `handle` is `&self` — wrap in an `Arc` and serve from as
+/// many threads as you like.
+pub struct Engine {
+    index: RwLock<Box<dyn VectorIndex>>,
     embedder: Embedder,
     llm: Llm,
     device: DeviceProfile,
@@ -44,7 +59,11 @@ pub struct RagPipeline {
     metrics: Metrics,
 }
 
-impl RagPipeline {
+/// Former name of [`Engine`], kept so existing call sites and docs keep
+/// working; the pipeline *is* the engine now.
+pub type RagPipeline = Engine;
+
+impl Engine {
     pub fn new(
         index: Box<dyn VectorIndex>,
         embedder: Embedder,
@@ -54,8 +73,8 @@ impl RagPipeline {
         top_k: usize,
         real_prefill: bool,
     ) -> Self {
-        RagPipeline {
-            index,
+        Engine {
+            index: RwLock::new(index),
             embedder,
             llm,
             device,
@@ -66,20 +85,20 @@ impl RagPipeline {
         }
     }
 
-    pub fn index(&self) -> &dyn VectorIndex {
-        self.index.as_ref()
+    /// Shared (read-leased) access to the index — concurrent with queries.
+    pub fn index(&self) -> RwLockReadGuard<'_, Box<dyn VectorIndex>> {
+        self.index.read().unwrap()
     }
 
-    pub fn index_mut(&mut self) -> &mut Box<dyn VectorIndex> {
-        &mut self.index
+    /// Exclusive (write-leased) access to the index: online inserts,
+    /// removals, threshold pinning. Blocks until in-flight searches drain.
+    pub fn index_mut(&self) -> RwLockWriteGuard<'_, Box<dyn VectorIndex>> {
+        self.index.write().unwrap()
     }
 
+    /// Shared metrics — recording is internally synchronized.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
-    }
-
-    pub fn metrics_mut(&mut self) -> &mut Metrics {
-        &mut self.metrics
     }
 
     /// The shared chunk-text store (the server appends to it on insert).
@@ -87,8 +106,15 @@ impl RagPipeline {
         self.chunk_texts.clone()
     }
 
-    /// Serve one query end to end.
-    pub fn handle(&mut self, query_text: &str) -> Result<QueryOutcome> {
+    /// The query embedder (shared, thread-safe).
+    pub fn embedder(&self) -> &Embedder {
+        &self.embedder
+    }
+
+    /// Serve one query end to end. `&self`: any number of calls may run
+    /// concurrently; the index read lock is held only for the search and
+    /// the (brief) cache-commit, never across embedding or prefill.
+    pub fn handle(&self, query_text: &str) -> Result<QueryOutcome> {
         let wall_start = Instant::now();
         let mut ledger = LatencyLedger::new();
 
@@ -100,8 +126,11 @@ impl RagPipeline {
         );
         let q = self.embedder.embed_one(query_text)?;
 
-        // Vector search through the configured index.
-        let search = self.index.search(&q, self.top_k)?;
+        // Vector search through the configured index (shared read lease).
+        let search = {
+            let index = self.index.read().unwrap();
+            index.search(&q, self.top_k)?
+        };
         ledger.merge(&search.ledger);
 
         // Fetch the matched chunks' text from storage (Fig. 9 step 6).
@@ -123,8 +152,14 @@ impl RagPipeline {
         let retrieval = ledger.retrieval();
         let ttft = ledger.total();
 
-        // Adaptive-threshold feedback (paper Alg. 3) sees retrieval latency.
-        self.index.feedback(retrieval);
+        // Apply the deferred cache mutations + adaptive-threshold feedback
+        // (paper Alg. 3 sees this query's retrieval latency). Re-acquires
+        // the read lease: an insert that slipped in between is handled by
+        // the index's update-generation check.
+        {
+            let index = self.index.read().unwrap();
+            index.commit(&search.cache_intent, retrieval);
+        }
 
         let breakdown = Breakdown::from_ledger(&ledger);
         self.metrics.record_query(&breakdown, retrieval, ttft);

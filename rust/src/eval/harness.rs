@@ -110,10 +110,10 @@ pub fn run_workload(
 ) -> Result<RunReport> {
     // nprobe: explicit override > per-dataset tuned value (paper §6.2).
     let sys = builder.clone_with_nprobe(Some(opts.nprobe.unwrap_or(built.profile.nprobe)));
-    let mut pipeline = sys.pipeline(built, kind)?;
+    let pipeline = sys.pipeline(built, kind)?;
     if let Some(t) = opts.pin_threshold_ms {
-        if let Some(edge) = pipeline
-            .index_mut()
+        let mut index = pipeline.index_mut(); // write lease
+        if let Some(edge) = index
             .as_any_mut()
             .downcast_mut::<crate::index::EdgeIndex>()
         {
@@ -125,7 +125,7 @@ pub fn run_workload(
     for q in built.workload.queries.iter().take(opts.warmup) {
         pipeline.handle(&q.text)?;
     }
-    pipeline.metrics_mut().reset();
+    pipeline.metrics().reset();
 
     let wall_start = std::time::Instant::now();
     let mut acc = QualityAccumulator::new();
@@ -142,26 +142,25 @@ pub fn run_workload(
     }
     let wall = wall_start.elapsed();
 
-    let report = summarize(built, kind, &mut pipeline, acc, gen_sum, n, wall);
+    let report = summarize(built, kind, &pipeline, acc, gen_sum, n, wall);
     Ok(report)
 }
 
 fn summarize(
     built: &BuiltDataset,
     kind: IndexKind,
-    pipeline: &mut crate::coordinator::RagPipeline,
+    pipeline: &crate::coordinator::Engine,
     acc: QualityAccumulator,
     gen_sum: f64,
     n: usize,
     wall: std::time::Duration,
 ) -> RunReport {
     let slo = built.profile.slo();
-    let (edge_cache, edge_cache_bytes, stored, stored_bytes, threshold) = {
-        match pipeline
-            .index_mut()
-            .as_any_mut()
-            .downcast_mut::<crate::index::EdgeIndex>()
-        {
+    // Shared read lease: summarizing never mutates the index.
+    let index = pipeline.index();
+    let resident = index.resident_bytes();
+    let (edge_cache, edge_cache_bytes, stored, stored_bytes, threshold) =
+        match index.as_any().downcast_ref::<crate::index::EdgeIndex>() {
             Some(e) => (
                 e.cache_stats(),
                 e.cache_used_bytes(),
@@ -170,9 +169,8 @@ fn summarize(
                 e.threshold_ms(),
             ),
             None => (None, 0, 0, 0, 0.0),
-        }
-    };
-    let resident = pipeline.index().resident_bytes();
+        };
+    drop(index);
     let thrash = pipeline.metrics().counter("thrash_faults");
 
     let mean_by_component: Vec<(&'static str, SimDuration)> = Component::ALL
@@ -180,18 +178,20 @@ fn summarize(
         .map(|&c| (c.name(), pipeline.metrics().component_mean(c)))
         .collect();
 
-    let m: &mut Metrics = pipeline.metrics_mut();
+    let m: &Metrics = pipeline.metrics();
+    let retrieval = m.retrieval();
+    let ttft = m.ttft();
     RunReport {
         dataset: built.profile.name.clone(),
         kind,
         queries: n,
-        retrieval_mean: m.retrieval.mean(),
-        retrieval_p50: m.retrieval.percentile(50.0),
-        retrieval_p95: m.retrieval.percentile(95.0),
-        retrieval_p99: m.retrieval.percentile(99.0),
-        ttft_mean: m.ttft.mean(),
-        ttft_p95: m.ttft.percentile(95.0),
-        slo_attainment: m.ttft.slo_attainment(slo),
+        retrieval_mean: retrieval.mean(),
+        retrieval_p50: retrieval.percentile(50.0),
+        retrieval_p95: retrieval.percentile(95.0),
+        retrieval_p99: retrieval.percentile(99.0),
+        ttft_mean: ttft.mean(),
+        ttft_p95: ttft.percentile(95.0),
+        slo_attainment: ttft.slo_attainment(slo),
         mean_by_component,
         quality: acc.summary(),
         gen_score: gen_sum / n.max(1) as f64,

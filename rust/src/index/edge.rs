@@ -13,13 +13,29 @@
 //! 3. **online generation** — the embedding model re-embeds the cluster's
 //!    chunks (charged at the device's generation rate; numerics through
 //!    the real PJRT embedder or the verified-equal prebuilt matrix).
+//!
+//! ## Concurrency
+//!
+//! `search` takes `&self` and is safe to call from many threads at once:
+//! the cost-aware cache sits behind an `RwLock` probed with read locks
+//! (`CostAwareCache::peek`), the adaptive threshold behind its own
+//! `RwLock`, and residency accounting behind the shared memory-model
+//! mutex. All LFU/threshold *mutations* a search implies are recorded in
+//! the outcome's [`CacheIntent`] and applied later by [`commit`]
+//! (`VectorIndex::commit`), which takes the write locks briefly. Online
+//! inserts/removes still require `&mut self`; a generation counter lets
+//! `commit` discard admissions that raced a structural update.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
 
 use anyhow::Result;
 
 use crate::cache::{CacheStats, CostAwareCache, ThresholdController};
 use crate::config::{DeviceProfile, IndexKind, RetrievalConfig};
 use crate::index::{
-    ClusterSet, EmbedSource, Scorer, SearchEvents, SearchOutcome, SharedMemory, VectorIndex,
+    AdmitCandidate, CacheAccess, CacheIntent, ClusterSet, EmbedSource, Scorer, SearchEvents,
+    SearchOutcome, SharedMemory, VectorIndex,
 };
 use crate::simtime::{Component, LatencyLedger, SimDuration};
 use crate::storage::{BlobStore, Region};
@@ -60,16 +76,16 @@ pub struct EdgeIndex {
     pub(crate) clusters: ClusterSet,
     pub(crate) source: EmbedSource,
     pub(crate) blob: Option<BlobStore>,
-    pub(crate) cache: Option<CostAwareCache>,
-    controller: ThresholdController,
+    /// Cost-aware cache behind a read/write lock: searches peek under the
+    /// read lock, commits mutate under the write lock.
+    pub(crate) cache: Option<RwLock<CostAwareCache>>,
+    controller: RwLock<ThresholdController>,
     /// When false the controller's threshold is pinned (Fig. 7 sweeps).
     adaptive: bool,
     pub(crate) scorer: Scorer,
     pub(crate) memory: SharedMemory,
     pub(crate) device: DeviceProfile,
     nprobe: usize,
-    /// Did the previous search miss the cache at least once? (Alg. 3 input)
-    last_had_miss: bool,
     /// Online-update state (§5.4): chunks inserted after the initial
     /// build (text + embedding), per-cluster liveness (merged clusters
     /// become tombstones), chunk → cluster routing, and the SLO-derived
@@ -78,6 +94,9 @@ pub struct EdgeIndex {
     pub(crate) active: Vec<bool>,
     pub(crate) chunk_cluster: std::collections::HashMap<u32, u32>,
     pub(crate) store_limit: SimDuration,
+    /// Bumped by every structural update (insert/remove/split/merge);
+    /// lets `commit` drop cache admissions whose embeddings may be stale.
+    pub(crate) update_gen: AtomicU64,
 }
 
 impl EdgeIndex {
@@ -112,7 +131,10 @@ impl EdgeIndex {
             None
         };
         let cache = features.caching.then(|| {
-            CostAwareCache::new(retrieval.cache_capacity_bytes, retrieval.cache_decay)
+            RwLock::new(CostAwareCache::new(
+                retrieval.cache_capacity_bytes,
+                retrieval.cache_decay,
+            ))
         });
         let active = vec![true; clusters.n_clusters()];
         let mut chunk_cluster = std::collections::HashMap::new();
@@ -128,21 +150,21 @@ impl EdgeIndex {
             source,
             blob,
             cache,
-            controller: ThresholdController::new(
+            controller: RwLock::new(ThresholdController::new(
                 retrieval.latency_ewma_alpha,
                 retrieval.threshold_step_ms,
                 slo.as_millis_f64(),
-            ),
+            )),
             adaptive: true,
             scorer,
             memory,
             device,
             nprobe: retrieval.nprobe,
-            last_had_miss: false,
             dynamic: std::collections::HashMap::new(),
             active,
             chunk_cluster,
             store_limit,
+            update_gen: AtomicU64::new(0),
         })
     }
 
@@ -151,11 +173,13 @@ impl EdgeIndex {
     }
 
     pub fn cache_stats(&self) -> Option<CacheStats> {
-        self.cache.as_ref().map(|c| c.stats())
+        self.cache.as_ref().map(|c| c.read().unwrap().stats())
     }
 
     pub fn cache_used_bytes(&self) -> u64 {
-        self.cache.as_ref().map_or(0, |c| c.used_bytes())
+        self.cache
+            .as_ref()
+            .map_or(0, |c| c.read().unwrap().used_bytes())
     }
 
     pub fn stored_clusters(&self) -> usize {
@@ -167,7 +191,7 @@ impl EdgeIndex {
     }
 
     pub fn threshold_ms(&self) -> f64 {
-        self.controller.threshold_ms()
+        self.controller.read().unwrap().threshold_ms()
     }
 
     pub fn set_nprobe(&mut self, nprobe: usize) {
@@ -178,12 +202,22 @@ impl EdgeIndex {
     /// (the Fig. 7 sweep).
     pub fn pin_threshold(&mut self, threshold_ms: f64) {
         self.adaptive = false;
-        self.controller.pin(threshold_ms);
-        if let Some(cache) = &mut self.cache {
-            for v in cache.evict_below(threshold_ms) {
+        self.controller.write().unwrap().pin(threshold_ms);
+        if let Some(cache) = &self.cache {
+            for v in cache.write().unwrap().evict_below(threshold_ms) {
                 self.memory.lock().unwrap().release(Region::Cache(v));
             }
         }
+    }
+
+    /// Search then immediately apply the cache intent — the single-caller
+    /// convenience path (tests, tools). The serving engine calls `search`
+    /// and `commit` separately so the commit can observe the query's full
+    /// retrieval latency.
+    pub fn search_and_commit(&self, query: &[f32], k: usize) -> Result<SearchOutcome> {
+        let out = self.search(query, k)?;
+        self.commit(&out.cache_intent, out.ledger.retrieval());
+        Ok(out)
     }
 
     /// Gather a cluster's embeddings, consulting the online-update overlay
@@ -233,12 +267,15 @@ impl EdgeIndex {
     }
 
     /// Obtain one probed cluster's embeddings per the Fig. 9 decision
-    /// chain, charging the appropriate component.
+    /// chain, charging the appropriate component. Read-only: cache hits
+    /// peek under the read lock; admissions/counter bumps are recorded
+    /// into `intent` for the commit path.
     fn materialize(
-        &mut self,
+        &self,
         c: u32,
         ledger: &mut LatencyLedger,
         events: &mut SearchEvents,
+        intent: &mut CacheIntent,
     ) -> Result<std::sync::Arc<crate::vecmath::EmbeddingMatrix>> {
         let meta = &self.clusters.clusters[c as usize];
         let dim = self.scorer.dim();
@@ -256,17 +293,20 @@ impl EdgeIndex {
             }
         }
 
-        // (4) embedding cache?
-        if let Some(cache) = &mut self.cache {
-            if let Some(hit) = cache.access(c) {
+        // (4) embedding cache? Read lock only: concurrent searches don't
+        // serialize on cluster scoring.
+        if let Some(cache) = &self.cache {
+            if let Some(hit) = cache.read().unwrap().peek(c) {
                 // Embeddings already in memory: only a residency touch.
                 // `hit` is an Arc — no matrix copy on the hot path.
                 events.cache_hits += 1;
                 ledger.charge(Component::CacheHit, self.device.mem_scan_cost(0));
                 self.memory.lock().unwrap().touch(Region::Cache(c), hit.bytes());
+                intent.accesses.push(CacheAccess::Hit(c));
                 return Ok(hit);
             }
-            self.last_had_miss = true;
+            intent.accesses.push(CacheAccess::Miss);
+            intent.had_miss = true;
         }
 
         // (4b) generate online.
@@ -275,18 +315,14 @@ impl EdgeIndex {
         events.generated += 1;
         let emb = std::sync::Arc::new(self.gather(c)?);
 
-        if let Some(cache) = &mut self.cache {
-            let gen_ms = gen_cost.as_millis_f64();
-            if self.controller.should_cache(gen_ms) {
-                let evicted = cache.insert(c, emb.clone(), gen_ms);
-                let mut mem = self.memory.lock().unwrap();
-                for v in evicted {
-                    mem.release(Region::Cache(v));
-                }
-                mem.install(Region::Cache(c), emb.bytes());
-            } else {
-                cache.note_rejected();
-            }
+        if self.features.caching {
+            // Admission is deferred: the threshold gate and LFU insert run
+            // at commit time under the write lock.
+            intent.admit.push(AdmitCandidate {
+                cluster: c,
+                emb: emb.clone(),
+                gen_latency_ms: gen_cost.as_millis_f64(),
+            });
         }
         Ok(emb)
     }
@@ -297,10 +333,13 @@ impl VectorIndex for EdgeIndex {
         self.kind
     }
 
-    fn search(&mut self, query: &[f32], k: usize) -> Result<SearchOutcome> {
+    fn search(&self, query: &[f32], k: usize) -> Result<SearchOutcome> {
         let mut ledger = LatencyLedger::new();
         let mut events = SearchEvents::default();
-        self.last_had_miss = false;
+        let mut intent = CacheIntent {
+            generation: self.update_gen.load(Ordering::Acquire),
+            ..CacheIntent::default()
+        };
 
         // (1) centroid probe — first level always resident.
         ledger.charge(
@@ -318,7 +357,7 @@ impl VectorIndex for EdgeIndex {
             if self.clusters.clusters[ci].is_empty() {
                 continue;
             }
-            let emb = self.materialize(c, &mut ledger, &mut events)?;
+            let emb = self.materialize(c, &mut ledger, &mut events, &mut intent)?;
             let meta = &self.clusters.clusters[ci];
 
             // (6) in-cluster search.
@@ -341,7 +380,82 @@ impl VectorIndex for EdgeIndex {
             ledger,
             probed,
             events,
+            cache_intent: intent,
         })
+    }
+
+    /// Apply the deferred cache mutations: LFU counter bumps for hits,
+    /// threshold-gated admissions for generated clusters, then the
+    /// adaptive-threshold feedback (Alg. 3) and its eviction sweep —
+    /// preserving the exact sequencing of the old inline path (admission
+    /// at the pre-feedback threshold, enforcement after).
+    fn commit(&self, intent: &CacheIntent, retrieval: SimDuration) {
+        let Some(cache) = &self.cache else { return };
+
+        if !intent.accesses.is_empty() {
+            // Admissions raced by a structural update are discarded: their
+            // gathered embeddings may no longer reflect the cluster.
+            let fresh = intent.generation == self.update_gen.load(Ordering::Acquire);
+            // Lock order (uniform with `pin_threshold`): controller, then
+            // cache, then memory.
+            let controller = self.controller.read().unwrap();
+            let mut c = cache.write().unwrap();
+            // Replay the probes in search order — each hit bumps its LFU
+            // counter, each miss advances the decay epoch and (with
+            // caching enabled) carries exactly one admission candidate, so
+            // counters, epochs and insertion baselines land exactly where
+            // the old inline single-threaded path put them.
+            let mut admits = intent.admit.iter();
+            for access in &intent.accesses {
+                match access {
+                    CacheAccess::Hit(cl) => c.touch(*cl),
+                    CacheAccess::Miss => {
+                        c.advance_epoch(1);
+                        let Some(cand) = admits.next() else { continue };
+                        if !fresh {
+                            continue;
+                        }
+                        if controller.should_cache(cand.gen_latency_ms) {
+                            let evicted =
+                                c.insert(cand.cluster, cand.emb.clone(), cand.gen_latency_ms);
+                            let mut mem = self.memory.lock().unwrap();
+                            for v in evicted {
+                                mem.release(Region::Cache(v));
+                            }
+                            // Oversized entries are declined by the cache;
+                            // installing them would leak a phantom
+                            // resident region nothing could ever release.
+                            if c.contains(cand.cluster) {
+                                mem.install(Region::Cache(cand.cluster), cand.emb.bytes());
+                            }
+                        } else {
+                            c.note_rejected();
+                        }
+                    }
+                }
+            }
+        }
+
+        if !self.features.caching || !self.adaptive {
+            return;
+        }
+        self.controller
+            .write()
+            .unwrap()
+            .observe(intent.had_miss, retrieval.as_millis_f64());
+        // Enforce the (possibly raised) threshold on current contents.
+        let threshold = self.controller.read().unwrap().threshold_ms();
+        let evicted = cache.write().unwrap().evict_below(threshold);
+        if !evicted.is_empty() {
+            let mut mem = self.memory.lock().unwrap();
+            for v in evicted {
+                mem.release(Region::Cache(v));
+            }
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
@@ -358,21 +472,6 @@ impl VectorIndex for EdgeIndex {
             .map(|m| (m.chunk_ids.len() * 4 + 32) as u64)
             .sum();
         self.clusters.centroid_bytes() + meta_bytes + self.cache_used_bytes()
-    }
-
-    fn feedback(&mut self, retrieval: SimDuration) {
-        if !self.features.caching || !self.adaptive {
-            return;
-        }
-        self.controller
-            .observe(self.last_had_miss, retrieval.as_millis_f64());
-        // Enforce the (possibly raised) threshold on current contents.
-        let threshold = self.controller.threshold_ms();
-        if let Some(cache) = &mut self.cache {
-            for v in cache.evict_below(threshold) {
-                self.memory.lock().unwrap().release(Region::Cache(v));
-            }
-        }
     }
 }
 
@@ -458,13 +557,16 @@ mod tests {
     #[test]
     fn ivf_gen_always_generates() {
         let f = fixture();
-        let mut idx = build(&f, IndexKind::IvfGen, "gen", 0);
+        let idx = build(&f, IndexKind::IvfGen, "gen", 0);
         let q = f.emb.row(3).to_vec();
         let out = idx.search(&q, 5).unwrap();
         assert_eq!(out.events.generated, out.probed.len());
         assert_eq!(out.events.loaded, 0);
         assert_eq!(out.events.cache_hits, 0);
         assert!(out.ledger.component(Component::EmbedGen).as_millis() > 0);
+        // No caching: the intent carries nothing to commit.
+        assert!(out.cache_intent.admit.is_empty());
+        assert!(!out.cache_intent.had_miss);
     }
 
     #[test]
@@ -479,7 +581,7 @@ mod tests {
             .iter()
             .map(|m| source.cluster_embeddings(m).unwrap())
             .collect();
-        let mut ivf = crate::index::IvfIndex::new(
+        let ivf = crate::index::IvfIndex::new(
             cluster_set(&f),
             cluster_embs,
             f.scorer.clone(),
@@ -487,11 +589,11 @@ mod tests {
             f.device.clone(),
             4,
         );
-        let mut edge = build(&f, IndexKind::EdgeRag, "match", 100);
+        let edge = build(&f, IndexKind::EdgeRag, "match", 100);
         for i in [0usize, 17, 101, 300] {
             let q = f.emb.row(i).to_vec();
             let a = ivf.search(&q, 5).unwrap();
-            let b = edge.search(&q, 5).unwrap();
+            let b = edge.search_and_commit(&q, 5).unwrap();
             let ids_a: Vec<u32> = a.hits.iter().map(|h| h.0).collect();
             let ids_b: Vec<u32> = b.hits.iter().map(|h| h.0).collect();
             assert_eq!(ids_a, ids_b, "query {i}");
@@ -540,7 +642,7 @@ mod tests {
     #[test]
     fn stored_clusters_load_instead_of_generate() {
         let f = fixture();
-        let mut idx = build(&f, IndexKind::IvfGenLoad, "load", 20);
+        let idx = build(&f, IndexKind::IvfGenLoad, "load", 20);
         // Query near a heavy cluster's centroid: find a stored cluster and
         // use one of its member chunks as the query.
         let stored_id = (0..idx.clusters.n_clusters() as u32)
@@ -554,13 +656,30 @@ mod tests {
     }
 
     #[test]
-    fn cache_hits_on_repeat_queries() {
+    fn cache_admission_is_deferred_to_commit() {
         let f = fixture();
-        let mut idx = build(&f, IndexKind::EdgeRag, "cache", 1_000_000);
+        let idx = build(&f, IndexKind::EdgeRag, "defer", 1_000_000);
         let q = f.emb.row(42).to_vec();
         let cold = idx.search(&q, 3).unwrap();
-        idx.feedback(cold.ledger.total());
+        assert!(cold.events.generated > 0);
+        assert!(!cold.cache_intent.admit.is_empty());
+        // Before commit: nothing was admitted, a repeat search still
+        // generates.
+        let repeat = idx.search(&q, 3).unwrap();
+        assert_eq!(repeat.events.cache_hits, 0);
+        // After commit: the repeat hits.
+        idx.commit(&cold.cache_intent, cold.ledger.total());
         let warm = idx.search(&q, 3).unwrap();
+        assert!(warm.events.cache_hits > 0, "{:?}", warm.events);
+    }
+
+    #[test]
+    fn cache_hits_on_repeat_queries() {
+        let f = fixture();
+        let idx = build(&f, IndexKind::EdgeRag, "cache", 1_000_000);
+        let q = f.emb.row(42).to_vec();
+        let cold = idx.search_and_commit(&q, 3).unwrap();
+        let warm = idx.search_and_commit(&q, 3).unwrap();
         assert!(cold.events.generated > 0);
         assert!(warm.events.cache_hits > 0, "{:?}", warm.events);
         assert!(
@@ -579,8 +698,8 @@ mod tests {
         let mut idx = build(&f, IndexKind::EdgeRag, "pin", 1_000_000);
         idx.pin_threshold(1e9); // nothing is expensive enough to cache
         let q = f.emb.row(7).to_vec();
-        idx.search(&q, 3).unwrap();
-        let again = idx.search(&q, 3).unwrap();
+        idx.search_and_commit(&q, 3).unwrap();
+        let again = idx.search_and_commit(&q, 3).unwrap();
         assert_eq!(again.events.cache_hits, 0);
         assert!(idx.cache_stats().unwrap().rejected_below_threshold > 0);
     }
@@ -588,18 +707,80 @@ mod tests {
     #[test]
     fn adaptive_threshold_moves_with_feedback() {
         let f = fixture();
-        let mut idx = build(&f, IndexKind::EdgeRag, "adapt", 1_000_000);
+        let idx = build(&f, IndexKind::EdgeRag, "adapt", 1_000_000);
         let q = f.emb.row(9).to_vec();
         assert_eq!(idx.threshold_ms(), 0.0);
         // Simulate slow misses: threshold should rise.
         let out = idx.search(&q, 3).unwrap();
-        idx.feedback(out.ledger.total());
+        idx.commit(&out.cache_intent, out.ledger.total());
         for i in 0..5 {
             let q2 = f.emb.row(50 + i * 40).to_vec();
-            idx.search(&q2, 3).unwrap();
-            idx.feedback(SimDuration::from_millis(2_000 * (i as u64 + 1)));
+            let out = idx.search(&q2, 3).unwrap();
+            idx.commit(
+                &out.cache_intent,
+                SimDuration::from_millis(2_000 * (i as u64 + 1)),
+            );
         }
         assert!(idx.threshold_ms() > 0.0);
+    }
+
+    #[test]
+    fn stale_admissions_dropped_after_update() {
+        // An insert between search and commit bumps the generation; the
+        // commit must not admit potentially stale embeddings.
+        let f = fixture();
+        let mut idx = build(&f, IndexKind::EdgeRag, "stale", 1_000_000);
+        let q = f.emb.row(13).to_vec();
+        let out = idx.search(&q, 3).unwrap();
+        assert!(!out.cache_intent.admit.is_empty());
+        let text = "late-arriving doc that mutates a cluster zzqstale";
+        let emb = f.embedder.embed_one(text).unwrap();
+        idx.insert_chunk(90_001, text, &emb).unwrap();
+        idx.commit(&out.cache_intent, out.ledger.total());
+        // Nothing admitted: the repeat search regenerates.
+        let repeat = idx.search(&q, 3).unwrap();
+        assert_eq!(repeat.events.cache_hits, 0, "{:?}", repeat.events);
+    }
+
+    #[test]
+    fn concurrent_searches_agree_with_serial() {
+        // The tentpole property: N threads searching one shared index get
+        // exactly the hits a serial caller gets, and commits from all
+        // threads keep the cache consistent.
+        let f = fixture();
+        let idx = build(&f, IndexKind::EdgeRag, "conc", 100);
+        let queries: Vec<Vec<f32>> = (0..16).map(|i| f.emb.row(i * 25).to_vec()).collect();
+        let serial: Vec<Vec<u32>> = queries
+            .iter()
+            .map(|q| {
+                idx.search(q, 5)
+                    .unwrap()
+                    .hits
+                    .iter()
+                    .map(|h| h.0)
+                    .collect()
+            })
+            .collect();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let idx = &idx;
+                let queries = &queries;
+                let serial = &serial;
+                s.spawn(move || {
+                    for round in 0..3 {
+                        for (i, q) in queries.iter().enumerate() {
+                            let out = idx.search_and_commit(q, 5).unwrap();
+                            let ids: Vec<u32> = out.hits.iter().map(|h| h.0).collect();
+                            assert_eq!(ids, serial[i], "thread {t} round {round} query {i}");
+                        }
+                    }
+                });
+            }
+        });
+        let stats = idx.cache_stats().unwrap();
+        // 4 threads × 3 rounds of the same 16 queries: once one thread's
+        // commit admits a cluster, the others' repeats hit it.
+        assert!(stats.hits > 0, "{stats:?}");
     }
 
     #[test]

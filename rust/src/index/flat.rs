@@ -55,7 +55,7 @@ impl VectorIndex for FlatIndex {
         IndexKind::Flat
     }
 
-    fn search(&mut self, query: &[f32], k: usize) -> Result<SearchOutcome> {
+    fn search(&self, query: &[f32], k: usize) -> Result<SearchOutcome> {
         let mut ledger = LatencyLedger::new();
         let bytes = self.emb.bytes();
 
@@ -86,7 +86,12 @@ impl VectorIndex for FlatIndex {
             ledger,
             probed: Vec::new(),
             events,
+            cache_intent: Default::default(),
         })
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
@@ -126,7 +131,7 @@ mod tests {
         let mut m = rows(dim, 500, 1);
         let q: Vec<f32> = m.row(77).to_vec();
         m.data[77 * dim] += 0.0; // identity row
-        let mut idx = FlatIndex::new(
+        let idx = FlatIndex::new(
             Arc::new(m),
             scorer,
             shared_memory(1 << 30),
@@ -144,7 +149,7 @@ mod tests {
         let n = 4096; // 4 MiB of embeddings @ dim 256
         let m = Arc::new(rows(dim, n, 2));
         let small_mem = shared_memory(1 << 20); // 1 MiB budget
-        let mut idx = FlatIndex::new(
+        let idx = FlatIndex::new(
             m,
             scorer,
             small_mem,
@@ -165,7 +170,7 @@ mod tests {
         let scorer = Scorer::new(shared_compute());
         let dim = scorer.dim();
         let m = Arc::new(rows(dim, 512, 3));
-        let mut idx = FlatIndex::new(
+        let idx = FlatIndex::new(
             m,
             scorer,
             shared_memory(64 << 20),

@@ -69,7 +69,7 @@ impl VectorIndex for IvfIndex {
         IndexKind::Ivf
     }
 
-    fn search(&mut self, query: &[f32], k: usize) -> Result<SearchOutcome> {
+    fn search(&self, query: &[f32], k: usize) -> Result<SearchOutcome> {
         let mut ledger = LatencyLedger::new();
         let mut events = SearchEvents::default();
         let dim = self.scorer.dim();
@@ -117,7 +117,12 @@ impl VectorIndex for IvfIndex {
             ledger,
             probed,
             events,
+            cache_intent: Default::default(),
         })
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
     }
 
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
@@ -184,7 +189,7 @@ mod tests {
 
     #[test]
     fn retrieves_target_chunk_for_derived_query() {
-        let (corpus, mut idx, _emb, embedder) = build_tiny();
+        let (corpus, idx, _emb, embedder) = build_tiny();
         // Query = exact text of a chunk: its own embedding must win.
         let target = 100u32;
         let q = embedder.embed_one(&corpus.chunks[target as usize].text).unwrap();
@@ -199,7 +204,7 @@ mod tests {
 
     #[test]
     fn charges_centroid_and_cluster_components() {
-        let (_, mut idx, emb, _) = build_tiny();
+        let (_, idx, emb, _) = build_tiny();
         let q = emb.row(0).to_vec();
         let out = idx.search(&q, 3).unwrap();
         assert!(out.ledger.component(Component::CentroidProbe).as_nanos() > 0);
@@ -210,7 +215,7 @@ mod tests {
     fn thrash_under_tight_memory() {
         let (_, idx0, emb, _) = build_tiny();
         // Rebuild with a memory budget far below the embedding size.
-        let mut idx = IvfIndex::new(
+        let idx = IvfIndex::new(
             idx0.clusters,
             idx0.cluster_embs,
             idx0.scorer,
@@ -227,7 +232,7 @@ mod tests {
 
     #[test]
     fn warm_clusters_do_not_refault() {
-        let (_, mut idx, emb, _) = build_tiny();
+        let (_, idx, emb, _) = build_tiny();
         let q = emb.row(2).to_vec();
         idx.search(&q, 3).unwrap();
         let out = idx.search(&q, 3).unwrap();
@@ -242,7 +247,7 @@ mod tests {
 
     #[test]
     fn hits_sorted_descending() {
-        let (_, mut idx, emb, _) = build_tiny();
+        let (_, idx, emb, _) = build_tiny();
         let out = idx.search(emb.row(5), 10).unwrap();
         for w in out.hits.windows(2) {
             assert!(w[0].1 >= w[1].1);

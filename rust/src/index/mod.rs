@@ -1,6 +1,18 @@
 //! Vector indexes: the flat baseline, the two-level IVF baseline, and the
 //! EdgeRAG index (pruned second level + online generation + selective
 //! storage + adaptive cache). One implementation per row of paper Table 4.
+//!
+//! ## Concurrency model
+//!
+//! `search` takes `&self` so any number of queries can execute in
+//! parallel against a shared index. Searches are *pure reads* of index
+//! structure: the mutations EdgeRAG used to perform inline (cache
+//! admission, use-counter bumps, adaptive-threshold feedback) are instead
+//! **recorded** into the [`CacheIntent`] carried by each
+//! [`SearchOutcome`] and **applied** afterwards through the separate
+//! [`VectorIndex::commit`] path. Structural mutations (online
+//! insert/remove, threshold pinning) still require `&mut self` — callers
+//! serialize those behind a write lease (see `coordinator::Engine`).
 
 pub mod clusters;
 pub mod edge;
@@ -23,6 +35,7 @@ pub use scorer::Scorer;
 use crate::config::IndexKind;
 use crate::simtime::{LatencyLedger, SimDuration};
 use crate::storage::MemoryModel;
+use crate::vecmath::EmbeddingMatrix;
 
 /// Memory model shared between an index and the LLM side of the pipeline
 /// (they contend for the same device DRAM — that contention *is* the
@@ -46,6 +59,43 @@ pub struct SearchEvents {
     pub thrash_faults: usize,
 }
 
+/// A freshly generated cluster the search proposes for cache admission.
+#[derive(Debug, Clone)]
+pub struct AdmitCandidate {
+    pub cluster: u32,
+    /// The generated embeddings (shared, not copied, into the cache).
+    pub emb: Arc<EmbeddingMatrix>,
+    /// Profiled generation latency in ms — the cost weight and the value
+    /// the adaptive threshold gates on.
+    pub gen_latency_ms: f64,
+}
+
+/// One cache probe observed during a search, in probe order. Replaying
+/// hits (counter bump) and misses (decay-epoch advance) in this exact
+/// order reproduces Algorithm 2's single-threaded LFU state.
+#[derive(Debug, Clone, Copy)]
+pub enum CacheAccess {
+    Hit(u32),
+    Miss,
+}
+
+/// Deferred cache mutations recorded by a read-only search and applied by
+/// [`VectorIndex::commit`]. Baseline indexes leave it empty.
+#[derive(Debug, Clone, Default)]
+pub struct CacheIntent {
+    /// Ordered cache probes: hits bump their LFU counters at commit time,
+    /// misses advance the decay epoch.
+    pub accesses: Vec<CacheAccess>,
+    /// Generated clusters proposed for admission (threshold-gated).
+    pub admit: Vec<AdmitCandidate>,
+    /// Did this search miss the cache at least once? (Alg. 3 input.)
+    pub had_miss: bool,
+    /// Index update-generation observed at search time; commit discards
+    /// admissions if an insert/remove landed in between (their embeddings
+    /// could be stale).
+    pub generation: u64,
+}
+
 /// Result of one vector search.
 #[derive(Debug, Clone, Default)]
 pub struct SearchOutcome {
@@ -56,25 +106,36 @@ pub struct SearchOutcome {
     /// Which clusters were probed (empty for flat).
     pub probed: Vec<u32>,
     pub events: SearchEvents,
+    /// Deferred cache mutations to apply through [`VectorIndex::commit`].
+    pub cache_intent: CacheIntent,
 }
 
 /// The interface all five Table-4 configurations serve behind.
-pub trait VectorIndex: Send {
+///
+/// `Send + Sync` because the serving engine shares one index across its
+/// worker pool: reads go through `&self`, writes take an exclusive lease.
+pub trait VectorIndex: Send + Sync {
     fn kind(&self) -> IndexKind;
 
     /// Search for the `k` most similar chunks to an (already embedded)
-    /// query vector.
-    fn search(&mut self, query: &[f32], k: usize) -> Result<SearchOutcome>;
+    /// query vector. Read-only: concurrent calls are safe and do not
+    /// block each other on cache or threshold state.
+    fn search(&self, query: &[f32], k: usize) -> Result<SearchOutcome>;
+
+    /// Apply one search's deferred cache mutations plus the adaptive
+    /// threshold feedback (paper Alg. 3 observes the query's total
+    /// retrieval latency). No-op for baselines.
+    fn commit(&self, _intent: &CacheIntent, _retrieval: SimDuration) {}
 
     /// Bytes this configuration keeps memory-resident for the index
     /// itself (Fig. 3's "embedded database size" bars).
     fn resident_bytes(&self) -> u64;
 
-    /// Post-retrieval feedback with the query's total retrieval latency
-    /// (drives EdgeRAG's adaptive caching threshold; no-op for baselines).
-    fn feedback(&mut self, _retrieval: SimDuration) {}
+    /// Downcast support for shared references (read-only stats paths).
+    fn as_any(&self) -> &dyn std::any::Any;
 
-    /// Downcast support (the harness reaches EdgeRAG-specific state —
-    /// cache stats, threshold pinning — through the trait object).
+    /// Downcast support for the write path (the harness reaches
+    /// EdgeRAG-specific state — online updates, threshold pinning —
+    /// through the trait object).
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
 }

@@ -8,6 +8,8 @@
 //! small merge into their nearest neighbour (a tombstone remains in the
 //! centroid table, masked out of probes).
 
+use std::sync::atomic::Ordering;
+
 use anyhow::{bail, Result};
 
 use crate::index::edge::EdgeIndex;
@@ -31,6 +33,9 @@ impl EdgeIndex {
         if self.chunk_cluster.contains_key(&id) {
             bail!("chunk id {id} already present");
         }
+        // Invalidate in-flight cache intents: admissions gathered before
+        // this update may carry stale embeddings.
+        self.update_gen.fetch_add(1, Ordering::Release);
         // Nearest active centroid.
         let target = self
             .probe(emb, 1)?
@@ -58,6 +63,7 @@ impl EdgeIndex {
         let Some(cluster) = self.chunk_cluster.remove(&id) else {
             return Ok(false);
         };
+        self.update_gen.fetch_add(1, Ordering::Release);
         let chars = match self.dynamic.remove(&id) {
             Some((text, _)) => text.len() as u64,
             None => {
@@ -101,8 +107,8 @@ impl EdgeIndex {
             (meta.gen_cost, meta.is_empty())
         };
         // Cached embeddings are stale.
-        if let Some(cache) = &mut self.cache {
-            if cache.remove(c) {
+        if let Some(cache) = &self.cache {
+            if cache.write().unwrap().remove(c) {
                 self.memory.lock().unwrap().release(Region::Cache(c));
             }
         }
@@ -253,8 +259,8 @@ impl EdgeIndex {
         if let Some(blob) = &self.blob {
             blob.remove(c)?;
         }
-        if let Some(cache) = &mut self.cache {
-            if cache.remove(c) {
+        if let Some(cache) = &self.cache {
+            if cache.write().unwrap().remove(c) {
                 self.memory.lock().unwrap().release(Region::Cache(c));
             }
         }

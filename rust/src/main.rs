@@ -136,7 +136,7 @@ USAGE: edgerag <command> [--options]
 
 COMMANDS
   serve   --dataset NAME --index KIND [--port P] [--device D]
-          [--transformer] [--real-prefill] [--live-generation]
+          [--workers N] [--transformer] [--real-prefill] [--live-generation]
   query   --text \"...\" [--port P]
   stats   [--port P]
   bench   <table2|fig3|fig4|fig5|fig7|fig10|fig12|fig13|breakdown|
@@ -159,13 +159,17 @@ fn serve(args: &Args) -> Result<()> {
         None => IndexKind::EdgeRag,
     };
     let port = args.get("port").unwrap_or("7313");
+    let workers = match args.get("workers") {
+        Some(w) => w.parse().context("bad --workers")?,
+        None => edgerag::server::default_workers(),
+    };
     eprintln!("building dataset `{}` ({} chunks)…", dataset.name, dataset.n_chunks);
     let built = builder.build_dataset(&dataset)?;
     let pipeline = builder.pipeline(&built, kind)?;
     let addr = format!("127.0.0.1:{port}");
-    let server = Server::bind(&addr, pipeline, builder.embedder())?;
+    let server = Server::bind_with_workers(&addr, pipeline, builder.embedder(), workers)?;
     eprintln!(
-        "serving `{}` with {} index on {addr} (device: {})",
+        "serving `{}` with {} index on {addr} (device: {}, {workers} workers)",
         dataset.name,
         kind.name(),
         builder.device.name

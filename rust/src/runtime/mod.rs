@@ -8,6 +8,7 @@
 
 mod executable;
 pub mod manifest;
+pub mod reference;
 pub mod service;
 
 use std::collections::HashMap;

@@ -1,0 +1,329 @@
+//! Pure-rust reference compute backend.
+//!
+//! When the PJRT runtime (the `xla` crate + AOT-compiled artifacts) is
+//! unavailable — offline build environments, CI, machines without
+//! `make artifacts` — the compute service falls back to this backend. It
+//! implements the same artifact contract as the compiled graphs:
+//!
+//! * `sim_{A}x{N}` — inner-product scores, the exact semantics of the
+//!   Pallas similarity kernel (`python/compile/kernels/ref.py::
+//!   similarity_ref`), so every retrieval numeric is identical;
+//! * `proj_{B}` — the hash-projection embedder `normalize(feats @ W + b)`
+//!   (`projection_ref`), using the real weight blob when `artifacts/`
+//!   exists and a deterministic seeded matrix otherwise;
+//! * `enc_{B}` / `prefill_1` — deterministic stand-ins for the
+//!   transformer graphs: token-hash embeddings (mean-pooled, normalized)
+//!   and seeded logits. They preserve the properties the serving stack
+//!   relies on (determinism, unit norm, token-overlap similarity) but NOT
+//!   the compiled models' numerics — golden-parity tests require real
+//!   artifacts and skip otherwise.
+//!
+//! Unlike PJRT (whose `Rc`-based handles pin all state to one executor
+//! thread), this backend is plain `Sync` data and executes **on the
+//! calling thread** — so the serving engine's worker pool scales query
+//! throughput with cores instead of serializing on a compute channel.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{InputKind, Manifest};
+use super::service::Tensor;
+use crate::data::Rng;
+
+/// Seed for the deterministic projection weights when no artifact blob is
+/// available. Changing it changes every embedding — keep it stable.
+const PROJ_SEED: u64 = 0xED6E_0001;
+/// Per-token seed salt for the encoder stand-in.
+const TOK_SEED: u64 = 0xED6E_0002;
+/// Seed salt for the prefill logits stand-in.
+const PREFILL_SEED: u64 = 0xED6E_0003;
+
+/// The reference backend: deterministic, thread-safe, allocation-light.
+#[derive(Debug)]
+pub struct RefCompute {
+    dim: usize,
+    vocab: usize,
+    /// Projection weight, row-major `(vocab, dim)`.
+    proj_w: Vec<f32>,
+    /// Projection bias, `(dim,)`.
+    proj_b: Vec<f32>,
+}
+
+impl RefCompute {
+    pub fn new(manifest: &Manifest) -> RefCompute {
+        let dim = manifest.dim;
+        let vocab = manifest.vocab;
+        let (proj_w, proj_b) = Self::projection_weights(manifest, vocab, dim);
+        RefCompute {
+            dim,
+            vocab,
+            proj_w,
+            proj_b,
+        }
+    }
+
+    /// Load the real projection weight blob when the artifacts directory
+    /// has one (numerics then match the compiled `proj_*` graphs exactly,
+    /// since projection is just `normalize(feats @ W + b)`); otherwise
+    /// generate a fixed seeded matrix.
+    fn projection_weights(manifest: &Manifest, vocab: usize, dim: usize) -> (Vec<f32>, Vec<f32>) {
+        let total = vocab * dim + dim;
+        for artifact in &manifest.artifacts {
+            if !artifact.name.starts_with("proj_") {
+                continue;
+            }
+            for input in artifact.inputs.iter().filter(|i| i.kind == InputKind::Weight) {
+                if let Ok(theta) = manifest.read_weights(input) {
+                    if theta.len() == total {
+                        let w = theta[..vocab * dim].to_vec();
+                        let b = theta[vocab * dim..].to_vec();
+                        return (w, b);
+                    }
+                }
+            }
+        }
+        let mut rng = Rng::new(PROJ_SEED);
+        let scale = 1.0 / (dim as f64).sqrt();
+        let w = (0..vocab * dim)
+            .map(|_| (rng.normal() * scale) as f32)
+            .collect();
+        let b = vec![0.0f32; dim];
+        (w, b)
+    }
+
+    /// Execute one artifact by name. Shapes come from the tensors
+    /// themselves, so every compiled bucket (`sim_1x128` … `sim_32x512`,
+    /// `proj_1`/`proj_32`, `enc_1`/`enc_8`) routes through one
+    /// implementation per family.
+    pub fn run(&self, artifact: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        if artifact.starts_with("sim_") {
+            self.run_sim(artifact, inputs)
+        } else if artifact.starts_with("proj_") {
+            self.run_projection(artifact, inputs)
+        } else if artifact.starts_with("enc_") {
+            self.run_encoder(artifact, inputs)
+        } else if artifact == "prefill_1" {
+            self.run_prefill(inputs)
+        } else {
+            bail!("reference backend: unknown artifact `{artifact}`")
+        }
+    }
+
+    fn f32_input<'a>(artifact: &str, inputs: &'a [Tensor], i: usize) -> Result<(&'a [f32], &'a [usize])> {
+        match inputs.get(i) {
+            Some(Tensor::F32(d, s)) if s.len() == 2 => Ok((d.as_slice(), s.as_slice())),
+            other => bail!("{artifact}: input {i} must be rank-2 f32, got {other:?}"),
+        }
+    }
+
+    fn i32_input<'a>(artifact: &str, inputs: &'a [Tensor], i: usize) -> Result<(&'a [i32], &'a [usize])> {
+        match inputs.get(i) {
+            Some(Tensor::I32(d, s)) if s.len() == 2 => Ok((d.as_slice(), s.as_slice())),
+            other => bail!("{artifact}: input {i} must be rank-2 i32, got {other:?}"),
+        }
+    }
+
+    /// `sim_{A}x{N}`: inner products, row-major (A × N) output.
+    fn run_sim(&self, artifact: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let (q, qs) = Self::f32_input(artifact, inputs, 0)?;
+        let (rows, rs) = Self::f32_input(artifact, inputs, 1)?;
+        let (a, d) = (qs[0], qs[1]);
+        let n = rs[0];
+        if d != self.dim || rs[1] != d || q.len() != a * d || rows.len() != n * d {
+            bail!("{artifact}: shape mismatch (q {qs:?}, rows {rs:?})");
+        }
+        let mut out = Vec::with_capacity(a * n);
+        for i in 0..a {
+            let qi = &q[i * d..(i + 1) * d];
+            for j in 0..n {
+                let rj = &rows[j * d..(j + 1) * d];
+                out.push(crate::vecmath::dot(qi, rj));
+            }
+        }
+        Ok(vec![out])
+    }
+
+    /// `proj_{B}`: `normalize(feats @ W + b)` — `projection_ref` exactly
+    /// (eps 1e-6 inside the square root).
+    fn run_projection(&self, artifact: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let (feats, fs) = Self::f32_input(artifact, inputs, 0)?;
+        let (b, vocab) = (fs[0], fs[1]);
+        if vocab != self.vocab || feats.len() != b * vocab {
+            bail!("{artifact}: shape mismatch {fs:?}");
+        }
+        let dim = self.dim;
+        let mut out = vec![0.0f32; b * dim];
+        for r in 0..b {
+            let frow = &feats[r * vocab..(r + 1) * vocab];
+            let orow = &mut out[r * dim..(r + 1) * dim];
+            orow.copy_from_slice(&self.proj_b);
+            // Bag-of-tokens features are sparse: skip zero counts.
+            for (v, &f) in frow.iter().enumerate() {
+                if f != 0.0 {
+                    let wrow = &self.proj_w[v * dim..(v + 1) * dim];
+                    for (o, w) in orow.iter_mut().zip(wrow) {
+                        *o += f * w;
+                    }
+                }
+            }
+            let norm = (orow.iter().map(|x| (x * x) as f64).sum::<f64>() + 1e-6).sqrt() as f32;
+            for o in orow.iter_mut() {
+                *o /= norm;
+            }
+        }
+        Ok(vec![out])
+    }
+
+    /// `enc_{B}`: deterministic token-hash embeddings, mean-pooled over
+    /// unmasked positions and L2-normalized.
+    fn run_encoder(&self, artifact: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let (ids, is) = Self::i32_input(artifact, inputs, 0)?;
+        let (mask, ms) = Self::f32_input(artifact, inputs, 1)?;
+        let (b, seq) = (is[0], is[1]);
+        if ms != is || ids.len() != b * seq || mask.len() != b * seq {
+            bail!("{artifact}: shape mismatch (ids {is:?}, mask {ms:?})");
+        }
+        let dim = self.dim;
+        let mut out = vec![0.0f32; b * dim];
+        for r in 0..b {
+            let orow = &mut out[r * dim..(r + 1) * dim];
+            for p in 0..seq {
+                if mask[r * seq + p] <= 0.0 {
+                    continue;
+                }
+                let tok = ids[r * seq + p];
+                let mut rng = Rng::new(TOK_SEED ^ ((tok as u32 as u64) << 8));
+                for o in orow.iter_mut() {
+                    *o += rng.normal() as f32;
+                }
+            }
+            let norm = crate::vecmath::l2_norm(orow).max(1e-6);
+            for o in orow.iter_mut() {
+                *o /= norm;
+            }
+        }
+        Ok(vec![out])
+    }
+
+    /// `prefill_1`: deterministic logits seeded by the prompt ids.
+    fn run_prefill(&self, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let (ids, is) = Self::i32_input("prefill_1", inputs, 0)?;
+        if ids.len() != is[0] * is[1] {
+            bail!("prefill_1: shape mismatch {is:?}");
+        }
+        // FNV-style fold of the prompt ids → one seed → vocab logits.
+        let mut seed = PREFILL_SEED;
+        for &t in ids {
+            seed = seed
+                .wrapping_mul(0x0000_0100_0000_01B3)
+                .wrapping_add(t as u32 as u64);
+        }
+        let mut rng = Rng::new(seed);
+        let logits = (0..self.vocab).map(|_| rng.normal() as f32).collect();
+        Ok(vec![logits])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn backend() -> RefCompute {
+        RefCompute::new(&Manifest::builtin(std::path::Path::new("/nonexistent")))
+    }
+
+    #[test]
+    fn sim_is_exact_dot() {
+        let b = backend();
+        let dim = 256;
+        let q: Vec<f32> = (0..dim).map(|i| (i as f32).sin()).collect();
+        let mut rows = vec![0.0f32; 128 * dim];
+        rows[..dim].copy_from_slice(&q); // row 0 = q
+        let out = b
+            .run(
+                "sim_1x128",
+                &[
+                    Tensor::F32(q.clone(), vec![1, dim]),
+                    Tensor::F32(rows, vec![128, dim]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out[0].len(), 128);
+        let want: f32 = q.iter().map(|x| x * x).sum();
+        assert!((out[0][0] - want).abs() < 1e-3);
+        assert_eq!(out[0][1], 0.0);
+    }
+
+    #[test]
+    fn projection_is_unit_norm_and_deterministic() {
+        let b = backend();
+        let vocab = 4096;
+        let mut feats = vec![0.0f32; vocab];
+        feats[17] = 2.0;
+        feats[901] = 1.0;
+        let run = |f: &RefCompute| {
+            f.run("proj_1", &[Tensor::F32(feats.clone(), vec![1, vocab])])
+                .unwrap()[0]
+                .clone()
+        };
+        let a = run(&b);
+        let c = run(&backend());
+        assert_eq!(a.len(), 256);
+        assert_eq!(a, c, "must be deterministic across instances");
+        let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-3, "norm {norm}");
+    }
+
+    #[test]
+    fn encoder_similarity_tracks_token_overlap() {
+        let b = backend();
+        let seq = 64;
+        let mk = |toks: &[i32]| {
+            let mut ids = vec![0i32; seq];
+            let mut mask = vec![0.0f32; seq];
+            for (i, &t) in toks.iter().enumerate() {
+                ids[i] = t;
+                mask[i] = 1.0;
+            }
+            b.run(
+                "enc_1",
+                &[
+                    Tensor::I32(ids, vec![1, seq]),
+                    Tensor::F32(mask, vec![1, seq]),
+                ],
+            )
+            .unwrap()[0]
+                .clone()
+        };
+        let x = mk(&[5, 9, 12, 40]);
+        let near = mk(&[5, 9, 12, 41]);
+        let far = mk(&[100, 200, 300, 400]);
+        let dot = |a: &[f32], c: &[f32]| crate::vecmath::dot(a, c);
+        assert!((dot(&x, &x) - 1.0).abs() < 1e-3);
+        assert!(dot(&x, &near) > dot(&x, &far));
+    }
+
+    #[test]
+    fn prefill_logits_deterministic_per_prompt() {
+        let b = backend();
+        let seq = 256;
+        let mut ids = vec![0i32; seq];
+        ids[0] = 2;
+        ids[1] = 77;
+        let run = |ids: Vec<i32>| b.run("prefill_1", &[Tensor::I32(ids, vec![1, seq])]).unwrap();
+        let a = run(ids.clone());
+        let c = run(ids.clone());
+        assert_eq!(a[0], c[0]);
+        assert_eq!(a[0].len(), 4096);
+        let mut other = ids.clone();
+        other[1] = 78;
+        let d = run(other);
+        assert_ne!(a[0], d[0]);
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let b = backend();
+        assert!(b.run("nope_3", &[]).is_err());
+    }
+}

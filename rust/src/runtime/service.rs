@@ -1,19 +1,26 @@
-//! Compute-executor thread: the serving-engine pattern.
+//! Compute service: the serving-engine pattern, with two backends.
 //!
-//! The `xla` crate's PJRT handles are `Rc`-based (single-threaded), so all
-//! PJRT state — client, compiled executables, uploaded weights — lives on
-//! one dedicated executor thread. Coordinator/server threads hold a cheap
-//! [`ComputeHandle`] (`Clone + Send + Sync`) and submit jobs over a
-//! channel; replies come back on per-call channels. This mirrors how
-//! production servers isolate an inference engine behind a submission
-//! queue.
+//! * **PJRT** — the `xla` crate's handles are `Rc`-based
+//!   (single-threaded), so all PJRT state — client, compiled executables,
+//!   uploaded weights — lives on one dedicated executor thread.
+//!   Coordinator/server threads hold a cheap [`ComputeHandle`]
+//!   (`Clone + Send + Sync`) and submit jobs over a channel; replies come
+//!   back on per-call channels. This mirrors how production servers
+//!   isolate an inference engine behind a submission queue.
+//! * **Reference** — when PJRT (or the `artifacts/` directory) is
+//!   unavailable, the service transparently falls back to the
+//!   deterministic pure-rust [`RefCompute`](super::reference::RefCompute)
+//!   backend, which is `Sync` and executes **inline on the calling
+//!   thread** — so concurrent queries scale with cores instead of
+//!   funneling through the executor channel.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
+use super::reference::RefCompute;
 use super::{HostTensor, Manifest, Runtime};
 
 /// An owned tensor argument crossing the thread boundary.
@@ -44,45 +51,67 @@ enum Job {
     Shutdown,
 }
 
-struct Shared {
-    tx: mpsc::Sender<Job>,
-    manifest: Manifest,
-    calls: AtomicU64,
-    join: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
+enum Backend {
+    /// Dedicated executor thread driving compiled PJRT executables. The
+    /// sender sits behind a mutex so the handle stays `Sync` on every
+    /// toolchain; the lock is held only for the (non-blocking) enqueue.
+    Pjrt {
+        tx: Mutex<mpsc::Sender<Job>>,
+        join: Mutex<Option<std::thread::JoinHandle<()>>>,
+    },
+    /// In-process deterministic fallback; executes on the caller thread.
+    Reference(RefCompute),
 }
 
-/// Handle to the compute executor. Cloneable and thread-safe; dropping the
-/// last handle shuts the executor down.
+struct Shared {
+    backend: Backend,
+    manifest: Manifest,
+    calls: AtomicU64,
+}
+
+/// Handle to the compute service. Cloneable and thread-safe; dropping the
+/// last handle shuts a PJRT executor down.
 #[derive(Clone)]
 pub struct ComputeHandle {
     shared: Arc<Shared>,
 }
 
 impl ComputeHandle {
-    /// Spawn the executor thread and load the artifact manifest.
+    /// Start the compute service for `artifacts_dir`.
+    ///
+    /// Tries, in order: real manifest + PJRT executor thread; real
+    /// manifest + reference backend (PJRT unavailable); built-in manifest
+    /// + reference backend (no artifacts at all). The caller never has to
+    /// care which one it got — only golden-parity tests do.
     pub fn start(artifacts_dir: &Path) -> Result<ComputeHandle> {
-        // Parse the manifest on the caller thread too (it's cheap) so the
-        // handle can answer shape/bucket questions without a round-trip.
-        let manifest = Manifest::load(artifacts_dir)?;
-        let dir: PathBuf = artifacts_dir.to_path_buf();
-        let (tx, rx) = mpsc::channel::<Job>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-
-        let join = std::thread::Builder::new()
-            .name("edgerag-compute".into())
-            .spawn(move || executor_loop(&dir, rx, ready_tx))
-            .context("spawning compute thread")?;
-
-        ready_rx
-            .recv()
-            .context("compute thread died during startup")??;
-
+        let manifest = match Manifest::load(artifacts_dir) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!(
+                    "edgerag: no compiled artifacts ({e:#}); \
+                     using the built-in manifest + reference compute backend"
+                );
+                Manifest::builtin(artifacts_dir)
+            }
+        };
+        let backend = match spawn_pjrt_executor(artifacts_dir) {
+            Ok((tx, join)) => Backend::Pjrt {
+                tx: Mutex::new(tx),
+                join: Mutex::new(Some(join)),
+            },
+            Err(e) => {
+                eprintln!(
+                    "edgerag: PJRT executor unavailable ({e:#}); \
+                     falling back to the pure-rust reference compute backend"
+                );
+                Backend::Reference(RefCompute::new(&manifest))
+            }
+        };
         Ok(ComputeHandle {
             shared: Arc::new(Shared {
-                tx,
+                backend,
                 manifest,
                 calls: AtomicU64::new(0),
-                join: std::sync::Mutex::new(Some(join)),
             }),
         })
     }
@@ -95,42 +124,92 @@ impl ComputeHandle {
         self.shared.manifest.dim
     }
 
+    /// Which backend is serving compute — "pjrt" or "reference".
+    pub fn backend_name(&self) -> &'static str {
+        match self.shared.backend {
+            Backend::Pjrt { .. } => "pjrt",
+            Backend::Reference(_) => "reference",
+        }
+    }
+
     /// Total executions submitted through this service.
     pub fn calls(&self) -> u64 {
         self.shared.calls.load(Ordering::Relaxed)
     }
 
-    /// Execute an artifact with owned inputs; blocks for the result.
+    /// Execute an artifact with owned inputs; blocks for the result. On
+    /// the reference backend this runs inline on the calling thread, so
+    /// concurrent callers execute concurrently.
     pub fn run(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Vec<f32>>> {
         self.shared.calls.fetch_add(1, Ordering::Relaxed);
-        let (reply, rx) = mpsc::channel();
-        self.shared
-            .tx
-            .send(Job::Run {
-                artifact: artifact.to_string(),
-                inputs,
-                reply,
-            })
-            .map_err(|_| anyhow!("compute thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("compute thread dropped reply"))?
+        match &self.shared.backend {
+            Backend::Pjrt { tx, .. } => {
+                let (reply, rx) = mpsc::channel();
+                tx.lock()
+                    .unwrap()
+                    .send(Job::Run {
+                        artifact: artifact.to_string(),
+                        inputs,
+                        reply,
+                    })
+                    .map_err(|_| anyhow!("compute thread gone"))?;
+                rx.recv().map_err(|_| anyhow!("compute thread dropped reply"))?
+            }
+            Backend::Reference(r) => r.run(artifact, &inputs),
+        }
     }
 
-    /// Eagerly compile all artifacts (server startup).
+    /// Eagerly compile all artifacts (server startup). No-op on the
+    /// reference backend.
     pub fn warmup(&self) -> Result<()> {
-        let (reply, rx) = mpsc::channel();
-        self.shared
-            .tx
-            .send(Job::Warmup { reply })
-            .map_err(|_| anyhow!("compute thread gone"))?;
-        rx.recv().map_err(|_| anyhow!("compute thread dropped reply"))?
+        match &self.shared.backend {
+            Backend::Pjrt { tx, .. } => {
+                let (reply, rx) = mpsc::channel();
+                tx.lock()
+                    .unwrap()
+                    .send(Job::Warmup { reply })
+                    .map_err(|_| anyhow!("compute thread gone"))?;
+                rx.recv().map_err(|_| anyhow!("compute thread dropped reply"))?
+            }
+            Backend::Reference(_) => Ok(()),
+        }
     }
 }
 
 impl Drop for Shared {
     fn drop(&mut self) {
-        let _ = self.tx.send(Job::Shutdown);
-        if let Some(j) = self.join.lock().unwrap().take() {
-            let _ = j.join();
+        if let Backend::Pjrt { tx, join } = &self.backend {
+            let _ = tx.lock().unwrap().send(Job::Shutdown);
+            if let Some(j) = join.lock().unwrap().take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Spawn the PJRT executor thread; fails fast (with the underlying PJRT /
+/// artifact error) when the runtime cannot load, so `start` can fall back.
+fn spawn_pjrt_executor(
+    dir: &Path,
+) -> Result<(mpsc::Sender<Job>, std::thread::JoinHandle<()>)> {
+    let dir: PathBuf = dir.to_path_buf();
+    let (tx, rx) = mpsc::channel::<Job>();
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+
+    let join = std::thread::Builder::new()
+        .name("edgerag-compute".into())
+        .spawn(move || executor_loop(&dir, rx, ready_tx))
+        .context("spawning compute thread")?;
+
+    match ready_rx.recv() {
+        Ok(Ok(())) => Ok((tx, join)),
+        Ok(Err(e)) => {
+            let _ = join.join();
+            Err(e)
+        }
+        Err(_) => {
+            let _ = join.join();
+            Err(anyhow!("compute thread died during startup"))
         }
     }
 }

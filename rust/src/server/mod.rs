@@ -1,10 +1,14 @@
 //! Request server: a line-delimited JSON protocol over TCP.
 //!
+//! ## Concurrency
+//!
 //! The crate cache has no async runtime, so the server is thread-based:
-//! one acceptor + one handler thread per connection, all funneling into
-//! the single-threaded serving pipeline (edge devices serve one query at a
-//! time; the interesting concurrency — compute — lives on the PJRT
-//! executor thread).
+//! one acceptor + one handler thread per connection, all submitting work
+//! to a fixed **worker pool** that executes requests against one shared
+//! [`Engine`]. Queries run read-parallel (the engine's index takes only a
+//! read lease per search); `insert`/`remove` acquire the exclusive write
+//! lease inside their worker, draining in-flight searches first. The pool
+//! bounds concurrent engine work regardless of how many clients connect.
 //!
 //! Protocol (one JSON object per line):
 //!   {"op":"query","text":"..."}      → hits + latency breakdown
@@ -12,47 +16,135 @@
 //!   {"op":"remove","id":N}           → {"removed": bool}
 //!   {"op":"stats"}                   → serving metrics
 //!   {"op":"ping"}                    → {"ok": true}
+//!   {"op":"shutdown"}                → {"ok": true}, then the server stops
+//!
+//! Shutdown dispatches on the *parsed* `op` — a query whose text merely
+//! contains the word "shutdown" is served like any other query.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{RagPipeline, TextStore};
+use crate::coordinator::{Engine, TextStore};
 use crate::embedding::Embedder;
 use crate::index::EdgeIndex;
 use crate::json::{self, Value};
 use crate::simtime::Component;
 
+// ---------------------------------------------------------------------------
+// Worker pool
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Cloneable submission handle to the worker pool.
+#[derive(Clone)]
+pub struct PoolHandle {
+    tx: mpsc::Sender<Job>,
+}
+
+impl PoolHandle {
+    fn submit(&self, job: Job) -> Result<()> {
+        self.tx
+            .send(job)
+            .map_err(|_| anyhow::anyhow!("worker pool is shut down"))
+    }
+}
+
+/// Fixed-size worker pool over a shared job queue. Workers exit once the
+/// queue closes (every submission handle dropped) and it drains; the
+/// threads are detached so dropping the pool never blocks on a client
+/// that is still connected.
+struct WorkerPool {
+    handle: PoolHandle,
+}
+
+impl WorkerPool {
+    fn new(n: usize) -> WorkerPool {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..n.max(1) {
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("edgerag-worker-{i}"))
+                .spawn(move || loop {
+                    // Hold the receiver lock only for the dequeue.
+                    let job = match rx.lock() {
+                        Ok(guard) => match guard.recv() {
+                            Ok(job) => job,
+                            Err(_) => break,
+                        },
+                        Err(_) => break, // queue mutex poisoned: stop cleanly
+                    };
+                    // Panic isolation: a panicking request must fail that
+                    // one response (the handler sees its reply channel
+                    // drop), not kill the worker and shrink the pool.
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                })
+                .expect("spawning worker thread");
+        }
+        WorkerPool {
+            handle: PoolHandle { tx },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
 /// Shared server state.
 pub struct ServerState {
-    pub pipeline: Mutex<RagPipeline>,
+    pub engine: Arc<Engine>,
     pub embedder: Embedder,
-    /// Shared with the pipeline: inserted chunks' text goes here so prompt
-    /// assembly can fetch it (ids are allocated by the store).
+    /// Shared with the engine: inserted chunks' text goes here so prompt
+    /// assembly can fetch it (ids are allocated by the store under the
+    /// index write lease, keeping ids and index state consistent).
     texts: TextStore,
     running: AtomicBool,
 }
 
 pub struct Server {
     state: Arc<ServerState>,
+    pool: WorkerPool,
     listener: TcpListener,
 }
 
+/// Default worker-pool size: one worker per available core, clamped to a
+/// sensible serving range.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 16)
+}
+
 impl Server {
-    /// Bind on `addr` (e.g. "127.0.0.1:7313").
-    pub fn bind(addr: &str, pipeline: RagPipeline, embedder: Embedder) -> Result<Server> {
+    /// Bind on `addr` (e.g. "127.0.0.1:7313") with the default pool size.
+    pub fn bind(addr: &str, engine: Engine, embedder: Embedder) -> Result<Server> {
+        Self::bind_with_workers(addr, engine, embedder, default_workers())
+    }
+
+    /// Bind with an explicit worker-pool size.
+    pub fn bind_with_workers(
+        addr: &str,
+        engine: Engine,
+        embedder: Embedder,
+        workers: usize,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        let texts = pipeline.texts();
+        let texts = engine.texts();
         Ok(Server {
             state: Arc::new(ServerState {
-                pipeline: Mutex::new(pipeline),
+                engine: Arc::new(engine),
                 embedder,
                 texts,
                 running: AtomicBool::new(true),
             }),
+            pool: WorkerPool::new(workers),
             listener,
         })
     }
@@ -69,15 +161,16 @@ impl Server {
             }
             let Ok(stream) = stream else { continue };
             let state = self.state.clone();
+            let pool = self.pool.handle.clone();
             std::thread::spawn(move || {
-                let _ = handle_connection(stream, &state);
+                let _ = handle_connection(stream, &state, &pool);
             });
         }
         Ok(())
     }
 }
 
-fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
+fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, pool: &PoolHandle) -> Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut out = stream;
     let mut line = String::new();
@@ -90,12 +183,15 @@ fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
         if trimmed.is_empty() {
             continue;
         }
-        let response = match dispatch(trimmed, state) {
-            Ok(v) => v,
-            Err(e) => Value::object(vec![("error", Value::str(format!("{e:#}")))]),
+        let (response, shutdown) = match serve_request(trimmed, state, pool) {
+            Ok(pair) => pair,
+            Err(e) => (
+                Value::object(vec![("error", Value::str(format!("{e:#}")))]),
+                false,
+            ),
         };
         writeln!(out, "{response}")?;
-        if trimmed.contains("\"shutdown\"") {
+        if shutdown {
             state.running.store(false, Ordering::SeqCst);
             // poke the acceptor loop awake
             let _ = TcpStream::connect(out.local_addr()?);
@@ -104,16 +200,47 @@ fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
     }
 }
 
-fn dispatch(line: &str, state: &ServerState) -> Result<Value> {
+/// Parse one request line and execute it. Returns the response plus
+/// whether this request asked the server to shut down (decided on the
+/// parsed `op`, never on raw request text).
+fn serve_request(
+    line: &str,
+    state: &Arc<ServerState>,
+    pool: &PoolHandle,
+) -> Result<(Value, bool)> {
     let req = json::parse(line).map_err(|e| anyhow::anyhow!("bad request: {e}"))?;
-    let op = req.req("op")?.as_str().context("op must be a string")?;
+    let op = req
+        .req("op")?
+        .as_str()
+        .context("op must be a string")?
+        .to_string();
+    // Control ops answered inline — they must not queue behind work.
+    if op == "ping" {
+        return Ok((Value::object(vec![("ok", true.into())]), false));
+    }
+    if op == "shutdown" {
+        return Ok((Value::object(vec![("ok", true.into())]), true));
+    }
+    // Everything else executes on the worker pool: N workers run N
+    // queries concurrently against the shared engine.
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let state = state.clone();
+    pool.submit(Box::new(move || {
+        let _ = reply_tx.send(dispatch(&op, &req, &state));
+    }))?;
+    let response = reply_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("worker dropped the request"))??;
+    Ok((response, false))
+}
+
+fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
     match op {
-        "ping" => Ok(Value::object(vec![("ok", true.into())])),
-        "shutdown" => Ok(Value::object(vec![("ok", true.into())])),
         "query" => {
             let text = req.req("text")?.as_str().context("text")?;
-            let mut p = state.pipeline.lock().unwrap();
-            let out = p.handle(text)?;
+            // Read-parallel: `handle` takes &self; only the vector search
+            // holds the index read lease.
+            let out = state.engine.handle(text)?;
             let hits = Value::array(out.hits.iter().map(|&(id, score)| {
                 Value::object(vec![
                     ("chunk", id.into()),
@@ -137,13 +264,15 @@ fn dispatch(line: &str, state: &ServerState) -> Result<Value> {
         }
         "insert" => {
             let text = req.req("text")?.as_str().context("text")?;
+            // Embed outside the write lease: queries keep flowing while
+            // the embedder works.
             let emb = state.embedder.embed_one(text)?;
-            let mut p = state.pipeline.lock().unwrap();
-            // Allocate the id from the shared text store while holding the
-            // pipeline lock, so ids and index state stay consistent.
+            // Write lease: drains in-flight searches, then mutates. The id
+            // is allocated from the shared text store while holding the
+            // lease, so ids and index state stay consistent.
+            let mut index = state.engine.index_mut();
             let id = state.texts.push(text.to_string());
-            let edge = p
-                .index_mut()
+            let edge = index
                 .as_any_mut()
                 .downcast_mut::<EdgeIndex>()
                 .context("insert requires an EdgeRAG index")?;
@@ -155,9 +284,8 @@ fn dispatch(line: &str, state: &ServerState) -> Result<Value> {
         }
         "remove" => {
             let id = req.req("id")?.as_u64().context("id")? as u32;
-            let mut p = state.pipeline.lock().unwrap();
-            let edge = p
-                .index_mut()
+            let mut index = state.engine.index_mut();
+            let edge = index
                 .as_any_mut()
                 .downcast_mut::<EdgeIndex>()
                 .context("remove requires an EdgeRAG index")?;
@@ -165,27 +293,29 @@ fn dispatch(line: &str, state: &ServerState) -> Result<Value> {
             Ok(Value::object(vec![("removed", removed.into())]))
         }
         "stats" => {
-            let mut p = state.pipeline.lock().unwrap();
-            let queries = p.metrics().queries();
-            let resident = p.index().resident_bytes();
-            let (hit_rate, threshold) = match p
-                .index_mut()
-                .as_any_mut()
-                .downcast_mut::<EdgeIndex>()
-            {
-                Some(e) => (
-                    e.cache_stats().map(|s| s.hit_rate()).unwrap_or(0.0),
-                    e.threshold_ms(),
-                ),
-                None => (0.0, 0.0),
+            // Fully read-only: metrics snapshots + a shared index lease.
+            let m = state.engine.metrics();
+            let queries = m.queries();
+            let retrieval = m.retrieval();
+            let ttft = m.ttft();
+            let (resident, hit_rate, threshold) = {
+                let index = state.engine.index();
+                let resident = index.resident_bytes();
+                match index.as_any().downcast_ref::<EdgeIndex>() {
+                    Some(e) => (
+                        resident,
+                        e.cache_stats().map(|s| s.hit_rate()).unwrap_or(0.0),
+                        e.threshold_ms(),
+                    ),
+                    None => (resident, 0.0, 0.0),
+                }
             };
-            let m = p.metrics_mut();
             Ok(Value::object(vec![
                 ("queries", queries.into()),
-                ("retrieval_p50_ms", m.retrieval.percentile(50.0).as_millis_f64().into()),
-                ("retrieval_p95_ms", m.retrieval.percentile(95.0).as_millis_f64().into()),
-                ("ttft_p50_ms", m.ttft.percentile(50.0).as_millis_f64().into()),
-                ("ttft_p95_ms", m.ttft.percentile(95.0).as_millis_f64().into()),
+                ("retrieval_p50_ms", retrieval.percentile(50.0).as_millis_f64().into()),
+                ("retrieval_p95_ms", retrieval.percentile(95.0).as_millis_f64().into()),
+                ("ttft_p50_ms", ttft.percentile(50.0).as_millis_f64().into()),
+                ("ttft_p95_ms", ttft.percentile(95.0).as_millis_f64().into()),
                 ("resident_bytes", resident.into()),
                 ("cache_hit_rate", hit_rate.into()),
                 ("threshold_ms", threshold.into()),

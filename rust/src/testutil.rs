@@ -12,13 +12,13 @@ pub fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
-/// The process-wide shared compute handle. Panics if `make artifacts` has
-/// not been run.
+/// The process-wide shared compute handle. Uses real PJRT artifacts when
+/// `make artifacts` has been run, and the deterministic reference compute
+/// backend otherwise (see `runtime::reference`).
 pub fn shared_compute() -> ComputeHandle {
     static RT: OnceLock<ComputeHandle> = OnceLock::new();
     RT.get_or_init(|| {
-        ComputeHandle::start(&artifacts_dir())
-            .expect("starting compute executor — run `make artifacts` first")
+        ComputeHandle::start(&artifacts_dir()).expect("starting compute service")
     })
     .clone()
 }

@@ -130,7 +130,7 @@ fn edgerag_resident_memory_far_below_ivf() {
 fn repeat_queries_hit_cache_and_get_faster() {
     let b = builder();
     let d = built(&b);
-    let mut pipeline = b.pipeline(&d, IndexKind::EdgeRag).unwrap();
+    let pipeline = b.pipeline(&d, IndexKind::EdgeRag).unwrap();
     let q = &d.workload.queries[0].text;
     let cold = pipeline.handle(q).unwrap();
     let warm = pipeline.handle(q).unwrap();
@@ -142,7 +142,7 @@ fn repeat_queries_hit_cache_and_get_faster() {
 fn direct_query_of_chunk_text_retrieves_chunk() {
     let b = builder();
     let d = built(&b);
-    let mut pipeline = b.pipeline(&d, IndexKind::EdgeRag).unwrap();
+    let pipeline = b.pipeline(&d, IndexKind::EdgeRag).unwrap();
     let mut hits = 0;
     for id in [3u32, 99, 200, 400] {
         let out = pipeline.handle(&d.corpus.chunks[id as usize].text).unwrap();

@@ -1,5 +1,10 @@
 //! Integration over the TCP serving layer: real sockets, the line-JSON
-//! protocol, concurrent clients, online updates through the wire.
+//! protocol, concurrent clients, online updates through the wire. The
+//! stress test drives N parallel clients through interleaved
+//! query/insert/stats/remove ops against the worker-pool server.
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
 
 use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
 use edgerag::coordinator::builder::SystemBuilder;
@@ -7,17 +12,22 @@ use edgerag::json::Value;
 use edgerag::server::{Client, Server};
 use edgerag::testutil::shared_compute;
 
-fn spawn_server() -> (std::net::SocketAddr, usize) {
+fn spawn_server_with_workers(workers: usize) -> (std::net::SocketAddr, usize) {
     let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
     b.options.cache_dir = None;
     b.retrieval.nprobe = 4;
     let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
     let n = built.corpus.len();
     let pipeline = b.pipeline(&built, IndexKind::EdgeRag).unwrap();
-    let server = Server::bind("127.0.0.1:0", pipeline, b.embedder()).unwrap();
+    let server =
+        Server::bind_with_workers("127.0.0.1:0", pipeline, b.embedder(), workers).unwrap();
     let addr = server.local_addr().unwrap();
     std::thread::spawn(move || server.run().unwrap());
     (addr, n)
+}
+
+fn spawn_server() -> (std::net::SocketAddr, usize) {
+    spawn_server_with_workers(4)
 }
 
 #[test]
@@ -88,7 +98,20 @@ fn full_protocol_roundtrip() {
 }
 
 #[test]
-fn concurrent_clients_are_serialized_safely() {
+fn query_containing_the_word_shutdown_does_not_kill_the_server() {
+    // Regression: shutdown used to substring-match the raw request line.
+    let (addr, _) = spawn_server();
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let resp = c.query("how do I shutdown my edge device safely \"shutdown\"").unwrap();
+    assert!(resp.get("hits").is_some(), "{resp}");
+    // The server is still alive: a fresh connection works.
+    let mut c2 = Client::connect(&addr.to_string()).unwrap();
+    let pong = c2.call(&Value::object(vec![("op", Value::str("ping"))])).unwrap();
+    assert_eq!(pong.get("ok").and_then(|v| v.as_bool()), Some(true));
+}
+
+#[test]
+fn concurrent_clients_run_in_parallel_safely() {
     let (addr, _) = spawn_server();
     let mut handles = Vec::new();
     for t in 0..4 {
@@ -104,4 +127,94 @@ fn concurrent_clients_are_serialized_safely() {
     for h in handles {
         h.join().unwrap();
     }
+}
+
+#[test]
+fn stress_parallel_clients_interleave_query_insert_stats() {
+    // The tentpole acceptance test: N parallel clients mixing reads
+    // (query/stats) and writes (insert/remove) must finish without
+    // deadlock, allocate globally unique ids, and observe monotone
+    // metrics counters.
+    let (addr, corpus_len) = spawn_server_with_workers(4);
+    const THREADS: usize = 8;
+    const OPS: usize = 16;
+
+    let inserted: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let addr = addr.to_string();
+        let inserted = inserted.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let mut my_ids = Vec::new();
+            let mut last_queries = 0u64;
+            for i in 0..OPS {
+                match i % 4 {
+                    // reads dominate, like real traffic
+                    0 | 1 => {
+                        let resp = c
+                            .query(&format!("stress thread {t} op {i} c1 t0w1"))
+                            .unwrap();
+                        assert!(resp.get("hits").is_some(), "{resp}");
+                        assert!(resp.get("error").is_none(), "{resp}");
+                    }
+                    2 => {
+                        let text = format!("stress doc from thread {t} op {i} marker zq{t}x{i}");
+                        let ins = c
+                            .call(&Value::object(vec![
+                                ("op", Value::str("insert")),
+                                ("text", Value::str(text)),
+                            ]))
+                            .unwrap();
+                        let id = ins.get("id").and_then(|v| v.as_u64()).unwrap_or_else(|| {
+                            panic!("insert failed: {ins}")
+                        });
+                        my_ids.push(id);
+                    }
+                    _ => {
+                        let stats = c
+                            .call(&Value::object(vec![("op", Value::str("stats"))]))
+                            .unwrap();
+                        let q = stats.get("queries").and_then(|v| v.as_u64()).unwrap();
+                        assert!(
+                            q >= last_queries,
+                            "queries counter went backwards: {q} < {last_queries}"
+                        );
+                        last_queries = q;
+                    }
+                }
+            }
+            // Remove one of our docs through the wire, too.
+            if let Some(&id) = my_ids.first() {
+                let rem = c
+                    .call(&Value::object(vec![
+                        ("op", Value::str("remove")),
+                        ("id", Value::num(id as f64)),
+                    ]))
+                    .unwrap();
+                assert_eq!(rem.get("removed").and_then(|v| v.as_bool()), Some(true), "{rem}");
+                my_ids.remove(0);
+            }
+            inserted.lock().unwrap().extend(my_ids);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Ids are globally unique and allocated past the corpus.
+    let ids = inserted.lock().unwrap().clone();
+    let unique: HashSet<u64> = ids.iter().copied().collect();
+    assert_eq!(unique.len(), ids.len(), "duplicate ids: {ids:?}");
+    assert!(ids.iter().all(|&id| id >= corpus_len as u64));
+
+    // Surviving inserts are retrievable; the query counter matches the
+    // exact number of query ops served.
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let t0_doc = c.query("stress doc thread 0 marker zq0x6").unwrap();
+    assert!(t0_doc.get("hits").is_some());
+    let stats = c.call(&Value::object(vec![("op", Value::str("stats"))])).unwrap();
+    let total_queries = stats.get("queries").and_then(|v| v.as_u64()).unwrap();
+    let expected = (THREADS * OPS / 2) as u64 + 1; // i%4 ∈ {0,1} per thread + this probe
+    assert_eq!(total_queries, expected);
 }
