@@ -76,7 +76,7 @@ fn main() -> Result<()> {
         let emb = embedder.embed_one(text)?;
         let index = p.index();
         let out = index.search(&emb, 5)?;
-        index.commit(&out.cache_intent, out.ledger.retrieval());
+        index.commit(&out.intents, out.ledger.retrieval());
         Ok(out.hits.iter().map(|h| h.0).collect())
     };
     let mut found = 0;

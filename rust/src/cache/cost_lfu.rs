@@ -52,14 +52,20 @@ impl Entry {
 /// Statistics the experiment harness reports (hit rates, Fig. 7).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
+    /// Lookups that found their cluster cached.
     pub hits: u64,
+    /// Lookups that missed.
     pub misses: u64,
+    /// Entries admitted (threshold-gated inserts).
     pub insertions: u64,
+    /// Entries evicted (capacity pressure or threshold sweeps).
     pub evictions: u64,
+    /// Admissions declined by the Alg. 3 threshold gate.
     pub rejected_below_threshold: u64,
 }
 
 impl CacheStats {
+    /// hits ÷ (hits + misses); 0 when nothing was looked up.
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -112,6 +118,8 @@ pub struct CostAwareCache {
 }
 
 impl CostAwareCache {
+    /// An empty cache with a byte capacity and the Alg. 2 decay factor
+    /// (`decay` in `[0, 1]`; 1 disables decay).
     pub fn new(capacity_bytes: u64, decay: f64) -> Self {
         assert!((0.0..=1.0).contains(&decay));
         CostAwareCache {
@@ -124,26 +132,32 @@ impl CostAwareCache {
         }
     }
 
+    /// Configured byte capacity.
     pub fn capacity_bytes(&self) -> u64 {
         self.capacity_bytes
     }
 
+    /// Bytes currently held (always ≤ capacity).
     pub fn used_bytes(&self) -> u64 {
         self.used_bytes
     }
 
+    /// Number of cached cluster entries.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// Snapshot of the hit/miss/insertion/eviction counters.
     pub fn stats(&self) -> CacheStats {
         self.stats.snapshot()
     }
 
+    /// True when `cluster`'s embeddings are cached.
     pub fn contains(&self, cluster: u32) -> bool {
         self.entries.contains_key(&cluster)
     }

@@ -465,6 +465,26 @@ pub struct RetrievalConfig {
     pub store_slo_fraction: f64,
     /// Max prompt tokens fed to the LLM (query + retrieved chunks).
     pub max_prompt_tokens: usize,
+    /// Index shards for the EdgeRAG-family configurations: clusters are
+    /// partitioned round-robin across this many independently locked
+    /// shards so probes fan out and structural updates stall only the
+    /// owning shard (see `docs/ARCHITECTURE.md`).
+    ///
+    /// * `1` (the library default) — the single [`crate::index::EdgeIndex`],
+    ///   bit-identical to the paper-exact reproduction path.
+    /// * `0` — auto: one shard per available core (what `edgerag serve`
+    ///   defaults to via `--shards`).
+    /// * `n > 1` — exactly `n` shards; the cache budget is split evenly.
+    pub shards: usize,
+}
+
+/// One shard per available core, clamped to a sensible serving range —
+/// the `shards: 0` ("auto") resolution and the `edgerag serve` default.
+pub fn default_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 16)
 }
 
 impl Default for RetrievalConfig {
@@ -478,11 +498,20 @@ impl Default for RetrievalConfig {
             latency_ewma_alpha: 0.2,
             store_slo_fraction: 0.33,
             max_prompt_tokens: 2048,
+            shards: 1,
         }
     }
 }
 
 impl RetrievalConfig {
+    /// The effective shard count: `shards` itself, or one per core when 0.
+    pub fn resolved_shards(&self) -> usize {
+        match self.shards {
+            0 => default_shards(),
+            n => n,
+        }
+    }
+
     pub fn to_json(&self) -> Value {
         Value::object(vec![
             ("nprobe", self.nprobe.into()),
@@ -493,6 +522,7 @@ impl RetrievalConfig {
             ("latency_ewma_alpha", self.latency_ewma_alpha.into()),
             ("store_slo_fraction", self.store_slo_fraction.into()),
             ("max_prompt_tokens", self.max_prompt_tokens.into()),
+            ("shards", self.shards.into()),
         ])
     }
 
@@ -518,6 +548,11 @@ impl RetrievalConfig {
                 .req("max_prompt_tokens")?
                 .as_usize()
                 .context("prompt tokens")?,
+            // Optional for configs written before sharding existed.
+            shards: match v.get("shards") {
+                Some(s) => s.as_usize().context("shards")?,
+                None => 1,
+            },
         })
     }
 }

@@ -19,7 +19,8 @@ use crate::data::{Corpus, Workload};
 use crate::embedding::{Embedder, EmbedderBackend};
 use crate::index::kmeans::{kmeans, KMeansConfig};
 use crate::index::{
-    shared_memory, ClusterSet, EdgeIndex, EmbedSource, FlatIndex, IvfIndex, Scorer, VectorIndex,
+    shared_memory, ClusterSet, EdgeIndex, EmbedSource, FlatIndex, IvfIndex, Scorer,
+    ShardedEdgeIndex, VectorIndex,
 };
 use crate::llm::Llm;
 use crate::runtime::ComputeHandle;
@@ -272,31 +273,59 @@ impl SystemBuilder {
             }
             IndexKind::IvfGen | IndexKind::IvfGenLoad | IndexKind::EdgeRag => {
                 let set = built.cluster_set(&self.device);
-                let blob = if kind.uses_storage() {
-                    let dir = self
-                        .options
-                        .state_dir
-                        .join(&built.profile.name)
-                        .join(kind.name());
-                    Some(BlobStore::open(&dir, self.scorer().dim())?)
-                } else {
-                    None
-                };
                 let store_limit = SimDuration::from_secs_f64(
                     built.profile.slo().as_secs_f64() * self.retrieval.store_slo_fraction,
                 );
-                Box::new(EdgeIndex::build(
-                    kind,
-                    set,
-                    self.embed_source(built),
-                    blob,
-                    scorer,
-                    memory.clone(),
-                    self.device.clone(),
-                    &self.retrieval,
-                    store_limit,
-                    built.profile.slo(),
-                )?)
+                let shards = self.retrieval.resolved_shards();
+                if shards > 1 {
+                    // Sharded serving path: clusters partitioned across
+                    // independently locked shards (`shards` knob; see
+                    // docs/ARCHITECTURE.md). Blob state lives under a
+                    // sharded-specific subdir so it never collides with
+                    // the single-shard layout.
+                    let blob_dir = kind.uses_storage().then(|| {
+                        self.options
+                            .state_dir
+                            .join(&built.profile.name)
+                            .join(format!("{}-sharded", kind.name()))
+                    });
+                    Box::new(ShardedEdgeIndex::build(
+                        kind,
+                        set,
+                        self.embed_source(built),
+                        blob_dir.as_deref(),
+                        scorer,
+                        memory.clone(),
+                        self.device.clone(),
+                        &self.retrieval,
+                        store_limit,
+                        built.profile.slo(),
+                        shards,
+                    )?)
+                } else {
+                    let blob = if kind.uses_storage() {
+                        let dir = self
+                            .options
+                            .state_dir
+                            .join(&built.profile.name)
+                            .join(kind.name());
+                        Some(BlobStore::open(&dir, self.scorer().dim())?)
+                    } else {
+                        None
+                    };
+                    Box::new(EdgeIndex::build(
+                        kind,
+                        set,
+                        self.embed_source(built),
+                        blob,
+                        scorer,
+                        memory.clone(),
+                        self.device.clone(),
+                        &self.retrieval,
+                        store_limit,
+                        built.profile.slo(),
+                    )?)
+                }
             }
         };
         Ok((index, memory))

@@ -11,6 +11,17 @@
 //! plain atomics. Reads take consistent *snapshots* ([`LatencySeries`])
 //! and compute percentiles without mutating anything, so the stats
 //! endpoint can be served from a shared reference.
+//!
+//! ## Bounded retention
+//!
+//! Each percentile query sorts a copy of the retained samples —
+//! O(n log n) per stats call — so retention is **capped**: every stripe
+//! is a ring buffer of [`RING_CAPACITY`] samples ([`MAX_RETAINED`] =
+//! `RING_CAPACITY × SHARDS` total). Long-running servers therefore
+//! compute percentiles over a sliding window of the most recent
+//! ~65k samples at a bounded cost, while [`Metrics::queries`] keeps
+//! counting every sample ever recorded (component means divide by the
+//! true totals, not the window).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -126,11 +137,54 @@ impl LatencySeries {
     }
 }
 
-/// Mutex-striped sample sink: `record` locks one shard briefly, keyed by
-/// the calling thread, so concurrent recorders rarely contend.
+/// Per-stripe ring capacity. Bounds both memory and the O(n log n)
+/// sort a percentile snapshot pays: at most [`MAX_RETAINED`] samples are
+/// ever retained, with the oldest overwritten first.
+pub const RING_CAPACITY: usize = 8_192;
+
+/// Total retained-sample cap across all stripes (the percentile window).
+pub const MAX_RETAINED: usize = RING_CAPACITY * SHARDS;
+
+/// Fixed-capacity overwrite-oldest sample buffer (one stripe). The
+/// recorded-total lives *inside* the same mutex as the buffer, so
+/// `record` vs `clear` races can never desync counts from contents.
+#[derive(Debug, Default)]
+struct Ring {
+    buf: Vec<u64>,
+    /// Next overwrite position once `buf` reaches capacity.
+    next: usize,
+    /// Samples recorded into this stripe since the last clear
+    /// (monotone; unaffected by overwrites).
+    recorded: u64,
+}
+
+impl Ring {
+    fn push(&mut self, v: u64) {
+        self.recorded += 1;
+        if self.buf.len() < RING_CAPACITY {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % RING_CAPACITY;
+        }
+    }
+
+    fn clear(&mut self) {
+        self.buf.clear();
+        self.next = 0;
+        self.recorded = 0;
+    }
+}
+
+/// Mutex-striped sample sink: `record` locks one stripe briefly, keyed by
+/// the calling thread, so concurrent recorders rarely contend. Each
+/// stripe retains at most [`RING_CAPACITY`] samples (oldest overwritten);
+/// `len` counts every record made since the last `clear`, derived from
+/// the stripes themselves (no separate counter), so `len`, reads and
+/// `clear` can never desync even when they race concurrent recorders.
 #[derive(Debug)]
 struct ShardedSeries {
-    shards: Vec<Mutex<Vec<u64>>>,
+    shards: Vec<Mutex<Ring>>,
 }
 
 const SHARDS: usize = 8;
@@ -138,7 +192,7 @@ const SHARDS: usize = 8;
 impl ShardedSeries {
     fn new() -> Self {
         ShardedSeries {
-            shards: (0..SHARDS).map(|_| Mutex::new(Vec::new())).collect(),
+            shards: (0..SHARDS).map(|_| Mutex::new(Ring::default())).collect(),
         }
     }
 
@@ -153,16 +207,21 @@ impl ShardedSeries {
         self.shards[Self::shard_index()].lock().unwrap().push(ns);
     }
 
-    /// Derived from the shards (no separate counter), so `len`, reads and
-    /// `clear` can never desync even when they race concurrent recorders.
+    /// Samples recorded since the last clear (may exceed the retained
+    /// window once rings wrap).
     fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().recorded as usize)
+            .sum()
     }
 
+    /// Snapshot of the *retained* window (≤ [`MAX_RETAINED`] most recent
+    /// samples).
     fn snapshot(&self) -> LatencySeries {
         let mut all = Vec::new();
         for s in &self.shards {
-            all.extend_from_slice(&s.lock().unwrap());
+            all.extend_from_slice(&s.lock().unwrap().buf);
         }
         LatencySeries::from_nanos(all)
     }
@@ -237,12 +296,13 @@ impl Metrics {
             .unwrap_or(0)
     }
 
-    /// Snapshot of the retrieval-latency series.
+    /// Snapshot of the retrieval-latency series (the retained window of
+    /// at most [`MAX_RETAINED`] most recent samples).
     pub fn retrieval(&self) -> LatencySeries {
         self.retrieval.snapshot()
     }
 
-    /// Snapshot of the TTFT series.
+    /// Snapshot of the TTFT series (same retention window).
     pub fn ttft(&self) -> LatencySeries {
         self.ttft.snapshot()
     }
@@ -360,6 +420,24 @@ mod tests {
         m.bump("cache_hits", 3);
         assert_eq!(m.counter("cache_hits"), 3);
         assert_eq!(m.counter("nope"), 0);
+    }
+
+    #[test]
+    fn ring_caps_retained_samples() {
+        // Single-threaded: every sample lands in one stripe; past
+        // capacity the oldest are overwritten while totals keep counting.
+        let m = Metrics::new();
+        let b = Breakdown::default();
+        let n = RING_CAPACITY + 100;
+        for i in 0..n {
+            m.record_query(&b, SimDuration::from_nanos(i as u64 + 1), ms(1));
+        }
+        assert_eq!(m.queries(), n, "totals count every record");
+        let snap = m.retrieval();
+        assert_eq!(snap.len(), RING_CAPACITY, "retention capped at the ring");
+        // Newest sample retained; the 100 oldest overwritten.
+        assert_eq!(snap.max(), SimDuration::from_nanos(n as u64));
+        assert!(snap.percentile(0.0) > SimDuration::from_nanos(100));
     }
 
     #[test]

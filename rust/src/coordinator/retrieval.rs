@@ -9,21 +9,27 @@
 //! behind an `RwLock` whose read side is taken only for the (now
 //! `&self`) `VectorIndex::search` and `commit` calls. `handle` therefore
 //! takes `&self` — N worker threads drive N queries through one `Engine`
-//! concurrently, while online inserts/removes acquire the exclusive
-//! write lease via [`Engine::index_mut`]. All per-query state lives on
-//! the calling thread's stack ([`QueryOutcome`] et al.), never in the
-//! engine.
+//! concurrently. All per-query state lives on the calling thread's stack
+//! ([`QueryOutcome`] et al.), never in the engine.
+//!
+//! Online mutations go through [`Engine::insert`] / [`Engine::remove`].
+//! On a sharded index ([`ShardedEdgeIndex`]) those take the engine's
+//! *read* lease plus only the owning shard's write lease, so a query and
+//! an insert to different shards overlap; on a single [`EdgeIndex`] they
+//! fall back to the exclusive engine write lease
+//! ([`Engine::index_mut`]), draining in-flight searches first. The lock
+//! hierarchy is documented in `docs/ARCHITECTURE.md`.
 
 use std::sync::{RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::config::DeviceProfile;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::texts::TextStore;
 use crate::embedding::Embedder;
-use crate::index::{SearchEvents, VectorIndex};
+use crate::index::{EdgeIndex, SearchEvents, ShardedEdgeIndex, VectorIndex};
 use crate::llm::Llm;
 use crate::simtime::{Breakdown, Component, LatencyLedger, SimDuration};
 
@@ -90,10 +96,62 @@ impl Engine {
         self.index.read().unwrap()
     }
 
-    /// Exclusive (write-leased) access to the index: online inserts,
-    /// removals, threshold pinning. Blocks until in-flight searches drain.
+    /// Exclusive (write-leased) access to the index: threshold pinning
+    /// and other whole-index mutations. Blocks until in-flight searches
+    /// drain. Prefer [`Engine::insert`] / [`Engine::remove`] for online
+    /// updates — on a sharded index they stall only the owning shard.
     pub fn index_mut(&self) -> RwLockWriteGuard<'_, Box<dyn VectorIndex>> {
         self.index.write().unwrap()
+    }
+
+    /// Insert a chunk online (§5.4): embeds `text`, allocates its id from
+    /// the shared text store, and routes it into the index. On a
+    /// [`ShardedEdgeIndex`] this runs under the engine's *read* lease and
+    /// write-leases only the owning shard, so concurrent queries to other
+    /// shards keep flowing; on a plain [`EdgeIndex`] it takes the
+    /// exclusive engine lease. Returns `(chunk id, global cluster id)`.
+    ///
+    /// The id is pushed to the text store *before* the index insert, so a
+    /// concurrent query can never retrieve an id whose text is missing.
+    pub fn insert(&self, text: &str) -> Result<(u32, u32)> {
+        // Embed outside any lease: queries keep flowing while the
+        // embedder works.
+        let emb = self.embedder.embed_one(text)?;
+        {
+            let index = self.index.read().unwrap();
+            if let Some(sharded) = index.as_any().downcast_ref::<ShardedEdgeIndex>() {
+                let id = self.chunk_texts.push(text.to_string());
+                let cluster = sharded.insert_chunk(id, text, &emb)?;
+                return Ok((id, cluster));
+            }
+        }
+        let mut index = self.index.write().unwrap();
+        let id = self.chunk_texts.push(text.to_string());
+        let edge = index
+            .as_any_mut()
+            .downcast_mut::<EdgeIndex>()
+            .context("insert requires an EdgeRAG index")?;
+        let cluster = edge.insert_chunk(id, text, &emb)?;
+        Ok((id, cluster))
+    }
+
+    /// Remove a chunk online (§5.4). Shard-scoped on a
+    /// [`ShardedEdgeIndex`] (engine read lease + owning shard's write
+    /// lease), exclusive on a plain [`EdgeIndex`]. Returns false if the
+    /// id is unknown.
+    pub fn remove(&self, id: u32) -> Result<bool> {
+        {
+            let index = self.index.read().unwrap();
+            if let Some(sharded) = index.as_any().downcast_ref::<ShardedEdgeIndex>() {
+                return sharded.remove_chunk(id);
+            }
+        }
+        let mut index = self.index.write().unwrap();
+        let edge = index
+            .as_any_mut()
+            .downcast_mut::<EdgeIndex>()
+            .context("remove requires an EdgeRAG index")?;
+        edge.remove_chunk(id)
     }
 
     /// Shared metrics — recording is internally synchronized.
@@ -101,7 +159,7 @@ impl Engine {
         &self.metrics
     }
 
-    /// The shared chunk-text store (the server appends to it on insert).
+    /// The shared chunk-text store ([`Engine::insert`] appends to it).
     pub fn texts(&self) -> TextStore {
         self.chunk_texts.clone()
     }
@@ -158,7 +216,7 @@ impl Engine {
         // the index's update-generation check.
         {
             let index = self.index.read().unwrap();
-            index.commit(&search.cache_intent, retrieval);
+            index.commit(&search.intents, retrieval);
         }
 
         let breakdown = Breakdown::from_ledger(&ledger);

@@ -118,6 +118,11 @@ pub fn run_workload(
             .downcast_mut::<crate::index::EdgeIndex>()
         {
             edge.pin_threshold(t);
+        } else if let Some(sharded) = index
+            .as_any_mut()
+            .downcast_mut::<crate::index::ShardedEdgeIndex>()
+        {
+            sharded.pin_threshold(t);
         }
     }
 
@@ -160,15 +165,27 @@ fn summarize(
     let index = pipeline.index();
     let resident = index.resident_bytes();
     let (edge_cache, edge_cache_bytes, stored, stored_bytes, threshold) =
-        match index.as_any().downcast_ref::<crate::index::EdgeIndex>() {
-            Some(e) => (
+        if let Some(e) = index.as_any().downcast_ref::<crate::index::EdgeIndex>() {
+            (
                 e.cache_stats(),
                 e.cache_used_bytes(),
                 e.stored_clusters(),
                 e.stored_bytes(),
                 e.threshold_ms(),
-            ),
-            None => (None, 0, 0, 0, 0.0),
+            )
+        } else if let Some(sh) = index
+            .as_any()
+            .downcast_ref::<crate::index::ShardedEdgeIndex>()
+        {
+            (
+                sh.cache_stats(),
+                sh.cache_used_bytes(),
+                sh.stored_clusters(),
+                sh.stored_bytes(),
+                sh.threshold_ms(),
+            )
+        } else {
+            (None, 0, 0, 0, 0.0)
         };
     drop(index);
     let thrash = pipeline.metrics().counter("thrash_faults");

@@ -18,13 +18,20 @@
 //!
 //! `search` takes `&self` and is safe to call from many threads at once:
 //! the cost-aware cache sits behind an `RwLock` probed with read locks
-//! (`CostAwareCache::peek`), the adaptive threshold behind its own
+//! ([`CostAwareCache::peek`]), the adaptive threshold behind its own
 //! `RwLock`, and residency accounting behind the shared memory-model
 //! mutex. All LFU/threshold *mutations* a search implies are recorded in
-//! the outcome's [`CacheIntent`] and applied later by [`commit`]
-//! (`VectorIndex::commit`), which takes the write locks briefly. Online
+//! the outcome's [`CacheIntent`] and applied later by
+//! [`VectorIndex::commit`], which takes the write locks briefly. Online
 //! inserts/removes still require `&mut self`; a generation counter lets
-//! `commit` discard admissions that raced a structural update.
+//! the commit discard admissions that raced a structural update.
+//!
+//! An `EdgeIndex` also serves as **one shard** of a
+//! [`ShardedEdgeIndex`](crate::index::ShardedEdgeIndex): the sharded
+//! wrapper probes centroids across shards, then drives each shard's
+//! cluster walk through [`EdgeIndex::search_clusters`] — the exact code
+//! path a standalone search uses — so sharded and unsharded results are
+//! bit-identical. See `docs/ARCHITECTURE.md` for the lock hierarchy.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
@@ -97,6 +104,38 @@ pub struct EdgeIndex {
     /// Bumped by every structural update (insert/remove/split/merge);
     /// lets `commit` drop cache admissions whose embeddings may be stale.
     pub(crate) update_gen: AtomicU64,
+    /// Namespace offset for this index's `Region::Cache` ids in the
+    /// shared memory model. Zero standalone; shard `i` of a
+    /// [`ShardedEdgeIndex`](crate::index::ShardedEdgeIndex) gets
+    /// `i << 24` so shards sharing one `MemoryModel` never collide on
+    /// their (shard-local) cluster ids.
+    pub(crate) region_base: u32,
+}
+
+/// One probed cluster's candidate hits, tagged with the cluster's
+/// position in the global probe order so a sharded merge can reassemble
+/// exactly the candidate order a sequential walk would produce.
+#[derive(Debug, Clone)]
+pub struct ClusterHits {
+    /// Position of this cluster in the query's global probe order.
+    pub probe_pos: u32,
+    /// (chunk id, score) candidates from this cluster, descending.
+    pub hits: Vec<(u32, f32)>,
+}
+
+/// Result of walking one shard's probed clusters: per-cluster candidate
+/// groups plus the deferred cache mutations and modeled costs the walk
+/// accumulated. Produced by [`EdgeIndex::search_clusters`].
+#[derive(Debug, Clone, Default)]
+pub struct ClusterWalk {
+    /// Per-cluster candidates in walk (= probe) order.
+    pub groups: Vec<ClusterHits>,
+    /// Modeled device time of this walk (loads, generation, scans).
+    pub ledger: LatencyLedger,
+    /// Event counts of this walk.
+    pub events: SearchEvents,
+    /// Deferred cache mutations for this shard's cache/threshold state.
+    pub intent: CacheIntent,
 }
 
 impl EdgeIndex {
@@ -165,15 +204,41 @@ impl EdgeIndex {
             chunk_cluster,
             store_limit,
             update_gen: AtomicU64::new(0),
+            region_base: 0,
         })
     }
 
+    /// The shared two-level structure (centroids + per-cluster metadata).
     pub fn clusters(&self) -> &ClusterSet {
         &self.clusters
     }
 
+    /// Namespace a cluster id into the shared memory model (see
+    /// `region_base`).
+    pub(crate) fn cache_region(&self, c: u32) -> Region {
+        Region::Cache(self.region_base | c)
+    }
+
+    /// Install this index as shard `base >> 24` of a sharded wrapper:
+    /// offsets its memory-model regions out of the other shards' way.
+    pub(crate) fn set_region_base(&mut self, base: u32) {
+        self.region_base = base;
+    }
+
+    /// Aggregate hit/miss/eviction statistics of the embedding cache
+    /// (None when this configuration has no cache).
     pub fn cache_stats(&self) -> Option<CacheStats> {
         self.cache.as_ref().map(|c| c.read().unwrap().stats())
+    }
+
+    /// Cluster ids currently resident in the embedding cache, sorted
+    /// (introspection for equivalence tests and the stats endpoint).
+    pub fn cached_clusters(&self) -> Vec<u32> {
+        let mut ids: Vec<u32> = self.cache.as_ref().map_or_else(Vec::new, |c| {
+            c.read().unwrap().weights().iter().map(|&(id, _)| id).collect()
+        });
+        ids.sort_unstable();
+        ids
     }
 
     pub fn cache_used_bytes(&self) -> u64 {
@@ -205,7 +270,7 @@ impl EdgeIndex {
         self.controller.write().unwrap().pin(threshold_ms);
         if let Some(cache) = &self.cache {
             for v in cache.write().unwrap().evict_below(threshold_ms) {
-                self.memory.lock().unwrap().release(Region::Cache(v));
+                self.memory.lock().unwrap().release(self.cache_region(v));
             }
         }
     }
@@ -216,7 +281,7 @@ impl EdgeIndex {
     /// retrieval latency.
     pub fn search_and_commit(&self, query: &[f32], k: usize) -> Result<SearchOutcome> {
         let out = self.search(query, k)?;
-        self.commit(&out.cache_intent, out.ledger.retrieval());
+        self.commit(&out.intents, out.ledger.retrieval());
         Ok(out)
     }
 
@@ -255,15 +320,69 @@ impl EdgeIndex {
         Ok(m)
     }
 
-    /// Centroid scores with merged-cluster tombstones masked out.
-    pub(crate) fn probe(&self, query: &[f32], nprobe: usize) -> Result<Vec<(usize, f32)>> {
+    /// Centroid scores with merged-cluster tombstones masked out. The
+    /// sharded wrapper splices these per-shard vectors into one global
+    /// score table before selecting probes.
+    pub(crate) fn probe_scores(&self, query: &[f32]) -> Result<Vec<f32>> {
         let mut scores = self.scorer.scores(query, &self.clusters.centroids)?;
         for (i, s) in scores.iter_mut().enumerate() {
             if !self.active[i] {
                 *s = f32::NEG_INFINITY;
             }
         }
+        Ok(scores)
+    }
+
+    /// Top-`nprobe` clusters for a query (tombstones masked out).
+    pub(crate) fn probe(&self, query: &[f32], nprobe: usize) -> Result<Vec<(usize, f32)>> {
+        let scores = self.probe_scores(query)?;
         Ok(vecmath::top_k(&scores, scores.len(), nprobe))
+    }
+
+    /// Walk a set of probed clusters — `(probe position, cluster id)`
+    /// pairs in probe order — materializing each per the Fig. 9 chain and
+    /// scoring its members. This is the shard unit of work: a standalone
+    /// search passes every probed cluster; a
+    /// [`ShardedEdgeIndex`](crate::index::ShardedEdgeIndex) passes each
+    /// shard its own subsequence, and the preserved `probe_pos` tags let
+    /// the merge reassemble exactly the sequential candidate order.
+    pub fn search_clusters(
+        &self,
+        query: &[f32],
+        probes: &[(u32, u32)],
+        k: usize,
+    ) -> Result<ClusterWalk> {
+        let mut walk = ClusterWalk {
+            intent: CacheIntent {
+                generation: self.update_gen.load(Ordering::Acquire),
+                ..CacheIntent::default()
+            },
+            ..ClusterWalk::default()
+        };
+        let dim = self.scorer.dim();
+        for &(pos, c) in probes {
+            let ci = c as usize;
+            if self.clusters.clusters[ci].is_empty() {
+                continue;
+            }
+            let emb = self.materialize(c, &mut walk.ledger, &mut walk.events, &mut walk.intent)?;
+            let meta = &self.clusters.clusters[ci];
+
+            // In-cluster search (Fig. 9 step 6).
+            walk.ledger.charge(
+                Component::ClusterSearch,
+                self.device.mem_scan_cost(meta.emb_bytes(dim)),
+            );
+            let local = self.scorer.top_k(query, &emb, k)?;
+            walk.groups.push(ClusterHits {
+                probe_pos: pos,
+                hits: local
+                    .into_iter()
+                    .map(|(li, s)| (meta.chunk_ids[li], s))
+                    .collect(),
+            });
+        }
+        Ok(walk)
     }
 
     /// Obtain one probed cluster's embeddings per the Fig. 9 decision
@@ -301,7 +420,10 @@ impl EdgeIndex {
                 // `hit` is an Arc — no matrix copy on the hot path.
                 events.cache_hits += 1;
                 ledger.charge(Component::CacheHit, self.device.mem_scan_cost(0));
-                self.memory.lock().unwrap().touch(Region::Cache(c), hit.bytes());
+                self.memory
+                    .lock()
+                    .unwrap()
+                    .touch(self.cache_region(c), hit.bytes());
                 intent.accesses.push(CacheAccess::Hit(c));
                 return Ok(hit);
             }
@@ -335,11 +457,6 @@ impl VectorIndex for EdgeIndex {
 
     fn search(&self, query: &[f32], k: usize) -> Result<SearchOutcome> {
         let mut ledger = LatencyLedger::new();
-        let mut events = SearchEvents::default();
-        let mut intent = CacheIntent {
-            generation: self.update_gen.load(Ordering::Acquire),
-            ..CacheIntent::default()
-        };
 
         // (1) centroid probe — first level always resident.
         ledger.charge(
@@ -347,30 +464,22 @@ impl VectorIndex for EdgeIndex {
             self.device.mem_scan_cost(self.clusters.centroid_bytes()),
         );
         let probes = self.probe(query, self.nprobe)?;
+        let probed: Vec<u32> = probes.iter().map(|&(ci, _)| ci as u32).collect();
+        let list: Vec<(u32, u32)> = probes
+            .iter()
+            .enumerate()
+            .map(|(pos, &(ci, _))| (pos as u32, ci as u32))
+            .collect();
 
-        let mut all_hits: Vec<(u32, f32)> = Vec::new();
-        let mut probed = Vec::with_capacity(probes.len());
-        let dim = self.scorer.dim();
-        for (ci, _) in probes {
-            let c = ci as u32;
-            probed.push(c);
-            if self.clusters.clusters[ci].is_empty() {
-                continue;
-            }
-            let emb = self.materialize(c, &mut ledger, &mut events, &mut intent)?;
-            let meta = &self.clusters.clusters[ci];
+        // (2..6) the cluster walk (shared with the sharded path).
+        let walk = self.search_clusters(query, &list, k)?;
+        ledger.merge(&walk.ledger);
 
-            // (6) in-cluster search.
-            ledger.charge(
-                Component::ClusterSearch,
-                self.device.mem_scan_cost(meta.emb_bytes(dim)),
-            );
-            let local = self.scorer.top_k(query, &emb, k)?;
-            for (li, s) in local {
-                all_hits.push((meta.chunk_ids[li], s));
-            }
-        }
-
+        let all_hits: Vec<(u32, f32)> = walk
+            .groups
+            .into_iter()
+            .flat_map(|g| g.hits)
+            .collect();
         let scores: Vec<f32> = all_hits.iter().map(|&(_, s)| s).collect();
         let top = vecmath::top_k(&scores, all_hits.len(), k);
         let hits = top.into_iter().map(|(i, s)| (all_hits[i].0, s)).collect();
@@ -379,17 +488,48 @@ impl VectorIndex for EdgeIndex {
             hits,
             ledger,
             probed,
-            events,
-            cache_intent: intent,
+            events: walk.events,
+            intents: vec![walk.intent],
         })
     }
 
-    /// Apply the deferred cache mutations: LFU counter bumps for hits,
-    /// threshold-gated admissions for generated clusters, then the
-    /// adaptive-threshold feedback (Alg. 3) and its eviction sweep —
-    /// preserving the exact sequencing of the old inline path (admission
-    /// at the pre-feedback threshold, enforcement after).
-    fn commit(&self, intent: &CacheIntent, retrieval: SimDuration) {
+    /// Apply each deferred intent in turn. An unsharded search yields
+    /// exactly one; the semantics live in [`EdgeIndex::commit_intent`].
+    fn commit(&self, intents: &[CacheIntent], retrieval: SimDuration) {
+        for intent in intents {
+            self.commit_intent(intent, retrieval);
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        // Centroids + per-cluster metadata + cache contents. The pruned
+        // second level is the whole point: it does NOT appear here.
+        let meta_bytes: u64 = self
+            .clusters
+            .clusters
+            .iter()
+            .map(|m| (m.chunk_ids.len() * 4 + 32) as u64)
+            .sum();
+        self.clusters.centroid_bytes() + meta_bytes + self.cache_used_bytes()
+    }
+}
+
+impl EdgeIndex {
+    /// Apply one shard-intent's deferred cache mutations: LFU counter
+    /// bumps for hits, threshold-gated admissions for generated clusters,
+    /// then the adaptive-threshold feedback (Alg. 3 observes the query's
+    /// total retrieval latency) and its eviction sweep — preserving the
+    /// exact sequencing of the old inline path (admission at the
+    /// pre-feedback threshold, enforcement after).
+    pub fn commit_intent(&self, intent: &CacheIntent, retrieval: SimDuration) {
         let Some(cache) = &self.cache else { return };
 
         if !intent.accesses.is_empty() {
@@ -420,13 +560,13 @@ impl VectorIndex for EdgeIndex {
                                 c.insert(cand.cluster, cand.emb.clone(), cand.gen_latency_ms);
                             let mut mem = self.memory.lock().unwrap();
                             for v in evicted {
-                                mem.release(Region::Cache(v));
+                                mem.release(self.cache_region(v));
                             }
                             // Oversized entries are declined by the cache;
                             // installing them would leak a phantom
                             // resident region nothing could ever release.
                             if c.contains(cand.cluster) {
-                                mem.install(Region::Cache(cand.cluster), cand.emb.bytes());
+                                mem.install(self.cache_region(cand.cluster), cand.emb.bytes());
                             }
                         } else {
                             c.note_rejected();
@@ -449,29 +589,9 @@ impl VectorIndex for EdgeIndex {
         if !evicted.is_empty() {
             let mut mem = self.memory.lock().unwrap();
             for v in evicted {
-                mem.release(Region::Cache(v));
+                mem.release(self.cache_region(v));
             }
         }
-    }
-
-    fn as_any(&self) -> &dyn std::any::Any {
-        self
-    }
-
-    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
-        self
-    }
-
-    fn resident_bytes(&self) -> u64 {
-        // Centroids + per-cluster metadata + cache contents. The pruned
-        // second level is the whole point: it does NOT appear here.
-        let meta_bytes: u64 = self
-            .clusters
-            .clusters
-            .iter()
-            .map(|m| (m.chunk_ids.len() * 4 + 32) as u64)
-            .sum();
-        self.clusters.centroid_bytes() + meta_bytes + self.cache_used_bytes()
     }
 }
 
@@ -565,8 +685,8 @@ mod tests {
         assert_eq!(out.events.cache_hits, 0);
         assert!(out.ledger.component(Component::EmbedGen).as_millis() > 0);
         // No caching: the intent carries nothing to commit.
-        assert!(out.cache_intent.admit.is_empty());
-        assert!(!out.cache_intent.had_miss);
+        assert!(out.intents[0].admit.is_empty());
+        assert!(!out.intents[0].had_miss);
     }
 
     #[test]
@@ -662,13 +782,13 @@ mod tests {
         let q = f.emb.row(42).to_vec();
         let cold = idx.search(&q, 3).unwrap();
         assert!(cold.events.generated > 0);
-        assert!(!cold.cache_intent.admit.is_empty());
+        assert!(!cold.intents[0].admit.is_empty());
         // Before commit: nothing was admitted, a repeat search still
         // generates.
         let repeat = idx.search(&q, 3).unwrap();
         assert_eq!(repeat.events.cache_hits, 0);
         // After commit: the repeat hits.
-        idx.commit(&cold.cache_intent, cold.ledger.total());
+        idx.commit(&cold.intents, cold.ledger.total());
         let warm = idx.search(&q, 3).unwrap();
         assert!(warm.events.cache_hits > 0, "{:?}", warm.events);
     }
@@ -712,12 +832,12 @@ mod tests {
         assert_eq!(idx.threshold_ms(), 0.0);
         // Simulate slow misses: threshold should rise.
         let out = idx.search(&q, 3).unwrap();
-        idx.commit(&out.cache_intent, out.ledger.total());
+        idx.commit(&out.intents, out.ledger.total());
         for i in 0..5 {
             let q2 = f.emb.row(50 + i * 40).to_vec();
             let out = idx.search(&q2, 3).unwrap();
             idx.commit(
-                &out.cache_intent,
+                &out.intents,
                 SimDuration::from_millis(2_000 * (i as u64 + 1)),
             );
         }
@@ -732,11 +852,11 @@ mod tests {
         let mut idx = build(&f, IndexKind::EdgeRag, "stale", 1_000_000);
         let q = f.emb.row(13).to_vec();
         let out = idx.search(&q, 3).unwrap();
-        assert!(!out.cache_intent.admit.is_empty());
+        assert!(!out.intents[0].admit.is_empty());
         let text = "late-arriving doc that mutates a cluster zzqstale";
         let emb = f.embedder.embed_one(text).unwrap();
         idx.insert_chunk(90_001, text, &emb).unwrap();
-        idx.commit(&out.cache_intent, out.ledger.total());
+        idx.commit(&out.intents, out.ledger.total());
         // Nothing admitted: the repeat search regenerates.
         let repeat = idx.search(&q, 3).unwrap();
         assert_eq!(repeat.events.cache_hits, 0, "{:?}", repeat.events);

@@ -12,6 +12,7 @@ use crate::simtime::{Component, LatencyLedger};
 use crate::storage::{Region, PAGE_BYTES};
 use crate::vecmath::EmbeddingMatrix;
 
+/// The exhaustive-scan baseline (Table 4 row "Flat").
 pub struct FlatIndex {
     emb: Arc<EmbeddingMatrix>,
     scorer: Scorer,
@@ -20,6 +21,8 @@ pub struct FlatIndex {
 }
 
 impl FlatIndex {
+    /// Wrap a prebuilt embedding matrix; call [`FlatIndex::preload`] to
+    /// model its residency.
     pub fn new(
         emb: Arc<EmbeddingMatrix>,
         scorer: Scorer,
@@ -34,10 +37,12 @@ impl FlatIndex {
         }
     }
 
+    /// Number of indexed chunks.
     pub fn len(&self) -> usize {
         self.emb.len()
     }
 
+    /// True when the index holds no chunks.
     pub fn is_empty(&self) -> bool {
         self.emb.is_empty()
     }
@@ -86,7 +91,7 @@ impl VectorIndex for FlatIndex {
             ledger,
             probed: Vec::new(),
             events,
-            cache_intent: Default::default(),
+            intents: Vec::new(),
         })
     }
 

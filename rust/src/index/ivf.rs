@@ -11,6 +11,7 @@ use crate::simtime::{Component, LatencyLedger};
 use crate::storage::Region;
 use crate::vecmath::{self, EmbeddingMatrix};
 
+/// The fully-resident two-level baseline (Table 4 row "IVF").
 pub struct IvfIndex {
     clusters: ClusterSet,
     /// Second-level embeddings per cluster — resident by design.
@@ -22,6 +23,8 @@ pub struct IvfIndex {
 }
 
 impl IvfIndex {
+    /// Assemble from a cluster set plus its per-cluster embeddings; call
+    /// [`IvfIndex::preload`] to model their residency.
     pub fn new(
         clusters: ClusterSet,
         cluster_embs: Vec<EmbeddingMatrix>,
@@ -41,10 +44,12 @@ impl IvfIndex {
         }
     }
 
+    /// The shared two-level structure (centroids + per-cluster metadata).
     pub fn clusters(&self) -> &ClusterSet {
         &self.clusters
     }
 
+    /// Override the probe width (harness sweeps).
     pub fn set_nprobe(&mut self, nprobe: usize) {
         self.nprobe = nprobe;
     }
@@ -117,7 +122,7 @@ impl VectorIndex for IvfIndex {
             ledger,
             probed,
             events,
-            cache_intent: Default::default(),
+            intents: Vec::new(),
         })
     }
 

@@ -13,10 +13,14 @@ use crate::data::Rng;
 use crate::index::Scorer;
 use crate::vecmath::{self, EmbeddingMatrix};
 
+/// Clustering parameters (defaults mirror the paper's FAISS setup).
 #[derive(Debug, Clone, Default)]
 pub struct KMeansConfig {
+    /// First-level size (clusters to produce).
     pub n_clusters: usize,
+    /// Lloyd iterations after seeding.
     pub iterations: usize,
+    /// Deterministic seeding RNG.
     pub seed: u64,
     /// Optional warm-start centroids (e.g. topic means for large corpora —
     /// see `SystemBuilder::build_dataset`). Must have `n_clusters` rows;
@@ -25,6 +29,7 @@ pub struct KMeansConfig {
 }
 
 impl KMeansConfig {
+    /// Paper defaults (20 iterations, fixed seed) for `n_clusters`.
     pub fn new(n_clusters: usize) -> Self {
         KMeansConfig {
             n_clusters,

@@ -8,11 +8,18 @@
 //! parallel against a shared index. Searches are *pure reads* of index
 //! structure: the mutations EdgeRAG used to perform inline (cache
 //! admission, use-counter bumps, adaptive-threshold feedback) are instead
-//! **recorded** into the [`CacheIntent`] carried by each
+//! **recorded** into the [`CacheIntent`]s carried by each
 //! [`SearchOutcome`] and **applied** afterwards through the separate
-//! [`VectorIndex::commit`] path. Structural mutations (online
-//! insert/remove, threshold pinning) still require `&mut self` — callers
-//! serialize those behind a write lease (see `coordinator::Engine`).
+//! [`VectorIndex::commit`] path. A search returns one intent per index
+//! shard it touched (a single-shard [`EdgeIndex`] always returns exactly
+//! one); each intent is committed independently under only its own
+//! shard's locks. Structural mutations (online insert/remove, threshold
+//! pinning) require `&mut self` on [`EdgeIndex`]; the sharded index
+//! ([`ShardedEdgeIndex`]) scopes them to the owning shard's write lease
+//! so a query and an insert to different shards overlap.
+//!
+//! The full lock hierarchy (engine lease → shard lease → controller →
+//! cache → memory model) is documented in `docs/ARCHITECTURE.md`.
 
 pub mod clusters;
 pub mod edge;
@@ -20,6 +27,7 @@ pub mod flat;
 pub mod ivf;
 pub mod kmeans;
 pub mod scorer;
+pub mod shard;
 pub mod updates;
 
 use std::sync::{Arc, Mutex};
@@ -31,6 +39,7 @@ pub use edge::EdgeIndex;
 pub use flat::FlatIndex;
 pub use ivf::IvfIndex;
 pub use scorer::Scorer;
+pub use shard::ShardedEdgeIndex;
 
 use crate::config::IndexKind;
 use crate::simtime::{LatencyLedger, SimDuration};
@@ -80,9 +89,17 @@ pub enum CacheAccess {
 }
 
 /// Deferred cache mutations recorded by a read-only search and applied by
-/// [`VectorIndex::commit`]. Baseline indexes leave it empty.
+/// [`VectorIndex::commit`]. Baseline indexes produce none.
+///
+/// One intent covers exactly one index shard: replaying it takes only
+/// that shard's controller/cache locks, so a sharded search's intents
+/// commit independently (and a plain [`EdgeIndex`] search yields a single
+/// intent with `shard == 0`).
 #[derive(Debug, Clone, Default)]
 pub struct CacheIntent {
+    /// Which shard's cache/threshold state this intent belongs to
+    /// (always 0 for an unsharded [`EdgeIndex`]).
+    pub shard: usize,
     /// Ordered cache probes: hits bump their LFU counters at commit time,
     /// misses advance the decay epoch.
     pub accesses: Vec<CacheAccess>,
@@ -90,7 +107,7 @@ pub struct CacheIntent {
     pub admit: Vec<AdmitCandidate>,
     /// Did this search miss the cache at least once? (Alg. 3 input.)
     pub had_miss: bool,
-    /// Index update-generation observed at search time; commit discards
+    /// Shard update-generation observed at search time; commit discards
     /// admissions if an insert/remove landed in between (their embeddings
     /// could be stale).
     pub generation: u64,
@@ -103,11 +120,14 @@ pub struct SearchOutcome {
     pub hits: Vec<(u32, f32)>,
     /// Modeled device-time breakdown of this search.
     pub ledger: LatencyLedger,
-    /// Which clusters were probed (empty for flat).
+    /// Which clusters were probed (empty for flat). For a sharded index
+    /// these are *global* cluster ids (`local × shards + shard`).
     pub probed: Vec<u32>,
     pub events: SearchEvents,
-    /// Deferred cache mutations to apply through [`VectorIndex::commit`].
-    pub cache_intent: CacheIntent,
+    /// Deferred cache mutations to apply through [`VectorIndex::commit`]:
+    /// one [`CacheIntent`] per shard the search probed (at most one for
+    /// unsharded indexes, empty for the baselines).
+    pub intents: Vec<CacheIntent>,
 }
 
 /// The interface all five Table-4 configurations serve behind.
@@ -124,8 +144,9 @@ pub trait VectorIndex: Send + Sync {
 
     /// Apply one search's deferred cache mutations plus the adaptive
     /// threshold feedback (paper Alg. 3 observes the query's total
-    /// retrieval latency). No-op for baselines.
-    fn commit(&self, _intent: &CacheIntent, _retrieval: SimDuration) {}
+    /// retrieval latency). Each intent is applied independently under its
+    /// own shard's locks. No-op for baselines.
+    fn commit(&self, _intents: &[CacheIntent], _retrieval: SimDuration) {}
 
     /// Bytes this configuration keeps memory-resident for the index
     /// itself (Fig. 3's "embedded database size" bars).

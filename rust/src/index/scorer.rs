@@ -7,6 +7,8 @@ use anyhow::Result;
 use crate::runtime::{ComputeHandle, Tensor};
 use crate::vecmath::{self, EmbeddingMatrix};
 
+/// Similarity scorer bound to one compute executor; cheap to clone
+/// (shards and worker threads share the underlying handle).
 #[derive(Clone)]
 pub struct Scorer {
     compute: ComputeHandle,
@@ -17,6 +19,8 @@ pub struct Scorer {
 }
 
 impl Scorer {
+    /// Bind to a compute executor, reading kernel shapes from its
+    /// manifest.
     pub fn new(compute: ComputeHandle) -> Self {
         let m = compute.manifest();
         Scorer {
@@ -28,6 +32,7 @@ impl Scorer {
         }
     }
 
+    /// Embedding dimensionality the compiled kernels expect.
     pub fn dim(&self) -> usize {
         self.dim
     }

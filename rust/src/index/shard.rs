@@ -1,0 +1,970 @@
+//! The sharded EdgeRAG index: clusters partitioned across `N`
+//! independently locked shards so one query fans its probed clusters out
+//! to a scoped worker pool and structural updates stall only the owning
+//! shard.
+//!
+//! ## Why shard
+//!
+//! EdgeRAG's retrieval splits into a centroid probe plus per-cluster
+//! work (load / cache peek / online generation, then an in-cluster
+//! scan). The per-cluster stage is embarrassingly parallel, but a
+//! single [`EdgeIndex`] walks all probed clusters on one thread and all
+//! queries share one cache lock, one threshold lock and one write lease
+//! for updates. [`ShardedEdgeIndex`] partitions clusters round-robin
+//! across `N` shards — each shard is a complete [`EdgeIndex`] over its
+//! subset, with its **own** cost-aware cache, adaptive-threshold
+//! controller and update generation behind its **own** `RwLock` — so:
+//!
+//! * a query's probed clusters execute as per-shard cluster walks, in
+//!   parallel on the shard pool, and the per-shard top-k heaps merge
+//!   back in probe order;
+//! * an online insert/remove takes only the owning shard's write lease:
+//!   cluster walks and intent commits touching other shards proceed
+//!   concurrently. (The centroid-probe step still reads every shard's
+//!   centroids one lock at a time, so a *newly arriving* query can wait
+//!   behind an in-flight structural update on that one shard during its
+//!   probe — bounded by the update, never by the whole index;
+//!   lifting the centroid table out of the shard lease is a ROADMAP
+//!   item);
+//! * each shard's deferred [`CacheIntent`] commits independently under
+//!   that shard's locks.
+//!
+//! ## Equivalence with the unsharded index
+//!
+//! Sharding must not change retrieval results. Three mechanisms make the
+//! sharded walk reproduce the sequential one exactly:
+//!
+//! 1. probes are selected from a **global** score table (per-shard
+//!    centroid scores spliced back into global cluster order), so the
+//!    probed set and order match the unsharded probe;
+//! 2. every shard runs the *same* cluster-walk code
+//!    ([`EdgeIndex::search_clusters`]) over its subsequence of the probe
+//!    order, tagging each cluster's candidates with their global probe
+//!    position;
+//! 3. the merge re-sorts candidate groups by probe position before the
+//!    final top-k, recreating the exact candidate order (and therefore
+//!    the exact ties) a sequential walk produces.
+//!
+//! With `shards = 1` the whole path degenerates to a single
+//! [`EdgeIndex`] walk and is bit-identical to it. With `shards > 1` the
+//! top-k ids/scores are still identical; only cache *capacity placement*
+//! changes (the byte budget splits evenly across shards, and each shard
+//! adapts its own threshold from the queries that touch it).
+//!
+//! ## Cluster ids
+//!
+//! Shards use dense local cluster ids internally. The global id of local
+//! cluster `l` in shard `s` is `l × n_shards + s` (so the initial
+//! round-robin partition maps global id `g` to shard `g % n_shards`,
+//! local `g / n_shards`, and splits allocate fresh globally unique ids).
+//! [`SearchOutcome::probed`] and the cluster ids returned by
+//! [`ShardedEdgeIndex::insert_chunk`] are global ids.
+//!
+//! ## Locking
+//!
+//! Lock order is strictly `shard RwLock → controller → cache → memory
+//! model`, and no thread ever holds two shard locks at once (probing and
+//! routing visit shards sequentially, one read lock at a time; fan-out
+//! workers each take exactly one). See `docs/ARCHITECTURE.md` for the
+//! full hierarchy including the engine lease above this one.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
+
+use anyhow::Result;
+
+use crate::cache::CacheStats;
+use crate::config::{DeviceProfile, IndexKind, RetrievalConfig};
+use crate::index::edge::{ClusterHits, ClusterWalk};
+use crate::index::{
+    CacheIntent, ClusterMeta, ClusterSet, EdgeIndex, EmbedSource, Scorer, SearchEvents,
+    SearchOutcome, SharedMemory, VectorIndex,
+};
+use crate::simtime::{Component, LatencyLedger, SimDuration};
+use crate::storage::BlobStore;
+use crate::vecmath::{self, EmbeddingMatrix};
+
+/// Hard ceiling on the shard count: shard `i` namespaces its memory-model
+/// regions at `i << 24`, leaving 24 bits of local cluster ids per shard.
+pub const MAX_SHARDS: usize = 256;
+
+// ---------------------------------------------------------------------------
+// Shard worker pool
+// ---------------------------------------------------------------------------
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Persistent pool executing per-(query, shard) cluster walks. Workers
+/// are plain threads over one shared queue; any worker may serve any
+/// shard (shard state is behind per-shard `RwLock`s, and walks only take
+/// read locks, so two workers can walk the same shard concurrently).
+/// Threads are detached and exit when the pool (and with it the sender)
+/// drops.
+struct ShardPool {
+    /// `Mutex` so the pool is `Sync` on every supported toolchain.
+    tx: Mutex<mpsc::Sender<Job>>,
+    workers: usize,
+}
+
+impl ShardPool {
+    fn new(workers: usize) -> ShardPool {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..workers {
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("edgerag-shard-{i}"))
+                .spawn(move || loop {
+                    let job = match rx.lock() {
+                        Ok(guard) => match guard.recv() {
+                            Ok(job) => job,
+                            Err(_) => break, // pool dropped: drain and exit
+                        },
+                        Err(_) => break, // queue mutex poisoned: stop cleanly
+                    };
+                    // Panic isolation: a panicking walk fails only its own
+                    // query (the caller sees the reply channel close), not
+                    // the pool.
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                })
+                .expect("spawning shard worker thread");
+        }
+        ShardPool {
+            tx: Mutex::new(tx),
+            workers,
+        }
+    }
+
+    /// Try to enqueue; hands the job back if the pool has no workers (or
+    /// its queue is gone) so the caller can run it inline.
+    fn submit(&self, job: Job) -> std::result::Result<(), Job> {
+        if self.workers == 0 {
+            return Err(job);
+        }
+        match self.tx.lock() {
+            Ok(tx) => tx.send(job).map_err(|e| e.0),
+            Err(_) => Err(job),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-shard serving counters
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct ShardCounters {
+    probes: AtomicU64,
+    cache_hits: AtomicU64,
+    generated: AtomicU64,
+    loaded: AtomicU64,
+    inserts: AtomicU64,
+    removes: AtomicU64,
+}
+
+/// One shard's serving statistics snapshot (the `stats` endpoint's
+/// per-shard rows).
+#[derive(Debug, Clone, Default)]
+pub struct ShardStats {
+    /// Shard index.
+    pub shard: usize,
+    /// Active (non-tombstone) clusters currently owned by this shard.
+    pub clusters: usize,
+    /// Probed clusters routed to this shard so far.
+    pub probes: u64,
+    /// Embedding-cache hits served by this shard.
+    pub cache_hits: u64,
+    /// Clusters this shard generated online.
+    pub generated: u64,
+    /// Clusters this shard loaded from its blob store.
+    pub loaded: u64,
+    /// Online insertions routed to this shard.
+    pub inserts: u64,
+    /// Online removals routed to this shard.
+    pub removes: u64,
+    /// This shard's current adaptive caching threshold (ms).
+    pub threshold_ms: f64,
+    /// Bytes resident in this shard's embedding cache.
+    pub cache_used_bytes: u64,
+}
+
+// ---------------------------------------------------------------------------
+// The sharded index
+// ---------------------------------------------------------------------------
+
+/// Clusters partitioned across `N` independently locked [`EdgeIndex`]
+/// shards (see the module docs for the design and equivalence argument).
+pub struct ShardedEdgeIndex {
+    kind: IndexKind,
+    /// `Arc` so fan-out jobs on the pool can borrow shards without tying
+    /// their lifetimes to the calling query.
+    shards: Arc<Vec<RwLock<EdgeIndex>>>,
+    counters: Vec<ShardCounters>,
+    nprobe: usize,
+    device: DeviceProfile,
+    pool: ShardPool,
+}
+
+impl ShardedEdgeIndex {
+    /// Partition `clusters` round-robin across `shards` shards and build
+    /// one [`EdgeIndex`] per shard. The cache byte budget in `retrieval`
+    /// splits evenly; `blob_dir` (required when `kind` uses selective
+    /// storage) gets one `shard{i}` subdirectory per shard.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        kind: IndexKind,
+        clusters: ClusterSet,
+        source: EmbedSource,
+        blob_dir: Option<&Path>,
+        scorer: Scorer,
+        memory: SharedMemory,
+        device: DeviceProfile,
+        retrieval: &RetrievalConfig,
+        store_limit: SimDuration,
+        slo: SimDuration,
+        shards: usize,
+    ) -> Result<Self> {
+        let k = shards.max(1);
+        anyhow::ensure!(k <= MAX_SHARDS, "at most {MAX_SHARDS} shards");
+        anyhow::ensure!(
+            clusters.n_clusters() < (1 << 24),
+            "cluster ids must fit the 24-bit per-shard namespace"
+        );
+        let dim = clusters.centroids.dim;
+
+        // Round-robin partition: global cluster `g` → shard `g % k`,
+        // local id `g / k`. Round-robin (rather than contiguous ranges)
+        // balances the tail-heavy cluster-size distribution in
+        // expectation.
+        let mut parts: Vec<(EmbeddingMatrix, Vec<ClusterMeta>)> = (0..k)
+            .map(|_| (EmbeddingMatrix::new(dim), Vec::new()))
+            .collect();
+        for (g, meta) in clusters.clusters.iter().enumerate() {
+            let (centroids, metas) = &mut parts[g % k];
+            centroids.push(clusters.centroids.row(g));
+            metas.push(ClusterMeta {
+                id: metas.len() as u32,
+                chunk_ids: meta.chunk_ids.clone(),
+                chars: meta.chars,
+                gen_cost: meta.gen_cost,
+            });
+        }
+
+        // Each shard gets an even slice of the cache byte budget.
+        let mut per_shard = retrieval.clone();
+        per_shard.cache_capacity_bytes = (retrieval.cache_capacity_bytes / k as u64).max(1);
+
+        let mut built = Vec::with_capacity(k);
+        for (i, (centroids, metas)) in parts.into_iter().enumerate() {
+            let set = ClusterSet {
+                centroids,
+                clusters: metas,
+            };
+            let blob = if kind.uses_storage() {
+                let dir = blob_dir
+                    .ok_or_else(|| anyhow::anyhow!("selective storage requires a blob dir"))?;
+                Some(BlobStore::open(&dir.join(format!("shard{i}")), dim)?)
+            } else {
+                None
+            };
+            let mut shard = EdgeIndex::build(
+                kind,
+                set,
+                source.clone(),
+                blob,
+                scorer.clone(),
+                memory.clone(),
+                device.clone(),
+                &per_shard,
+                store_limit,
+                slo,
+            )?;
+            shard.set_region_base((i as u32) << 24);
+            built.push(RwLock::new(shard));
+        }
+
+        // Pool sizing: the calling thread always walks one shard-group
+        // itself, so at most `k − 1` walks per query run remotely; more
+        // workers than cores just adds scheduler churn.
+        let workers = k
+            .saturating_sub(1)
+            .min(crate::config::default_shards());
+        Ok(ShardedEdgeIndex {
+            kind,
+            shards: Arc::new(built),
+            counters: (0..k).map(|_| ShardCounters::default()).collect(),
+            nprobe: retrieval.nprobe,
+            device,
+            pool: ShardPool::new(workers),
+        })
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Owning shard of a global cluster id.
+    pub fn shard_of(&self, global_cluster: u32) -> usize {
+        global_cluster as usize % self.shards.len()
+    }
+
+    /// Run `f` against one shard under its read lease (introspection and
+    /// tests; holding the guard blocks only that shard's writers).
+    pub fn with_shard<R>(&self, shard: usize, f: impl FnOnce(&EdgeIndex) -> R) -> R {
+        f(&self.shards[shard].read().unwrap())
+    }
+
+    /// Override the probe width (harness sweeps).
+    pub fn set_nprobe(&mut self, nprobe: usize) {
+        self.nprobe = nprobe;
+    }
+
+    /// Pin every shard's caching threshold and disable adaptation (the
+    /// Fig. 7 sweep, applied uniformly).
+    pub fn pin_threshold(&self, threshold_ms: f64) {
+        for shard in self.shards.iter() {
+            shard.write().unwrap().pin_threshold(threshold_ms);
+        }
+    }
+
+    /// Aggregate cache statistics across shards (None when this
+    /// configuration has no cache).
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        if !self.kind.uses_cache() {
+            return None;
+        }
+        let mut total = CacheStats::default();
+        for shard in self.shards.iter() {
+            if let Some(s) = shard.read().unwrap().cache_stats() {
+                total.hits += s.hits;
+                total.misses += s.misses;
+                total.insertions += s.insertions;
+                total.evictions += s.evictions;
+                total.rejected_below_threshold += s.rejected_below_threshold;
+            }
+        }
+        Some(total)
+    }
+
+    /// Total bytes resident across all shard caches.
+    pub fn cache_used_bytes(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().cache_used_bytes())
+            .sum()
+    }
+
+    /// Global ids of every cluster currently resident in any shard's
+    /// cache, sorted (equivalence tests, stats).
+    pub fn cached_clusters(&self) -> Vec<u32> {
+        let k = self.shards.len() as u32;
+        let mut all = Vec::new();
+        for (s, shard) in self.shards.iter().enumerate() {
+            for local in shard.read().unwrap().cached_clusters() {
+                all.push(local * k + s as u32);
+            }
+        }
+        all.sort_unstable();
+        all
+    }
+
+    /// Total clusters persisted across all shard blob stores.
+    pub fn stored_clusters(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().stored_clusters())
+            .sum()
+    }
+
+    /// Total bytes persisted across all shard blob stores.
+    pub fn stored_bytes(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().stored_bytes())
+            .sum()
+    }
+
+    /// Mean adaptive threshold across shards (each shard adapts its own;
+    /// the scalar is for dashboards — see [`ShardedEdgeIndex::shard_stats`]
+    /// for the per-shard values).
+    pub fn threshold_ms(&self) -> f64 {
+        let sum: f64 = self
+            .shards
+            .iter()
+            .map(|s| s.read().unwrap().threshold_ms())
+            .sum();
+        sum / self.shards.len() as f64
+    }
+
+    /// Active (non-tombstone) clusters across all shards.
+    pub fn active_clusters(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().active_clusters())
+            .sum()
+    }
+
+    /// Global cluster currently holding `chunk`, if any.
+    pub fn cluster_of(&self, chunk: u32) -> Option<u32> {
+        let k = self.shards.len() as u32;
+        for (s, shard) in self.shards.iter().enumerate() {
+            if let Some(local) = shard.read().unwrap().cluster_of(chunk) {
+                return Some(local * k + s as u32);
+            }
+        }
+        None
+    }
+
+    /// Per-shard serving statistics.
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let guard = shard.read().unwrap();
+                let c = &self.counters[i];
+                ShardStats {
+                    shard: i,
+                    clusters: guard.active_clusters(),
+                    probes: c.probes.load(Ordering::Relaxed),
+                    cache_hits: c.cache_hits.load(Ordering::Relaxed),
+                    generated: c.generated.load(Ordering::Relaxed),
+                    loaded: c.loaded.load(Ordering::Relaxed),
+                    inserts: c.inserts.load(Ordering::Relaxed),
+                    removes: c.removes.load(Ordering::Relaxed),
+                    threshold_ms: guard.threshold_ms(),
+                    cache_used_bytes: guard.cache_used_bytes(),
+                }
+            })
+            .collect()
+    }
+
+    /// The shard an insertion of `emb` would route to (nearest active
+    /// centroid across all shards).
+    pub fn route(&self, emb: &[f32]) -> Result<usize> {
+        let mut best: Option<(usize, f32)> = None;
+        for (s, shard) in self.shards.iter().enumerate() {
+            let guard = shard.read().unwrap();
+            if let Some(&(_, score)) = guard.probe(emb, 1)?.first() {
+                // NEG_INFINITY marks a shard whose clusters are all
+                // tombstones — never a routing target.
+                let better = match best {
+                    None => true,
+                    Some((_, b)) => score > b,
+                };
+                if score.is_finite() && better {
+                    best = Some((s, score));
+                }
+            }
+        }
+        best.map(|(s, _)| s)
+            .ok_or_else(|| anyhow::anyhow!("no active clusters"))
+    }
+
+    /// Insert a chunk (§5.4), write-leasing **only the owning shard**:
+    /// queries to other shards proceed concurrently. `id` must be
+    /// globally fresh (the serving engine allocates ids from its shared
+    /// text store; duplicate detection here is per-shard only). Returns
+    /// the global cluster id the chunk joined.
+    pub fn insert_chunk(&self, id: u32, text: &str, emb: &[f32]) -> Result<u32> {
+        let target = self.route(emb)?;
+        // Routing released its read locks before this write acquire; the
+        // shard re-probes internally under the write lease, so a racing
+        // merge/split inside the shard cannot misroute the chunk.
+        let local = self.shards[target].write().unwrap().insert_chunk(id, text, emb)?;
+        self.counters[target].inserts.fetch_add(1, Ordering::Relaxed);
+        Ok(local * self.shards.len() as u32 + target as u32)
+    }
+
+    /// Remove a chunk (§5.4), write-leasing only the shard that owns it.
+    /// Returns false if the chunk is unknown.
+    pub fn remove_chunk(&self, id: u32) -> Result<bool> {
+        // Chunks never migrate across shards (merges and splits are
+        // intra-shard), so the owner found here is stable.
+        let owner = (0..self.shards.len())
+            .find(|&s| self.shards[s].read().unwrap().cluster_of(id).is_some());
+        let Some(s) = owner else { return Ok(false) };
+        let removed = self.shards[s].write().unwrap().remove_chunk(id)?;
+        if removed {
+            self.counters[s].removes.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(removed)
+    }
+
+    /// Search then immediately commit every shard intent — the
+    /// single-caller convenience path (tests, tools), mirroring
+    /// [`EdgeIndex::search_and_commit`].
+    pub fn search_and_commit(&self, query: &[f32], k: usize) -> Result<SearchOutcome> {
+        let out = self.search(query, k)?;
+        self.commit(&out.intents, out.ledger.retrieval());
+        Ok(out)
+    }
+
+    /// Execute the per-shard cluster walks, fanning all but the first
+    /// group out to the pool. Returns `(shard, walk)` pairs in arbitrary
+    /// order.
+    fn run_walks(
+        &self,
+        query: &[f32],
+        work: Vec<(usize, Vec<(u32, u32)>)>,
+        k: usize,
+    ) -> Result<Vec<(usize, ClusterWalk)>> {
+        let mut walks = Vec::with_capacity(work.len());
+        if work.len() <= 1 || self.pool.workers == 0 {
+            for (s, group) in work {
+                let walk = self.shards[s].read().unwrap().search_clusters(query, &group, k)?;
+                walks.push((s, walk));
+            }
+            return Ok(walks);
+        }
+
+        let query: Arc<Vec<f32>> = Arc::new(query.to_vec());
+        let (tx, rx) = mpsc::channel::<Result<(usize, ClusterWalk)>>();
+        let mut iter = work.into_iter();
+        let first = iter.next().expect("work checked non-empty");
+        let mut remote = 0usize;
+        for (s, group) in iter {
+            let shards = self.shards.clone();
+            let q = query.clone();
+            let tx = tx.clone();
+            let job: Job = Box::new(move || {
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    shards[s].read().unwrap().search_clusters(&q, &group, k)
+                }));
+                let msg = match res {
+                    Ok(r) => r.map(|walk| (s, walk)),
+                    Err(_) => Err(anyhow::anyhow!("shard {s} cluster walk panicked")),
+                };
+                let _ = tx.send(msg);
+            });
+            // A refused job (no workers / pool gone) runs on this thread;
+            // its result still arrives through the channel.
+            if let Err(job) = self.pool.submit(job) {
+                job();
+            }
+            remote += 1;
+        }
+        drop(tx);
+
+        // Walk the first group on the calling thread while workers run
+        // theirs, then collect.
+        let (s, group) = first;
+        let walk = self.shards[s].read().unwrap().search_clusters(&query, &group, k)?;
+        walks.push((s, walk));
+        for _ in 0..remote {
+            let pair = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("shard pool disconnected"))??;
+            walks.push(pair);
+        }
+        Ok(walks)
+    }
+}
+
+impl VectorIndex for ShardedEdgeIndex {
+    fn kind(&self) -> IndexKind {
+        self.kind
+    }
+
+    fn search(&self, query: &[f32], k: usize) -> Result<SearchOutcome> {
+        let n_shards = self.shards.len();
+        let mut ledger = LatencyLedger::new();
+
+        // (1) centroid probe: per-shard masked scores, spliced back into
+        // global cluster order so probe selection (and its tie-breaks)
+        // matches the unsharded index exactly. One modeled charge for the
+        // whole (distributed but byte-identical) centroid table.
+        let mut shard_scores = Vec::with_capacity(n_shards);
+        let mut centroid_bytes = 0u64;
+        let mut width = 0usize;
+        for shard in self.shards.iter() {
+            let guard = shard.read().unwrap();
+            centroid_bytes += guard.clusters().centroid_bytes();
+            let scores = guard.probe_scores(query)?;
+            width = width.max(scores.len());
+            shard_scores.push(scores);
+        }
+        ledger.charge(
+            Component::CentroidProbe,
+            self.device.mem_scan_cost(centroid_bytes),
+        );
+        // Dense (id, score) table over *real* clusters only, in ascending
+        // global-id order (`l × n_shards + s` interleaves exactly like the
+        // unsharded index's cluster order), so `top_k`'s lower-index tie
+        // preference reproduces the unsharded probe — and slots for
+        // shards shorter than `width` can never be selected.
+        let mut ids: Vec<u32> = Vec::new();
+        let mut scores: Vec<f32> = Vec::new();
+        for l in 0..width {
+            for (s, shard_sc) in shard_scores.iter().enumerate() {
+                if let Some(&sc) = shard_sc.get(l) {
+                    ids.push((l * n_shards + s) as u32);
+                    scores.push(sc);
+                }
+            }
+        }
+        let probes = vecmath::top_k(&scores, scores.len(), self.nprobe);
+
+        // Group the probe list by owning shard, preserving each shard's
+        // subsequence of the global probe order.
+        let mut probed = Vec::with_capacity(probes.len());
+        let mut groups: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n_shards];
+        for (pos, &(i, _)) in probes.iter().enumerate() {
+            let g = ids[i] as usize;
+            probed.push(g as u32);
+            groups[g % n_shards].push((pos as u32, (g / n_shards) as u32));
+        }
+        let work: Vec<(usize, Vec<(u32, u32)>)> = groups
+            .into_iter()
+            .enumerate()
+            .filter(|(_, g)| !g.is_empty())
+            .collect();
+        for (s, group) in &work {
+            self.counters[*s]
+                .probes
+                .fetch_add(group.len() as u64, Ordering::Relaxed);
+        }
+
+        // (2..6) fan the cluster walks out and merge.
+        let mut walks = self.run_walks(query, work, k)?;
+        walks.sort_by_key(|&(s, _)| s); // deterministic intent order
+
+        let mut events = SearchEvents::default();
+        let mut intents = Vec::with_capacity(walks.len());
+        let mut all_groups: Vec<ClusterHits> = Vec::new();
+        for (s, mut walk) in walks {
+            ledger.merge(&walk.ledger);
+            events.generated += walk.events.generated;
+            events.loaded += walk.events.loaded;
+            events.cache_hits += walk.events.cache_hits;
+            events.thrash_faults += walk.events.thrash_faults;
+            let c = &self.counters[s];
+            c.cache_hits
+                .fetch_add(walk.events.cache_hits as u64, Ordering::Relaxed);
+            c.generated
+                .fetch_add(walk.events.generated as u64, Ordering::Relaxed);
+            c.loaded
+                .fetch_add(walk.events.loaded as u64, Ordering::Relaxed);
+            walk.intent.shard = s;
+            intents.push(walk.intent);
+            all_groups.append(&mut walk.groups);
+        }
+
+        // Merge the per-shard heaps: candidates re-sorted into global
+        // probe order make the final top-k (ties included) identical to a
+        // sequential walk's.
+        all_groups.sort_by_key(|g| g.probe_pos);
+        let all_hits: Vec<(u32, f32)> = all_groups.into_iter().flat_map(|g| g.hits).collect();
+        let scores: Vec<f32> = all_hits.iter().map(|&(_, s)| s).collect();
+        let top = vecmath::top_k(&scores, all_hits.len(), k);
+        let hits = top.into_iter().map(|(i, s)| (all_hits[i].0, s)).collect();
+
+        Ok(SearchOutcome {
+            hits,
+            ledger,
+            probed,
+            events,
+            intents,
+        })
+    }
+
+    /// Commit each shard's intent independently: only that shard's
+    /// controller/cache locks are taken, so commits for different shards
+    /// (from this or other queries) never serialize on each other.
+    fn commit(&self, intents: &[CacheIntent], retrieval: SimDuration) {
+        for intent in intents {
+            let Some(shard) = self.shards.get(intent.shard) else {
+                continue;
+            };
+            shard.read().unwrap().commit_intent(intent, retrieval);
+        }
+    }
+
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+
+    fn resident_bytes(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.read().unwrap().resident_bytes())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetProfile;
+    use crate::data::Corpus;
+    use crate::embedding::{Embedder, EmbedderBackend};
+    use crate::index::kmeans::{kmeans, KMeansConfig};
+    use crate::index::shared_memory;
+    use crate::testutil::shared_compute;
+
+    struct Fixture {
+        corpus: Corpus,
+        emb: Arc<EmbeddingMatrix>,
+        device: DeviceProfile,
+        scorer: Scorer,
+        embedder: Embedder,
+    }
+
+    fn fixture() -> Fixture {
+        let profile = DatasetProfile::tiny();
+        let corpus = Corpus::generate(&profile);
+        let compute = shared_compute();
+        let embedder = Embedder::new(compute.clone(), EmbedderBackend::Projection);
+        let emb = Arc::new(embedder.embed_texts(&corpus.texts()).unwrap());
+        Fixture {
+            corpus,
+            emb,
+            device: DeviceProfile::jetson_orin_nano(),
+            scorer: Scorer::new(compute),
+            embedder,
+        }
+    }
+
+    fn cluster_set(f: &Fixture) -> ClusterSet {
+        let km = kmeans(
+            &f.emb,
+            &KMeansConfig {
+                n_clusters: 8,
+                iterations: 5,
+                seed: 1,
+                init: None,
+            },
+            &f.scorer,
+        )
+        .unwrap();
+        ClusterSet::build(&f.corpus, km.centroids, &km.assignment, &f.device)
+    }
+
+    fn state_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("edgerag-shard-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn retrieval() -> RetrievalConfig {
+        RetrievalConfig {
+            nprobe: 4,
+            ..Default::default()
+        }
+    }
+
+    fn build_sharded(f: &Fixture, tag: &str, shards: usize) -> ShardedEdgeIndex {
+        let dir = state_dir(tag);
+        ShardedEdgeIndex::build(
+            IndexKind::EdgeRag,
+            cluster_set(f),
+            EmbedSource::Prebuilt(f.emb.clone()),
+            Some(dir.as_path()),
+            f.scorer.clone(),
+            shared_memory(64 << 20),
+            f.device.clone(),
+            &retrieval(),
+            SimDuration::from_millis(150),
+            SimDuration::from_millis(1_000),
+            shards,
+        )
+        .unwrap()
+    }
+
+    fn build_edge(f: &Fixture, tag: &str) -> EdgeIndex {
+        let dir = state_dir(tag);
+        let blob = BlobStore::open(&dir, f.scorer.dim()).unwrap();
+        EdgeIndex::build(
+            IndexKind::EdgeRag,
+            cluster_set(f),
+            EmbedSource::Prebuilt(f.emb.clone()),
+            Some(blob),
+            f.scorer.clone(),
+            shared_memory(64 << 20),
+            f.device.clone(),
+            &retrieval(),
+            SimDuration::from_millis(150),
+            SimDuration::from_millis(1_000),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn partition_covers_every_cluster() {
+        let f = fixture();
+        let set = cluster_set(&f);
+        let total = set.n_clusters();
+        let idx = build_sharded(&f, "part", 3);
+        assert_eq!(idx.shards(), 3);
+        let per_shard: usize = (0..3).map(|s| idx.with_shard(s, |e| e.clusters().n_clusters())).sum();
+        assert_eq!(per_shard, total);
+        // Every chunk is still owned by exactly one (global) cluster.
+        for chunk in [0u32, 17, 101, 300] {
+            let g = idx.cluster_of(chunk).expect("chunk routed");
+            assert_eq!(idx.shard_of(g), g as usize % 3);
+        }
+    }
+
+    #[test]
+    fn single_shard_is_bit_identical_to_edge_index() {
+        let f = fixture();
+        let edge = build_edge(&f, "bit-e");
+        let sharded = build_sharded(&f, "bit-s", 1);
+        for i in [0usize, 17, 101, 300, 443] {
+            let q = f.emb.row(i).to_vec();
+            let a = edge.search(&q, 5).unwrap();
+            let b = sharded.search(&q, 5).unwrap();
+            assert_eq!(a.hits, b.hits, "query {i}");
+            assert_eq!(a.probed, b.probed, "query {i}");
+            assert_eq!(a.ledger.total(), b.ledger.total(), "query {i}");
+            assert_eq!(a.events.generated, b.events.generated, "query {i}");
+            assert_eq!(a.events.loaded, b.events.loaded, "query {i}");
+            assert_eq!(b.intents.len(), 1);
+            assert_eq!(b.intents[0].shard, 0);
+        }
+    }
+
+    #[test]
+    fn four_shards_identical_topk_and_admissions() {
+        // The satellite equivalence property at unit scale: same corpus,
+        // same queries → identical top-k and identical per-cluster cache
+        // admissions for shards=1 vs shards=4 (thresholds pinned so the
+        // per-shard feedback loops cannot diverge).
+        let f = fixture();
+        let one = build_sharded(&f, "eq1", 1);
+        let four = build_sharded(&f, "eq4", 4);
+        one.pin_threshold(0.0);
+        four.pin_threshold(0.0);
+        for i in 0..16usize {
+            let q = f.emb.row(i * 30).to_vec();
+            let a = one.search_and_commit(&q, 5).unwrap();
+            let b = four.search_and_commit(&q, 5).unwrap();
+            assert_eq!(a.hits, b.hits, "query {i}");
+            assert_eq!(a.events.generated, b.events.generated, "query {i}");
+            assert_eq!(a.events.cache_hits, b.events.cache_hits, "query {i}");
+        }
+        assert_eq!(one.cached_clusters(), four.cached_clusters());
+    }
+
+    #[test]
+    fn insert_and_remove_route_to_owning_shard() {
+        let f = fixture();
+        let idx = build_sharded(&f, "ins", 4);
+        let text = "a fresh shard-routed document with marker tokens zzshard yyshard";
+        let emb = f.embedder.embed_one(text).unwrap();
+        let id = f.corpus.len() as u32 + 7;
+        let expected_shard = idx.route(&emb).unwrap();
+        let cluster = idx.insert_chunk(id, text, &emb).unwrap();
+        assert_eq!(idx.shard_of(cluster), expected_shard);
+        assert_eq!(idx.cluster_of(id), Some(cluster));
+        let out = idx.search_and_commit(&emb, 3).unwrap();
+        assert_eq!(out.hits[0].0, id, "hits: {:?}", out.hits);
+        let stats = idx.shard_stats();
+        assert_eq!(stats[expected_shard].inserts, 1);
+        assert!(idx.remove_chunk(id).unwrap());
+        assert_eq!(idx.cluster_of(id), None);
+        assert!(!idx.remove_chunk(id).unwrap(), "second remove is a no-op");
+    }
+
+    #[test]
+    fn insert_does_not_block_readers_of_other_shards() {
+        // The tentpole overlap property, made deterministic: hold a read
+        // lease on a shard the insert does NOT own; the insert must still
+        // complete.
+        let f = fixture();
+        let idx = Arc::new(build_sharded(&f, "overlap", 4));
+        let text = "overlap probe document zzoverlap";
+        let emb = f.embedder.embed_one(text).unwrap();
+        let target = idx.route(&emb).unwrap();
+        let other = (target + 1) % idx.shards();
+        let id = f.corpus.len() as u32 + 11;
+        idx.with_shard(other, |_held| {
+            let (tx, rx) = mpsc::channel();
+            let idx2 = idx.clone();
+            let emb2 = emb.clone();
+            let text2 = text.to_string();
+            std::thread::spawn(move || {
+                let _ = tx.send(idx2.insert_chunk(id, &text2, &emb2).map(|_| ()));
+            });
+            rx.recv_timeout(std::time::Duration::from_secs(10))
+                .expect("insert must not block on an unrelated shard's read lease")
+                .expect("insert succeeds");
+        });
+        assert_eq!(idx.cluster_of(id).map(|g| idx.shard_of(g)), Some(target));
+    }
+
+    #[test]
+    fn concurrent_queries_and_inserts_stay_consistent() {
+        let f = fixture();
+        let idx = build_sharded(&f, "conc", 4);
+        let queries: Vec<Vec<f32>> = (0..8).map(|i| f.emb.row(i * 50).to_vec()).collect();
+        let serial: Vec<Vec<u32>> = queries
+            .iter()
+            .map(|q| idx.search(q, 5).unwrap().hits.iter().map(|h| h.0).collect())
+            .collect();
+        let base = f.corpus.len() as u32 + 100;
+        std::thread::scope(|scope| {
+            for _ in 0..2 {
+                let idx = &idx;
+                let queries = &queries;
+                scope.spawn(move || {
+                    for _ in 0..3 {
+                        for q in queries {
+                            // Concurrent inserts may add hits but must
+                            // never corrupt a search.
+                            let out = idx.search_and_commit(q, 5).unwrap();
+                            assert!(!out.hits.is_empty());
+                        }
+                    }
+                });
+            }
+            let idx = &idx;
+            let embedder = &f.embedder;
+            scope.spawn(move || {
+                for i in 0..10u32 {
+                    let text = format!("concurrent insert number {i} marker zzconc{i}");
+                    let emb = embedder.embed_one(&text).unwrap();
+                    idx.insert_chunk(base + i, &text, &emb).unwrap();
+                }
+            });
+        });
+        // After the dust settles: serial agreement for the original
+        // corpus' queries still holds on the top hit (inserted docs can
+        // only displace weaker candidates), and every insert is routed.
+        for (i, q) in queries.iter().enumerate() {
+            let ids: Vec<u32> = idx.search(q, 5).unwrap().hits.iter().map(|h| h.0).collect();
+            assert_eq!(ids[0], serial[i][0], "query {i} top hit changed");
+        }
+        let total_inserts: u64 = idx.shard_stats().iter().map(|s| s.inserts).sum();
+        assert_eq!(total_inserts, 10);
+        for i in 0..10u32 {
+            assert!(idx.cluster_of(base + i).is_some(), "insert {i} lost");
+        }
+    }
+
+    #[test]
+    fn rejects_too_many_shards() {
+        let f = fixture();
+        let dir = state_dir("max");
+        let err = ShardedEdgeIndex::build(
+            IndexKind::EdgeRag,
+            cluster_set(&f),
+            EmbedSource::Prebuilt(f.emb.clone()),
+            Some(dir.as_path()),
+            f.scorer.clone(),
+            shared_memory(64 << 20),
+            f.device.clone(),
+            &retrieval(),
+            SimDuration::from_millis(150),
+            SimDuration::from_millis(1_000),
+            MAX_SHARDS + 1,
+        );
+        assert!(err.is_err());
+    }
+}

@@ -14,7 +14,6 @@ use anyhow::{bail, Result};
 
 use crate::index::edge::EdgeIndex;
 use crate::simtime::SimDuration;
-use crate::storage::Region;
 use crate::vecmath;
 
 /// A cluster splits when it exceeds this many members (×  the dataset's
@@ -109,7 +108,7 @@ impl EdgeIndex {
         // Cached embeddings are stale.
         if let Some(cache) = &self.cache {
             if cache.write().unwrap().remove(c) {
-                self.memory.lock().unwrap().release(Region::Cache(c));
+                self.memory.lock().unwrap().release(self.cache_region(c));
             }
         }
         // Selective storage re-evaluation (store / drop / refresh).
@@ -261,7 +260,7 @@ impl EdgeIndex {
         }
         if let Some(cache) = &self.cache {
             if cache.write().unwrap().remove(c) {
-                self.memory.lock().unwrap().release(Region::Cache(c));
+                self.memory.lock().unwrap().release(self.cache_region(c));
             }
         }
         self.refresh_cluster(target)?;

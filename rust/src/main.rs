@@ -136,7 +136,10 @@ USAGE: edgerag <command> [--options]
 
 COMMANDS
   serve   --dataset NAME --index KIND [--port P] [--device D]
-          [--workers N] [--transformer] [--real-prefill] [--live-generation]
+          [--workers N] [--shards N] [--transformer] [--real-prefill]
+          [--live-generation]
+          (--shards 0 = auto, one per core — the serve default;
+           --shards 1 = single-shard paper-exact index)
   query   --text \"...\" [--port P]
   stats   [--port P]
   bench   <table2|fig3|fig4|fig5|fig7|fig10|fig12|fig13|breakdown|
@@ -152,7 +155,7 @@ DATASETS:    tiny scidocs fiqa quora nq hotpotqa fever"
 }
 
 fn serve(args: &Args) -> Result<()> {
-    let builder = builder_from(args)?;
+    let mut builder = builder_from(args)?;
     let dataset = dataset_from(args)?;
     let kind = match args.get("index") {
         Some(k) => IndexKind::by_name(k).with_context(|| format!("unknown index `{k}`"))?,
@@ -163,13 +166,21 @@ fn serve(args: &Args) -> Result<()> {
         Some(w) => w.parse().context("bad --workers")?,
         None => edgerag::server::default_workers(),
     };
+    // Serving defaults to the sharded index (one shard per core) so
+    // probes fan out and inserts stall only their owning shard; the
+    // library/config default stays 1 (paper-exact single shard).
+    builder.retrieval.shards = match args.get("shards") {
+        Some(s) => s.parse().context("bad --shards")?,
+        None => 0, // auto
+    };
+    let shards = builder.retrieval.resolved_shards();
     eprintln!("building dataset `{}` ({} chunks)…", dataset.name, dataset.n_chunks);
     let built = builder.build_dataset(&dataset)?;
     let pipeline = builder.pipeline(&built, kind)?;
     let addr = format!("127.0.0.1:{port}");
     let server = Server::bind_with_workers(&addr, pipeline, builder.embedder(), workers)?;
     eprintln!(
-        "serving `{}` with {} index on {addr} (device: {}, {workers} workers)",
+        "serving `{}` with {} index on {addr} (device: {}, {workers} workers, {shards} shard(s))",
         dataset.name,
         kind.name(),
         builder.device.name

@@ -5,10 +5,14 @@
 //! The crate cache has no async runtime, so the server is thread-based:
 //! one acceptor + one handler thread per connection, all submitting work
 //! to a fixed **worker pool** that executes requests against one shared
-//! [`Engine`]. Queries run read-parallel (the engine's index takes only a
-//! read lease per search); `insert`/`remove` acquire the exclusive write
-//! lease inside their worker, draining in-flight searches first. The pool
-//! bounds concurrent engine work regardless of how many clients connect.
+//! [`Engine`]. Queries run read-parallel (the engine's index takes only
+//! a read lease per search). `insert`/`remove` go through
+//! [`Engine::insert`] / [`Engine::remove`]: on the (default for `serve`)
+//! sharded index they write-lease only the owning shard, so a worker
+//! inserting into shard A overlaps with workers querying shards B..N; on
+//! a single-shard index they fall back to the exclusive engine lease,
+//! draining in-flight searches first. The pool bounds concurrent engine
+//! work regardless of how many clients connect.
 //!
 //! Protocol (one JSON object per line):
 //!   {"op":"query","text":"..."}      → hits + latency breakdown
@@ -28,9 +32,9 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{Engine, TextStore};
+use crate::coordinator::Engine;
 use crate::embedding::Embedder;
-use crate::index::EdgeIndex;
+use crate::index::{EdgeIndex, ShardedEdgeIndex};
 use crate::json::{self, Value};
 use crate::simtime::Component;
 
@@ -96,17 +100,17 @@ impl WorkerPool {
 // Server
 // ---------------------------------------------------------------------------
 
-/// Shared server state.
+/// Shared server state. Inserted chunks' text goes to the engine's
+/// shared text store (inside [`Engine::insert`], which pushes the text
+/// *before* the index mutation so ids and index state stay consistent).
 pub struct ServerState {
     pub engine: Arc<Engine>,
     pub embedder: Embedder,
-    /// Shared with the engine: inserted chunks' text goes here so prompt
-    /// assembly can fetch it (ids are allocated by the store under the
-    /// index write lease, keeping ids and index state consistent).
-    texts: TextStore,
     running: AtomicBool,
 }
 
+/// The TCP request server: acceptor + per-connection handler threads
+/// over a fixed worker pool and one shared [`Engine`].
 pub struct Server {
     state: Arc<ServerState>,
     pool: WorkerPool,
@@ -136,12 +140,10 @@ impl Server {
         workers: usize,
     ) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-        let texts = engine.texts();
         Ok(Server {
             state: Arc::new(ServerState {
                 engine: Arc::new(engine),
                 embedder,
-                texts,
                 running: AtomicBool::new(true),
             }),
             pool: WorkerPool::new(workers),
@@ -149,6 +151,7 @@ impl Server {
         })
     }
 
+    /// The bound address (useful with port 0).
     pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
         Ok(self.listener.local_addr()?)
     }
@@ -264,19 +267,10 @@ fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
         }
         "insert" => {
             let text = req.req("text")?.as_str().context("text")?;
-            // Embed outside the write lease: queries keep flowing while
-            // the embedder works.
-            let emb = state.embedder.embed_one(text)?;
-            // Write lease: drains in-flight searches, then mutates. The id
-            // is allocated from the shared text store while holding the
-            // lease, so ids and index state stay consistent.
-            let mut index = state.engine.index_mut();
-            let id = state.texts.push(text.to_string());
-            let edge = index
-                .as_any_mut()
-                .downcast_mut::<EdgeIndex>()
-                .context("insert requires an EdgeRAG index")?;
-            let cluster = edge.insert_chunk(id, text, &emb)?;
+            // Shard-scoped on the sharded index (only the owning shard's
+            // write lease — queries to other shards keep flowing),
+            // engine-exclusive on a single-shard index.
+            let (id, cluster) = state.engine.insert(text)?;
             Ok(Value::object(vec![
                 ("id", id.into()),
                 ("cluster", cluster.into()),
@@ -284,12 +278,7 @@ fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
         }
         "remove" => {
             let id = req.req("id")?.as_u64().context("id")? as u32;
-            let mut index = state.engine.index_mut();
-            let edge = index
-                .as_any_mut()
-                .downcast_mut::<EdgeIndex>()
-                .context("remove requires an EdgeRAG index")?;
-            let removed = edge.remove_chunk(id)?;
+            let removed = state.engine.remove(id)?;
             Ok(Value::object(vec![("removed", removed.into())]))
         }
         "stats" => {
@@ -298,19 +287,44 @@ fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
             let queries = m.queries();
             let retrieval = m.retrieval();
             let ttft = m.ttft();
-            let (resident, hit_rate, threshold) = {
+            let (resident, hit_rate, threshold, shards) = {
                 let index = state.engine.index();
                 let resident = index.resident_bytes();
-                match index.as_any().downcast_ref::<EdgeIndex>() {
-                    Some(e) => (
+                if let Some(e) = index.as_any().downcast_ref::<EdgeIndex>() {
+                    (
                         resident,
                         e.cache_stats().map(|s| s.hit_rate()).unwrap_or(0.0),
                         e.threshold_ms(),
-                    ),
-                    None => (resident, 0.0, 0.0),
+                        None,
+                    )
+                } else if let Some(sh) = index.as_any().downcast_ref::<ShardedEdgeIndex>() {
+                    // Per-shard rows: where probes/inserts landed, each
+                    // shard's threshold and cache occupancy.
+                    let rows = Value::array(sh.shard_stats().into_iter().map(|s| {
+                        Value::object(vec![
+                            ("shard", s.shard.into()),
+                            ("clusters", s.clusters.into()),
+                            ("probes", s.probes.into()),
+                            ("cache_hits", s.cache_hits.into()),
+                            ("generated", s.generated.into()),
+                            ("loaded", s.loaded.into()),
+                            ("inserts", s.inserts.into()),
+                            ("removes", s.removes.into()),
+                            ("threshold_ms", s.threshold_ms.into()),
+                            ("cache_used_bytes", s.cache_used_bytes.into()),
+                        ])
+                    }));
+                    (
+                        resident,
+                        sh.cache_stats().map(|s| s.hit_rate()).unwrap_or(0.0),
+                        sh.threshold_ms(),
+                        Some(rows),
+                    )
+                } else {
+                    (resident, 0.0, 0.0, None)
                 }
             };
-            Ok(Value::object(vec![
+            let mut fields = vec![
                 ("queries", queries.into()),
                 ("retrieval_p50_ms", retrieval.percentile(50.0).as_millis_f64().into()),
                 ("retrieval_p95_ms", retrieval.percentile(95.0).as_millis_f64().into()),
@@ -319,7 +333,11 @@ fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
                 ("resident_bytes", resident.into()),
                 ("cache_hit_rate", hit_rate.into()),
                 ("threshold_ms", threshold.into()),
-            ]))
+            ];
+            if let Some(rows) = shards {
+                fields.push(("shards", rows));
+            }
+            Ok(Value::object(fields))
         }
         other => anyhow::bail!("unknown op `{other}`"),
     }
@@ -333,6 +351,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a serving endpoint (`host:port`).
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         Ok(Client {
@@ -341,6 +360,7 @@ impl Client {
         })
     }
 
+    /// Send one request object and read its one-line response.
     pub fn call(&mut self, request: &Value) -> Result<Value> {
         writeln!(self.writer, "{request}")?;
         let mut line = String::new();
@@ -348,6 +368,7 @@ impl Client {
         json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))
     }
 
+    /// Convenience wrapper for the `query` op.
     pub fn query(&mut self, text: &str) -> Result<Value> {
         self.call(&Value::object(vec![
             ("op", Value::str("query")),

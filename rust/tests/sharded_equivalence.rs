@@ -1,0 +1,232 @@
+//! Sharded-vs-unsharded equivalence and shard-scoped concurrency at the
+//! system level: the same corpus and queries must produce identical
+//! top-k results (ids *and* scores) and identical per-cluster cache
+//! admissions for `shards = 1` vs `shards = 4`, and an online insert
+//! must overlap with queries/readers of other shards instead of
+//! stalling the whole index.
+
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
+use edgerag::coordinator::builder::SystemBuilder;
+use edgerag::index::{EdgeIndex, ShardedEdgeIndex, VectorIndex};
+use edgerag::json::Value;
+use edgerag::server::{Client, Server};
+use edgerag::testutil::shared_compute;
+
+fn builder(shards: usize, tag: &str) -> SystemBuilder {
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    // Per-test blob-store root: tests in this binary run in parallel and
+    // must not clear each other's stores.
+    b.options.state_dir =
+        std::env::temp_dir().join(format!("edgerag-eqv-{tag}-{}", std::process::id()));
+    b.retrieval.nprobe = 4;
+    b.retrieval.shards = shards;
+    b
+}
+
+#[test]
+fn sharded_four_matches_unsharded_exactly() {
+    let b1 = builder(1, "eq1");
+    let b4 = builder(4, "eq4");
+    let built1 = b1.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let built4 = b4.build_dataset(&DatasetProfile::tiny()).unwrap();
+
+    let (mut one, _mem1) = b1.index(&built1, IndexKind::EdgeRag).unwrap();
+    let (four, _mem4) = b4.index(&built4, IndexKind::EdgeRag).unwrap();
+    // shards=1 must take the plain single-index path; shards=4 the
+    // sharded one.
+    assert!(one.as_any().downcast_ref::<EdgeIndex>().is_some());
+    let sharded = four
+        .as_any()
+        .downcast_ref::<ShardedEdgeIndex>()
+        .expect("shards=4 builds a ShardedEdgeIndex");
+    assert_eq!(sharded.shards(), 4);
+
+    // Pin both thresholds to 0 (admit everything): the per-shard
+    // feedback controllers see different miss streams, so leaving them
+    // adaptive could legitimately diverge the admission gate — the
+    // equivalence claim is about the retrieval results and the admitted
+    // cluster set under an identical policy.
+    one.as_any_mut()
+        .downcast_mut::<EdgeIndex>()
+        .unwrap()
+        .pin_threshold(0.0);
+    sharded.pin_threshold(0.0);
+
+    let embedder = b1.embedder();
+    for (i, q) in built1.workload.queries.iter().take(32).enumerate() {
+        let emb = embedder.embed_one(&q.text).unwrap();
+        let a = one.search(&emb, 5).unwrap();
+        let b = four.search(&emb, 5).unwrap();
+        // Bit-identical hits: same chunk ids, same f32 scores, same order.
+        assert_eq!(a.hits, b.hits, "query {i} hits diverged");
+        // Same probes, as global cluster ids, in the same order.
+        assert_eq!(a.probed, b.probed, "query {i} probes diverged");
+        // Same materialization decisions.
+        assert_eq!(a.events.generated, b.events.generated, "query {i}");
+        assert_eq!(a.events.loaded, b.events.loaded, "query {i}");
+        assert_eq!(a.events.cache_hits, b.events.cache_hits, "query {i}");
+        one.commit(&a.intents, a.ledger.retrieval());
+        four.commit(&b.intents, b.ledger.retrieval());
+    }
+
+    // Identical per-cluster cache admissions: the resident sets match
+    // exactly (shard-local ids mapped back to global ones), and so do
+    // the insertion counters.
+    let edge = one.as_any().downcast_ref::<EdgeIndex>().unwrap();
+    assert_eq!(edge.cached_clusters(), sharded.cached_clusters());
+    let s1 = edge.cache_stats().unwrap();
+    let s4 = sharded.cache_stats().unwrap();
+    assert_eq!(s1.insertions, s4.insertions);
+    assert_eq!(s1.hits, s4.hits);
+    assert_eq!(s1.misses, s4.misses);
+}
+
+#[test]
+fn insert_overlaps_queries_to_other_shards() {
+    let b = builder(4, "overlap");
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let engine = Arc::new(b.pipeline(&built, IndexKind::EdgeRag).unwrap());
+    let embedder = b.embedder();
+
+    // Directed overlap: pin down which shard the insert will route to,
+    // then hold a *read* lease on a different shard (as a concurrent
+    // query would) while the insert runs on another thread. It must
+    // complete — on the old single-lease design this pattern deadlocked
+    // by construction (insert required the exclusive engine lease, which
+    // can't be granted while any read lease is out).
+    let text = "directed overlap marker document zzdirected overlap";
+    let emb = embedder.embed_one(text).unwrap();
+    let index = engine.index();
+    let sharded = index
+        .as_any()
+        .downcast_ref::<ShardedEdgeIndex>()
+        .expect("serve path builds the sharded index");
+    let target = sharded.route(&emb).unwrap();
+    let other = (target + 1) % sharded.shards();
+    let routed_shard = sharded.with_shard(other, |_reader| {
+        let (tx, rx) = mpsc::channel();
+        let engine2 = engine.clone();
+        let text2 = text.to_string();
+        std::thread::spawn(move || {
+            let _ = tx.send(engine2.insert(&text2));
+        });
+        let (id, cluster) = rx
+            .recv_timeout(Duration::from_secs(20))
+            .expect("insert must not block on another shard's read lease")
+            .expect("insert succeeds");
+        assert_eq!(engine.texts().get(id).as_deref(), Some(text));
+        sharded.shard_of(cluster)
+    });
+    assert_eq!(routed_shard, target, "insert landed on its routed shard");
+    drop(index);
+
+    // Churn: queries hammer the engine while inserts land on whichever
+    // shards their embeddings route to.
+    let base_texts: Vec<String> = (0..12)
+        .map(|i| format!("concurrent sharded insert {i} marker zzins{i}q"))
+        .collect();
+    std::thread::scope(|scope| {
+        for t in 0..2 {
+            let engine = &engine;
+            let built = &built;
+            scope.spawn(move || {
+                for (i, q) in built.workload.queries.iter().take(20).enumerate() {
+                    let out = engine.handle(&q.text).unwrap();
+                    assert!(!out.hits.is_empty(), "thread {t} query {i} empty");
+                }
+            });
+        }
+        let engine = &engine;
+        let texts = &base_texts;
+        scope.spawn(move || {
+            for text in texts {
+                engine.insert(text).unwrap();
+            }
+        });
+    });
+
+    // Every insert is retrievable through the normal serving path.
+    for text in &base_texts {
+        let out = engine.handle(text).unwrap();
+        let expect = engine.texts().len(); // texts store includes them all
+        assert!(expect > built.corpus.len());
+        assert!(
+            out.hits.iter().any(|&(id, _)| id >= built.corpus.len() as u32),
+            "inserted doc not retrieved for {text:?}: {:?}",
+            out.hits
+        );
+    }
+
+    // Per-shard accounting: 13 inserts total (1 directed + 12 churned),
+    // attributed to their owning shards.
+    let index = engine.index();
+    let sharded = index.as_any().downcast_ref::<ShardedEdgeIndex>().unwrap();
+    let stats = sharded.shard_stats();
+    assert_eq!(stats.len(), 4);
+    let total_inserts: u64 = stats.iter().map(|s| s.inserts).sum();
+    assert_eq!(total_inserts, 13);
+    let total_probes: u64 = stats.iter().map(|s| s.probes).sum();
+    assert!(total_probes > 0, "probes must be attributed to shards");
+}
+
+#[test]
+fn sharded_server_serves_inserts_and_per_shard_stats() {
+    // End-to-end over TCP with the sharded index `serve` defaults to.
+    let b = builder(4, "server");
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let pipeline = b.pipeline(&built, IndexKind::EdgeRag).unwrap();
+    let server = Server::bind_with_workers("127.0.0.1:0", pipeline, b.embedder(), 4).unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || server.run().unwrap());
+
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let resp = c.query("c1 c2 words t0w1 t0w2").unwrap();
+    assert!(resp.get("hits").is_some(), "{resp}");
+
+    let ins = c
+        .call(&Value::object(vec![
+            ("op", Value::str("insert")),
+            ("text", Value::str("sharded server marker xqshard doc")),
+        ]))
+        .unwrap();
+    let id = ins.get("id").and_then(|v| v.as_u64()).expect("insert id");
+    let found = c.query("sharded server marker xqshard").unwrap();
+    let ids: Vec<u64> = found
+        .get("hits")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|h| h.get("chunk").unwrap().as_u64().unwrap())
+        .collect();
+    assert!(ids.contains(&id), "{ids:?} missing {id}");
+
+    let stats = c.call(&Value::object(vec![("op", Value::str("stats"))])).unwrap();
+    let shards = stats
+        .get("shards")
+        .and_then(|v| v.as_array())
+        .expect("sharded stats expose per-shard rows");
+    assert_eq!(shards.len(), 4);
+    let inserts: u64 = shards
+        .iter()
+        .map(|s| s.get("inserts").and_then(|v| v.as_u64()).unwrap())
+        .sum();
+    assert_eq!(inserts, 1);
+    let probes: u64 = shards
+        .iter()
+        .map(|s| s.get("probes").and_then(|v| v.as_u64()).unwrap())
+        .sum();
+    assert!(probes > 0);
+
+    let rem = c
+        .call(&Value::object(vec![
+            ("op", Value::str("remove")),
+            ("id", Value::num(id as f64)),
+        ]))
+        .unwrap();
+    assert_eq!(rem.get("removed").and_then(|v| v.as_bool()), Some(true), "{rem}");
+}
