@@ -30,8 +30,11 @@ from jax._src.lib import xla_client as xc
 
 from . import model
 
-# Shape buckets — must match rust/src/runtime/artifacts.rs.
-SIM_QUERY_BATCHES = [1]
+# Shape buckets — must match rust/src/runtime/manifest.rs (Manifest::builtin).
+# The query-batch axis serves the cross-query batch scheduler
+# (rust/src/sched): concurrent queries' centroid probes fuse into one
+# sim_{A}x{N} call at the widest bucket that fits.
+SIM_QUERY_BATCHES = [1, 8, 32]
 SIM_ROWS = [128, 256, 512, 1024, 4096]
 KMEANS_SIM = (32, 512)          # (points-batch, max-centroids)
 PROJ_BATCHES = [1, 32]
@@ -97,13 +100,16 @@ def build_all(out_dir: str) -> dict:
                 [_spec((b, d)), _spec((n, d))],
             )
     kb, kn = KMEANS_SIM
-    lower(
-        f"sim_{kb}x{kn}",
-        model.scores,
-        (jax.ShapeDtypeStruct((kb, d), f32),
-         jax.ShapeDtypeStruct((kn, d), f32)),
-        [_spec((kb, d)), _spec((kn, d))],
-    )
+    if kb not in SIM_QUERY_BATCHES or kn not in SIM_ROWS:
+        # The k-means shape is usually part of the cross product above;
+        # lower it explicitly only when the grids drift apart.
+        lower(
+            f"sim_{kb}x{kn}",
+            model.scores,
+            (jax.ShapeDtypeStruct((kb, d), f32),
+             jax.ShapeDtypeStruct((kn, d), f32)),
+            [_spec((kb, d)), _spec((kn, d))],
+        )
 
     # ---- projection embedder ----
     pp = model.projection_pack()
@@ -151,6 +157,7 @@ def build_all(out_dir: str) -> dict:
         "enc_seq": model.ENC_SEQ,
         "prefill_seq": model.PREFILL_SEQ,
         "sim_rows": SIM_ROWS,
+        "sim_batches": SIM_QUERY_BATCHES,
         "proj_batches": PROJ_BATCHES,
         "enc_batches": ENC_BATCHES,
         "artifacts": artifacts,

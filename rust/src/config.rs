@@ -476,6 +476,21 @@ pub struct RetrievalConfig {
     ///   defaults to via `--shards`).
     /// * `n > 1` — exactly `n` shards; the cache budget is split evenly.
     pub shards: usize,
+    /// Cross-query batch scheduling (`crate::sched`): concurrent queries'
+    /// embedding and centroid-probe kernel calls coalesce into fused
+    /// batches. **Off by default** — the library serves the paper-exact
+    /// unbatched path; `edgerag serve` turns it on (results are
+    /// bit-identical either way, verified by
+    /// `rust/tests/sched_equivalence.rs`).
+    pub batching: bool,
+    /// Batch-window deadline in µs: the oldest queued work item waits at
+    /// most this long before its partial batch executes. Only meaningful
+    /// with `batching`.
+    pub batch_window_us: u64,
+    /// Queries admitted concurrently by the batch scheduler (and the
+    /// server's admission queue bound); beyond it requests are rejected
+    /// with an "overloaded" error. 0 = unlimited.
+    pub max_inflight: usize,
 }
 
 /// One shard per available core, clamped to a sensible serving range —
@@ -499,6 +514,9 @@ impl Default for RetrievalConfig {
             store_slo_fraction: 0.33,
             max_prompt_tokens: 2048,
             shards: 1,
+            batching: false,
+            batch_window_us: 200,
+            max_inflight: 256,
         }
     }
 }
@@ -523,6 +541,9 @@ impl RetrievalConfig {
             ("store_slo_fraction", self.store_slo_fraction.into()),
             ("max_prompt_tokens", self.max_prompt_tokens.into()),
             ("shards", self.shards.into()),
+            ("batching", self.batching.into()),
+            ("batch_window_us", self.batch_window_us.into()),
+            ("max_inflight", self.max_inflight.into()),
         ])
     }
 
@@ -552,6 +573,19 @@ impl RetrievalConfig {
             shards: match v.get("shards") {
                 Some(s) => s.as_usize().context("shards")?,
                 None => 1,
+            },
+            // Optional for configs written before cross-query batching.
+            batching: match v.get("batching") {
+                Some(b) => b.as_bool().context("batching")?,
+                None => false,
+            },
+            batch_window_us: match v.get("batch_window_us") {
+                Some(w) => w.as_u64().context("batch_window_us")?,
+                None => 200,
+            },
+            max_inflight: match v.get("max_inflight") {
+                Some(m) => m.as_usize().context("max_inflight")?,
+                None => 256,
             },
         })
     }

@@ -230,9 +230,20 @@ impl SystemBuilder {
         if self.options.prebuilt_generation {
             EmbedSource::Prebuilt(built.embeddings.clone())
         } else {
+            // With batching on, on-demand cluster re-embedding goes
+            // through its own cross-query embed stage so concurrent
+            // queries generating different clusters fuse their kernel
+            // calls (bit-identical rows either way).
+            let batcher = self.retrieval.batching.then(|| {
+                crate::sched::EmbedBatcher::new(
+                    self.embedder(),
+                    std::time::Duration::from_micros(self.retrieval.batch_window_us),
+                )
+            });
             EmbedSource::Live {
                 embedder: self.embedder(),
                 texts: built.chunk_texts.clone(),
+                batcher,
             }
         }
     }
@@ -329,6 +340,19 @@ impl SystemBuilder {
             }
         };
         Ok((index, memory))
+    }
+
+    /// Wrap an engine in the cross-query batch scheduler configured from
+    /// this builder's retrieval knobs (`batching`, `batch_window_us`,
+    /// `max_inflight`). The caller decides whether to serve through it.
+    pub fn scheduler(
+        &self,
+        engine: std::sync::Arc<RagPipeline>,
+    ) -> std::sync::Arc<crate::sched::BatchScheduler> {
+        crate::sched::BatchScheduler::new(
+            engine,
+            crate::sched::SchedConfig::from_retrieval(&self.retrieval),
+        )
     }
 
     /// Assemble the full serving engine for one configuration. The result

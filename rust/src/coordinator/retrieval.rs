@@ -13,23 +13,24 @@
 //! ([`QueryOutcome`] et al.), never in the engine.
 //!
 //! Online mutations go through [`Engine::insert`] / [`Engine::remove`].
-//! On a sharded index ([`ShardedEdgeIndex`]) those take the engine's
-//! *read* lease plus only the owning shard's write lease, so a query and
-//! an insert to different shards overlap; on a single [`EdgeIndex`] they
-//! fall back to the exclusive engine write lease
-//! ([`Engine::index_mut`]), draining in-flight searches first. The lock
-//! hierarchy is documented in `docs/ARCHITECTURE.md`.
+//! On an index that supports concurrent updates (the sharded
+//! [`crate::index::ShardedEdgeIndex`]) those take the engine's *read*
+//! lease plus only the owning shard's write lease, so a query and an
+//! insert to different shards overlap; on a single
+//! [`crate::index::EdgeIndex`] they fall back to the exclusive engine
+//! write lease ([`Engine::index_mut`]), draining in-flight searches
+//! first. The lock hierarchy is documented in `docs/ARCHITECTURE.md`.
 
 use std::sync::{RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::config::DeviceProfile;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::texts::TextStore;
 use crate::embedding::Embedder;
-use crate::index::{EdgeIndex, SearchEvents, ShardedEdgeIndex, VectorIndex};
+use crate::index::{ProbeTable, SearchEvents, VectorIndex};
 use crate::llm::Llm;
 use crate::simtime::{Breakdown, Component, LatencyLedger, SimDuration};
 
@@ -105,11 +106,13 @@ impl Engine {
     }
 
     /// Insert a chunk online (§5.4): embeds `text`, allocates its id from
-    /// the shared text store, and routes it into the index. On a
-    /// [`ShardedEdgeIndex`] this runs under the engine's *read* lease and
-    /// write-leases only the owning shard, so concurrent queries to other
-    /// shards keep flowing; on a plain [`EdgeIndex`] it takes the
-    /// exclusive engine lease. Returns `(chunk id, global cluster id)`.
+    /// the shared text store, and routes it into the index. On an index
+    /// supporting concurrent updates (the sharded
+    /// [`crate::index::ShardedEdgeIndex`]) this runs under the engine's
+    /// *read* lease and write-leases only the owning shard, so concurrent
+    /// queries to other shards keep flowing; on a plain
+    /// [`crate::index::EdgeIndex`] it takes the exclusive engine lease.
+    /// Returns `(chunk id, global cluster id)`.
     ///
     /// The id is pushed to the text store *before* the index insert, so a
     /// concurrent query can never retrieve an id whose text is missing.
@@ -119,39 +122,30 @@ impl Engine {
         let emb = self.embedder.embed_one(text)?;
         {
             let index = self.index.read().unwrap();
-            if let Some(sharded) = index.as_any().downcast_ref::<ShardedEdgeIndex>() {
+            if index.supports_concurrent_updates() {
                 let id = self.chunk_texts.push(text.to_string());
-                let cluster = sharded.insert_chunk(id, text, &emb)?;
+                let cluster = index.insert_chunk_concurrent(id, text, &emb)?;
                 return Ok((id, cluster));
             }
         }
         let mut index = self.index.write().unwrap();
         let id = self.chunk_texts.push(text.to_string());
-        let edge = index
-            .as_any_mut()
-            .downcast_mut::<EdgeIndex>()
-            .context("insert requires an EdgeRAG index")?;
-        let cluster = edge.insert_chunk(id, text, &emb)?;
+        let cluster = index.insert_chunk(id, text, &emb)?;
         Ok((id, cluster))
     }
 
-    /// Remove a chunk online (§5.4). Shard-scoped on a
-    /// [`ShardedEdgeIndex`] (engine read lease + owning shard's write
-    /// lease), exclusive on a plain [`EdgeIndex`]. Returns false if the
-    /// id is unknown.
+    /// Remove a chunk online (§5.4). Shard-scoped on an index that
+    /// supports concurrent updates (engine read lease + owning shard's
+    /// write lease), exclusive otherwise. Returns false if the id is
+    /// unknown.
     pub fn remove(&self, id: u32) -> Result<bool> {
         {
             let index = self.index.read().unwrap();
-            if let Some(sharded) = index.as_any().downcast_ref::<ShardedEdgeIndex>() {
-                return sharded.remove_chunk(id);
+            if index.supports_concurrent_updates() {
+                return index.remove_chunk_concurrent(id);
             }
         }
-        let mut index = self.index.write().unwrap();
-        let edge = index
-            .as_any_mut()
-            .downcast_mut::<EdgeIndex>()
-            .context("remove requires an EdgeRAG index")?;
-        edge.remove_chunk(id)
+        self.index.write().unwrap().remove_chunk(id)
     }
 
     /// Shared metrics — recording is internally synchronized.
@@ -174,20 +168,44 @@ impl Engine {
     /// the (brief) cache-commit, never across embedding or prefill.
     pub fn handle(&self, query_text: &str) -> Result<QueryOutcome> {
         let wall_start = Instant::now();
+        let q = self.embedder.embed_one(query_text)?;
+        self.handle_prepared(query_text, &q, None, wall_start)
+    }
+
+    /// Serve a query whose embedding (and optionally centroid-probe
+    /// scores against a [`ProbeTable`] snapshot) were computed upstream —
+    /// the cross-query batch scheduler's ([`crate::sched`]) stage-3 entry
+    /// point. Identical to [`Engine::handle`] in modeled costs, search
+    /// results and cache commits: the modeled `QueryEmbed` charge depends
+    /// only on the text, and the search runs
+    /// [`VectorIndex::search_with_scores`], which reproduces
+    /// [`VectorIndex::search`] exactly for scores taken from the current
+    /// snapshot. `wall_start` lets the caller account queue/batch time
+    /// into the reported coordinator wall time.
+    pub fn handle_prepared(
+        &self,
+        query_text: &str,
+        q: &[f32],
+        probe: Option<(&ProbeTable, &[f32])>,
+        wall_start: Instant,
+    ) -> Result<QueryOutcome> {
         let mut ledger = LatencyLedger::new();
 
         // Query embedding (same embedding model as indexing — Fig. 1b
-        // step 1). Charged at the device's generation rate.
+        // step 1). Charged at the device's generation rate regardless of
+        // which path computed the vector.
         ledger.charge(
             Component::QueryEmbed,
             self.device.embed_gen_cost(query_text.len() as u64),
         );
-        let q = self.embedder.embed_one(query_text)?;
 
         // Vector search through the configured index (shared read lease).
         let search = {
             let index = self.index.read().unwrap();
-            index.search(&q, self.top_k)?
+            match probe {
+                Some((table, scores)) => index.search_with_scores(q, table, scores, self.top_k)?,
+                None => index.search(q, self.top_k)?,
+            }
         };
         ledger.merge(&search.ledger);
 

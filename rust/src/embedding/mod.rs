@@ -65,14 +65,25 @@ impl Embedder {
         self.backend
     }
 
+    /// The underlying compute service (shared with scorers and the batch
+    /// scheduler's stages).
+    pub fn compute(&self) -> &ComputeHandle {
+        &self.compute
+    }
+
     /// Embed a batch of texts into an `EmbeddingMatrix` (one unit vector
     /// per text, row order preserved). Internally splits into the largest
-    /// compiled batch bucket and pads the remainder.
+    /// compiled batch bucket; a small remainder runs through the smallest
+    /// bucket that covers it one sub-batch at a time.
     pub fn embed_texts(&self, texts: &[&str]) -> Result<EmbeddingMatrix> {
+        self.embed_with(texts, false)
+    }
+
+    fn embed_with(&self, texts: &[&str], fuse: bool) -> Result<EmbeddingMatrix> {
         let mut out = EmbeddingMatrix::with_capacity(self.dim, texts.len());
         match self.backend {
-            EmbedderBackend::Projection => self.embed_projection(texts, &mut out)?,
-            EmbedderBackend::Transformer => self.embed_transformer(texts, &mut out)?,
+            EmbedderBackend::Projection => self.embed_projection(texts, fuse, &mut out)?,
+            EmbedderBackend::Transformer => self.embed_transformer(texts, fuse, &mut out)?,
         }
         Ok(out)
     }
@@ -82,9 +93,57 @@ impl Embedder {
         Ok(m.row(0).to_vec())
     }
 
-    /// Largest compiled bucket ≤ remaining, or the smallest bucket
-    /// (padding) when remaining is below every bucket.
-    fn pick_bucket(buckets: &[usize], remaining: usize) -> usize {
+    /// Embed several independent requests' texts in **one fused pass** —
+    /// the cross-query batched entry point ([`crate::sched`]'s embed
+    /// stage): all texts are concatenated, run through the shape-bucketed
+    /// kernels together (so two concurrent single-text requests share one
+    /// `proj_32`/`enc_8` call instead of issuing two batch-1 calls), and
+    /// the rows are split back per request.
+    ///
+    /// Bit-equivalence: every embedding kernel computes its rows
+    /// independently, so each request's matrix is identical to what
+    /// [`Embedder::embed_texts`] returns for it alone.
+    pub fn embed_requests(&self, requests: &[Vec<String>]) -> Result<Vec<EmbeddingMatrix>> {
+        let refs: Vec<&str> = requests
+            .iter()
+            .flat_map(|r| r.iter().map(|s| s.as_str()))
+            .collect();
+        let all = self.embed_with(&refs, true)?;
+        let mut out = Vec::with_capacity(requests.len());
+        let mut row = 0;
+        for req in requests {
+            let mut m = EmbeddingMatrix::with_capacity(self.dim, req.len());
+            for _ in 0..req.len() {
+                m.push(all.row(row));
+                row += 1;
+            }
+            out.push(m);
+        }
+        Ok(out)
+    }
+
+    /// The widest compiled batch bucket of the active backend — the
+    /// natural width of a cross-query embed batch.
+    pub fn max_batch(&self) -> usize {
+        let buckets = match self.backend {
+            EmbedderBackend::Projection => &self.proj_batches,
+            EmbedderBackend::Transformer => &self.enc_batches,
+        };
+        buckets.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Bucket policy. Unfused (the historical path): largest compiled
+    /// bucket ≤ remaining, or the smallest bucket (padding) when
+    /// remaining is below every bucket — minimal padded compute, one
+    /// call per sub-batch. Fused (the cross-query batch scheduler):
+    /// smallest bucket ≥ remaining — **one** padded kernel dispatch
+    /// covers the whole batch, which is the point of coalescing.
+    fn pick_bucket(buckets: &[usize], remaining: usize, fuse: bool) -> usize {
+        if fuse {
+            if let Some(b) = buckets.iter().copied().filter(|&b| b >= remaining).min() {
+                return b;
+            }
+        }
         buckets
             .iter()
             .copied()
@@ -93,10 +152,15 @@ impl Embedder {
             .unwrap_or_else(|| buckets.iter().copied().min().unwrap())
     }
 
-    fn embed_projection(&self, texts: &[&str], out: &mut EmbeddingMatrix) -> Result<()> {
+    fn embed_projection(
+        &self,
+        texts: &[&str],
+        fuse: bool,
+        out: &mut EmbeddingMatrix,
+    ) -> Result<()> {
         let mut i = 0;
         while i < texts.len() {
-            let b = Self::pick_bucket(&self.proj_batches, texts.len() - i);
+            let b = Self::pick_bucket(&self.proj_batches, texts.len() - i, fuse);
             let take = b.min(texts.len() - i);
             let mut feats = vec![0.0f32; b * self.vocab];
             for (j, text) in texts[i..i + take].iter().enumerate() {
@@ -117,10 +181,15 @@ impl Embedder {
         Ok(())
     }
 
-    fn embed_transformer(&self, texts: &[&str], out: &mut EmbeddingMatrix) -> Result<()> {
+    fn embed_transformer(
+        &self,
+        texts: &[&str],
+        fuse: bool,
+        out: &mut EmbeddingMatrix,
+    ) -> Result<()> {
         let mut i = 0;
         while i < texts.len() {
-            let b = Self::pick_bucket(&self.enc_batches, texts.len() - i);
+            let b = Self::pick_bucket(&self.enc_batches, texts.len() - i, fuse);
             let take = b.min(texts.len() - i);
             let mut ids = vec![0i32; b * self.enc_seq];
             let mut mask = vec![0.0f32; b * self.enc_seq];
@@ -148,5 +217,44 @@ impl Embedder {
             i += take;
         }
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::shared_compute;
+
+    #[test]
+    fn fused_requests_match_individual_embeds() {
+        // Cross-query coalescing must be invisible in the numerics: every
+        // request's rows are bit-identical to embedding it alone.
+        for backend in [EmbedderBackend::Projection, EmbedderBackend::Transformer] {
+            let e = Embedder::new(shared_compute(), backend);
+            let requests: Vec<Vec<String>> = vec![
+                vec!["a lone query about topic zero t0w1".into()],
+                vec!["another concurrent query t1w2 t1w3".into()],
+                vec![
+                    "cluster re-embed row one t2w1".into(),
+                    "cluster re-embed row two t2w2".into(),
+                    "cluster re-embed row three t2w3".into(),
+                ],
+            ];
+            let fused = e.embed_requests(&requests).unwrap();
+            assert_eq!(fused.len(), requests.len());
+            for (req, got) in requests.iter().zip(&fused) {
+                let refs: Vec<&str> = req.iter().map(|s| s.as_str()).collect();
+                let solo = e.embed_texts(&refs).unwrap();
+                assert_eq!(got.data, solo.data, "{} diverged", backend.name());
+            }
+        }
+    }
+
+    #[test]
+    fn max_batch_reflects_backend_buckets() {
+        let p = Embedder::new(shared_compute(), EmbedderBackend::Projection);
+        let t = Embedder::new(shared_compute(), EmbedderBackend::Transformer);
+        assert!(p.max_batch() >= 2, "projection fuses multiple requests");
+        assert!(t.max_batch() >= 2, "encoder fuses multiple requests");
     }
 }

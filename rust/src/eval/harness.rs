@@ -112,18 +112,8 @@ pub fn run_workload(
     let sys = builder.clone_with_nprobe(Some(opts.nprobe.unwrap_or(built.profile.nprobe)));
     let pipeline = sys.pipeline(built, kind)?;
     if let Some(t) = opts.pin_threshold_ms {
-        let mut index = pipeline.index_mut(); // write lease
-        if let Some(edge) = index
-            .as_any_mut()
-            .downcast_mut::<crate::index::EdgeIndex>()
-        {
-            edge.pin_threshold(t);
-        } else if let Some(sharded) = index
-            .as_any_mut()
-            .downcast_mut::<crate::index::ShardedEdgeIndex>()
-        {
-            sharded.pin_threshold(t);
-        }
+        // Write lease; the VectorIndex accessor is a no-op on baselines.
+        pipeline.index_mut().pin_threshold(t);
     }
 
     // Warmup: serve a prefix without recording (steady-state residency).
@@ -161,32 +151,17 @@ fn summarize(
     wall: std::time::Duration,
 ) -> RunReport {
     let slo = built.profile.slo();
-    // Shared read lease: summarizing never mutates the index.
+    // Shared read lease: summarizing never mutates the index. All state
+    // comes through the VectorIndex accessors (inert on baselines).
     let index = pipeline.index();
     let resident = index.resident_bytes();
-    let (edge_cache, edge_cache_bytes, stored, stored_bytes, threshold) =
-        if let Some(e) = index.as_any().downcast_ref::<crate::index::EdgeIndex>() {
-            (
-                e.cache_stats(),
-                e.cache_used_bytes(),
-                e.stored_clusters(),
-                e.stored_bytes(),
-                e.threshold_ms(),
-            )
-        } else if let Some(sh) = index
-            .as_any()
-            .downcast_ref::<crate::index::ShardedEdgeIndex>()
-        {
-            (
-                sh.cache_stats(),
-                sh.cache_used_bytes(),
-                sh.stored_clusters(),
-                sh.stored_bytes(),
-                sh.threshold_ms(),
-            )
-        } else {
-            (None, 0, 0, 0, 0.0)
-        };
+    let (edge_cache, edge_cache_bytes, stored, stored_bytes, threshold) = (
+        index.cache_stats(),
+        index.cache_used_bytes(),
+        index.stored_clusters(),
+        index.stored_bytes(),
+        index.threshold_ms(),
+    );
     drop(index);
     let thrash = pipeline.metrics().counter("thrash_faults");
 

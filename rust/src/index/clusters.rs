@@ -106,13 +106,18 @@ impl ClusterSet {
 /// generation is deterministic (verified by `edge_vs_oracle` tests), and
 /// necessary to keep figure-scale benchmarks tractable on this testbed.
 /// `Live` really re-runs the embedding model through PJRT, exactly like a
-/// deployment would.
+/// deployment would; with a `batcher` attached, concurrent queries'
+/// on-demand cluster re-embeddings coalesce into fused kernel batches
+/// through the cross-query scheduler's embed stage (bit-identical rows —
+/// see [`crate::sched`]).
 #[derive(Clone)]
 pub enum EmbedSource {
     Prebuilt(Arc<EmbeddingMatrix>),
     Live {
         embedder: Embedder,
         texts: Arc<Vec<String>>,
+        /// Optional cross-query embed stage; None embeds inline.
+        batcher: Option<Arc<crate::sched::EmbedBatcher>>,
     },
 }
 
@@ -127,13 +132,20 @@ impl EmbedSource {
                 }
                 Ok(m)
             }
-            EmbedSource::Live { embedder, texts } => {
+            EmbedSource::Live {
+                embedder,
+                texts,
+                batcher,
+            } => {
                 let refs: Vec<&str> = meta
                     .chunk_ids
                     .iter()
                     .map(|&cid| texts[cid as usize].as_str())
                     .collect();
-                embedder.embed_texts(&refs)
+                match batcher {
+                    Some(b) => b.embed_texts(&refs),
+                    None => embedder.embed_texts(&refs),
+                }
             }
         }
     }

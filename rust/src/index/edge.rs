@@ -34,15 +34,15 @@
 //! bit-identical. See `docs/ARCHITECTURE.md` for the lock hierarchy.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{Arc, RwLock};
 
 use anyhow::Result;
 
 use crate::cache::{CacheStats, CostAwareCache, ThresholdController};
 use crate::config::{DeviceProfile, IndexKind, RetrievalConfig};
 use crate::index::{
-    AdmitCandidate, CacheAccess, CacheIntent, ClusterSet, EmbedSource, Scorer, SearchEvents,
-    SearchOutcome, SharedMemory, VectorIndex,
+    AdmitCandidate, CacheAccess, CacheIntent, ClusterSet, EmbedSource, ProbeTable, Scorer,
+    SearchEvents, SearchOutcome, SharedMemory, VectorIndex,
 };
 use crate::simtime::{Component, LatencyLedger, SimDuration};
 use crate::storage::{BlobStore, Region};
@@ -110,6 +110,9 @@ pub struct EdgeIndex {
     /// `i << 24` so shards sharing one `MemoryModel` never collide on
     /// their (shard-local) cluster ids.
     pub(crate) region_base: u32,
+    /// Memoized first-level snapshot for (batched) lock-free probing;
+    /// invalidated by every structural update. See [`ProbeTable`].
+    probe_snapshot: RwLock<Option<Arc<ProbeTable>>>,
 }
 
 /// One probed cluster's candidate hits, tagged with the cluster's
@@ -205,6 +208,7 @@ impl EdgeIndex {
             store_limit,
             update_gen: AtomicU64::new(0),
             region_base: 0,
+            probe_snapshot: RwLock::new(None),
         })
     }
 
@@ -339,6 +343,34 @@ impl EdgeIndex {
         Ok(vecmath::top_k(&scores, scores.len(), nprobe))
     }
 
+    /// Per-cluster liveness flags (tombstones are `false`). Shard probe
+    /// snapshots are assembled from this plus [`EdgeIndex::clusters`].
+    pub(crate) fn active_flags(&self) -> &[bool] {
+        &self.active
+    }
+
+    /// Current structural-update generation (probe-snapshot stamping).
+    pub(crate) fn update_generation(&self) -> u64 {
+        self.update_gen.load(Ordering::Acquire)
+    }
+
+    /// Drop the memoized probe snapshot (structural update landed).
+    pub(crate) fn invalidate_probe_snapshot(&mut self) {
+        *self.probe_snapshot.get_mut().unwrap() = None;
+    }
+
+    /// Build a fresh first-level snapshot: for a standalone index the
+    /// global id of row `i` is simply `i`.
+    fn build_probe_table(&self) -> ProbeTable {
+        ProbeTable {
+            centroids: self.clusters.centroids.clone(),
+            ids: (0..self.clusters.n_clusters() as u32).collect(),
+            active: self.active.clone(),
+            centroid_bytes: self.clusters.centroid_bytes(),
+            generation: self.update_gen.load(Ordering::Acquire),
+        }
+    }
+
     /// Walk a set of probed clusters — `(probe position, cluster id)`
     /// pairs in probe order — materializing each per the Fig. 9 chain and
     /// scoring its members. This is the shard unit of work: a standalone
@@ -383,6 +415,54 @@ impl EdgeIndex {
             });
         }
         Ok(walk)
+    }
+
+    /// Search using centroid scores a caller already computed against a
+    /// [`ProbeTable`] snapshot of this index — the batched-probe entry
+    /// point ([`crate::sched`] computes `scores` for several queries in
+    /// one fused `sim_{A}x{N}` call). Identical to [`VectorIndex::search`]
+    /// whenever `scores` equals the index's own masked centroid scores:
+    /// the probe charge, probe selection (ties included), cluster walk
+    /// and final top-k are the same code paths.
+    pub fn search_scored(
+        &self,
+        query: &[f32],
+        table: &ProbeTable,
+        scores: &[f32],
+        k: usize,
+    ) -> Result<SearchOutcome> {
+        anyhow::ensure!(
+            scores.len() == table.len(),
+            "probe scores ({}) must align with the probe table ({})",
+            scores.len(),
+            table.len()
+        );
+        let mut ledger = LatencyLedger::new();
+        ledger.charge(
+            Component::CentroidProbe,
+            self.device.mem_scan_cost(table.centroid_bytes),
+        );
+        let probes = vecmath::top_k(scores, scores.len(), self.nprobe);
+        let probed: Vec<u32> = probes.iter().map(|&(i, _)| table.ids[i]).collect();
+        let list: Vec<(u32, u32)> = probed
+            .iter()
+            .enumerate()
+            .map(|(pos, &c)| (pos as u32, c))
+            .collect();
+
+        let walk = self.search_clusters(query, &list, k)?;
+        ledger.merge(&walk.ledger);
+
+        let all_hits: Vec<(u32, f32)> = walk.groups.into_iter().flat_map(|g| g.hits).collect();
+        let hits = vecmath::top_k_hits(all_hits, k);
+
+        Ok(SearchOutcome {
+            hits,
+            ledger,
+            probed,
+            events: walk.events,
+            intents: vec![walk.intent],
+        })
     }
 
     /// Obtain one probed cluster's embeddings per the Fig. 9 decision
@@ -480,9 +560,7 @@ impl VectorIndex for EdgeIndex {
             .into_iter()
             .flat_map(|g| g.hits)
             .collect();
-        let scores: Vec<f32> = all_hits.iter().map(|&(_, s)| s).collect();
-        let top = vecmath::top_k(&scores, all_hits.len(), k);
-        let hits = top.into_iter().map(|(i, s)| (all_hits[i].0, s)).collect();
+        let hits = vecmath::top_k_hits(all_hits, k);
 
         Ok(SearchOutcome {
             hits,
@@ -519,6 +597,75 @@ impl VectorIndex for EdgeIndex {
             .map(|m| (m.chunk_ids.len() * 4 + 32) as u64)
             .sum();
         self.clusters.centroid_bytes() + meta_bytes + self.cache_used_bytes()
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        EdgeIndex::cache_stats(self)
+    }
+
+    fn cache_used_bytes(&self) -> u64 {
+        EdgeIndex::cache_used_bytes(self)
+    }
+
+    fn cached_clusters(&self) -> Vec<u32> {
+        EdgeIndex::cached_clusters(self)
+    }
+
+    fn stored_clusters(&self) -> usize {
+        EdgeIndex::stored_clusters(self)
+    }
+
+    fn stored_bytes(&self) -> u64 {
+        EdgeIndex::stored_bytes(self)
+    }
+
+    fn threshold_ms(&self) -> f64 {
+        EdgeIndex::threshold_ms(self)
+    }
+
+    fn pin_threshold(&mut self, threshold_ms: f64) {
+        EdgeIndex::pin_threshold(self, threshold_ms)
+    }
+
+    fn insert_chunk(&mut self, id: u32, text: &str, emb: &[f32]) -> Result<u32> {
+        EdgeIndex::insert_chunk(self, id, text, emb)
+    }
+
+    fn remove_chunk(&mut self, id: u32) -> Result<bool> {
+        EdgeIndex::remove_chunk(self, id)
+    }
+
+    fn probe_table(&self) -> Option<Arc<ProbeTable>> {
+        if let Some(t) = self.probe_snapshot.read().unwrap().as_ref() {
+            return Some(t.clone());
+        }
+        // Double-checked: another reader may have built it meanwhile.
+        let mut slot = self.probe_snapshot.write().unwrap();
+        Some(
+            slot.get_or_insert_with(|| Arc::new(self.build_probe_table()))
+                .clone(),
+        )
+    }
+
+    fn search_with_scores(
+        &self,
+        query: &[f32],
+        table: &ProbeTable,
+        scores: &[f32],
+        k: usize,
+    ) -> Result<SearchOutcome> {
+        // Staleness fence: the lease-based single-shard path probes and
+        // walks under one continuous engine read lease, so a snapshot
+        // scored before an update must not be combined with a walk after
+        // it. Updates here require the engine *write* lease, so a
+        // matching generation (checked under this search's read lease)
+        // guarantees the snapshot is exactly current; on a mismatch,
+        // re-probe in-lease — the unbatched path, correct by
+        // construction.
+        if table.generation != self.update_gen.load(Ordering::Acquire) {
+            return self.search(query, k);
+        }
+        self.search_scored(query, table, scores, k)
     }
 }
 
@@ -730,6 +877,7 @@ mod tests {
         let live = EmbedSource::Live {
             embedder: f.embedder.clone(),
             texts: Arc::new(f.corpus.chunks.iter().map(|c| c.text.clone()).collect()),
+            batcher: None,
         };
         let pre = EmbedSource::Prebuilt(f.emb.clone());
         let a = live.cluster_embeddings(meta).unwrap();

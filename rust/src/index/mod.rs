@@ -39,8 +39,9 @@ pub use edge::EdgeIndex;
 pub use flat::FlatIndex;
 pub use ivf::IvfIndex;
 pub use scorer::Scorer;
-pub use shard::ShardedEdgeIndex;
+pub use shard::{ShardStats, ShardedEdgeIndex};
 
+use crate::cache::CacheStats;
 use crate::config::IndexKind;
 use crate::simtime::{LatencyLedger, SimDuration};
 use crate::storage::MemoryModel;
@@ -113,6 +114,76 @@ pub struct CacheIntent {
     pub generation: u64,
 }
 
+/// A lock-free snapshot of an index's first level: every centroid row in
+/// ascending *global* cluster-id order, its global id, and a tombstone
+/// mask. Probing — including cross-query batched probing through the
+/// scheduler ([`crate::sched`]) — scores against this snapshot without
+/// taking any index or shard lease, so a probing query never queues
+/// behind an in-flight structural update.
+///
+/// Snapshots are invalidated by structural updates and rebuilt lazily on
+/// the next probe. Staleness semantics differ by index:
+///
+/// * **Sharded** ([`ShardedEdgeIndex`]): a query probing a
+///   just-superseded snapshot behaves exactly like a query that probed
+///   before the update landed — the same bounded race the sharded
+///   lease-based probe always had between its probe and its cluster
+///   walks (cluster ids are never reused, so stale ids stay valid and
+///   tombstoned clusters walk as empty).
+/// * **Single-shard** ([`EdgeIndex`]): the lease-based path probes and
+///   walks under one continuous engine read lease, so no such race ever
+///   existed there. To preserve that model,
+///   [`VectorIndex::search_with_scores`] on an [`EdgeIndex`] checks the
+///   snapshot's `generation` against the live update counter and falls
+///   back to a fresh in-lease probe when an update slipped in between.
+#[derive(Debug, Clone)]
+pub struct ProbeTable {
+    /// Centroid rows, one per (live or tombstoned) cluster, in ascending
+    /// global-id order — the exact traversal order the lease-based probe
+    /// scored in, so `top_k`'s lower-index tie preference is preserved.
+    pub centroids: EmbeddingMatrix,
+    /// Global cluster id of each row.
+    pub ids: Vec<u32>,
+    /// Liveness per row; tombstoned rows are masked to `-inf`.
+    pub active: Vec<bool>,
+    /// Total first-level bytes (including tombstones) for the modeled
+    /// [`crate::simtime::Component::CentroidProbe`] charge — identical to
+    /// what the lease-based probe charged.
+    pub centroid_bytes: u64,
+    /// Structural-update generation this snapshot was built at (the
+    /// owning index's counter; the single-shard staleness fence above).
+    pub generation: u64,
+}
+
+impl ProbeTable {
+    /// Number of centroid rows (live + tombstoned).
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    /// Scores of `query` against every row, tombstones masked to `-inf`.
+    /// Bit-identical to the lease-based probe: the same scorer computes
+    /// the same per-row inner products in the same order.
+    pub fn masked_scores(&self, scorer: &Scorer, query: &[f32]) -> Result<Vec<f32>> {
+        let mut scores = scorer.scores(query, &self.centroids)?;
+        self.mask(&mut scores);
+        Ok(scores)
+    }
+
+    /// Apply the tombstone mask to a raw score vector.
+    pub fn mask(&self, scores: &mut [f32]) {
+        for (s, &a) in scores.iter_mut().zip(&self.active) {
+            if !a {
+                *s = f32::NEG_INFINITY;
+            }
+        }
+    }
+}
+
 /// Result of one vector search.
 #[derive(Debug, Clone, Default)]
 pub struct SearchOutcome {
@@ -134,6 +205,13 @@ pub struct SearchOutcome {
 ///
 /// `Send + Sync` because the serving engine shares one index across its
 /// worker pool: reads go through `&self`, writes take an exclusive lease.
+///
+/// Beyond `search`/`commit`, the trait carries default-implemented
+/// accessors for the EdgeRAG-specific serving state (cache statistics,
+/// adaptive threshold, online updates, per-shard rows) so the engine,
+/// server and harness talk to one interface instead of downcasting to
+/// `EdgeIndex`-vs-`ShardedEdgeIndex`; the baselines inherit the inert
+/// defaults.
 pub trait VectorIndex: Send + Sync {
     fn kind(&self) -> IndexKind;
 
@@ -159,4 +237,105 @@ pub trait VectorIndex: Send + Sync {
     /// EdgeRAG-specific state — online updates, threshold pinning —
     /// through the trait object).
     fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+
+    // ---- EdgeRAG-family serving state (inert defaults for baselines) ----
+
+    /// Aggregate embedding-cache statistics (None when this configuration
+    /// has no cache).
+    fn cache_stats(&self) -> Option<CacheStats> {
+        None
+    }
+
+    /// Bytes resident in the embedding cache(s).
+    fn cache_used_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Cluster ids (global) currently resident in the embedding cache(s),
+    /// sorted — equivalence tests and the stats endpoint.
+    fn cached_clusters(&self) -> Vec<u32> {
+        Vec::new()
+    }
+
+    /// Clusters persisted in blob storage (selective storage).
+    fn stored_clusters(&self) -> usize {
+        0
+    }
+
+    /// Bytes persisted in blob storage.
+    fn stored_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Current adaptive caching threshold in ms (mean across shards for a
+    /// sharded index; 0 for configurations without a cache).
+    fn threshold_ms(&self) -> f64 {
+        0.0
+    }
+
+    /// Pin the caching threshold and disable adaptation (Fig. 7 sweeps).
+    /// No-op for configurations without a cache.
+    fn pin_threshold(&mut self, _threshold_ms: f64) {}
+
+    /// Per-shard serving rows (None when the index is not sharded).
+    fn shard_stats(&self) -> Option<Vec<ShardStats>> {
+        None
+    }
+
+    // ---- online updates (§5.4) ----
+
+    /// True when [`VectorIndex::insert_chunk_concurrent`] /
+    /// [`VectorIndex::remove_chunk_concurrent`] are supported, i.e. the
+    /// index scopes structural updates internally (per-shard write
+    /// leases) and may be mutated through `&self`.
+    fn supports_concurrent_updates(&self) -> bool {
+        false
+    }
+
+    /// Insert a chunk under an exclusive lease. Errors for configurations
+    /// without online updates (the baselines).
+    fn insert_chunk(&mut self, _id: u32, _text: &str, _emb: &[f32]) -> Result<u32> {
+        anyhow::bail!("{} index does not support online insertion", self.kind().name())
+    }
+
+    /// Remove a chunk under an exclusive lease. Errors for configurations
+    /// without online updates.
+    fn remove_chunk(&mut self, _id: u32) -> Result<bool> {
+        anyhow::bail!("{} index does not support online removal", self.kind().name())
+    }
+
+    /// Shard-scoped insert through a shared reference (sharded indexes
+    /// only — see [`VectorIndex::supports_concurrent_updates`]).
+    fn insert_chunk_concurrent(&self, _id: u32, _text: &str, _emb: &[f32]) -> Result<u32> {
+        anyhow::bail!("index does not support concurrent insertion")
+    }
+
+    /// Shard-scoped remove through a shared reference.
+    fn remove_chunk_concurrent(&self, _id: u32) -> Result<bool> {
+        anyhow::bail!("index does not support concurrent removal")
+    }
+
+    // ---- batched probing (the cross-query scheduler's hooks) ----
+
+    /// A lock-free snapshot of the first level for (possibly cross-query
+    /// batched) centroid scoring, or None when this index has no
+    /// centroid level (flat baseline). See [`ProbeTable`].
+    fn probe_table(&self) -> Option<Arc<ProbeTable>> {
+        None
+    }
+
+    /// Search using centroid scores a caller already computed against
+    /// [`VectorIndex::probe_table`] (`scores[i]` scores `table.ids[i]`,
+    /// tombstones masked). Must return exactly what [`VectorIndex::search`]
+    /// returns for the same query when the table is current. The default
+    /// ignores the precomputed scores and re-searches.
+    fn search_with_scores(
+        &self,
+        query: &[f32],
+        _table: &ProbeTable,
+        _scores: &[f32],
+        k: usize,
+    ) -> Result<SearchOutcome> {
+        self.search(query, k)
+    }
 }

@@ -13,6 +13,9 @@ use crate::vecmath::{self, EmbeddingMatrix};
 pub struct Scorer {
     compute: ComputeHandle,
     sim_rows: Vec<usize>,
+    /// Query-batch widths of the compiled `sim_{A}x{N}` family, ascending
+    /// (`[1]` on manifests predating cross-query batching).
+    sim_batches: Vec<usize>,
     kmeans_batch: usize,
     kmeans_rows: usize,
     dim: usize,
@@ -23,8 +26,14 @@ impl Scorer {
     /// manifest.
     pub fn new(compute: ComputeHandle) -> Self {
         let m = compute.manifest();
+        let mut sim_batches = m.sim_batches.clone();
+        if sim_batches.is_empty() {
+            sim_batches.push(1);
+        }
+        sim_batches.sort_unstable();
         Scorer {
             sim_rows: m.sim_rows.clone(),
+            sim_batches,
             kmeans_batch: 32,
             kmeans_rows: 512,
             dim: m.dim,
@@ -74,6 +83,79 @@ impl Scorer {
             )?;
             out.extend_from_slice(&res[0][..take]);
             start += take;
+        }
+        Ok(out)
+    }
+
+    /// Widest compiled query batch of the `sim_{A}x{N}` family — the
+    /// natural width of a cross-query probe batch.
+    pub fn max_sim_batch(&self) -> usize {
+        *self.sim_batches.last().unwrap()
+    }
+
+    /// Scores of **several queries** against the same rows in fused
+    /// `sim_{A}x{N}` kernel calls — the cross-query batched counterpart
+    /// of [`Scorer::scores`]. Queries are chunked into the smallest
+    /// compiled query-batch bucket that fits (padding rows are zero and
+    /// sliced away); rows are tiled exactly like the single-query path.
+    ///
+    /// Bit-equivalence: the similarity kernels compute independent
+    /// per-(query, row) inner products, so each query's score vector is
+    /// identical to what `scores` returns for it alone (verified by
+    /// `multi_query_scores_match_single` below).
+    pub fn scores_multi(
+        &self,
+        queries: &[&[f32]],
+        rows: &EmbeddingMatrix,
+    ) -> Result<Vec<Vec<f32>>> {
+        assert_eq!(rows.dim, self.dim);
+        if queries.len() == 1 {
+            return Ok(vec![self.scores(queries[0], rows)?]);
+        }
+        let n = rows.len();
+        let max_rows = *self.sim_rows.last().unwrap();
+        let mut out: Vec<Vec<f32>> = queries.iter().map(|_| Vec::with_capacity(n)).collect();
+        let mut qi = 0;
+        while qi < queries.len() {
+            let remaining = queries.len() - qi;
+            // Smallest compiled query bucket that covers the remainder
+            // (largest bucket when the remainder exceeds every bucket).
+            let qb = self
+                .sim_batches
+                .iter()
+                .copied()
+                .find(|&b| b >= remaining)
+                .unwrap_or_else(|| *self.sim_batches.last().unwrap());
+            let take_q = qb.min(remaining);
+            let mut qbuf = Vec::with_capacity(qb * self.dim);
+            for q in &queries[qi..qi + take_q] {
+                assert_eq!(q.len(), self.dim);
+                qbuf.extend_from_slice(q);
+            }
+            qbuf.resize(qb * self.dim, 0.0);
+
+            let mut start = 0;
+            while start < n {
+                let take = (n - start).min(max_rows);
+                let bucket = self.bucket_for(take);
+                let mut chunk = Vec::with_capacity(bucket * self.dim);
+                chunk.extend_from_slice(
+                    &rows.data[start * self.dim..(start + take) * self.dim],
+                );
+                chunk.resize(bucket * self.dim, 0.0);
+                let res = self.compute.run(
+                    &format!("sim_{qb}x{bucket}"),
+                    vec![
+                        Tensor::F32(qbuf.clone(), vec![qb, self.dim]),
+                        Tensor::F32(chunk, vec![bucket, self.dim]),
+                    ],
+                )?;
+                for (j, o) in out[qi..qi + take_q].iter_mut().enumerate() {
+                    o.extend_from_slice(&res[0][j * bucket..j * bucket + take]);
+                }
+                start += take;
+            }
+            qi += take_q;
         }
         Ok(out)
     }
@@ -128,5 +210,57 @@ impl Scorer {
             start += take;
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::testutil::shared_compute;
+
+    fn random_matrix(rng: &mut Rng, dim: usize, rows: usize) -> EmbeddingMatrix {
+        let mut m = EmbeddingMatrix::with_capacity(dim, rows);
+        for _ in 0..rows {
+            let row: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            m.push(&row);
+        }
+        m
+    }
+
+    #[test]
+    fn multi_query_scores_match_single() {
+        // The cross-query batched entry must be bit-identical to the
+        // per-query path for every query — the foundation of the batch
+        // scheduler's equivalence guarantee.
+        let scorer = Scorer::new(shared_compute());
+        let dim = scorer.dim();
+        let mut rng = Rng::new(42);
+        // 300 rows spans multiple row tiles at the 128/256 buckets; 11
+        // queries spans the 1/8/32 query buckets with padding.
+        let rows = random_matrix(&mut rng, dim, 300);
+        let queries = random_matrix(&mut rng, dim, 11);
+        let refs: Vec<&[f32]> = queries.iter_rows().collect();
+        let batched = scorer.scores_multi(&refs, &rows).unwrap();
+        assert_eq!(batched.len(), refs.len());
+        for (i, q) in refs.iter().enumerate() {
+            let single = scorer.scores(q, &rows).unwrap();
+            assert_eq!(batched[i], single, "query {i} diverged");
+        }
+    }
+
+    #[test]
+    fn multi_query_handles_edge_sizes() {
+        let scorer = Scorer::new(shared_compute());
+        let dim = scorer.dim();
+        let mut rng = Rng::new(7);
+        let rows = random_matrix(&mut rng, dim, 3);
+        let q = random_matrix(&mut rng, dim, 1);
+        let refs: Vec<&[f32]> = q.iter_rows().collect();
+        let one = scorer.scores_multi(&refs, &rows).unwrap();
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0], scorer.scores(refs[0], &rows).unwrap());
+        let none: Vec<&[f32]> = Vec::new();
+        assert!(scorer.scores_multi(&none, &rows).unwrap().is_empty());
     }
 }

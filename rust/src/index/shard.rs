@@ -18,14 +18,13 @@
 //! * a query's probed clusters execute as per-shard cluster walks, in
 //!   parallel on the shard pool, and the per-shard top-k heaps merge
 //!   back in probe order;
+//! * the centroid probe scores against a **lock-free [`ProbeTable`]
+//!   snapshot** (invalidated by structural updates, rebuilt lazily by
+//!   the next probe), so a newly arriving query takes no shard lease at
+//!   all during its probe and never waits behind an in-flight insert;
 //! * an online insert/remove takes only the owning shard's write lease:
 //!   cluster walks and intent commits touching other shards proceed
-//!   concurrently. (The centroid-probe step still reads every shard's
-//!   centroids one lock at a time, so a *newly arriving* query can wait
-//!   behind an in-flight structural update on that one shard during its
-//!   probe — bounded by the update, never by the whole index;
-//!   lifting the centroid table out of the shard lease is a ROADMAP
-//!   item);
+//!   concurrently;
 //! * each shard's deferred [`CacheIntent`] commits independently under
 //!   that shard's locks.
 //!
@@ -34,9 +33,10 @@
 //! Sharding must not change retrieval results. Three mechanisms make the
 //! sharded walk reproduce the sequential one exactly:
 //!
-//! 1. probes are selected from a **global** score table (per-shard
-//!    centroid scores spliced back into global cluster order), so the
-//!    probed set and order match the unsharded probe;
+//! 1. probes are selected from a **global** score table (the
+//!    [`ProbeTable`] snapshot holds every shard's centroids spliced into
+//!    global cluster order), so the probed set and order — ties
+//!    included — match the unsharded probe;
 //! 2. every shard runs the *same* cluster-walk code
 //!    ([`EdgeIndex::search_clusters`]) over its subsequence of the probe
 //!    order, tagging each cluster's candidates with their global probe
@@ -63,13 +63,14 @@
 //! ## Locking
 //!
 //! Lock order is strictly `shard RwLock → controller → cache → memory
-//! model`, and no thread ever holds two shard locks at once (probing and
-//! routing visit shards sequentially, one read lock at a time; fan-out
-//! workers each take exactly one). See `docs/ARCHITECTURE.md` for the
-//! full hierarchy including the engine lease above this one.
+//! model`, and no thread ever holds two shard locks at once (probing
+//! reads only the snapshot; routing and snapshot rebuilds visit shards
+//! sequentially, one read lock at a time; fan-out workers each take
+//! exactly one). See `docs/ARCHITECTURE.md` for the full hierarchy
+//! including the engine lease above this one.
 
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 
 use anyhow::Result;
@@ -78,9 +79,10 @@ use crate::cache::CacheStats;
 use crate::config::{DeviceProfile, IndexKind, RetrievalConfig};
 use crate::index::edge::{ClusterHits, ClusterWalk};
 use crate::index::{
-    CacheIntent, ClusterMeta, ClusterSet, EdgeIndex, EmbedSource, Scorer, SearchEvents,
-    SearchOutcome, SharedMemory, VectorIndex,
+    CacheIntent, ClusterMeta, ClusterSet, EdgeIndex, EmbedSource, ProbeTable, Scorer,
+    SearchEvents, SearchOutcome, SharedMemory, VectorIndex,
 };
+use crate::pool::{Job, SubmitError, WorkerPool};
 use crate::simtime::{Component, LatencyLedger, SimDuration};
 use crate::storage::BlobStore;
 use crate::vecmath::{self, EmbeddingMatrix};
@@ -88,66 +90,6 @@ use crate::vecmath::{self, EmbeddingMatrix};
 /// Hard ceiling on the shard count: shard `i` namespaces its memory-model
 /// regions at `i << 24`, leaving 24 bits of local cluster ids per shard.
 pub const MAX_SHARDS: usize = 256;
-
-// ---------------------------------------------------------------------------
-// Shard worker pool
-// ---------------------------------------------------------------------------
-
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-/// Persistent pool executing per-(query, shard) cluster walks. Workers
-/// are plain threads over one shared queue; any worker may serve any
-/// shard (shard state is behind per-shard `RwLock`s, and walks only take
-/// read locks, so two workers can walk the same shard concurrently).
-/// Threads are detached and exit when the pool (and with it the sender)
-/// drops.
-struct ShardPool {
-    /// `Mutex` so the pool is `Sync` on every supported toolchain.
-    tx: Mutex<mpsc::Sender<Job>>,
-    workers: usize,
-}
-
-impl ShardPool {
-    fn new(workers: usize) -> ShardPool {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        for i in 0..workers {
-            let rx = rx.clone();
-            std::thread::Builder::new()
-                .name(format!("edgerag-shard-{i}"))
-                .spawn(move || loop {
-                    let job = match rx.lock() {
-                        Ok(guard) => match guard.recv() {
-                            Ok(job) => job,
-                            Err(_) => break, // pool dropped: drain and exit
-                        },
-                        Err(_) => break, // queue mutex poisoned: stop cleanly
-                    };
-                    // Panic isolation: a panicking walk fails only its own
-                    // query (the caller sees the reply channel close), not
-                    // the pool.
-                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
-                })
-                .expect("spawning shard worker thread");
-        }
-        ShardPool {
-            tx: Mutex::new(tx),
-            workers,
-        }
-    }
-
-    /// Try to enqueue; hands the job back if the pool has no workers (or
-    /// its queue is gone) so the caller can run it inline.
-    fn submit(&self, job: Job) -> std::result::Result<(), Job> {
-        if self.workers == 0 {
-            return Err(job);
-        }
-        match self.tx.lock() {
-            Ok(tx) => tx.send(job).map_err(|e| e.0),
-            Err(_) => Err(job),
-        }
-    }
-}
 
 // ---------------------------------------------------------------------------
 // Per-shard serving counters
@@ -203,7 +145,24 @@ pub struct ShardedEdgeIndex {
     counters: Vec<ShardCounters>,
     nprobe: usize,
     device: DeviceProfile,
-    pool: ShardPool,
+    scorer: Scorer,
+    /// Persistent pool executing per-(query, shard) cluster walks. Any
+    /// worker may serve any shard (walks take only shard read leases).
+    pool: WorkerPool,
+    /// The spliced first-level snapshot queries probe against **without
+    /// any shard lease** — a probing query never queues behind an
+    /// in-flight structural update. Inserts/removes only mark it stale
+    /// (`table_stale`); the next probe rebuilds it lazily, so an update
+    /// burst pays one rebuild, not one per update. The lock is held only
+    /// to clone or swap the `Arc`.
+    probe_table: RwLock<Arc<ProbeTable>>,
+    /// Set by structural updates after their shard write completes;
+    /// cleared by the (serialized) lazy rebuild.
+    table_stale: AtomicBool,
+    /// Serializes snapshot rebuilds so concurrent probes after an update
+    /// trigger exactly one rebuild and later rebuilds see every
+    /// completed update.
+    table_rebuild: Mutex<()>,
 }
 
 impl ShardedEdgeIndex {
@@ -290,14 +249,91 @@ impl ShardedEdgeIndex {
         let workers = k
             .saturating_sub(1)
             .min(crate::config::default_shards());
-        Ok(ShardedEdgeIndex {
+        let index = ShardedEdgeIndex {
             kind,
             shards: Arc::new(built),
             counters: (0..k).map(|_| ShardCounters::default()).collect(),
             nprobe: retrieval.nprobe,
             device,
-            pool: ShardPool::new(workers),
-        })
+            scorer,
+            pool: WorkerPool::new("edgerag-shard", workers),
+            probe_table: RwLock::new(Arc::new(ProbeTable {
+                centroids: EmbeddingMatrix::new(dim),
+                ids: Vec::new(),
+                active: Vec::new(),
+                centroid_bytes: 0,
+                generation: 0,
+            })),
+            table_stale: AtomicBool::new(false),
+            table_rebuild: Mutex::new(()),
+        };
+        {
+            let _serial = index.table_rebuild.lock().unwrap();
+            index.rebuild_probe_table();
+        }
+        Ok(index)
+    }
+
+    /// The current probe snapshot, rebuilding lazily if a structural
+    /// update invalidated it. The common (fresh) path is one atomic load
+    /// plus an `Arc` clone.
+    fn probe_table_current(&self) -> Arc<ProbeTable> {
+        if self.table_stale.load(Ordering::Acquire) {
+            let _serial = self.table_rebuild.lock().unwrap();
+            // Claim-then-build: clear the flag *before* reading shard
+            // state, so an update landing mid-rebuild re-marks it and
+            // the next probe rebuilds again — a completed update can
+            // never be silently missed.
+            if self.table_stale.swap(false, Ordering::AcqRel) {
+                self.rebuild_probe_table();
+            }
+        }
+        self.probe_table.read().unwrap().clone()
+    }
+
+    /// Rebuild the spliced probe snapshot from the current shard state.
+    /// Caller must hold `table_rebuild`; takes one shard read lease at a
+    /// time — never two at once, per the lock hierarchy.
+    fn rebuild_probe_table(&self) {
+        let k = self.shards.len();
+        // Per-shard copies first (one lease at a time), splice after.
+        let mut parts: Vec<(EmbeddingMatrix, Vec<bool>)> = Vec::with_capacity(k);
+        let mut centroid_bytes = 0u64;
+        let mut generation = 0u64;
+        let mut width = 0usize;
+        for shard in self.shards.iter() {
+            let guard = shard.read().unwrap();
+            centroid_bytes += guard.clusters().centroid_bytes();
+            generation += guard.update_generation();
+            let centroids = guard.clusters().centroids.clone();
+            let active = guard.active_flags().to_vec();
+            width = width.max(centroids.len());
+            parts.push((centroids, active));
+        }
+        // Interleave into ascending global-id order (`l × k + s`) — the
+        // exact traversal order the lease-based probe spliced in, so
+        // `top_k`'s lower-index tie preference is preserved.
+        let dim = parts.first().map_or(0, |(c, _)| c.dim);
+        let total: usize = parts.iter().map(|(c, _)| c.len()).sum();
+        let mut centroids = EmbeddingMatrix::with_capacity(dim, total);
+        let mut ids = Vec::new();
+        let mut active = Vec::new();
+        for l in 0..width {
+            for (s, (cent, act)) in parts.iter().enumerate() {
+                if l < cent.len() {
+                    centroids.push(cent.row(l));
+                    ids.push((l * k + s) as u32);
+                    active.push(act[l]);
+                }
+            }
+        }
+        *self.probe_table.write().unwrap() = Arc::new(ProbeTable {
+            centroids,
+            ids,
+            active,
+            centroid_bytes,
+            generation,
+        });
     }
 
     /// Number of shards.
@@ -475,6 +511,11 @@ impl ShardedEdgeIndex {
         // merge/split inside the shard cannot misroute the chunk.
         let local = self.shards[target].write().unwrap().insert_chunk(id, text, emb)?;
         self.counters[target].inserts.fetch_add(1, Ordering::Relaxed);
+        // Invalidate the lock-free probe snapshot (marked after the
+        // write lease is released; the next probe rebuilds — queries on
+        // the old snapshot behave like queries that arrived just before
+        // this insert).
+        self.table_stale.store(true, Ordering::Release);
         Ok(local * self.shards.len() as u32 + target as u32)
     }
 
@@ -489,6 +530,7 @@ impl ShardedEdgeIndex {
         let removed = self.shards[s].write().unwrap().remove_chunk(id)?;
         if removed {
             self.counters[s].removes.fetch_add(1, Ordering::Relaxed);
+            self.table_stale.store(true, Ordering::Release);
         }
         Ok(removed)
     }
@@ -512,7 +554,7 @@ impl ShardedEdgeIndex {
         k: usize,
     ) -> Result<Vec<(usize, ClusterWalk)>> {
         let mut walks = Vec::with_capacity(work.len());
-        if work.len() <= 1 || self.pool.workers == 0 {
+        if work.len() <= 1 || self.pool.workers() == 0 {
             for (s, group) in work {
                 let walk = self.shards[s].read().unwrap().search_clusters(query, &group, k)?;
                 walks.push((s, walk));
@@ -541,7 +583,8 @@ impl ShardedEdgeIndex {
             });
             // A refused job (no workers / pool gone) runs on this thread;
             // its result still arrives through the channel.
-            if let Err(job) = self.pool.submit(job) {
+            if let Err(SubmitError::Full(job) | SubmitError::Closed(job)) = self.pool.submit(job)
+            {
                 job();
             }
             remote += 1;
@@ -561,58 +604,44 @@ impl ShardedEdgeIndex {
         }
         Ok(walks)
     }
-}
 
-impl VectorIndex for ShardedEdgeIndex {
-    fn kind(&self) -> IndexKind {
-        self.kind
-    }
-
-    fn search(&self, query: &[f32], k: usize) -> Result<SearchOutcome> {
+    /// Search using centroid scores a caller already computed against a
+    /// [`ProbeTable`] snapshot of this index ([`crate::sched`] computes
+    /// them for several queries in one fused `sim_{A}x{N}` call).
+    /// Identical to [`VectorIndex::search`] whenever `scores` equals the
+    /// snapshot's masked scores for this query — probe selection (ties
+    /// included), the fan-out walks and the probe-order merge are the
+    /// same code paths.
+    pub fn search_scored(
+        &self,
+        query: &[f32],
+        table: &ProbeTable,
+        scores: &[f32],
+        k: usize,
+    ) -> Result<SearchOutcome> {
+        anyhow::ensure!(
+            scores.len() == table.len(),
+            "probe scores ({}) must align with the probe table ({})",
+            scores.len(),
+            table.len()
+        );
         let n_shards = self.shards.len();
         let mut ledger = LatencyLedger::new();
 
-        // (1) centroid probe: per-shard masked scores, spliced back into
-        // global cluster order so probe selection (and its tie-breaks)
-        // matches the unsharded index exactly. One modeled charge for the
-        // whole (distributed but byte-identical) centroid table.
-        let mut shard_scores = Vec::with_capacity(n_shards);
-        let mut centroid_bytes = 0u64;
-        let mut width = 0usize;
-        for shard in self.shards.iter() {
-            let guard = shard.read().unwrap();
-            centroid_bytes += guard.clusters().centroid_bytes();
-            let scores = guard.probe_scores(query)?;
-            width = width.max(scores.len());
-            shard_scores.push(scores);
-        }
+        // One modeled charge for the whole (distributed but byte-
+        // identical) centroid table.
         ledger.charge(
             Component::CentroidProbe,
-            self.device.mem_scan_cost(centroid_bytes),
+            self.device.mem_scan_cost(table.centroid_bytes),
         );
-        // Dense (id, score) table over *real* clusters only, in ascending
-        // global-id order (`l × n_shards + s` interleaves exactly like the
-        // unsharded index's cluster order), so `top_k`'s lower-index tie
-        // preference reproduces the unsharded probe — and slots for
-        // shards shorter than `width` can never be selected.
-        let mut ids: Vec<u32> = Vec::new();
-        let mut scores: Vec<f32> = Vec::new();
-        for l in 0..width {
-            for (s, shard_sc) in shard_scores.iter().enumerate() {
-                if let Some(&sc) = shard_sc.get(l) {
-                    ids.push((l * n_shards + s) as u32);
-                    scores.push(sc);
-                }
-            }
-        }
-        let probes = vecmath::top_k(&scores, scores.len(), self.nprobe);
+        let probes = vecmath::top_k(scores, scores.len(), self.nprobe);
 
         // Group the probe list by owning shard, preserving each shard's
         // subsequence of the global probe order.
         let mut probed = Vec::with_capacity(probes.len());
         let mut groups: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n_shards];
         for (pos, &(i, _)) in probes.iter().enumerate() {
-            let g = ids[i] as usize;
+            let g = table.ids[i] as usize;
             probed.push(g as u32);
             groups[g % n_shards].push((pos as u32, (g / n_shards) as u32));
         }
@@ -627,7 +656,7 @@ impl VectorIndex for ShardedEdgeIndex {
                 .fetch_add(group.len() as u64, Ordering::Relaxed);
         }
 
-        // (2..6) fan the cluster walks out and merge.
+        // Fan the cluster walks out and merge.
         let mut walks = self.run_walks(query, work, k)?;
         walks.sort_by_key(|&(s, _)| s); // deterministic intent order
 
@@ -657,9 +686,7 @@ impl VectorIndex for ShardedEdgeIndex {
         // sequential walk's.
         all_groups.sort_by_key(|g| g.probe_pos);
         let all_hits: Vec<(u32, f32)> = all_groups.into_iter().flat_map(|g| g.hits).collect();
-        let scores: Vec<f32> = all_hits.iter().map(|&(_, s)| s).collect();
-        let top = vecmath::top_k(&scores, all_hits.len(), k);
-        let hits = top.into_iter().map(|(i, s)| (all_hits[i].0, s)).collect();
+        let hits = vecmath::top_k_hits(all_hits, k);
 
         Ok(SearchOutcome {
             hits,
@@ -668,6 +695,23 @@ impl VectorIndex for ShardedEdgeIndex {
             events,
             intents,
         })
+    }
+}
+
+impl VectorIndex for ShardedEdgeIndex {
+    fn kind(&self) -> IndexKind {
+        self.kind
+    }
+
+    /// (1) centroid probe against the lock-free spliced snapshot (global
+    /// cluster order, tombstones masked — probe selection and tie-breaks
+    /// identical to the unsharded index, and **no shard lease is taken**,
+    /// so a probing query never waits behind an in-flight insert), then
+    /// (2..6) per-shard fan-out walks and the probe-order merge.
+    fn search(&self, query: &[f32], k: usize) -> Result<SearchOutcome> {
+        let table = self.probe_table_current();
+        let scores = table.masked_scores(&self.scorer, query)?;
+        self.search_scored(query, &table, &scores, k)
     }
 
     /// Commit each shard's intent independently: only that shard's
@@ -695,6 +739,72 @@ impl VectorIndex for ShardedEdgeIndex {
             .iter()
             .map(|s| s.read().unwrap().resident_bytes())
             .sum()
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        ShardedEdgeIndex::cache_stats(self)
+    }
+
+    fn cache_used_bytes(&self) -> u64 {
+        ShardedEdgeIndex::cache_used_bytes(self)
+    }
+
+    fn cached_clusters(&self) -> Vec<u32> {
+        ShardedEdgeIndex::cached_clusters(self)
+    }
+
+    fn stored_clusters(&self) -> usize {
+        ShardedEdgeIndex::stored_clusters(self)
+    }
+
+    fn stored_bytes(&self) -> u64 {
+        ShardedEdgeIndex::stored_bytes(self)
+    }
+
+    fn threshold_ms(&self) -> f64 {
+        ShardedEdgeIndex::threshold_ms(self)
+    }
+
+    fn pin_threshold(&mut self, threshold_ms: f64) {
+        ShardedEdgeIndex::pin_threshold(self, threshold_ms)
+    }
+
+    fn shard_stats(&self) -> Option<Vec<ShardStats>> {
+        Some(ShardedEdgeIndex::shard_stats(self))
+    }
+
+    fn supports_concurrent_updates(&self) -> bool {
+        true
+    }
+
+    fn insert_chunk(&mut self, id: u32, text: &str, emb: &[f32]) -> Result<u32> {
+        ShardedEdgeIndex::insert_chunk(self, id, text, emb)
+    }
+
+    fn remove_chunk(&mut self, id: u32) -> Result<bool> {
+        ShardedEdgeIndex::remove_chunk(self, id)
+    }
+
+    fn insert_chunk_concurrent(&self, id: u32, text: &str, emb: &[f32]) -> Result<u32> {
+        ShardedEdgeIndex::insert_chunk(self, id, text, emb)
+    }
+
+    fn remove_chunk_concurrent(&self, id: u32) -> Result<bool> {
+        ShardedEdgeIndex::remove_chunk(self, id)
+    }
+
+    fn probe_table(&self) -> Option<Arc<ProbeTable>> {
+        Some(self.probe_table_current())
+    }
+
+    fn search_with_scores(
+        &self,
+        query: &[f32],
+        table: &ProbeTable,
+        scores: &[f32],
+        k: usize,
+    ) -> Result<SearchOutcome> {
+        self.search_scored(query, table, scores, k)
     }
 }
 
@@ -946,6 +1056,47 @@ mod tests {
         for i in 0..10u32 {
             assert!(idx.cluster_of(base + i).is_some(), "insert {i} lost");
         }
+    }
+
+    #[test]
+    fn probe_needs_no_shard_lease() {
+        // ROADMAP deferred item (a): the centroid probe reads only the
+        // lock-free snapshot — it must complete (and select exactly the
+        // probes a full search selects) even while EVERY shard's write
+        // lease is held by an in-flight structural update.
+        let f = fixture();
+        let idx = build_sharded(&f, "probe-free", 4);
+        let q = f.emb.row(10).to_vec();
+        let expect = idx.search(&q, 5).unwrap();
+        let guards: Vec<_> = idx.shards.iter().map(|s| s.write().unwrap()).collect();
+        let table = VectorIndex::probe_table(&idx).unwrap();
+        let scores = table.masked_scores(&f.scorer, &q).unwrap();
+        let probes = vecmath::top_k(&scores, scores.len(), 4);
+        drop(guards);
+        let probed: Vec<u32> = probes.iter().map(|&(i, _)| table.ids[i]).collect();
+        assert_eq!(probed, expect.probed, "snapshot probe diverged");
+    }
+
+    #[test]
+    fn remove_refreshes_probe_snapshot() {
+        // Tombstoning a cluster must propagate into the lock-free
+        // snapshot so later probes mask it out.
+        let f = fixture();
+        let idx = build_sharded(&f, "probe-refresh", 2);
+        let before = VectorIndex::probe_table(&idx).unwrap();
+        let live_before = before.active.iter().filter(|&&a| a).count();
+        // Drain one cluster below MERGE_THRESHOLD to force a merge.
+        let victim = idx.with_shard(0, |e| e.clusters().clusters[0].chunk_ids.clone());
+        for &chunk in victim.iter().take(victim.len().saturating_sub(1)) {
+            idx.remove_chunk(chunk).unwrap();
+        }
+        let after = VectorIndex::probe_table(&idx).unwrap();
+        let live_after = after.active.iter().filter(|&&a| a).count();
+        assert!(
+            live_after < live_before,
+            "merge must tombstone a cluster in the snapshot \
+             ({live_before} -> {live_after})"
+        );
     }
 
     #[test]

@@ -33,8 +33,11 @@ impl EdgeIndex {
             bail!("chunk id {id} already present");
         }
         // Invalidate in-flight cache intents: admissions gathered before
-        // this update may carry stale embeddings.
+        // this update may carry stale embeddings. The probe snapshot is
+        // dropped too (no reader can rebuild it mid-update: we hold
+        // `&mut self` — the engine or shard write lease).
         self.update_gen.fetch_add(1, Ordering::Release);
+        self.invalidate_probe_snapshot();
         // Nearest active centroid.
         let target = self
             .probe(emb, 1)?
@@ -63,6 +66,7 @@ impl EdgeIndex {
             return Ok(false);
         };
         self.update_gen.fetch_add(1, Ordering::Release);
+        self.invalidate_probe_snapshot();
         let chars = match self.dynamic.remove(&id) {
             Some((text, _)) => text.len() as u64,
             None => {

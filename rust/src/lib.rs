@@ -26,7 +26,9 @@ pub mod eval;
 pub mod index;
 pub mod json;
 pub mod llm;
+pub mod pool;
 pub mod runtime;
+pub mod sched;
 pub mod server;
 pub mod simtime;
 pub mod storage;

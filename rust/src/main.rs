@@ -136,10 +136,13 @@ USAGE: edgerag <command> [--options]
 
 COMMANDS
   serve   --dataset NAME --index KIND [--port P] [--device D]
-          [--workers N] [--shards N] [--transformer] [--real-prefill]
-          [--live-generation]
+          [--workers N] [--shards N] [--batching true|false]
+          [--batch-window-us U] [--max-inflight N] [--transformer]
+          [--real-prefill] [--live-generation]
           (--shards 0 = auto, one per core — the serve default;
-           --shards 1 = single-shard paper-exact index)
+           --shards 1 = single-shard paper-exact index;
+           --batching true — the serve default — coalesces concurrent
+           queries' embed/probe kernel calls into fused batches)
   query   --text \"...\" [--port P]
   stats   [--port P]
   bench   <table2|fig3|fig4|fig5|fig7|fig10|fig12|fig13|breakdown|
@@ -173,17 +176,40 @@ fn serve(args: &Args) -> Result<()> {
         Some(s) => s.parse().context("bad --shards")?,
         None => 0, // auto
     };
+    // Serving also defaults to cross-query batching (fused kernel calls
+    // under concurrent load); the library/config default stays off.
+    // `--batching false` disables; anything else but true/false errors
+    // loudly rather than silently picking a mode.
+    builder.retrieval.batching = match args.get("batching") {
+        Some("true") | None => true,
+        Some("false") => false,
+        Some(other) => bail!("bad --batching `{other}` (expected true or false)"),
+    };
+    if let Some(w) = args.get("batch-window-us") {
+        builder.retrieval.batch_window_us = w.parse().context("bad --batch-window-us")?;
+    }
+    if let Some(m) = args.get("max-inflight") {
+        builder.retrieval.max_inflight = m.parse().context("bad --max-inflight")?;
+    }
     let shards = builder.retrieval.resolved_shards();
     eprintln!("building dataset `{}` ({} chunks)…", dataset.name, dataset.n_chunks);
     let built = builder.build_dataset(&dataset)?;
     let pipeline = builder.pipeline(&built, kind)?;
     let addr = format!("127.0.0.1:{port}");
-    let server = Server::bind_with_workers(&addr, pipeline, builder.embedder(), workers)?;
+    let server = Server::bind_with_retrieval(
+        &addr,
+        pipeline,
+        builder.embedder(),
+        workers,
+        &builder.retrieval,
+    )?;
     eprintln!(
-        "serving `{}` with {} index on {addr} (device: {}, {workers} workers, {shards} shard(s))",
+        "serving `{}` with {} index on {addr} (device: {}, {workers} workers, {shards} shard(s), \
+         batching {})",
         dataset.name,
         kind.name(),
-        builder.device.name
+        builder.device.name,
+        if builder.retrieval.batching { "on" } else { "off" }
     );
     server.run()
 }

@@ -1,0 +1,250 @@
+//! Shared fixed-size worker pool over an mpsc job queue.
+//!
+//! One implementation serves the three places the serving stack needs a
+//! pool of plain threads draining a queue of boxed jobs:
+//!
+//! * the index shard pool (`index::shard`) — per-(query, shard) cluster
+//!   walks fanned out by [`crate::index::ShardedEdgeIndex`];
+//! * the request server's worker pool (`server`) — bounded admission of
+//!   client requests against the shared engine;
+//! * the batch scheduler (`sched`) — fused-kernel stage execution.
+//!
+//! Design points shared by all three (previously duplicated):
+//!
+//! * workers are detached threads over one `Mutex`-guarded receiver, so
+//!   dropping the pool never blocks on an in-flight job;
+//! * a panicking job fails only its own caller (the caller observes its
+//!   reply channel closing), never the worker — jobs run under
+//!   `catch_unwind`;
+//! * the queue closes when every submission handle drops; workers drain
+//!   what is left and exit.
+//!
+//! The queue is unbounded by default; [`WorkerPool::bounded`] caps it so
+//! submissions can be *rejected* (backpressure) instead of queueing
+//! without limit.
+
+use std::sync::{mpsc, Arc, Mutex};
+
+/// A unit of work for the pool.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Why a submission was refused. The job is handed back so the caller can
+/// run it inline or fail the request.
+pub enum SubmitError {
+    /// Bounded queue at capacity (backpressure; bounded pools only).
+    Full(Job),
+    /// Pool has no workers or its queue has closed.
+    Closed(Job),
+}
+
+impl std::fmt::Debug for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full(_) => f.write_str("SubmitError::Full"),
+            SubmitError::Closed(_) => f.write_str("SubmitError::Closed"),
+        }
+    }
+}
+
+enum Queue {
+    Unbounded(mpsc::Sender<Job>),
+    Bounded(mpsc::SyncSender<Job>),
+}
+
+/// Cloneable submission handle. All handles share one queue; the queue
+/// closes (and workers exit after draining) once every handle — including
+/// the pool's own — has dropped.
+#[derive(Clone)]
+pub struct PoolHandle {
+    /// `Mutex` so the handle is `Sync` on every supported toolchain; held
+    /// only for the (non-blocking) enqueue.
+    tx: Arc<Mutex<Queue>>,
+    workers: usize,
+}
+
+impl PoolHandle {
+    /// Enqueue a job. Never blocks: a bounded pool at capacity refuses
+    /// with [`SubmitError::Full`]; a pool with zero workers (or a closed
+    /// queue) refuses with [`SubmitError::Closed`] so the caller can run
+    /// the job inline.
+    pub fn submit(&self, job: Job) -> Result<(), SubmitError> {
+        if self.workers == 0 {
+            return Err(SubmitError::Closed(job));
+        }
+        let guard = match self.tx.lock() {
+            Ok(g) => g,
+            Err(_) => return Err(SubmitError::Closed(job)),
+        };
+        match &*guard {
+            Queue::Unbounded(tx) => tx.send(job).map_err(|e| SubmitError::Closed(e.0)),
+            Queue::Bounded(tx) => match tx.try_send(job) {
+                Ok(()) => Ok(()),
+                Err(mpsc::TrySendError::Full(job)) => Err(SubmitError::Full(job)),
+                Err(mpsc::TrySendError::Disconnected(job)) => Err(SubmitError::Closed(job)),
+            },
+        }
+    }
+
+    /// Number of worker threads behind this handle.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+/// Fixed-size worker pool. Dropping the pool drops its handle; workers
+/// exit once every cloned [`PoolHandle`] is gone and the queue drains.
+pub struct WorkerPool {
+    handle: PoolHandle,
+}
+
+impl WorkerPool {
+    /// Unbounded queue, `workers` threads named `{name}-{i}`. With
+    /// `workers == 0` no threads spawn and every submit hands the job
+    /// back ([`SubmitError::Closed`]) for inline execution.
+    pub fn new(name: &str, workers: usize) -> WorkerPool {
+        let (tx, rx) = mpsc::channel::<Job>();
+        Self::spawn_workers(name, workers, rx);
+        WorkerPool {
+            handle: PoolHandle {
+                tx: Arc::new(Mutex::new(Queue::Unbounded(tx))),
+                workers,
+            },
+        }
+    }
+
+    /// Bounded queue of at most `queue` waiting jobs — submissions beyond
+    /// that are refused with [`SubmitError::Full`] (admission control).
+    pub fn bounded(name: &str, workers: usize, queue: usize) -> WorkerPool {
+        let (tx, rx) = mpsc::sync_channel::<Job>(queue.max(1));
+        Self::spawn_workers(name, workers, rx);
+        WorkerPool {
+            handle: PoolHandle {
+                tx: Arc::new(Mutex::new(Queue::Bounded(tx))),
+                workers,
+            },
+        }
+    }
+
+    fn spawn_workers(name: &str, workers: usize, rx: mpsc::Receiver<Job>) {
+        let rx = Arc::new(Mutex::new(rx));
+        for i in 0..workers {
+            let rx = rx.clone();
+            std::thread::Builder::new()
+                .name(format!("{name}-{i}"))
+                .spawn(move || loop {
+                    // Hold the receiver lock only for the dequeue.
+                    let job = match rx.lock() {
+                        Ok(guard) => match guard.recv() {
+                            Ok(job) => job,
+                            Err(_) => break, // queue closed: drained, exit
+                        },
+                        Err(_) => break, // queue mutex poisoned: stop cleanly
+                    };
+                    // Panic isolation: a panicking job fails only its own
+                    // caller, not the worker.
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                })
+                .expect("spawning pool worker thread");
+        }
+    }
+
+    /// A cloneable submission handle.
+    pub fn handle(&self) -> PoolHandle {
+        self.handle.clone()
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.handle.workers
+    }
+
+    /// Enqueue on the pool's own handle (see [`PoolHandle::submit`]).
+    pub fn submit(&self, job: Job) -> Result<(), SubmitError> {
+        self.handle.submit(job)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_jobs_and_drains_on_drop() {
+        let pool = WorkerPool::new("test-pool", 2);
+        let done = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..16 {
+            let done = done.clone();
+            let tx = tx.clone();
+            pool.submit(Box::new(move || {
+                done.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            }))
+            .unwrap();
+        }
+        for _ in 0..16 {
+            rx.recv_timeout(std::time::Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(done.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn zero_workers_hands_job_back() {
+        let pool = WorkerPool::new("test-zero", 0);
+        let res = pool.submit(Box::new(|| {}));
+        match res {
+            Err(SubmitError::Closed(job)) => job(), // caller runs inline
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bounded_pool_rejects_when_full() {
+        // One worker blocked on a gate; the queue holds one job; the next
+        // submission must be refused with Full.
+        let pool = WorkerPool::bounded("test-bounded", 1, 1);
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let gate_rx = Arc::new(Mutex::new(gate_rx));
+        let gr = gate_rx.clone();
+        pool.submit(Box::new(move || {
+            let _ = gr.lock().unwrap().recv();
+        }))
+        .unwrap();
+        // Fill the one queue slot (retry until the worker has dequeued
+        // the blocker so the slot is actually free).
+        let mut second: Job = {
+            let gr = gate_rx.clone();
+            Box::new(move || {
+                let _ = gr.lock().unwrap().recv();
+            })
+        };
+        loop {
+            match pool.submit(second) {
+                Ok(()) => break,
+                Err(SubmitError::Full(job)) => {
+                    second = job;
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Err(other) => panic!("unexpected {other:?}"),
+            }
+        }
+        let refused = pool.submit(Box::new(|| {}));
+        assert!(matches!(refused, Err(SubmitError::Full(_))), "{refused:?}");
+        gate_tx.send(()).unwrap();
+        gate_tx.send(()).unwrap();
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_worker() {
+        let pool = WorkerPool::new("test-panic", 1);
+        pool.submit(Box::new(|| panic!("boom"))).unwrap();
+        let (tx, rx) = mpsc::channel();
+        pool.submit(Box::new(move || {
+            let _ = tx.send(());
+        }))
+        .unwrap();
+        rx.recv_timeout(std::time::Duration::from_secs(10))
+            .expect("worker survived the panic");
+    }
+}

@@ -105,6 +105,11 @@ pub struct Manifest {
     pub enc_seq: usize,
     pub prefill_seq: usize,
     pub sim_rows: Vec<usize>,
+    /// Query-batch widths of the similarity family: `sim_{A}x{N}` is
+    /// lowered for every A in this list × N in `sim_rows`. `[1]` for
+    /// manifests predating cross-query batching (single-query kernels
+    /// plus the fixed `sim_32x512` k-means artifact).
+    pub sim_batches: Vec<usize>,
     pub proj_batches: Vec<usize>,
     pub enc_batches: Vec<usize>,
     pub artifacts: Vec<ArtifactSpec>,
@@ -125,6 +130,7 @@ impl Manifest {
             enc_seq: 64,
             prefill_seq: 256,
             sim_rows: vec![128, 256, 512, 1024, 4096],
+            sim_batches: vec![1, 8, 32],
             proj_batches: vec![1, 32],
             enc_batches: vec![1, 8],
             artifacts: Vec::new(),
@@ -178,6 +184,12 @@ impl Manifest {
             enc_seq: v.req("enc_seq")?.as_usize().context("enc_seq")?,
             prefill_seq: v.req("prefill_seq")?.as_usize().context("prefill_seq")?,
             sim_rows: parse_usize_list(v.req("sim_rows")?)?,
+            // Optional for manifests built before cross-query batching:
+            // they only lowered single-query sim kernels.
+            sim_batches: match v.get("sim_batches") {
+                Some(b) => parse_usize_list(b)?,
+                None => vec![1],
+            },
             proj_batches: parse_usize_list(v.req("proj_batches")?)?,
             enc_batches: parse_usize_list(v.req("enc_batches")?)?,
             artifacts,
@@ -285,6 +297,7 @@ mod tests {
         let m = Manifest::builtin(&manifest_dir());
         assert_eq!((m.dim, m.vocab), (256, 4096));
         assert_eq!((m.enc_seq, m.prefill_seq), (64, 256));
+        assert_eq!(m.sim_batches, vec![1, 8, 32]);
         assert_eq!(m.proj_batches, vec![1, 32]);
         assert_eq!(m.enc_batches, vec![1, 8]);
     }

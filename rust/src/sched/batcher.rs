@@ -1,0 +1,345 @@
+//! The generic per-stage micro-batcher: one queue, one batcher thread,
+//! one fused execution per closed batch.
+//!
+//! ## Batch-closing policy
+//!
+//! A batch closes when the first of these happens:
+//!
+//! * it reaches the stage's **width** (the kernel's native batch size);
+//! * the **deadline** expires — the oldest item has waited
+//!   `batch_window` since it was enqueued. Under continuous load the
+//!   oldest item typically queued while the previous batch executed, so
+//!   its deadline is already (nearly) spent and the batcher drains
+//!   whatever is queued and executes immediately — the window only
+//!   *delays* sparse traffic, it never throttles a saturated stage;
+//! * the stage shuts down — queued items are **flushed** (executed, not
+//!   errored) so a clean shutdown completes in-flight work.
+//!
+//! Callers block on a per-item completion channel; the batcher thread is
+//! the only place the fused executor runs. Executors must not take any
+//! index or engine lease (the stage executors score/embed against
+//! snapshots and shared services only), which keeps the batcher outside
+//! the lock hierarchy entirely — a caller waiting in a batch can hold a
+//! shard read lease (cluster re-embedding) without risking deadlock.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+/// Live counters of one stage (all monotone).
+#[derive(Debug, Default)]
+pub(crate) struct StageCounters {
+    submitted: AtomicU64,
+    batches: AtomicU64,
+    batched_items: AtomicU64,
+    full_width: AtomicU64,
+    window_expired: AtomicU64,
+}
+
+/// A point-in-time view of one stage's counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageSnapshot {
+    /// Items submitted to the stage.
+    pub submitted: u64,
+    /// Fused executions.
+    pub batches: u64,
+    /// Items that went through fused executions.
+    pub batched_items: u64,
+    /// Batches that closed at the kernel's full width.
+    pub full_width: u64,
+    /// Batches that closed because the deadline expired.
+    pub window_expired: u64,
+}
+
+impl StageSnapshot {
+    /// Mean items per fused execution (batch occupancy).
+    pub fn occupancy(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_items as f64 / self.batches as f64
+        }
+    }
+}
+
+struct Item<I, O> {
+    input: I,
+    enqueued: Instant,
+    reply: mpsc::Sender<Result<O>>,
+}
+
+/// Outcome of a submission attempt.
+pub(crate) enum Submit<O, I> {
+    /// The item went through a (possibly fused) batch.
+    Done(Result<O>),
+    /// The stage is shut down; the input is handed back so the caller
+    /// can execute it inline (unbatched) — queries never fail just
+    /// because batching stopped.
+    Refused(I),
+}
+
+/// One stage: submit work items, get each one's slice of a fused result.
+pub(crate) struct Batcher<I: Send + 'static, O: Send + 'static> {
+    /// `None` once the stage is shut down. The mutex is held only for
+    /// the (non-blocking) enqueue.
+    tx: Mutex<Option<mpsc::Sender<Item<I, O>>>>,
+    counters: Arc<StageCounters>,
+}
+
+impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
+    /// Spawn the stage. `exec` receives a closed batch's inputs and must
+    /// return exactly one result per input, in order.
+    pub(crate) fn new<F>(name: &str, width: usize, window: Duration, exec: F) -> Batcher<I, O>
+    where
+        F: Fn(&[I]) -> Vec<Result<O>> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Item<I, O>>();
+        let counters = Arc::new(StageCounters::default());
+        let c = counters.clone();
+        let width = width.max(1);
+        std::thread::Builder::new()
+            .name(format!("edgerag-batch-{name}"))
+            .spawn(move || batch_loop(rx, width, window, exec, c))
+            .expect("spawning stage batcher thread");
+        Batcher {
+            tx: Mutex::new(Some(tx)),
+            counters,
+        }
+    }
+
+    /// Submit one item and block until its batch has executed. A shut
+    /// stage refuses and hands the input back for inline execution.
+    pub(crate) fn submit(&self, input: I) -> Submit<O, I> {
+        self.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        {
+            let guard = self.tx.lock().unwrap();
+            let Some(tx) = guard.as_ref() else {
+                return Submit::Refused(input);
+            };
+            if let Err(e) = tx.send(Item {
+                input,
+                enqueued: Instant::now(),
+                reply,
+            }) {
+                return Submit::Refused(e.0.input);
+            }
+        }
+        Submit::Done(
+            rx.recv()
+                .map_err(|_| anyhow::anyhow!("batch stage dropped the reply"))
+                .and_then(|r| r),
+        )
+    }
+
+    /// Close the stage: already-queued items are flushed as final
+    /// batches; later submissions are refused (callers run inline).
+    pub(crate) fn shutdown(&self) {
+        *self.tx.lock().unwrap() = None;
+    }
+
+    pub(crate) fn snapshot(&self) -> StageSnapshot {
+        StageSnapshot {
+            submitted: self.counters.submitted.load(Ordering::Relaxed),
+            batches: self.counters.batches.load(Ordering::Relaxed),
+            batched_items: self.counters.batched_items.load(Ordering::Relaxed),
+            full_width: self.counters.full_width.load(Ordering::Relaxed),
+            window_expired: self.counters.window_expired.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl<I: Send + 'static, O: Send + 'static> Drop for Batcher<I, O> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn batch_loop<I, O, F>(
+    rx: mpsc::Receiver<Item<I, O>>,
+    width: usize,
+    window: Duration,
+    exec: F,
+    counters: Arc<StageCounters>,
+) where
+    F: Fn(&[I]) -> Vec<Result<O>>,
+{
+    let mut open = true;
+    while open {
+        let first = match rx.recv() {
+            Ok(item) => item,
+            Err(_) => break, // stage shut down with an empty queue
+        };
+        let mut batch = vec![first];
+        // Greedy drain: take whatever queued while the previous batch
+        // executed.
+        while batch.len() < width {
+            match rx.try_recv() {
+                Ok(item) => batch.push(item),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        // Deadline: wait for stragglers only until the oldest item has
+        // been queued for `window`.
+        if open && batch.len() < width && !window.is_zero() {
+            let deadline = batch[0].enqueued + window;
+            loop {
+                let now = Instant::now();
+                if batch.len() >= width || now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(item) => batch.push(item),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        counters.window_expired.fetch_add(1, Ordering::Relaxed);
+                        break;
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        }
+        run_batch(batch, width, &exec, &counters);
+    }
+    // Clean shutdown with items queued: flush the remainder so every
+    // blocked caller completes.
+    loop {
+        let mut batch = Vec::new();
+        while batch.len() < width {
+            match rx.try_recv() {
+                Ok(item) => batch.push(item),
+                Err(_) => break,
+            }
+        }
+        if batch.is_empty() {
+            break;
+        }
+        run_batch(batch, width, &exec, &counters);
+    }
+}
+
+fn run_batch<I, O, F>(batch: Vec<Item<I, O>>, width: usize, exec: &F, counters: &StageCounters)
+where
+    F: Fn(&[I]) -> Vec<Result<O>>,
+{
+    counters.batches.fetch_add(1, Ordering::Relaxed);
+    counters
+        .batched_items
+        .fetch_add(batch.len() as u64, Ordering::Relaxed);
+    if batch.len() >= width {
+        counters.full_width.fetch_add(1, Ordering::Relaxed);
+    }
+    let mut inputs = Vec::with_capacity(batch.len());
+    let mut replies = Vec::with_capacity(batch.len());
+    for item in batch {
+        inputs.push(item.input);
+        replies.push(item.reply);
+    }
+    let outputs = exec(&inputs);
+    let produced = outputs.len();
+    for (reply, out) in replies.iter().zip(outputs) {
+        let _ = reply.send(out); // a caller that gave up is fine to miss
+    }
+    for reply in replies.iter().skip(produced) {
+        let _ = reply.send(Err(anyhow::anyhow!(
+            "stage executor returned {produced} results for a larger batch"
+        )));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doubler(width: usize, window: Duration) -> Batcher<u64, u64> {
+        Batcher::new("test", width, window, |xs: &[u64]| {
+            xs.iter().map(|&x| Ok(x * 2)).collect()
+        })
+    }
+
+    fn must(s: Submit<u64, u64>) -> u64 {
+        match s {
+            Submit::Done(r) => r.unwrap(),
+            Submit::Refused(_) => panic!("stage unexpectedly shut down"),
+        }
+    }
+
+    #[test]
+    fn single_item_executes_within_window() {
+        let b = doubler(32, Duration::from_millis(20));
+        let start = Instant::now();
+        assert_eq!(must(b.submit(21)), 42);
+        assert!(start.elapsed() < Duration::from_secs(5));
+        let s = b.snapshot();
+        assert_eq!((s.submitted, s.batches, s.batched_items), (1, 1, 1));
+        assert_eq!(s.window_expired, 1, "a lone item closes by deadline");
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        // Width far above the offered load: the deadline must close the
+        // batch, and concurrent submitters must coalesce into it.
+        let b = Arc::new(doubler(32, Duration::from_millis(60)));
+        let mut handles = Vec::new();
+        for i in 0..3u64 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || must(b.submit(i))));
+        }
+        let mut got: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 2, 4]);
+        let s = b.snapshot();
+        assert!(s.window_expired >= 1, "{s:?}");
+        assert!(s.batches <= 3, "{s:?}");
+        assert_eq!(s.batched_items, 3);
+    }
+
+    #[test]
+    fn width_closes_batch_without_waiting() {
+        let b = Arc::new(doubler(2, Duration::from_secs(30)));
+        let start = Instant::now();
+        let mut handles = Vec::new();
+        for i in 0..4u64 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || must(b.submit(i))));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Four items over width-2 batches: at most two full batches plus
+        // at most one deadline... but with a 30s window, finishing fast
+        // proves width (not the window) closed the batches.
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "width must close batches long before the 30s window"
+        );
+        let s = b.snapshot();
+        assert!(s.full_width >= 1, "{s:?}");
+    }
+
+    #[test]
+    fn shutdown_flushes_queued_items() {
+        // A huge window would hold the lone queued item for 30s; shutdown
+        // must flush it promptly instead of erroring it.
+        let b = Arc::new(doubler(32, Duration::from_secs(30)));
+        let b2 = b.clone();
+        let h = std::thread::spawn(move || must(b2.submit(5)));
+        std::thread::sleep(Duration::from_millis(100)); // let it enqueue
+        let start = Instant::now();
+        b.shutdown();
+        assert_eq!(h.join().unwrap(), 10, "queued item completes on shutdown");
+        assert!(start.elapsed() < Duration::from_secs(10));
+        assert!(
+            matches!(b.submit(1), Submit::Refused(1)),
+            "submissions after shutdown are refused with the input"
+        );
+    }
+}

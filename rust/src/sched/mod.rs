@@ -1,0 +1,272 @@
+//! Cross-query batch scheduler: coalesce concurrent queries' kernel work
+//! into fused batches.
+//!
+//! The serving path PR 1/PR 2 built runs N concurrent queries that each
+//! issue *batch-1* calls into kernels compiled to take many rows at once
+//! (`proj_32`, `enc_8`, `sim_32x512`). This subsystem sits **between the
+//! server front-end and the [`Engine`]**: queries submit per-stage work
+//! items to queues, a batcher thread per stage closes a batch at the
+//! kernel's native width or when a deadline (`batch_window_us`) expires,
+//! executes **one fused kernel call**, and distributes the rows back over
+//! completion channels.
+//!
+//! ```text
+//!  client ──► admission (max_inflight) ──► bypass? ──► Engine::handle
+//!                     │ no (≥2 in flight)
+//!                     ▼
+//!        [stage 1: embed queue]──batcher──► proj_{B}/enc_{B} (fused)
+//!                     ▼
+//!        [stage 2: probe queue]──batcher──► sim_{A}x{N} (fused, vs the
+//!                     ▼                     lock-free ProbeTable snapshot)
+//!        [stage 3: cluster walks + prefill + commit — per query, on the
+//!                  submitting thread, via Engine::handle_prepared]
+//! ```
+//!
+//! A third work-item kind — **on-demand cluster re-embedding** — flows
+//! through an embed stage of its own: with batching enabled the builder
+//! wires an [`EmbedBatcher`] into [`crate::index::EmbedSource::Live`],
+//! so concurrent queries generating different clusters coalesce their
+//! `proj_{B}`/`enc_{B}` calls too (a separate queue from query
+//! embedding: cluster re-embeds are many-text items with different
+//! latency needs, and they are submitted from under shard read leases).
+//!
+//! ## Latency, bypass and backpressure
+//!
+//! * **Bypass**: with at most one query in flight the scheduler calls
+//!   [`Engine::handle`] directly — a lone query under light load pays
+//!   zero batching latency and executes the exact unbatched path.
+//! * **Deadline**: the oldest queued item waits at most `batch_window_us`
+//!   before its partial batch executes; under saturation the deadline is
+//!   already spent by the time the batcher looks, so batches close by
+//!   width or by queue-drain without added waiting.
+//! * **Backpressure**: admissions beyond `max_inflight` are rejected
+//!   immediately (the error reaches the client as a normal protocol
+//!   error), bounding queue depth and memory.
+//!
+//! ## Equivalence
+//!
+//! Results are bit-identical to the unbatched path: the fused kernels
+//! compute independent per-row results (`rust/src/runtime/reference.rs`
+//! and the Pallas kernel contract), probing scores against the same
+//! [`crate::index::ProbeTable`] snapshot the unbatched search uses, and
+//! stage 3 runs the same walk/merge/commit code via
+//! [`Engine::handle_prepared`].
+//! Verified end to end by `rust/tests/sched_equivalence.rs`.
+//!
+//! ## Locks
+//!
+//! Stages hold **no** lease while queued or executing: the embed and
+//! probe executors touch only shared services and immutable snapshots.
+//! The engine read lease is taken (briefly) only inside stage 3 and when
+//! fetching the probe snapshot — never across a batch wait. See
+//! `docs/ARCHITECTURE.md` §"Batched execution model".
+
+pub mod batcher;
+pub mod stages;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::RetrievalConfig;
+use crate::coordinator::{Engine, QueryOutcome};
+use crate::index::Scorer;
+
+pub use batcher::StageSnapshot;
+pub use stages::{EmbedBatcher, ProbeBatcher};
+
+/// Scheduler knobs (the `batching`/`batch_window_us`/`max_inflight`
+/// fields of [`RetrievalConfig`], plus a test hook).
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Deadline: the oldest queued work item waits at most this long
+    /// before its partial batch executes.
+    pub batch_window_us: u64,
+    /// Queries admitted concurrently; further submissions are rejected
+    /// with an "overloaded" error. 0 = unlimited.
+    pub max_inflight: usize,
+    /// Serve a lone query inline through the unbatched path (zero added
+    /// latency under light load). Disabled by the equivalence tests to
+    /// force every query through the fused kernels.
+    pub bypass: bool,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            batch_window_us: 200,
+            max_inflight: 256,
+            bypass: true,
+        }
+    }
+}
+
+impl SchedConfig {
+    /// Lift the scheduler knobs out of a [`RetrievalConfig`].
+    pub fn from_retrieval(r: &RetrievalConfig) -> SchedConfig {
+        SchedConfig {
+            batch_window_us: r.batch_window_us,
+            max_inflight: r.max_inflight,
+            bypass: true,
+        }
+    }
+}
+
+/// Point-in-time scheduler statistics (the server's `stats` endpoint
+/// exposes these when batching is enabled).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedStats {
+    /// Queries submitted to the scheduler.
+    pub submitted: u64,
+    /// Queries served inline through the bypass path.
+    pub bypassed: u64,
+    /// Queries rejected by `max_inflight` backpressure.
+    pub rejected: u64,
+    /// Embed-stage counters (occupancy, window waits, …).
+    pub embed: StageSnapshot,
+    /// Probe-stage counters.
+    pub probe: StageSnapshot,
+}
+
+/// RAII admission permit: holding one counts the query against
+/// `max_inflight` until it completes (or errors).
+pub struct InflightPermit<'a> {
+    inflight: &'a AtomicUsize,
+}
+
+impl Drop for InflightPermit<'_> {
+    fn drop(&mut self) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The cross-query batch scheduler. Sits in front of a shared
+/// [`Engine`]; `handle` is `&self` and is called from as many server
+/// workers as are configured.
+pub struct BatchScheduler {
+    engine: Arc<Engine>,
+    embed: Arc<EmbedBatcher>,
+    probe: ProbeBatcher,
+    cfg: SchedConfig,
+    inflight: AtomicUsize,
+    submitted: AtomicU64,
+    bypassed: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl BatchScheduler {
+    /// Build the scheduler over an engine: one embed stage (the engine's
+    /// embedder backend at its widest compiled bucket) and one probe
+    /// stage (the `sim_{A}x{N}` family at its widest query batch).
+    pub fn new(engine: Arc<Engine>, cfg: SchedConfig) -> Arc<BatchScheduler> {
+        let window = Duration::from_micros(cfg.batch_window_us);
+        let embedder = engine.embedder().clone();
+        let scorer = Scorer::new(embedder.compute().clone());
+        let embed = EmbedBatcher::new(embedder, window);
+        let probe = ProbeBatcher::new(scorer, window);
+        Arc::new(BatchScheduler {
+            engine,
+            embed,
+            probe,
+            cfg,
+            inflight: AtomicUsize::new(0),
+            submitted: AtomicU64::new(0),
+            bypassed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        })
+    }
+
+    /// The engine this scheduler serves.
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Admit one query against `max_inflight`, or fail with the
+    /// overloaded error callers surface as a protocol error. Note: when
+    /// the scheduler sits behind the server's worker pool, the pool's
+    /// bounded admission queue (sized from the same `max_inflight` knob)
+    /// rejects first — this check guards *direct* library callers that
+    /// drive `handle` from unbounded thread counts.
+    pub fn try_admit(&self) -> Result<InflightPermit<'_>> {
+        let n = self.inflight.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.cfg.max_inflight > 0 && n > self.cfg.max_inflight {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!(
+                "server overloaded: {n} queries in flight (max_inflight = {})",
+                self.cfg.max_inflight
+            );
+        }
+        Ok(InflightPermit {
+            inflight: &self.inflight,
+        })
+    }
+
+    /// Serve one query end to end through the staged path (or the bypass
+    /// under light load). Results are bit-identical to
+    /// [`Engine::handle`].
+    pub fn handle(&self, text: &str) -> Result<QueryOutcome> {
+        let wall_start = Instant::now();
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        let _permit = self.try_admit()?;
+
+        // Lone query: the staged path cannot help (nothing to coalesce
+        // with) — serve the exact unbatched path, zero added latency.
+        if self.cfg.bypass && self.inflight.load(Ordering::SeqCst) <= 1 {
+            self.bypassed.fetch_add(1, Ordering::Relaxed);
+            return self.engine.handle(text);
+        }
+
+        // Stage 1: fused query embedding.
+        let q = self.embed.embed_one(text)?;
+
+        // Stage 2: fused centroid probe against the lock-free snapshot.
+        // The engine read lease is held only to clone the snapshot Arc,
+        // never across the batch wait.
+        let table = { self.engine.index().probe_table() };
+        let probe = match table {
+            Some(table) => {
+                let scores = self.probe.scores(q.clone(), table.clone())?;
+                Some((table, scores))
+            }
+            None => None, // flat baseline: no centroid level to batch
+        };
+
+        // Stage 3: cluster walks, chunk fetch, prefill and commit on the
+        // submitting thread — per-query state stays on this stack.
+        let probe_ref = probe
+            .as_ref()
+            .map(|(t, s)| (t.as_ref(), s.as_slice()));
+        self.engine.handle_prepared(text, &q, probe_ref, wall_start)
+    }
+
+    /// Record an admission rejection made on the scheduler's behalf (the
+    /// server's bounded worker-pool queue rejects *before* a worker can
+    /// call [`BatchScheduler::handle`]; counting it here keeps the
+    /// `rejected` stat meaning "requests turned away by overload
+    /// control" regardless of which layer fired).
+    pub fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Scheduler + per-stage statistics.
+    pub fn stats(&self) -> SchedStats {
+        SchedStats {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            bypassed: self.bypassed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            embed: self.embed.snapshot(),
+            probe: self.probe.snapshot(),
+        }
+    }
+
+    /// Close both stages: queued work is flushed and completes; later
+    /// queries execute inline (unbatched) — a draining server keeps
+    /// answering. Idempotent.
+    pub fn shutdown(&self) {
+        self.embed.shutdown();
+        self.probe.shutdown();
+    }
+}

@@ -1,0 +1,185 @@
+//! The concrete batch stages: cross-query embedding and cross-query
+//! centroid-probe scoring.
+//!
+//! Each stage wraps the generic `Batcher` (see [`crate::sched::batcher`])
+//! around one fused kernel entry point:
+//!
+//! * **embed** — [`Embedder::embed_requests`]: all requests' texts run
+//!   through one shape-bucketed `proj_{B}` / `enc_{B}` pass. Work items
+//!   are whole requests (a query's single text, or a cluster
+//!   re-embedding's member texts), so the serving path and the online
+//!   generation path share one stage.
+//! * **probe** — [`Scorer::scores_multi`]: queries that probe the same
+//!   [`ProbeTable`] snapshot score in one fused `sim_{A}x{N}` call;
+//!   queries holding different snapshots (a structural update landed
+//!   between them) fall into separate fused calls within the same batch.
+//!
+//! Both executors touch only shared services and immutable snapshots —
+//! never an index or engine lease — so stages compose with the lock
+//! hierarchy trivially (see `docs/ARCHITECTURE.md`).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::embedding::Embedder;
+use crate::index::{ProbeTable, Scorer};
+use crate::sched::batcher::{Batcher, StageSnapshot, Submit};
+use crate::vecmath::EmbeddingMatrix;
+
+// ---------------------------------------------------------------------------
+// Embed stage
+// ---------------------------------------------------------------------------
+
+/// A fused embedding stage. Two instances serve a batching-enabled
+/// system: the scheduler's query-embedding stage, and the stage the
+/// builder wires into [`crate::index::EmbedSource::Live`] for on-demand
+/// cluster re-embedding (separate queues — see [`crate::sched`] module
+/// docs).
+pub struct EmbedBatcher {
+    batcher: Batcher<Vec<String>, EmbeddingMatrix>,
+    /// Inline fallback once the stage is shut down (a drained server
+    /// keeps answering, just unbatched).
+    embedder: Embedder,
+}
+
+impl EmbedBatcher {
+    /// Spawn the stage over `embedder`'s kernels. Width is the widest
+    /// compiled batch bucket of the active backend.
+    pub fn new(embedder: Embedder, window: Duration) -> Arc<EmbedBatcher> {
+        let width = embedder.max_batch().max(2);
+        let exec_embedder = embedder.clone();
+        let batcher = Batcher::new("embed", width, window, move |reqs: &[Vec<String>]| {
+            match exec_embedder.embed_requests(reqs) {
+                Ok(mats) => mats.into_iter().map(Ok).collect(),
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    reqs.iter()
+                        .map(|_| Err(anyhow::anyhow!("fused embed failed: {msg}")))
+                        .collect()
+                }
+            }
+        });
+        Arc::new(EmbedBatcher { batcher, embedder })
+    }
+
+    /// Embed one request's texts through the fused stage (blocks until
+    /// the request's batch executes; runs inline when the stage is shut
+    /// down).
+    pub fn embed_texts(&self, texts: &[&str]) -> Result<EmbeddingMatrix> {
+        match self
+            .batcher
+            .submit(texts.iter().map(|s| s.to_string()).collect())
+        {
+            Submit::Done(r) => r,
+            Submit::Refused(owned) => {
+                let refs: Vec<&str> = owned.iter().map(|s| s.as_str()).collect();
+                self.embedder.embed_texts(&refs)
+            }
+        }
+    }
+
+    /// Embed a single text (the query-embedding work item).
+    pub fn embed_one(&self, text: &str) -> Result<Vec<f32>> {
+        let m = self.embed_texts(&[text])?;
+        anyhow::ensure!(m.len() == 1, "fused embed returned {} rows for 1 text", m.len());
+        Ok(m.row(0).to_vec())
+    }
+
+    /// Stage counters.
+    pub fn snapshot(&self) -> StageSnapshot {
+        self.batcher.snapshot()
+    }
+
+    /// Close the stage (queued requests still complete).
+    pub fn shutdown(&self) {
+        self.batcher.shutdown()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Probe stage
+// ---------------------------------------------------------------------------
+
+/// One probe work item: the query vector plus the snapshot it probes.
+type ProbeItem = (Vec<f32>, Arc<ProbeTable>);
+
+/// The fused centroid-probe stage: `(query, snapshot)` in, masked global
+/// score table out.
+pub struct ProbeBatcher {
+    batcher: Batcher<ProbeItem, Vec<f32>>,
+    /// Inline fallback once the stage is shut down.
+    scorer: Scorer,
+}
+
+impl ProbeBatcher {
+    /// Spawn the stage over `scorer`'s `sim_{A}x{N}` family. Width is the
+    /// widest compiled query batch.
+    pub fn new(scorer: Scorer, window: Duration) -> ProbeBatcher {
+        let width = scorer.max_sim_batch().max(2);
+        let exec_scorer = scorer.clone();
+        let batcher = Batcher::new(
+            "probe",
+            width,
+            window,
+            move |items: &[ProbeItem]| {
+                let mut out: Vec<Option<Result<Vec<f32>>>> =
+                    items.iter().map(|_| None).collect();
+                // Group by snapshot identity: one fused kernel call per
+                // distinct table (normally exactly one group).
+                let mut remaining: Vec<usize> = (0..items.len()).collect();
+                while let Some(&lead) = remaining.first() {
+                    let table = items[lead].1.clone();
+                    let group: Vec<usize> = remaining
+                        .iter()
+                        .copied()
+                        .filter(|&i| Arc::ptr_eq(&items[i].1, &table))
+                        .collect();
+                    remaining.retain(|i| !group.contains(i));
+                    let queries: Vec<&[f32]> =
+                        group.iter().map(|&i| items[i].0.as_slice()).collect();
+                    match exec_scorer.scores_multi(&queries, &table.centroids) {
+                        Ok(scored) => {
+                            for (&gi, mut s) in group.iter().zip(scored) {
+                                table.mask(&mut s);
+                                out[gi] = Some(Ok(s));
+                            }
+                        }
+                        Err(e) => {
+                            let msg = format!("{e:#}");
+                            for &gi in &group {
+                                out[gi] =
+                                    Some(Err(anyhow::anyhow!("fused probe failed: {msg}")));
+                            }
+                        }
+                    }
+                }
+                out.into_iter()
+                    .map(|o| o.expect("every batch item grouped"))
+                    .collect()
+            },
+        );
+        ProbeBatcher { batcher, scorer }
+    }
+
+    /// Masked centroid scores of `query` against `table`, computed in a
+    /// fused batch with whatever other queries are in flight (inline
+    /// when the stage is shut down).
+    pub fn scores(&self, query: Vec<f32>, table: Arc<ProbeTable>) -> Result<Vec<f32>> {
+        match self.batcher.submit((query, table)) {
+            Submit::Done(r) => r,
+            Submit::Refused((q, table)) => table.masked_scores(&self.scorer, &q),
+        }
+    }
+
+    /// Stage counters.
+    pub fn snapshot(&self) -> StageSnapshot {
+        self.batcher.snapshot()
+    }
+
+    /// Close the stage (queued probes still complete).
+    pub fn shutdown(&self) {
+        self.batcher.shutdown()
+    }
+}

@@ -4,21 +4,29 @@
 //!
 //! The crate cache has no async runtime, so the server is thread-based:
 //! one acceptor + one handler thread per connection, all submitting work
-//! to a fixed **worker pool** that executes requests against one shared
-//! [`Engine`]. Queries run read-parallel (the engine's index takes only
-//! a read lease per search). `insert`/`remove` go through
-//! [`Engine::insert`] / [`Engine::remove`]: on the (default for `serve`)
-//! sharded index they write-lease only the owning shard, so a worker
-//! inserting into shard A overlaps with workers querying shards B..N; on
-//! a single-shard index they fall back to the exclusive engine lease,
-//! draining in-flight searches first. The pool bounds concurrent engine
-//! work regardless of how many clients connect.
+//! to a fixed **worker pool** (the shared [`crate::pool`] utility) that
+//! executes requests against one shared [`Engine`]. The pool's admission
+//! queue is **bounded** (`max_inflight` from the retrieval config):
+//! submissions beyond workers + queued capacity are rejected immediately
+//! with an "overloaded" error instead of queueing without limit.
+//!
+//! With batching enabled (the `serve` default; `--batching false` or
+//! `RetrievalConfig::batching = false` disables it), queries flow
+//! through the cross-query batch scheduler ([`crate::sched`]): worker
+//! threads submit embedding/probe work items to per-stage queues, fused
+//! kernel calls serve whole batches, and each query's cluster walks,
+//! prefill and cache commit run back on its worker (stage 3). Results
+//! are bit-identical to the unbatched path. `insert`/`remove` go through
+//! [`Engine::insert`] / [`Engine::remove`]: on an index that supports
+//! concurrent updates (the sharded default) they write-lease only the
+//! owning shard; otherwise they fall back to the exclusive engine lease.
 //!
 //! Protocol (one JSON object per line):
 //!   {"op":"query","text":"..."}      → hits + latency breakdown
 //!   {"op":"insert","text":"..."}     → {"id": N, "cluster": C}
 //!   {"op":"remove","id":N}           → {"removed": bool}
-//!   {"op":"stats"}                   → serving metrics
+//!   {"op":"stats"}                   → serving metrics (+ scheduler
+//!                                      stage stats when batching is on)
 //!   {"op":"ping"}                    → {"ok": true}
 //!   {"op":"shutdown"}                → {"ok": true}, then the server stops
 //!
@@ -28,73 +36,17 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 
 use anyhow::{Context, Result};
 
+use crate::config::RetrievalConfig;
 use crate::coordinator::Engine;
 use crate::embedding::Embedder;
-use crate::index::{EdgeIndex, ShardedEdgeIndex};
 use crate::json::{self, Value};
+use crate::pool::{PoolHandle, SubmitError, WorkerPool};
+use crate::sched::{BatchScheduler, SchedConfig, StageSnapshot};
 use crate::simtime::Component;
-
-// ---------------------------------------------------------------------------
-// Worker pool
-// ---------------------------------------------------------------------------
-
-type Job = Box<dyn FnOnce() + Send + 'static>;
-
-/// Cloneable submission handle to the worker pool.
-#[derive(Clone)]
-pub struct PoolHandle {
-    tx: mpsc::Sender<Job>,
-}
-
-impl PoolHandle {
-    fn submit(&self, job: Job) -> Result<()> {
-        self.tx
-            .send(job)
-            .map_err(|_| anyhow::anyhow!("worker pool is shut down"))
-    }
-}
-
-/// Fixed-size worker pool over a shared job queue. Workers exit once the
-/// queue closes (every submission handle dropped) and it drains; the
-/// threads are detached so dropping the pool never blocks on a client
-/// that is still connected.
-struct WorkerPool {
-    handle: PoolHandle,
-}
-
-impl WorkerPool {
-    fn new(n: usize) -> WorkerPool {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
-        for i in 0..n.max(1) {
-            let rx = rx.clone();
-            std::thread::Builder::new()
-                .name(format!("edgerag-worker-{i}"))
-                .spawn(move || loop {
-                    // Hold the receiver lock only for the dequeue.
-                    let job = match rx.lock() {
-                        Ok(guard) => match guard.recv() {
-                            Ok(job) => job,
-                            Err(_) => break,
-                        },
-                        Err(_) => break, // queue mutex poisoned: stop cleanly
-                    };
-                    // Panic isolation: a panicking request must fail that
-                    // one response (the handler sees its reply channel
-                    // drop), not kill the worker and shrink the pool.
-                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
-                })
-                .expect("spawning worker thread");
-        }
-        WorkerPool {
-            handle: PoolHandle { tx },
-        }
-    }
-}
 
 // ---------------------------------------------------------------------------
 // Server
@@ -106,6 +58,8 @@ impl WorkerPool {
 pub struct ServerState {
     pub engine: Arc<Engine>,
     pub embedder: Embedder,
+    /// The cross-query batch scheduler; None serves the unbatched path.
+    sched: Option<Arc<BatchScheduler>>,
     running: AtomicBool,
 }
 
@@ -127,26 +81,57 @@ pub fn default_workers() -> usize {
 }
 
 impl Server {
-    /// Bind on `addr` (e.g. "127.0.0.1:7313") with the default pool size.
+    /// Bind on `addr` (e.g. "127.0.0.1:7313") with the default pool size
+    /// and no batching (library default).
     pub fn bind(addr: &str, engine: Engine, embedder: Embedder) -> Result<Server> {
         Self::bind_with_workers(addr, engine, embedder, default_workers())
     }
 
-    /// Bind with an explicit worker-pool size.
+    /// Bind with an explicit worker-pool size; batching off.
     pub fn bind_with_workers(
         addr: &str,
         engine: Engine,
         embedder: Embedder,
         workers: usize,
     ) -> Result<Server> {
+        let retrieval = RetrievalConfig {
+            batching: false,
+            max_inflight: 0, // historical behavior: unbounded queue
+            ..RetrievalConfig::default()
+        };
+        Self::bind_with_retrieval(addr, engine, embedder, workers, &retrieval)
+    }
+
+    /// Bind with full serving knobs: worker count, bounded admission
+    /// (`retrieval.max_inflight`) and the cross-query batch scheduler
+    /// (`retrieval.batching`).
+    pub fn bind_with_retrieval(
+        addr: &str,
+        engine: Engine,
+        embedder: Embedder,
+        workers: usize,
+        retrieval: &RetrievalConfig,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let engine = Arc::new(engine);
+        let sched = retrieval
+            .batching
+            .then(|| BatchScheduler::new(engine.clone(), SchedConfig::from_retrieval(retrieval)));
+        // Bounded admission: at most `max_inflight` requests queued
+        // beyond the ones workers are executing (unbounded when 0).
+        let workers = workers.max(1);
+        let pool = match retrieval.max_inflight {
+            0 => WorkerPool::new("edgerag-worker", workers),
+            cap => WorkerPool::bounded("edgerag-worker", workers, cap),
+        };
         Ok(Server {
             state: Arc::new(ServerState {
-                engine: Arc::new(engine),
+                engine,
                 embedder,
+                sched,
                 running: AtomicBool::new(true),
             }),
-            pool: WorkerPool::new(workers),
+            pool,
             listener,
         })
     }
@@ -164,10 +149,15 @@ impl Server {
             }
             let Ok(stream) = stream else { continue };
             let state = self.state.clone();
-            let pool = self.pool.handle.clone();
+            let pool = self.pool.handle();
             std::thread::spawn(move || {
                 let _ = handle_connection(stream, &state, &pool);
             });
+        }
+        // Drain-and-stop: close the scheduler stages so queued work
+        // completes and no new batches form.
+        if let Some(sched) = &self.state.sched {
+            sched.shutdown();
         }
         Ok(())
     }
@@ -225,12 +215,27 @@ fn serve_request(
         return Ok((Value::object(vec![("ok", true.into())]), true));
     }
     // Everything else executes on the worker pool: N workers run N
-    // queries concurrently against the shared engine.
+    // requests concurrently against the shared engine (through the batch
+    // scheduler when enabled). A full admission queue rejects the
+    // request here — bounded backpressure instead of unbounded queueing.
     let (reply_tx, reply_rx) = mpsc::channel();
-    let state = state.clone();
-    pool.submit(Box::new(move || {
-        let _ = reply_tx.send(dispatch(&op, &req, &state));
-    }))?;
+    let job_state = state.clone();
+    let job = Box::new(move || {
+        let _ = reply_tx.send(dispatch(&op, &req, &job_state));
+    });
+    match pool.submit(job) {
+        Ok(()) => {}
+        Err(SubmitError::Full(_)) => {
+            // Surface the rejection in the scheduler's overload stats so
+            // operators watching `{"op":"stats"}` see it, whichever
+            // layer turned the request away.
+            if let Some(sched) = &state.sched {
+                sched.note_rejected();
+            }
+            anyhow::bail!("server overloaded: admission queue full")
+        }
+        Err(SubmitError::Closed(_)) => anyhow::bail!("worker pool is shut down"),
+    }
     let response = reply_rx
         .recv()
         .map_err(|_| anyhow::anyhow!("worker dropped the request"))??;
@@ -241,9 +246,12 @@ fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
     match op {
         "query" => {
             let text = req.req("text")?.as_str().context("text")?;
-            // Read-parallel: `handle` takes &self; only the vector search
-            // holds the index read lease.
-            let out = state.engine.handle(text)?;
+            // Read-parallel; through the batch scheduler when enabled
+            // (bit-identical results, fused kernel calls under load).
+            let out = match &state.sched {
+                Some(sched) => sched.handle(text)?,
+                None => state.engine.handle(text)?,
+            };
             let hits = Value::array(out.hits.iter().map(|&(id, score)| {
                 Value::object(vec![
                     ("chunk", id.into()),
@@ -267,9 +275,9 @@ fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
         }
         "insert" => {
             let text = req.req("text")?.as_str().context("text")?;
-            // Shard-scoped on the sharded index (only the owning shard's
-            // write lease — queries to other shards keep flowing),
-            // engine-exclusive on a single-shard index.
+            // Shard-scoped on an index with concurrent updates (only the
+            // owning shard's write lease — queries to other shards keep
+            // flowing), engine-exclusive otherwise.
             let (id, cluster) = state.engine.insert(text)?;
             Ok(Value::object(vec![
                 ("id", id.into()),
@@ -283,46 +291,37 @@ fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
         }
         "stats" => {
             // Fully read-only: metrics snapshots + a shared index lease.
+            // All index state comes through the VectorIndex accessors —
+            // no concrete-type downcasts.
             let m = state.engine.metrics();
             let queries = m.queries();
             let retrieval = m.retrieval();
             let ttft = m.ttft();
             let (resident, hit_rate, threshold, shards) = {
                 let index = state.engine.index();
-                let resident = index.resident_bytes();
-                if let Some(e) = index.as_any().downcast_ref::<EdgeIndex>() {
-                    (
-                        resident,
-                        e.cache_stats().map(|s| s.hit_rate()).unwrap_or(0.0),
-                        e.threshold_ms(),
-                        None,
-                    )
-                } else if let Some(sh) = index.as_any().downcast_ref::<ShardedEdgeIndex>() {
-                    // Per-shard rows: where probes/inserts landed, each
-                    // shard's threshold and cache occupancy.
-                    let rows = Value::array(sh.shard_stats().into_iter().map(|s| {
-                        Value::object(vec![
-                            ("shard", s.shard.into()),
-                            ("clusters", s.clusters.into()),
-                            ("probes", s.probes.into()),
-                            ("cache_hits", s.cache_hits.into()),
-                            ("generated", s.generated.into()),
-                            ("loaded", s.loaded.into()),
-                            ("inserts", s.inserts.into()),
-                            ("removes", s.removes.into()),
-                            ("threshold_ms", s.threshold_ms.into()),
-                            ("cache_used_bytes", s.cache_used_bytes.into()),
-                        ])
-                    }));
-                    (
-                        resident,
-                        sh.cache_stats().map(|s| s.hit_rate()).unwrap_or(0.0),
-                        sh.threshold_ms(),
-                        Some(rows),
-                    )
-                } else {
-                    (resident, 0.0, 0.0, None)
-                }
+                (
+                    index.resident_bytes(),
+                    index.cache_stats().map(|s| s.hit_rate()).unwrap_or(0.0),
+                    index.threshold_ms(),
+                    index.shard_stats().map(|rows| {
+                        // Per-shard rows: where probes/inserts landed,
+                        // each shard's threshold and cache occupancy.
+                        Value::array(rows.into_iter().map(|s| {
+                            Value::object(vec![
+                                ("shard", s.shard.into()),
+                                ("clusters", s.clusters.into()),
+                                ("probes", s.probes.into()),
+                                ("cache_hits", s.cache_hits.into()),
+                                ("generated", s.generated.into()),
+                                ("loaded", s.loaded.into()),
+                                ("inserts", s.inserts.into()),
+                                ("removes", s.removes.into()),
+                                ("threshold_ms", s.threshold_ms.into()),
+                                ("cache_used_bytes", s.cache_used_bytes.into()),
+                            ])
+                        }))
+                    }),
+                )
             };
             let mut fields = vec![
                 ("queries", queries.into()),
@@ -337,10 +336,33 @@ fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
             if let Some(rows) = shards {
                 fields.push(("shards", rows));
             }
+            if let Some(sched) = &state.sched {
+                let s = sched.stats();
+                fields.push((
+                    "sched",
+                    Value::object(vec![
+                        ("submitted", s.submitted.into()),
+                        ("bypassed", s.bypassed.into()),
+                        ("rejected", s.rejected.into()),
+                        ("embed", stage_json(&s.embed)),
+                        ("probe", stage_json(&s.probe)),
+                    ]),
+                ));
+            }
             Ok(Value::object(fields))
         }
         other => anyhow::bail!("unknown op `{other}`"),
     }
+}
+
+fn stage_json(s: &StageSnapshot) -> Value {
+    Value::object(vec![
+        ("submitted", s.submitted.into()),
+        ("batches", s.batches.into()),
+        ("occupancy", s.occupancy().into()),
+        ("full_width", s.full_width.into()),
+        ("window_expired", s.window_expired.into()),
+    ])
 }
 
 /// Minimal blocking client for the line-JSON protocol (used by the CLI and

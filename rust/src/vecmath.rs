@@ -113,6 +113,19 @@ pub fn top_k(scores: &[f32], n: usize, k: usize) -> Vec<(usize, f32)> {
     best
 }
 
+/// Reduce candidate `(chunk id, score)` pairs to the final top-k,
+/// preserving [`top_k`]'s lower-index tie preference over the candidate
+/// order. One shared implementation so the unbatched, batched and
+/// sharded merge paths cannot drift in tie-breaking (the exact property
+/// the equivalence tests pin).
+pub fn top_k_hits(all_hits: Vec<(u32, f32)>, k: usize) -> Vec<(u32, f32)> {
+    let scores: Vec<f32> = all_hits.iter().map(|&(_, s)| s).collect();
+    top_k(&scores, all_hits.len(), k)
+        .into_iter()
+        .map(|(i, s)| (all_hits[i].0, s))
+        .collect()
+}
+
 /// argmax with index (assignment step of k-means).
 pub fn argmax(scores: &[f32]) -> usize {
     let mut bi = 0;

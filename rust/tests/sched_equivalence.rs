@@ -1,0 +1,294 @@
+//! Cross-query batch scheduler: batched-vs-unbatched equivalence and the
+//! scheduler's operational properties at the system level.
+//!
+//! The acceptance property: with batching enabled, search results
+//! (top-k ids, f32 scores, probed clusters, materialization events) and
+//! cache admissions are **bit-identical** to the unbatched path for the
+//! same request set — for both the single [`EdgeIndex`] and the sharded
+//! index (`EDGERAG_TEST_SHARDS` pins the shard counts; CI runs an
+//! explicit `--shards 4` pass).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
+use edgerag::coordinator::builder::SystemBuilder;
+use edgerag::coordinator::Engine;
+use edgerag::sched::{BatchScheduler, SchedConfig};
+use edgerag::testutil::shared_compute;
+
+fn builder(shards: usize, tag: &str) -> SystemBuilder {
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    // Per-test blob-store root: tests in this binary run in parallel and
+    // must not clear each other's stores.
+    b.options.state_dir =
+        std::env::temp_dir().join(format!("edgerag-sched-{tag}-{}", std::process::id()));
+    b.retrieval.nprobe = 4;
+    b.retrieval.shards = shards;
+    b
+}
+
+/// Bit-exact assertions hold on the reference backend by construction
+/// (per-row kernels). Compiled PJRT graphs are lowered separately per
+/// batch shape and may round differently in the low bits — the same
+/// reason golden-parity tests are artifact-gated (see
+/// `rust/vendor/README.md` §"Tier-1 quarantine").
+fn reference_backend() -> bool {
+    if shared_compute().backend_name() == "pjrt" {
+        eprintln!(
+            "skipping: batched bit-equivalence is asserted on the reference backend; \
+             compiled kernels may round differently across batch shapes"
+        );
+        return false;
+    }
+    true
+}
+
+/// Shard counts under test: `EDGERAG_TEST_SHARDS=N` pins a single count
+/// (the CI `--shards 4` pass); default covers both the plain EdgeIndex
+/// and a sharded index.
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("EDGERAG_TEST_SHARDS") {
+        Ok(v) => vec![v.parse().expect("EDGERAG_TEST_SHARDS must be an integer")],
+        Err(_) => vec![1, 4],
+    }
+}
+
+fn build_engine(shards: usize, tag: &str) -> (SystemBuilder, Arc<Engine>, Vec<String>) {
+    let b = builder(shards, tag);
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let engine = Arc::new(b.pipeline(&built, IndexKind::EdgeRag).unwrap());
+    // Pin the caching threshold so admissions are policy-deterministic:
+    // under concurrency the adaptive controller observes commits in a
+    // nondeterministic order, which could legitimately diverge the gate.
+    engine.index_mut().pin_threshold(0.0);
+    let queries: Vec<String> = built
+        .workload
+        .queries
+        .iter()
+        .take(24)
+        .map(|q| q.text.clone())
+        .collect();
+    (b, engine, queries)
+}
+
+fn sched_cfg(bypass: bool) -> SchedConfig {
+    SchedConfig {
+        batch_window_us: 300,
+        max_inflight: 0,
+        bypass,
+    }
+}
+
+#[test]
+fn forced_batching_is_bit_identical_sequentially() {
+    if !reference_backend() {
+        return;
+    }
+    // Sequential + bypass disabled: every query runs through the fused
+    // proj/sim kernels alone (padded batches), which must reproduce the
+    // unbatched path bit for bit — hits, scores, probes, events, modeled
+    // latency, and the admitted cache set.
+    for shards in shard_counts() {
+        let (_b1, unbatched, queries) = build_engine(shards, &format!("seq-u{shards}"));
+        let (_b2, batched_engine, _) = build_engine(shards, &format!("seq-b{shards}"));
+        let sched = BatchScheduler::new(batched_engine.clone(), sched_cfg(false));
+
+        for (i, q) in queries.iter().enumerate() {
+            let a = unbatched.handle(q).unwrap();
+            let b = sched.handle(q).unwrap();
+            assert_eq!(a.hits, b.hits, "shards={shards} query {i} hits");
+            assert_eq!(a.retrieval, b.retrieval, "shards={shards} query {i} retrieval");
+            assert_eq!(a.ttft, b.ttft, "shards={shards} query {i} ttft");
+            assert_eq!(
+                a.events.generated, b.events.generated,
+                "shards={shards} query {i} generated"
+            );
+            assert_eq!(
+                a.events.loaded, b.events.loaded,
+                "shards={shards} query {i} loaded"
+            );
+            assert_eq!(
+                a.events.cache_hits, b.events.cache_hits,
+                "shards={shards} query {i} cache hits"
+            );
+        }
+
+        // Identical cache admissions: same resident clusters, same
+        // insertion counters.
+        let (iu, ib) = (unbatched.index(), batched_engine.index());
+        assert_eq!(
+            iu.cached_clusters(),
+            ib.cached_clusters(),
+            "shards={shards} admitted sets diverged"
+        );
+        let (su, sb) = (iu.cache_stats().unwrap(), ib.cache_stats().unwrap());
+        assert_eq!(su.insertions, sb.insertions, "shards={shards}");
+        assert_eq!(su.hits, sb.hits, "shards={shards}");
+        assert_eq!(su.misses, sb.misses, "shards={shards}");
+
+        let stats = sched.stats();
+        assert_eq!(stats.bypassed, 0, "bypass was disabled");
+        assert!(stats.embed.batches > 0, "queries went through the stage");
+    }
+}
+
+#[test]
+fn concurrent_batched_load_matches_serial_results() {
+    if !reference_backend() {
+        return;
+    }
+    for shards in shard_counts() {
+        let (_b1, serial_engine, queries) = build_engine(shards, &format!("conc-s{shards}"));
+        let serial: Vec<Vec<(u32, f32)>> = queries
+            .iter()
+            .map(|q| serial_engine.handle(q).unwrap().hits)
+            .collect();
+
+        let (_b2, engine, _) = build_engine(shards, &format!("conc-b{shards}"));
+        let sched = BatchScheduler::new(engine.clone(), sched_cfg(false));
+        let passes = 3;
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let sched = &sched;
+                let queries = &queries;
+                let serial = &serial;
+                scope.spawn(move || {
+                    for round in 0..passes {
+                        for (i, q) in queries.iter().enumerate() {
+                            let out = sched.handle(q).unwrap();
+                            assert_eq!(
+                                out.hits, serial[i],
+                                "shards={shards} round {round} query {i}"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+
+        // The admitted cache set converges to the serial run's set (every
+        // probed, generated cluster is admitted at threshold 0).
+        assert_eq!(
+            serial_engine.index().cached_clusters(),
+            engine.index().cached_clusters(),
+            "shards={shards}"
+        );
+
+        // Under 8-way concurrency the stages must have actually fused
+        // work: strictly fewer batches than items.
+        let s = sched.stats();
+        assert_eq!(s.submitted, 8 * passes as u64 * queries.len() as u64);
+        assert!(
+            s.probe.batches < s.probe.batched_items,
+            "shards={shards}: no cross-query coalescing happened: {s:?}"
+        );
+        assert!(s.probe.occupancy() > 1.0, "shards={shards}: {s:?}");
+    }
+}
+
+#[test]
+fn live_generation_batches_cluster_reembedding() {
+    if !reference_backend() {
+        return;
+    }
+    // EmbedSource::Live + batching: on-demand cluster re-embedding flows
+    // through the shared embed stage, and results still match the
+    // inline-generation engine exactly.
+    let mut b_live = builder(1, "live-batched");
+    b_live.options.prebuilt_generation = false;
+    b_live.retrieval.batching = true;
+    let built = b_live.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let engine = Arc::new(b_live.pipeline(&built, IndexKind::EdgeRag).unwrap());
+    engine.index_mut().pin_threshold(0.0);
+    let sched = BatchScheduler::new(engine.clone(), sched_cfg(false));
+
+    let (_bu, unbatched, queries) = build_engine(1, "live-ref");
+    for (i, q) in queries.iter().take(8).enumerate() {
+        let a = unbatched.handle(q).unwrap();
+        let b = sched.handle(q).unwrap();
+        assert_eq!(a.hits, b.hits, "query {i} (live vs prebuilt batched)");
+    }
+}
+
+#[test]
+fn backpressure_rejects_beyond_max_inflight() {
+    let (_b, engine, queries) = build_engine(1, "backpressure");
+    let sched = BatchScheduler::new(
+        engine,
+        SchedConfig {
+            batch_window_us: 100,
+            max_inflight: 1,
+            bypass: true,
+        },
+    );
+    // Hold the only admission slot, then submit: must reject, not queue.
+    let permit = sched.try_admit().unwrap();
+    let err = sched.handle(&queries[0]).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("overloaded"),
+        "unexpected error: {err:#}"
+    );
+    assert_eq!(sched.stats().rejected, 1);
+    drop(permit);
+    // Slot released: the same query now serves fine.
+    assert!(!sched.handle(&queries[0]).unwrap().hits.is_empty());
+}
+
+#[test]
+fn shutdown_flushes_queued_work_and_serves_inline_after() {
+    let (_b, engine, queries) = build_engine(1, "shutdown");
+    // A huge window would hold partial batches for 10s; shutdown must
+    // flush them promptly and later queries must fall back inline.
+    let sched = BatchScheduler::new(
+        engine,
+        SchedConfig {
+            batch_window_us: 10_000_000,
+            max_inflight: 0,
+            bypass: false,
+        },
+    );
+    let started = Instant::now();
+    std::thread::scope(|scope| {
+        let sched = &sched;
+        let q = &queries[0];
+        let h = scope.spawn(move || sched.handle(q).unwrap());
+        // Let the query enqueue into the embed stage, then shut down.
+        std::thread::sleep(Duration::from_millis(150));
+        sched.shutdown();
+        let out = h.join().unwrap();
+        assert!(!out.hits.is_empty());
+    });
+    assert!(
+        started.elapsed() < Duration::from_secs(9),
+        "shutdown must flush the queued query, not wait out the window"
+    );
+    // Post-shutdown queries run inline (unbatched), still correct.
+    let out = sched.handle(&queries[1]).unwrap();
+    assert!(!out.hits.is_empty());
+}
+
+#[test]
+fn deadline_closes_partial_batches_under_thin_load() {
+    let (_b, engine, queries) = build_engine(1, "deadline");
+    let sched = BatchScheduler::new(engine, sched_cfg(false));
+    // 3 concurrent queries against width-32 stages: only the deadline
+    // (or queue-drain) can close these batches, and everyone completes.
+    std::thread::scope(|scope| {
+        for t in 0..3usize {
+            let sched = &sched;
+            let q = &queries[t];
+            scope.spawn(move || {
+                let out = sched.handle(q).unwrap();
+                assert!(!out.hits.is_empty(), "thread {t}");
+            });
+        }
+    });
+    let s = sched.stats();
+    assert_eq!(s.embed.batched_items, 3);
+    assert!(
+        s.embed.full_width == 0,
+        "3 items cannot fill a 32-wide batch: {s:?}"
+    );
+}

@@ -31,6 +31,58 @@ fn spawn_server() -> (std::net::SocketAddr, usize) {
 }
 
 #[test]
+fn batched_server_serves_and_reports_stage_stats() {
+    // End-to-end over TCP with the cross-query batch scheduler enabled
+    // (the `edgerag serve` default): concurrent clients get correct
+    // results and the stats endpoint exposes per-stage scheduler rows.
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    b.retrieval.nprobe = 4;
+    b.retrieval.batching = true;
+    b.retrieval.batch_window_us = 200;
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let pipeline = b.pipeline(&built, IndexKind::EdgeRag).unwrap();
+    let server =
+        Server::bind_with_retrieval("127.0.0.1:0", pipeline, b.embedder(), 4, &b.retrieval)
+            .unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || server.run().unwrap());
+
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let addr = addr.to_string();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            for i in 0..6 {
+                let resp = c.query(&format!("batched thread {t} query {i} c1 t0w1")).unwrap();
+                assert!(resp.get("hits").is_some(), "{resp}");
+                assert!(resp.get("error").is_none(), "{resp}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let stats = c.call(&Value::object(vec![("op", Value::str("stats"))])).unwrap();
+    let sched = stats.get("sched").expect("batched server exposes sched stats");
+    assert_eq!(
+        sched.get("submitted").and_then(|v| v.as_u64()),
+        Some(24),
+        "{sched}"
+    );
+    for stage in ["embed", "probe"] {
+        let s = sched.get(stage).unwrap_or_else(|| panic!("missing {stage}: {sched}"));
+        // Bypassed queries skip the stages; batched ones must balance:
+        // submitted items all came back through fused batches.
+        let submitted = s.get("submitted").and_then(|v| v.as_u64()).unwrap();
+        let batches = s.get("batches").and_then(|v| v.as_u64()).unwrap();
+        assert!(batches <= submitted, "{stage}: {s}");
+    }
+}
+
+#[test]
 fn full_protocol_roundtrip() {
     let (addr, corpus_len) = spawn_server();
     let mut c = Client::connect(&addr.to_string()).unwrap();
