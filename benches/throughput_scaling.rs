@@ -2,7 +2,8 @@
 //! through one shared `Engine` by 1, 2 and 4 client threads, then a
 //! shard-count sweep (`shards` ∈ {1, 2, 4}) at a fixed client count,
 //! then a cross-query batching sweep (scheduler off vs on) at ≥8
-//! clients.
+//! clients, then a skewed-placement rebalance sweep (one shard seeded
+//! with every cluster; spread before/after bounded rebalance rounds).
 //!
 //!     cargo bench --bench throughput_scaling [-- --limit N]
 //!
@@ -211,5 +212,71 @@ fn main() {
          (bit-identical results; fused-call occupancy above shows the \
          dispatch amortization the compiled backend banks on)",
         qps_on / qps_off
+    );
+
+    // ---- rebalance sweep: skewed placement, live migration, spread ----
+    // Worst-case drift: every cluster on shard 0 (what round-robin decay
+    // looks like in the limit). Bounded rebalance rounds must pull the
+    // per-shard load spread down while queries keep serving identical
+    // results (rust/tests/rebalance_churn.rs pins the bit-identity; this
+    // sweep reports the load numbers).
+    let clients = 4;
+    println!("\n== rebalance sweep: 4 shards, {clients} client threads ==");
+    let mut b = ctx.builder.clone();
+    b.retrieval.shards = 4;
+    let engine = b
+        .pipeline(&built, IndexKind::EdgeRag)
+        .expect("build sharded engine");
+    for q in &queries {
+        engine.handle(q).unwrap();
+    }
+    {
+        let index = engine.index();
+        let sharded = index
+            .as_any()
+            .downcast_ref::<edgerag::index::ShardedEdgeIndex>()
+            .expect("shards=4 builds the sharded index");
+        let globals: Vec<u32> = sharded
+            .cluster_loads()
+            .iter()
+            .flatten()
+            .map(|c| c.global)
+            .collect();
+        for &g in &globals {
+            sharded.migrate_cluster(g, 0).expect("skew migration");
+        }
+        let rows = |s: &edgerag::index::ShardStats| s.rows;
+        let spread_before = sharded.load_spread();
+        let per_shard: Vec<u64> = sharded.shard_stats().iter().map(rows).collect();
+        println!("skewed:     spread {spread_before:6} rows, per-shard {per_shard:?}");
+
+        let (mut rounds, mut migrations) = (0usize, 0usize);
+        loop {
+            let r = sharded.rebalance().expect("rebalance round");
+            rounds += 1;
+            migrations += r.migrated;
+            if r.migrated == 0 || rounds >= 16 {
+                break;
+            }
+        }
+        let spread_after = sharded.load_spread();
+        let per_shard: Vec<u64> = sharded.shard_stats().iter().map(rows).collect();
+        println!(
+            "rebalanced: spread {spread_after:6} rows, per-shard {per_shard:?} \
+             ({migrations} migrations over {rounds} rounds, ≤4 per round)"
+        );
+        println!(
+            "acceptance: post-rebalance load spread ×{:.2} of the skewed \
+             spread (target ≤0.5; searches stay bit-identical to the \
+             single-shard oracle throughout — rebalance_churn.rs)",
+            spread_after as f64 / spread_before.max(1) as f64
+        );
+    }
+    let (secs, served, wall_us) = drive(&engine, &queries, clients, passes);
+    println!(
+        "post-rebalance serving: {served} queries in {secs:.3}s → {:8.1} q/s \
+         (mean wall {}µs/query)",
+        served as f64 / secs,
+        wall_us / served.max(1)
     );
 }

@@ -162,6 +162,18 @@ impl CostAwareCache {
         self.entries.contains_key(&cluster)
     }
 
+    /// Statistics-neutral entry lookup: the cached embeddings plus their
+    /// profiled generation latency, with **no** hit/miss accounting and
+    /// no LFU mutation. This is the cross-shard migration export path
+    /// (and the rebalance planner's cached-mass accounting) — a cluster
+    /// being moved between shards is not a cache access and must not
+    /// perturb the hit-rate statistics the experiments report.
+    pub fn entry(&self, cluster: u32) -> Option<(Arc<EmbeddingMatrix>, f64)> {
+        self.entries
+            .get(&cluster)
+            .map(|e| (e.emb.clone(), e.gen_latency_ms))
+    }
+
     /// Read-path lookup: returns the cached embeddings without mutating
     /// LFU state, counting the hit/miss atomically. The counter bump and
     /// decay-epoch advance are deferred to [`touch`](Self::touch) /
@@ -467,7 +479,7 @@ mod tests {
     fn capacity_invariant_holds_randomized() {
         // Property-style sweep with the deterministic Rng: the capacity
         // invariant and stats consistency hold under arbitrary workloads.
-        let mut rng = crate::data::Rng::new(42);
+        let mut rng = crate::data::Rng::new(crate::testutil::test_seed(42));
         let mut c = CostAwareCache::new(64 * row_bytes(), 0.9);
         for _ in 0..2000 {
             let id = rng.below(50) as u32;

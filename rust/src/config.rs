@@ -491,6 +491,21 @@ pub struct RetrievalConfig {
     /// server's admission queue bound); beyond it requests are rejected
     /// with an "overloaded" error. 0 = unlimited.
     pub max_inflight: usize,
+    /// Online cross-shard rebalancing: when the round-robin placement
+    /// drifts under inserts/splits (EdgeRAG's cluster sizes are heavily
+    /// skewed), hot clusters migrate between shards one at a time without
+    /// stopping concurrent searches. **Off by default** — the library
+    /// keeps the static placement; `edgerag serve` turns it on. Only
+    /// meaningful with `shards > 1`.
+    pub rebalance: bool,
+    /// Run one rebalance round after every this many structural updates
+    /// (inserts + removes). Only meaningful with `rebalance`; an explicit
+    /// `{"op":"rebalance"}` server op triggers a round regardless.
+    pub rebalance_interval_ops: usize,
+    /// Cluster migrations allowed per rebalance round — bounds how much
+    /// copy/flip/retire work a single round may impose on the serving
+    /// path.
+    pub max_migrations_per_round: usize,
 }
 
 /// One shard per available core, clamped to a sensible serving range —
@@ -517,6 +532,9 @@ impl Default for RetrievalConfig {
             batching: false,
             batch_window_us: 200,
             max_inflight: 256,
+            rebalance: false,
+            rebalance_interval_ops: 128,
+            max_migrations_per_round: 4,
         }
     }
 }
@@ -544,6 +562,15 @@ impl RetrievalConfig {
             ("batching", self.batching.into()),
             ("batch_window_us", self.batch_window_us.into()),
             ("max_inflight", self.max_inflight.into()),
+            ("rebalance", self.rebalance.into()),
+            (
+                "rebalance_interval_ops",
+                self.rebalance_interval_ops.into(),
+            ),
+            (
+                "max_migrations_per_round",
+                self.max_migrations_per_round.into(),
+            ),
         ])
     }
 
@@ -586,6 +613,19 @@ impl RetrievalConfig {
             max_inflight: match v.get("max_inflight") {
                 Some(m) => m.as_usize().context("max_inflight")?,
                 None => 256,
+            },
+            // Optional for configs written before online rebalancing.
+            rebalance: match v.get("rebalance") {
+                Some(b) => b.as_bool().context("rebalance")?,
+                None => false,
+            },
+            rebalance_interval_ops: match v.get("rebalance_interval_ops") {
+                Some(n) => n.as_usize().context("rebalance_interval_ops")?,
+                None => 128,
+            },
+            max_migrations_per_round: match v.get("max_migrations_per_round") {
+                Some(n) => n.as_usize().context("max_migrations_per_round")?,
+                None => 4,
             },
         })
     }

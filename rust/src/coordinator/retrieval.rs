@@ -148,6 +148,14 @@ impl Engine {
         self.index.write().unwrap().remove_chunk(id)
     }
 
+    /// Run one online cross-shard rebalance round
+    /// ([`crate::index::rebalance`]) under the engine's *read* lease —
+    /// concurrent queries keep serving (bit-identically) throughout.
+    /// Inert (all-zero report) on unsharded indexes.
+    pub fn rebalance(&self) -> Result<crate::index::RebalanceReport> {
+        self.index.read().unwrap().rebalance()
+    }
+
     /// Shared metrics — recording is internally synchronized.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics

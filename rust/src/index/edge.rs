@@ -251,6 +251,36 @@ impl EdgeIndex {
             .map_or(0, |c| c.read().unwrap().used_bytes())
     }
 
+    /// One cluster's cached embeddings plus their profiled generation
+    /// latency, without touching hit/miss statistics (migration export
+    /// and rebalance load accounting — see [`CostAwareCache::entry`]).
+    pub(crate) fn cached_entry(
+        &self,
+        cluster: u32,
+    ) -> Option<(std::sync::Arc<crate::vecmath::EmbeddingMatrix>, f64)> {
+        self.cache
+            .as_ref()
+            .and_then(|c| c.read().unwrap().entry(cluster))
+    }
+
+    /// Total chunk rows across active (non-tombstone) clusters — the
+    /// rebalancer's primary per-shard load measure.
+    pub fn active_rows(&self) -> u64 {
+        self.clusters
+            .clusters
+            .iter()
+            .zip(&self.active)
+            .filter(|&(_, &a)| a)
+            .map(|(m, _)| m.len() as u64)
+            .sum()
+    }
+
+    /// Cluster ids currently persisted in this index's blob store
+    /// (orphaned-blob invariant checks; empty without selective storage).
+    pub fn stored_cluster_ids(&self) -> Vec<u32> {
+        self.blob.as_ref().map_or_else(Vec::new, |b| b.cluster_ids())
+    }
+
     pub fn stored_clusters(&self) -> usize {
         self.blob.as_ref().map_or(0, |b| b.len())
     }

@@ -26,6 +26,7 @@ pub mod edge;
 pub mod flat;
 pub mod ivf;
 pub mod kmeans;
+pub mod rebalance;
 pub mod scorer;
 pub mod shard;
 pub mod updates;
@@ -38,6 +39,7 @@ pub use clusters::{ClusterMeta, ClusterSet, EmbedSource};
 pub use edge::EdgeIndex;
 pub use flat::FlatIndex;
 pub use ivf::IvfIndex;
+pub use rebalance::{plan_rebalance, ClusterLoad, MigrationMove, MigrationPlan, RebalanceReport};
 pub use scorer::Scorer;
 pub use shard::{ShardStats, ShardedEdgeIndex};
 
@@ -280,6 +282,14 @@ pub trait VectorIndex: Send + Sync {
     /// Per-shard serving rows (None when the index is not sharded).
     fn shard_stats(&self) -> Option<Vec<ShardStats>> {
         None
+    }
+
+    /// Run one online cross-shard rebalance round (see
+    /// [`crate::index::rebalance`]). Inert for unsharded configurations:
+    /// there is nothing to move, so the default reports zero planned and
+    /// zero migrated.
+    fn rebalance(&self) -> Result<RebalanceReport> {
+        Ok(RebalanceReport::default())
     }
 
     // ---- online updates (§5.4) ----

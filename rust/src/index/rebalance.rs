@@ -1,0 +1,555 @@
+//! Online cross-shard rebalancing: migrate hot clusters between shards
+//! without stopping the world.
+//!
+//! ## Why
+//!
+//! EdgeRAG's cluster sizes are heavily skewed (paper Fig. 5) — a few fat
+//! tail clusters dominate both row count and re-embedding cost. The
+//! [`ShardedEdgeIndex`] places clusters round-robin at build time, which
+//! balances that skew only *in expectation*, and online inserts/splits
+//! make it drift: one shard ends up owning the hot, fat clusters while
+//! others idle. This module adds
+//!
+//! * **per-shard load accounting** ([`ShardedEdgeIndex::cluster_loads`]):
+//!   chunk rows plus cached-embedding mass from the cost-LFU cache, per
+//!   owned cluster (per-shard probe counters ride along in
+//!   [`ShardStats`](crate::index::ShardStats) for observability);
+//! * a **planner** ([`plan_rebalance`]): a pure, deterministic greedy
+//!   equalizer that proposes at most `max_migrations_per_round` cluster
+//!   moves, each strictly reducing the load spread (max − min shard
+//!   load);
+//! * an **online migration primitive**
+//!   ([`ShardedEdgeIndex::migrate_cluster`]): copy → flip → retire, one
+//!   cluster at a time, during which concurrent searches stay
+//!   bit-identical to an unsharded oracle (a search sees the cluster on
+//!   exactly one shard at every instant).
+//!
+//! ## The migration state machine
+//!
+//! ```text
+//!  [plan]   no locks; validated again per move
+//!    │
+//!  [copy]   source shard READ lease: export centroid + metadata +
+//!    │      dynamic overlay + blob + cache entry (searches keep flowing)
+//!  [import] dest shard WRITE lease: append as a fresh local cluster
+//!    │      (invisible: not yet registered in the ownership table)
+//!  [flip]   ownership WRITE lock: global id now maps to the destination.
+//!    │      Acquiring it drains every in-flight search still holding the
+//!    │      ownership READ lock (searches hold it across their walks),
+//!    │      so after the flip no search is routed at the source copy.
+//!  [retire] source shard WRITE lease: tombstone the copy, release its
+//!           blob / cache entry / memory region, bump `update_gen` so
+//!           stale in-flight cache admissions are discarded at commit.
+//! ```
+//!
+//! The whole sequence runs under the sharded index's structural-updates
+//! mutex, so inserts can never route into a doomed source copy and
+//! removes always find exactly one owner. Searches never take that
+//! mutex: the only moment a search waits on the rebalancer is a new
+//! search blocking briefly behind the flip's ownership write lock — a
+//! pointer swap, not the copy (which happened before, under a read
+//! lease).
+//!
+//! See `docs/ARCHITECTURE.md` § "Online rebalancing" for how this sits
+//! in the full lock hierarchy and composes with ProbeTable snapshots and
+//! the CacheIntent replay invariant.
+
+use std::sync::atomic::Ordering;
+
+use anyhow::Result;
+
+use crate::index::shard::{ShardedEdgeIndex, ORPHAN};
+
+/// One cluster's contribution to its shard's load.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterLoad {
+    /// Global cluster id.
+    pub global: u32,
+    /// Member chunk rows.
+    pub rows: u64,
+    /// Embedding rows resident in the shard's cost-LFU cache for this
+    /// cluster (0 when not cached) — cached mass migrates with the
+    /// cluster, so it counts toward placement.
+    pub cached_rows: u64,
+}
+
+impl ClusterLoad {
+    /// The scalar the planner equalizes: resident rows plus cached rows.
+    pub fn load(&self) -> u64 {
+        self.rows + self.cached_rows
+    }
+}
+
+/// One planned migration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrationMove {
+    /// Global cluster id to move.
+    pub cluster: u32,
+    /// Owning shard at planning time.
+    pub from: usize,
+    /// Destination shard.
+    pub to: usize,
+}
+
+/// A bounded set of migrations computed by [`plan_rebalance`].
+#[derive(Debug, Clone, Default)]
+pub struct MigrationPlan {
+    /// Moves in execution order.
+    pub moves: Vec<MigrationMove>,
+    /// Load spread (max − min shard load) before the plan.
+    pub spread_before: u64,
+    /// Projected spread after every move lands.
+    pub spread_after: u64,
+}
+
+/// Outcome of one rebalance round ([`ShardedEdgeIndex::rebalance`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RebalanceReport {
+    /// Moves the planner proposed this round.
+    pub planned: usize,
+    /// Moves actually executed.
+    pub migrated: usize,
+    /// Planned moves skipped at execution time (cluster tombstoned or
+    /// re-owned since planning).
+    pub skipped: usize,
+    /// Load spread when the round started.
+    pub spread_before: u64,
+    /// Live load spread after the round.
+    pub spread_after: u64,
+}
+
+/// Compute a bounded, deterministic migration plan over a per-shard load
+/// snapshot. Pure: no locks, no index access — property-tested directly.
+///
+/// Greedy equalization: each step moves one cluster from the currently
+/// heaviest shard to the currently lightest, choosing the cluster whose
+/// load is closest to half the gap (evaluated exactly against the
+/// resulting global spread). A step is only taken when it *strictly*
+/// reduces the spread, so the projected spread is monotonically
+/// non-increasing over the plan and the plan never exceeds `max_moves`.
+pub fn plan_rebalance(shard_loads: &[Vec<ClusterLoad>], max_moves: usize) -> MigrationPlan {
+    let k = shard_loads.len();
+    let mut totals: Vec<u64> = shard_loads
+        .iter()
+        .map(|cs| cs.iter().map(|c| c.load()).sum())
+        .collect();
+    let spread = |t: &[u64]| -> u64 {
+        match (t.iter().max(), t.iter().min()) {
+            (Some(max), Some(min)) => max - min,
+            _ => 0,
+        }
+    };
+    // Sorted (load, global) candidate lists per shard; ties break toward
+    // the lower global id so plans are deterministic.
+    let mut avail: Vec<Vec<(u64, u32)>> = shard_loads
+        .iter()
+        .map(|cs| {
+            let mut v: Vec<(u64, u32)> = cs.iter().map(|c| (c.load(), c.global)).collect();
+            v.sort_unstable();
+            v
+        })
+        .collect();
+
+    let spread_before = spread(&totals);
+    let mut plan = MigrationPlan {
+        spread_before,
+        spread_after: spread_before,
+        ..MigrationPlan::default()
+    };
+    if k < 2 {
+        return plan;
+    }
+
+    for _ in 0..max_moves {
+        let donor = (0..k).max_by_key(|&s| (totals[s], std::cmp::Reverse(s))).unwrap();
+        let recv = (0..k).min_by_key(|&s| (totals[s], s)).unwrap();
+        if donor == recv || totals[donor] <= totals[recv] || avail[donor].is_empty() {
+            break;
+        }
+        let gap = totals[donor] - totals[recv];
+        // Candidates bracketing half the gap: the largest load ≤ gap/2
+        // and the smallest load > gap/2.
+        let cands = &avail[donor];
+        let split = cands.partition_point(|&(w, _)| w <= gap / 2);
+        let mut best: Option<(u64, usize)> = None; // (resulting spread, cand index)
+        for i in [split.wrapping_sub(1), split] {
+            let Some(&(w, _)) = cands.get(i) else { continue };
+            if w == 0 {
+                continue; // moving an empty cluster changes nothing
+            }
+            let mut t = totals.clone();
+            t[donor] -= w;
+            t[recv] += w;
+            let s = spread(&t);
+            let better = match best {
+                None => true,
+                Some((bs, _)) => s < bs,
+            };
+            if better {
+                best = Some((s, i));
+            }
+        }
+        let Some((new_spread, i)) = best else { break };
+        if new_spread >= plan.spread_after {
+            break; // no candidate strictly improves — stop the round
+        }
+        let (w, global) = avail[donor].remove(i);
+        totals[donor] -= w;
+        totals[recv] += w;
+        // The moved cluster becomes a candidate on its new shard (a
+        // later step of the same plan may move it again).
+        let pos = avail[recv].partition_point(|&c| c < (w, global));
+        avail[recv].insert(pos, (w, global));
+        plan.moves.push(MigrationMove {
+            cluster: global,
+            from: donor,
+            to: recv,
+        });
+        plan.spread_after = new_spread;
+    }
+    plan
+}
+
+impl ShardedEdgeIndex {
+    /// Per-shard load snapshot: one [`ClusterLoad`] per owned, active
+    /// cluster (rows + cached mass). Takes the ownership read lock, then
+    /// one shard read lease at a time.
+    pub fn cluster_loads(&self) -> Vec<Vec<ClusterLoad>> {
+        let own = self.ownership.read().unwrap();
+        let dim = self.scorer.dim().max(1) as u64;
+        let mut out = Vec::with_capacity(self.shards.len());
+        for (s, shard) in self.shards.iter().enumerate() {
+            let guard = shard.read().unwrap();
+            let mut loads = Vec::new();
+            for (l, &g) in own.locals[s].iter().enumerate() {
+                if g == ORPHAN || !guard.active_flags()[l] {
+                    continue;
+                }
+                let cached_rows = guard
+                    .cached_entry(l as u32)
+                    .map_or(0, |(emb, _)| emb.bytes() / (dim * 4));
+                loads.push(ClusterLoad {
+                    global: g,
+                    rows: guard.clusters().clusters[l].len() as u64,
+                    cached_rows,
+                });
+            }
+            out.push(loads);
+        }
+        out
+    }
+
+    /// Current load spread (max − min per-shard load) — the quantity a
+    /// rebalance round reduces.
+    pub fn load_spread(&self) -> u64 {
+        let totals: Vec<u64> = self
+            .cluster_loads()
+            .iter()
+            .map(|cs| cs.iter().map(|c| c.load()).sum())
+            .collect();
+        match (totals.iter().max(), totals.iter().min()) {
+            (Some(max), Some(min)) => max - min,
+            _ => 0,
+        }
+    }
+
+    /// Run one rebalance round: snapshot loads, plan at most
+    /// `max_migrations_per_round` moves, execute them one cluster at a
+    /// time. Concurrent searches keep serving bit-identical results
+    /// throughout (see the module docs). Also reachable through the
+    /// server's `{"op":"rebalance"}` and periodically via
+    /// `rebalance_interval_ops`. Whole rounds serialize on a dedicated
+    /// mutex: concurrent callers queue rather than interleave moves
+    /// planned from different load snapshots.
+    pub fn rebalance(&self) -> Result<RebalanceReport> {
+        let _round = self.rebalance_serial.lock().unwrap();
+        let loads = self.cluster_loads();
+        let plan = plan_rebalance(&loads, self.max_migrations);
+        let mut report = RebalanceReport {
+            planned: plan.moves.len(),
+            spread_before: plan.spread_before,
+            ..RebalanceReport::default()
+        };
+        for m in &plan.moves {
+            if self.migrate_cluster(m.cluster, m.to)? {
+                report.migrated += 1;
+            } else {
+                report.skipped += 1;
+            }
+        }
+        report.spread_after = self.load_spread();
+        Ok(report)
+    }
+
+    /// Migrate one cluster (by global id) to `dest`, online. Returns
+    /// `Ok(false)` when there is nothing to do (already at `dest`,
+    /// unknown id, or tombstoned since planning). Runs the copy → flip →
+    /// retire sequence documented in the module docs under the
+    /// structural-updates mutex.
+    pub fn migrate_cluster(&self, global: u32, dest: usize) -> Result<bool> {
+        anyhow::ensure!(dest < self.shards.len(), "no shard {dest}");
+        let _serial = self.updates_serial.lock().unwrap();
+        let Some((src, local)) = self.ownership.read().unwrap().owner_of(global) else {
+            return Ok(false);
+        };
+        if src == dest {
+            return Ok(false);
+        }
+
+        // Copy: a read lease only — searches of the source shard keep
+        // flowing while the snapshot is taken.
+        let export = {
+            let guard = self.shards[src].read().unwrap();
+            if !guard.active_flags()[local as usize] {
+                return Ok(false); // tombstoned since planning
+            }
+            guard.export_cluster(local)?
+        };
+
+        // Import: the destination gains an (as yet unregistered, hence
+        // invisible) local copy. A failure here leaves every map
+        // untouched — the migration simply didn't happen.
+        let new_local = self.shards[dest].write().unwrap().import_cluster(&export)?;
+
+        // Flip: from here on every search routes the global id at the
+        // destination. Acquiring the write lock drains in-flight
+        // searches still walking under the old mapping.
+        {
+            let mut own = self.ownership.write().unwrap();
+            own.owner[global as usize] = (dest as u32, new_local);
+            own.locals[src][local as usize] = ORPHAN;
+            debug_assert_eq!(own.locals[dest].len(), new_local as usize);
+            own.locals[dest].push(global);
+        }
+
+        // Retire: no search can reach the source copy any more.
+        self.shards[src].write().unwrap().retire_cluster(local)?;
+
+        self.counters[src]
+            .migrated_out
+            .fetch_add(1, Ordering::Relaxed);
+        self.counters[dest]
+            .migrated_in
+            .fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// Check every cross-shard structural invariant, quiescing structural
+    /// updates first (searches keep running). The randomized churn suite
+    /// calls this after every rebalance round.
+    ///
+    /// * ownership is a bijection: every global id maps to exactly one
+    ///   live (shard, local) slot and `locals` agrees with `owner`;
+    /// * every shard's local-slot table covers exactly its clusters;
+    /// * orphaned slots (migration sources) are tombstoned and hold no
+    ///   chunks, no cache entry and no blob;
+    /// * chunk routing maps every chunk to an owned, active cluster that
+    ///   lists it — and cluster member lists point back at the routing
+    ///   table (no lost or duplicated chunks);
+    /// * no orphaned cache entries or blobs: both belong to owned,
+    ///   active clusters only.
+    pub fn verify_integrity(&self) -> Result<()> {
+        let _serial = self.updates_serial.lock().unwrap();
+        let own = self.ownership.read().unwrap();
+        let k = self.shards.len();
+        anyhow::ensure!(own.locals.len() == k, "locals table covers every shard");
+
+        let mut seen = vec![false; own.owner.len()];
+        for (s, slots) in own.locals.iter().enumerate() {
+            for (l, &g) in slots.iter().enumerate() {
+                if g == ORPHAN {
+                    continue;
+                }
+                let gi = g as usize;
+                anyhow::ensure!(gi < own.owner.len(), "local {s}/{l} maps to unknown global {g}");
+                anyhow::ensure!(!seen[gi], "global {g} owned by two slots");
+                seen[gi] = true;
+                anyhow::ensure!(
+                    own.owner[gi] == (s as u32, l as u32),
+                    "owner[{g}] = {:?} disagrees with locals[{s}][{l}]",
+                    own.owner[gi]
+                );
+            }
+        }
+        for (g, &s) in seen.iter().enumerate() {
+            anyhow::ensure!(s, "global {g} has no owning slot");
+        }
+
+        for (s, shard) in self.shards.iter().enumerate() {
+            let guard = shard.read().unwrap();
+            let n = guard.clusters().n_clusters();
+            anyhow::ensure!(
+                own.locals[s].len() == n,
+                "shard {s}: {} registered slots for {n} clusters",
+                own.locals[s].len()
+            );
+            let active = guard.active_flags();
+            for (l, &g) in own.locals[s].iter().enumerate() {
+                if g == ORPHAN {
+                    anyhow::ensure!(!active[l], "orphan slot {s}/{l} still active");
+                    anyhow::ensure!(
+                        guard.clusters().clusters[l].is_empty(),
+                        "orphan slot {s}/{l} retains chunks"
+                    );
+                }
+            }
+            for c in guard.cached_clusters() {
+                let owned = own.global_of(s, c).is_some();
+                anyhow::ensure!(owned && active[c as usize], "orphaned cache entry {s}/{c}");
+            }
+            for c in guard.stored_cluster_ids() {
+                let owned = own.global_of(s, c).is_some();
+                anyhow::ensure!(owned && active[c as usize], "orphaned blob {s}/{c}");
+            }
+            // Chunk routing ⇄ member lists agree, with no strays.
+            let mut routed = 0usize;
+            for (&chunk, &c) in guard.chunk_cluster.iter() {
+                anyhow::ensure!(
+                    own.global_of(s, c).is_some() && active[c as usize],
+                    "chunk {chunk} routed to unowned cluster {s}/{c}"
+                );
+                anyhow::ensure!(
+                    guard.clusters().clusters[c as usize].chunk_ids.contains(&chunk),
+                    "chunk {chunk} not listed by its cluster {s}/{c}"
+                );
+                routed += 1;
+            }
+            let listed: usize = own.locals[s]
+                .iter()
+                .enumerate()
+                .filter(|&(_, &g)| g != ORPHAN)
+                .map(|(l, _)| guard.clusters().clusters[l].len())
+                .sum();
+            anyhow::ensure!(
+                routed == listed,
+                "shard {s}: {routed} routed chunks vs {listed} listed members"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::testutil::test_seed;
+
+    fn apply(plan: &MigrationPlan, loads: &[Vec<ClusterLoad>]) -> Vec<u64> {
+        let mut totals: Vec<u64> = loads
+            .iter()
+            .map(|cs| cs.iter().map(|c| c.load()).sum())
+            .collect();
+        let weight = |g: u32| -> u64 {
+            loads
+                .iter()
+                .flatten()
+                .find(|c| c.global == g)
+                .map(|c| c.load())
+                .unwrap()
+        };
+        for m in &plan.moves {
+            let w = weight(m.cluster);
+            totals[m.from] -= w;
+            totals[m.to] += w;
+        }
+        totals
+    }
+
+    fn random_loads(rng: &mut Rng, shards: usize) -> Vec<Vec<ClusterLoad>> {
+        let mut g = 0u32;
+        (0..shards)
+            .map(|_| {
+                (0..rng.below(12))
+                    .map(|_| {
+                        g += 1;
+                        ClusterLoad {
+                            global: g,
+                            rows: rng.below(200) as u64,
+                            cached_rows: rng.below(50) as u64,
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plan_never_exceeds_migration_budget() {
+        let mut rng = Rng::new(test_seed(0xBA1A));
+        for _ in 0..200 {
+            let shards = rng.range(1, 6);
+            let max_moves = rng.below(5);
+            let loads = random_loads(&mut rng, shards);
+            let plan = plan_rebalance(&loads, max_moves);
+            assert!(plan.moves.len() <= max_moves, "{plan:?}");
+        }
+    }
+
+    #[test]
+    fn plan_spread_is_monotone_and_projection_is_exact() {
+        let mut rng = Rng::new(test_seed(0x5EED));
+        for case in 0..200 {
+            let shards = rng.range(2, 6);
+            let loads = random_loads(&mut rng, shards);
+            let plan = plan_rebalance(&loads, 8);
+            assert!(
+                plan.spread_after <= plan.spread_before,
+                "case {case}: spread grew: {plan:?}"
+            );
+            if !plan.moves.is_empty() {
+                assert!(
+                    plan.spread_after < plan.spread_before,
+                    "case {case}: moves without strict improvement: {plan:?}"
+                );
+            }
+            // A prefix-by-prefix replay reproduces the projected spread.
+            let totals = apply(&plan, &loads);
+            let spread = totals.iter().max().unwrap() - totals.iter().min().unwrap();
+            assert_eq!(spread, plan.spread_after, "case {case}: {plan:?}");
+            // Every move names a cluster the donor actually held (in
+            // plan order, accounting for earlier moves).
+            let mut at: std::collections::HashMap<u32, usize> = loads
+                .iter()
+                .enumerate()
+                .flat_map(|(s, cs)| cs.iter().map(move |c| (c.global, s)))
+                .collect();
+            for m in &plan.moves {
+                assert_eq!(at.get(&m.cluster), Some(&m.from), "case {case}: {m:?}");
+                at.insert(m.cluster, m.to);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let seed = test_seed(0xD00D);
+        let mk = || {
+            let mut rng = Rng::new(seed);
+            let loads = random_loads(&mut rng, 4);
+            plan_rebalance(&loads, 6)
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.moves, b.moves);
+        assert_eq!(a.spread_after, b.spread_after);
+    }
+
+    #[test]
+    fn skewed_load_plans_toward_balance() {
+        // One shard holds everything: a round must move work off it.
+        let loads = vec![
+            vec![
+                ClusterLoad { global: 0, rows: 100, cached_rows: 0 },
+                ClusterLoad { global: 1, rows: 90, cached_rows: 10 },
+                ClusterLoad { global: 2, rows: 80, cached_rows: 0 },
+                ClusterLoad { global: 3, rows: 10, cached_rows: 0 },
+            ],
+            vec![],
+            vec![],
+        ];
+        let plan = plan_rebalance(&loads, 3);
+        assert!(!plan.moves.is_empty());
+        assert!(plan.spread_after < plan.spread_before / 2, "{plan:?}");
+        assert!(plan.moves.iter().all(|m| m.from == 0));
+    }
+}

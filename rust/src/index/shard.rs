@@ -51,23 +51,36 @@
 //! changes (the byte budget splits evenly across shards, and each shard
 //! adapts its own threshold from the queries that touch it).
 //!
-//! ## Cluster ids
+//! ## Cluster ids and ownership
 //!
-//! Shards use dense local cluster ids internally. The global id of local
-//! cluster `l` in shard `s` is `l × n_shards + s` (so the initial
-//! round-robin partition maps global id `g` to shard `g % n_shards`,
-//! local `g / n_shards`, and splits allocate fresh globally unique ids).
-//! [`SearchOutcome::probed`] and the cluster ids returned by
-//! [`ShardedEdgeIndex::insert_chunk`] are global ids.
+//! Shards use dense local cluster ids internally. Global cluster ids are
+//! allocated densely in creation order (the initial partition assigns
+//! `0..n` round-robin; every split appends the next free global id —
+//! exactly the id sequence an unsharded index allocates for the same op
+//! stream). The global→(shard, local) mapping lives in an explicit
+//! `Ownership` table rather than a formula, because the **online
+//! rebalancer** ([`crate::index::rebalance`]) migrates clusters between
+//! shards: a migrated cluster keeps its global id (so probe order, probe
+//! output and search results are untouched) while its (shard, local)
+//! position changes. [`SearchOutcome::probed`] and the cluster ids
+//! returned by [`ShardedEdgeIndex::insert_chunk`] are global ids.
 //!
 //! ## Locking
 //!
-//! Lock order is strictly `shard RwLock → controller → cache → memory
-//! model`, and no thread ever holds two shard locks at once (probing
-//! reads only the snapshot; routing and snapshot rebuilds visit shards
-//! sequentially, one read lock at a time; fan-out workers each take
-//! exactly one). See `docs/ARCHITECTURE.md` for the full hierarchy
-//! including the engine lease above this one.
+//! Lock order is strictly `updates mutex → ownership RwLock → shard
+//! RwLock → controller → cache → memory model`, and no thread ever holds
+//! two shard locks at once (probing reads only the snapshot; routing and
+//! snapshot rebuilds visit shards sequentially, one read lock at a time;
+//! fan-out workers each take exactly one). Structural mutations (insert,
+//! remove, migrate) serialize on the updates mutex — they are rare and
+//! heavy, and serializing them keeps migration's copy→flip→retire
+//! sequence atomic against other structural ops; searches never touch
+//! the mutex. A search holds the ownership **read** lock from probe-list
+//! grouping through its cluster walks, so a migration's ownership flip
+//! (the write lock) naturally drains every search still routed at the
+//! pre-flip owner before the source copy is retired. See
+//! `docs/ARCHITECTURE.md` for the full hierarchy including the engine
+//! lease above this one.
 
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -91,28 +104,81 @@ use crate::vecmath::{self, EmbeddingMatrix};
 /// regions at `i << 24`, leaving 24 bits of local cluster ids per shard.
 pub const MAX_SHARDS: usize = 256;
 
+/// `Ownership::locals` marker for a local slot whose cluster migrated
+/// away: the slot stays (local ids are never reused) but maps to no
+/// global cluster.
+pub(crate) const ORPHAN: u32 = u32::MAX;
+
+// ---------------------------------------------------------------------------
+// Ownership: global cluster id ⇄ (shard, local)
+// ---------------------------------------------------------------------------
+
+/// The dynamic global→(shard, local) cluster mapping. Before the online
+/// rebalancer existed this was the formula `g ↦ (g % k, g / k)`; with
+/// migration it is explicit state: a migrated cluster keeps its global id
+/// while its (shard, local) position changes.
+///
+/// Invariants (checked by
+/// [`ShardedEdgeIndex::verify_integrity`](crate::index::ShardedEdgeIndex::verify_integrity)):
+/// every global id maps to exactly one live (shard, local) slot;
+/// `locals[s][l] == g ⇔ owner[g] == (s, l)`; retired migration sources
+/// are [`ORPHAN`] slots whose shard-side cluster is tombstoned and
+/// resource-free.
+#[derive(Debug)]
+pub(crate) struct Ownership {
+    /// Indexed by global cluster id → (shard, local).
+    pub(crate) owner: Vec<(u32, u32)>,
+    /// `[shard][local]` → global id, or [`ORPHAN`].
+    pub(crate) locals: Vec<Vec<u32>>,
+}
+
+impl Ownership {
+    /// Current owner of a global cluster id.
+    pub(crate) fn owner_of(&self, global: u32) -> Option<(usize, u32)> {
+        self.owner
+            .get(global as usize)
+            .map(|&(s, l)| (s as usize, l))
+    }
+
+    /// Global id of shard `shard`'s local cluster `local` (None for
+    /// orphaned slots and not-yet-registered locals).
+    pub(crate) fn global_of(&self, shard: usize, local: u32) -> Option<u32> {
+        self.locals[shard]
+            .get(local as usize)
+            .copied()
+            .filter(|&g| g != ORPHAN)
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Per-shard serving counters
 // ---------------------------------------------------------------------------
 
 #[derive(Debug, Default)]
-struct ShardCounters {
+pub(crate) struct ShardCounters {
     probes: AtomicU64,
     cache_hits: AtomicU64,
     generated: AtomicU64,
     loaded: AtomicU64,
     inserts: AtomicU64,
     removes: AtomicU64,
+    pub(crate) migrated_in: AtomicU64,
+    pub(crate) migrated_out: AtomicU64,
 }
 
-/// One shard's serving statistics snapshot (the `stats` endpoint's
-/// per-shard rows).
+/// One shard's serving statistics snapshot (the `stats` / `shard-stats`
+/// endpoints' per-shard rows). The rebalance planner and the churn test
+/// suite assert against these same numbers — see
+/// [`ShardedEdgeIndex::cluster_loads`](crate::index::ShardedEdgeIndex::cluster_loads).
 #[derive(Debug, Clone, Default)]
 pub struct ShardStats {
     /// Shard index.
     pub shard: usize,
     /// Active (non-tombstone) clusters currently owned by this shard.
     pub clusters: usize,
+    /// Total chunk rows across this shard's active clusters — the
+    /// primary rebalance load measure.
+    pub rows: u64,
     /// Probed clusters routed to this shard so far.
     pub probes: u64,
     /// Embedding-cache hits served by this shard.
@@ -125,10 +191,17 @@ pub struct ShardStats {
     pub inserts: u64,
     /// Online removals routed to this shard.
     pub removes: u64,
+    /// Clusters migrated **into** this shard by the rebalancer.
+    pub migrated_in: u64,
+    /// Clusters migrated **out of** this shard by the rebalancer.
+    pub migrated_out: u64,
     /// This shard's current adaptive caching threshold (ms).
     pub threshold_ms: f64,
     /// Bytes resident in this shard's embedding cache.
     pub cache_used_bytes: u64,
+    /// This shard's full cache statistics (hits/misses/insertions/…);
+    /// previously only the cross-shard aggregate was exposed.
+    pub cache: CacheStats,
 }
 
 // ---------------------------------------------------------------------------
@@ -141,20 +214,46 @@ pub struct ShardedEdgeIndex {
     kind: IndexKind,
     /// `Arc` so fan-out jobs on the pool can borrow shards without tying
     /// their lifetimes to the calling query.
-    shards: Arc<Vec<RwLock<EdgeIndex>>>,
-    counters: Vec<ShardCounters>,
+    pub(crate) shards: Arc<Vec<RwLock<EdgeIndex>>>,
+    pub(crate) counters: Vec<ShardCounters>,
     nprobe: usize,
     device: DeviceProfile,
-    scorer: Scorer,
+    pub(crate) scorer: Scorer,
+    /// The dynamic global⇄(shard, local) cluster mapping. Searches hold
+    /// the read lock from probe grouping through their cluster walks; a
+    /// migration's ownership flip takes the write lock, which therefore
+    /// drains every search still routed at the pre-flip owner before the
+    /// source copy is retired.
+    pub(crate) ownership: RwLock<Ownership>,
+    /// Serializes structural mutations (insert / remove / migrate)
+    /// against each other — never taken by searches. Holding it across a
+    /// whole migration makes copy→flip→retire atomic with respect to
+    /// inserts that could otherwise route into the doomed source copy.
+    pub(crate) updates_serial: Mutex<()>,
+    /// Structural updates completed since build (the periodic-rebalance
+    /// trigger counts these against `rebalance_interval_ops`).
+    update_ops: AtomicU64,
+    /// Run a rebalance round after every this many updates (0 = off).
+    rebalance_every: usize,
+    /// Migration budget per rebalance round.
+    pub(crate) max_migrations: usize,
+    /// Serializes whole rebalance rounds (plan + execute) so an explicit
+    /// `rebalance` op and the periodic trigger cannot interleave moves
+    /// planned from different load snapshots — which could thrash or
+    /// even increase the spread. Sits above `updates_serial`: a round
+    /// holds it while each migration takes the updates mutex; nothing
+    /// acquires it while holding any other lock.
+    pub(crate) rebalance_serial: Mutex<()>,
     /// Persistent pool executing per-(query, shard) cluster walks. Any
     /// worker may serve any shard (walks take only shard read leases).
     pool: WorkerPool,
     /// The spliced first-level snapshot queries probe against **without
     /// any shard lease** — a probing query never queues behind an
-    /// in-flight structural update. Inserts/removes only mark it stale
-    /// (`table_stale`); the next probe rebuilds it lazily, so an update
-    /// burst pays one rebuild, not one per update. The lock is held only
-    /// to clone or swap the `Arc`.
+    /// in-flight structural update. Updates that touch the first level
+    /// (splits, merges — plain inserts/removes change neither centroids
+    /// nor liveness) only mark it stale (`table_stale`); the next probe
+    /// rebuilds it lazily, so an update burst pays one rebuild, not one
+    /// per update. The lock is held only to clone or swap the `Arc`.
     probe_table: RwLock<Arc<ProbeTable>>,
     /// Set by structural updates after their shard write completes;
     /// cleared by the (serialized) lazy rebuild.
@@ -243,6 +342,20 @@ impl ShardedEdgeIndex {
             built.push(RwLock::new(shard));
         }
 
+        // Initial ownership mirrors the round-robin partition: global
+        // cluster `g` lives at shard `g % k`, local `g / k`. From here on
+        // the table, not the formula, is authoritative (splits append new
+        // globals; migrations move them).
+        let n = clusters.n_clusters();
+        let owner: Vec<(u32, u32)> = (0..n)
+            .map(|g| ((g % k) as u32, (g / k) as u32))
+            .collect();
+        let mut locals: Vec<Vec<u32>> = vec![Vec::new(); k];
+        for (g, &(s, l)) in owner.iter().enumerate() {
+            debug_assert_eq!(locals[s as usize].len(), l as usize);
+            locals[s as usize].push(g as u32);
+        }
+
         // Pool sizing: the calling thread always walks one shard-group
         // itself, so at most `k − 1` walks per query run remotely; more
         // workers than cores just adds scheduler churn.
@@ -256,6 +369,16 @@ impl ShardedEdgeIndex {
             nprobe: retrieval.nprobe,
             device,
             scorer,
+            ownership: RwLock::new(Ownership { owner, locals }),
+            updates_serial: Mutex::new(()),
+            update_ops: AtomicU64::new(0),
+            rebalance_every: if retrieval.rebalance {
+                retrieval.rebalance_interval_ops
+            } else {
+                0
+            },
+            max_migrations: retrieval.max_migrations_per_round,
+            rebalance_serial: Mutex::new(()),
             pool: WorkerPool::new("edgerag-shard", workers),
             probe_table: RwLock::new(Arc::new(ProbeTable {
                 centroids: EmbeddingMatrix::new(dim),
@@ -269,7 +392,8 @@ impl ShardedEdgeIndex {
         };
         {
             let _serial = index.table_rebuild.lock().unwrap();
-            index.rebuild_probe_table();
+            let _built_table = index.rebuild_probe_table();
+            debug_assert!(_built_table, "initial rebuild cannot be torn");
         }
         Ok(index)
     }
@@ -283,50 +407,63 @@ impl ShardedEdgeIndex {
             // Claim-then-build: clear the flag *before* reading shard
             // state, so an update landing mid-rebuild re-marks it and
             // the next probe rebuilds again — a completed update can
-            // never be silently missed.
-            if self.table_stale.swap(false, Ordering::AcqRel) {
-                self.rebuild_probe_table();
+            // never be silently missed. A rebuild that observed a torn
+            // mid-registration split re-marks the flag itself and the
+            // old (still oracle-consistent) snapshot keeps serving.
+            if self.table_stale.swap(false, Ordering::AcqRel) && !self.rebuild_probe_table() {
+                self.table_stale.store(true, Ordering::Release);
             }
         }
         self.probe_table.read().unwrap().clone()
     }
 
     /// Rebuild the spliced probe snapshot from the current shard state.
-    /// Caller must hold `table_rebuild`; takes one shard read lease at a
-    /// time — never two at once, per the lock hierarchy.
-    fn rebuild_probe_table(&self) {
-        let k = self.shards.len();
+    /// Caller must hold `table_rebuild`; takes the ownership read lock,
+    /// then one shard read lease at a time — never two at once, per the
+    /// lock hierarchy.
+    ///
+    /// Returns false — leaving the previous snapshot installed — when a
+    /// shard's state is ahead of the ownership table (an in-flight
+    /// insert's split has mutated the shard but not yet registered its
+    /// new cluster; registration is blocked behind this rebuild's
+    /// ownership read lock). Splicing that state would mix a post-split
+    /// centroid with a pre-split cluster list — a table matching no
+    /// oracle instant. The caller re-marks the snapshot stale and the
+    /// next probe retries once registration completes.
+    fn rebuild_probe_table(&self) -> bool {
+        let own = self.ownership.read().unwrap();
         // Per-shard copies first (one lease at a time), splice after.
-        let mut parts: Vec<(EmbeddingMatrix, Vec<bool>)> = Vec::with_capacity(k);
-        let mut centroid_bytes = 0u64;
+        let mut parts: Vec<(EmbeddingMatrix, Vec<bool>)> = Vec::with_capacity(self.shards.len());
         let mut generation = 0u64;
-        let mut width = 0usize;
-        for shard in self.shards.iter() {
+        for (s, shard) in self.shards.iter().enumerate() {
             let guard = shard.read().unwrap();
-            centroid_bytes += guard.clusters().centroid_bytes();
-            generation += guard.update_generation();
-            let centroids = guard.clusters().centroids.clone();
-            let active = guard.active_flags().to_vec();
-            width = width.max(centroids.len());
-            parts.push((centroids, active));
-        }
-        // Interleave into ascending global-id order (`l × k + s`) — the
-        // exact traversal order the lease-based probe spliced in, so
-        // `top_k`'s lower-index tie preference is preserved.
-        let dim = parts.first().map_or(0, |(c, _)| c.dim);
-        let total: usize = parts.iter().map(|(c, _)| c.len()).sum();
-        let mut centroids = EmbeddingMatrix::with_capacity(dim, total);
-        let mut ids = Vec::new();
-        let mut active = Vec::new();
-        for l in 0..width {
-            for (s, (cent, act)) in parts.iter().enumerate() {
-                if l < cent.len() {
-                    centroids.push(cent.row(l));
-                    ids.push((l * k + s) as u32);
-                    active.push(act[l]);
-                }
+            if guard.clusters().n_clusters() != own.locals[s].len() {
+                return false; // torn: shard mutated ahead of registration
             }
+            generation += guard.update_generation();
+            parts.push((
+                guard.clusters().centroids.clone(),
+                guard.active_flags().to_vec(),
+            ));
         }
+        // Splice into ascending global-id order — the exact traversal
+        // order an unsharded index scores its clusters in, so `top_k`'s
+        // lower-index tie preference is preserved. One row per global id
+        // ever allocated (tombstones included), which is also why the
+        // modeled `centroid_bytes` charge below matches the unsharded
+        // index byte for byte even after migrations leave orphaned
+        // centroid copies behind on their source shards.
+        let dim = parts.first().map_or(0, |(c, _)| c.dim);
+        let mut centroids = EmbeddingMatrix::with_capacity(dim, own.owner.len());
+        let mut ids = Vec::with_capacity(own.owner.len());
+        let mut active = Vec::with_capacity(own.owner.len());
+        for (g, &(s, l)) in own.owner.iter().enumerate() {
+            let (cent, act) = &parts[s as usize];
+            centroids.push(cent.row(l as usize));
+            ids.push(g as u32);
+            active.push(act[l as usize]);
+        }
+        let centroid_bytes = centroids.bytes();
         *self.probe_table.write().unwrap() = Arc::new(ProbeTable {
             centroids,
             ids,
@@ -334,6 +471,7 @@ impl ShardedEdgeIndex {
             centroid_bytes,
             generation,
         });
+        true
     }
 
     /// Number of shards.
@@ -341,9 +479,15 @@ impl ShardedEdgeIndex {
         self.shards.len()
     }
 
-    /// Owning shard of a global cluster id.
+    /// Owning shard of a global cluster id (its *current* owner — the
+    /// rebalancer may move it).
     pub fn shard_of(&self, global_cluster: u32) -> usize {
-        global_cluster as usize % self.shards.len()
+        self.ownership
+            .read()
+            .unwrap()
+            .owner_of(global_cluster)
+            .map(|(s, _)| s)
+            .unwrap_or_else(|| panic!("unknown global cluster {global_cluster}"))
     }
 
     /// Run `f` against one shard under its read lease (introspection and
@@ -393,16 +537,22 @@ impl ShardedEdgeIndex {
     }
 
     /// Global ids of every cluster currently resident in any shard's
-    /// cache, sorted (equivalence tests, stats).
+    /// cache, sorted (equivalence tests, stats). During a live migration
+    /// an entry may exist on two shards, but only the owning side maps to
+    /// a global id, so each global appears at most once (the dedup is
+    /// belt and braces).
     pub fn cached_clusters(&self) -> Vec<u32> {
-        let k = self.shards.len() as u32;
+        let own = self.ownership.read().unwrap();
         let mut all = Vec::new();
         for (s, shard) in self.shards.iter().enumerate() {
             for local in shard.read().unwrap().cached_clusters() {
-                all.push(local * k + s as u32);
+                if let Some(g) = own.global_of(s, local) {
+                    all.push(g);
+                }
             }
         }
         all.sort_unstable();
+        all.dedup();
         all
     }
 
@@ -442,12 +592,16 @@ impl ShardedEdgeIndex {
             .sum()
     }
 
-    /// Global cluster currently holding `chunk`, if any.
+    /// Global cluster currently holding `chunk`, if any. Ownership-aware:
+    /// a shard-side hit on a cluster that migrated away (or an import not
+    /// yet flipped in) is skipped, so exactly the owning copy answers.
     pub fn cluster_of(&self, chunk: u32) -> Option<u32> {
-        let k = self.shards.len() as u32;
+        let own = self.ownership.read().unwrap();
         for (s, shard) in self.shards.iter().enumerate() {
             if let Some(local) = shard.read().unwrap().cluster_of(chunk) {
-                return Some(local * k + s as u32);
+                if let Some(g) = own.global_of(s, local) {
+                    return Some(g);
+                }
             }
         }
         None
@@ -464,75 +618,167 @@ impl ShardedEdgeIndex {
                 ShardStats {
                     shard: i,
                     clusters: guard.active_clusters(),
+                    rows: guard.active_rows(),
                     probes: c.probes.load(Ordering::Relaxed),
                     cache_hits: c.cache_hits.load(Ordering::Relaxed),
                     generated: c.generated.load(Ordering::Relaxed),
                     loaded: c.loaded.load(Ordering::Relaxed),
                     inserts: c.inserts.load(Ordering::Relaxed),
                     removes: c.removes.load(Ordering::Relaxed),
+                    migrated_in: c.migrated_in.load(Ordering::Relaxed),
+                    migrated_out: c.migrated_out.load(Ordering::Relaxed),
                     threshold_ms: guard.threshold_ms(),
                     cache_used_bytes: guard.cache_used_bytes(),
+                    cache: guard.cache_stats().unwrap_or_default(),
                 }
             })
             .collect()
     }
 
-    /// The shard an insertion of `emb` would route to (nearest active
-    /// centroid across all shards).
+    /// The shard an insertion of `emb` would route to: the owner of the
+    /// nearest active cluster, selected against the spliced probe
+    /// snapshot so tie-breaking (lowest global id) matches an unsharded
+    /// index exactly.
     pub fn route(&self, emb: &[f32]) -> Result<usize> {
-        let mut best: Option<(usize, f32)> = None;
-        for (s, shard) in self.shards.iter().enumerate() {
-            let guard = shard.read().unwrap();
-            if let Some(&(_, score)) = guard.probe(emb, 1)?.first() {
-                // NEG_INFINITY marks a shard whose clusters are all
-                // tombstones — never a routing target.
-                let better = match best {
-                    None => true,
-                    Some((_, b)) => score > b,
-                };
-                if score.is_finite() && better {
-                    best = Some((s, score));
-                }
+        let table = self.probe_table_current();
+        let scores = table.masked_scores(&self.scorer, emb)?;
+        let top = vecmath::top_k(&scores, scores.len(), 1);
+        match top.first() {
+            Some(&(i, score)) if score.is_finite() => {
+                let g = table.ids[i];
+                self.ownership
+                    .read()
+                    .unwrap()
+                    .owner_of(g)
+                    .map(|(s, _)| s)
+                    .ok_or_else(|| anyhow::anyhow!("cluster {g} has no owner"))
             }
+            _ => Err(anyhow::anyhow!("no active clusters")),
         }
-        best.map(|(s, _)| s)
-            .ok_or_else(|| anyhow::anyhow!("no active clusters"))
+    }
+
+    /// Register any shard-local clusters created since the last
+    /// registration (splits during an insert, migration imports) in the
+    /// ownership table, allocating dense global ids in creation order —
+    /// the same id sequence an unsharded index allocates. Caller must
+    /// hold `updates_serial` and must NOT hold any shard lease (the
+    /// ownership write lock waits for in-flight searches).
+    fn register_new_locals(&self, shard: usize, up_to: usize) {
+        let mut own = self.ownership.write().unwrap();
+        while own.locals[shard].len() < up_to {
+            let l = own.locals[shard].len() as u32;
+            let g = own.owner.len() as u32;
+            own.owner.push((shard as u32, l));
+            own.locals[shard].push(g);
+        }
     }
 
     /// Insert a chunk (§5.4), write-leasing **only the owning shard**:
-    /// queries to other shards proceed concurrently. `id` must be
+    /// queries — to any shard — proceed concurrently; only other
+    /// *structural* updates serialize behind this one. `id` must be
     /// globally fresh (the serving engine allocates ids from its shared
     /// text store; duplicate detection here is per-shard only). Returns
     /// the global cluster id the chunk joined.
     pub fn insert_chunk(&self, id: u32, text: &str, emb: &[f32]) -> Result<u32> {
-        let target = self.route(emb)?;
-        // Routing released its read locks before this write acquire; the
-        // shard re-probes internally under the write lease, so a racing
-        // merge/split inside the shard cannot misroute the chunk.
-        let local = self.shards[target].write().unwrap().insert_chunk(id, text, emb)?;
-        self.counters[target].inserts.fetch_add(1, Ordering::Relaxed);
-        // Invalidate the lock-free probe snapshot (marked after the
-        // write lease is released; the next probe rebuilds — queries on
-        // the old snapshot behave like queries that arrived just before
-        // this insert).
-        self.table_stale.store(true, Ordering::Release);
-        Ok(local * self.shards.len() as u32 + target as u32)
+        let (global, split) = {
+            let _serial = self.updates_serial.lock().unwrap();
+            let target = self.route(emb)?;
+            // Routing released its leases before this write acquire; the
+            // shard re-probes internally under the write lease, and the
+            // updates mutex keeps merges/splits/migrations from racing
+            // the routing decision.
+            let (local, n_before, n_after) = {
+                let mut guard = self.shards[target].write().unwrap();
+                let n_before = guard.clusters().n_clusters();
+                let local = guard.insert_chunk(id, text, emb)?;
+                (local, n_before, guard.clusters().n_clusters())
+            };
+            self.counters[target].inserts.fetch_add(1, Ordering::Relaxed);
+            // Only a split touches the first level: it appends a fresh
+            // local cluster (which needs a global id before anything can
+            // probe for it) and rewrites the split cluster's centroid. A
+            // plain insert changes neither centroids nor liveness, so
+            // the probe snapshot stays valid and no ownership write (a
+            // search drain point) is needed at all.
+            let split = n_after > n_before;
+            if split {
+                self.register_new_locals(target, n_after);
+            }
+            let global = self
+                .ownership
+                .read()
+                .unwrap()
+                .global_of(target, local)
+                .ok_or_else(|| anyhow::anyhow!("inserted cluster lost its owner"))?;
+            (global, split)
+        };
+        if split {
+            // Invalidate the lock-free probe snapshot (marked after the
+            // write lease is released; the next probe rebuilds — queries
+            // on the old snapshot behave like queries that arrived just
+            // before this insert).
+            self.table_stale.store(true, Ordering::Release);
+        }
+        self.note_update_op();
+        Ok(global)
     }
 
     /// Remove a chunk (§5.4), write-leasing only the shard that owns it.
     /// Returns false if the chunk is unknown.
     pub fn remove_chunk(&self, id: u32) -> Result<bool> {
-        // Chunks never migrate across shards (merges and splits are
-        // intra-shard), so the owner found here is stable.
-        let owner = (0..self.shards.len())
-            .find(|&s| self.shards[s].read().unwrap().cluster_of(id).is_some());
-        let Some(s) = owner else { return Ok(false) };
-        let removed = self.shards[s].write().unwrap().remove_chunk(id)?;
+        let removed = {
+            let _serial = self.updates_serial.lock().unwrap();
+            // Owner discovery is ownership-aware: a stale copy left by a
+            // mid-flight migration never matches (and the updates mutex
+            // means no migration is mid-flight now anyway).
+            let owner = {
+                let own = self.ownership.read().unwrap();
+                (0..self.shards.len()).find(|&s| {
+                    self.shards[s]
+                        .read()
+                        .unwrap()
+                        .cluster_of(id)
+                        .is_some_and(|local| own.global_of(s, local).is_some())
+                })
+            };
+            let Some(s) = owner else { return Ok(false) };
+            let (removed, merged) = {
+                let mut guard = self.shards[s].write().unwrap();
+                let active_before = guard.active_clusters();
+                let removed = guard.remove_chunk(id)?;
+                (removed, guard.active_clusters() != active_before)
+            };
+            if removed {
+                self.counters[s].removes.fetch_add(1, Ordering::Relaxed);
+                // Only a merge touches the first level (it tombstones a
+                // cluster); a plain removal leaves the probe snapshot
+                // valid.
+                if merged {
+                    self.table_stale.store(true, Ordering::Release);
+                }
+            }
+            removed
+        };
         if removed {
-            self.counters[s].removes.fetch_add(1, Ordering::Relaxed);
-            self.table_stale.store(true, Ordering::Release);
+            self.note_update_op();
         }
         Ok(removed)
+    }
+
+    /// Count one completed structural update toward the periodic
+    /// rebalance trigger, running a round when the interval elapses.
+    /// Called after all locks are released (a round re-enters the
+    /// updates mutex). Round errors are swallowed here — the serving
+    /// update that triggered the round already succeeded; an explicit
+    /// `rebalance` op surfaces them.
+    fn note_update_op(&self) {
+        if self.rebalance_every == 0 {
+            return;
+        }
+        let n = self.update_ops.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % self.rebalance_every as u64 == 0 {
+            let _ = self.rebalance();
+        }
     }
 
     /// Search then immediately commit every shard intent — the
@@ -637,13 +883,22 @@ impl ShardedEdgeIndex {
         let probes = vecmath::top_k(scores, scores.len(), self.nprobe);
 
         // Group the probe list by owning shard, preserving each shard's
-        // subsequence of the global probe order.
+        // subsequence of the global probe order. The ownership read lock
+        // is held from here through the cluster walks: the whole search
+        // sees each cluster on exactly one shard, and a migration's
+        // ownership flip (the write lock) waits for us before the source
+        // copy is retired — which is what keeps concurrent searches
+        // bit-identical to an unsharded index throughout a migration.
+        let own = self.ownership.read().unwrap();
         let mut probed = Vec::with_capacity(probes.len());
         let mut groups: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n_shards];
         for (pos, &(i, _)) in probes.iter().enumerate() {
-            let g = table.ids[i] as usize;
-            probed.push(g as u32);
-            groups[g % n_shards].push((pos as u32, (g / n_shards) as u32));
+            let g = table.ids[i];
+            probed.push(g);
+            let (s, l) = own
+                .owner_of(g)
+                .ok_or_else(|| anyhow::anyhow!("probed cluster {g} has no owner"))?;
+            groups[s].push((pos as u32, l));
         }
         let work: Vec<(usize, Vec<(u32, u32)>)> = groups
             .into_iter()
@@ -658,6 +913,7 @@ impl ShardedEdgeIndex {
 
         // Fan the cluster walks out and merge.
         let mut walks = self.run_walks(query, work, k)?;
+        drop(own);
         walks.sort_by_key(|&(s, _)| s); // deterministic intent order
 
         let mut events = SearchEvents::default();
@@ -771,6 +1027,10 @@ impl VectorIndex for ShardedEdgeIndex {
 
     fn shard_stats(&self) -> Option<Vec<ShardStats>> {
         Some(ShardedEdgeIndex::shard_stats(self))
+    }
+
+    fn rebalance(&self) -> Result<crate::index::RebalanceReport> {
+        ShardedEdgeIndex::rebalance(self)
     }
 
     fn supports_concurrent_updates(&self) -> bool {
@@ -1097,6 +1357,145 @@ mod tests {
             "merge must tombstone a cluster in the snapshot \
              ({live_before} -> {live_after})"
         );
+    }
+
+    #[test]
+    fn migration_preserves_results_and_moves_resources() {
+        // Move a cluster between shards and require: identical search
+        // results (hits, probes, modeled latency), the cache entry and
+        // blob travel with it, and every cross-shard invariant holds.
+        let f = fixture();
+        let idx = build_sharded(&f, "mig", 4);
+        idx.pin_threshold(0.0);
+        let queries: Vec<Vec<f32>> = (0..8).map(|i| f.emb.row(i * 60).to_vec()).collect();
+        // Warm the caches so migrated clusters carry cache entries.
+        for q in &queries {
+            idx.search_and_commit(q, 5).unwrap();
+        }
+        let before: Vec<SearchOutcome> =
+            queries.iter().map(|q| idx.search(q, 5).unwrap()).collect();
+        let cached_before = idx.cached_clusters();
+        let stored_before = idx.stored_clusters();
+
+        // Migrate one cached cluster and one stored cluster (when they
+        // exist) plus an arbitrary one, each to the next shard over.
+        let mut moved = Vec::new();
+        let mut targets: Vec<u32> = cached_before.iter().take(1).copied().collect();
+        targets.push(before[0].probed[0]);
+        for g in targets {
+            let from = idx.shard_of(g);
+            let to = (from + 1) % idx.shards();
+            if idx.migrate_cluster(g, to).unwrap() {
+                moved.push((g, from, to));
+                assert_eq!(idx.shard_of(g), to, "ownership flipped");
+            }
+            idx.verify_integrity().unwrap();
+        }
+        assert!(!moved.is_empty(), "at least one migration must run");
+
+        // Search results are unchanged — same hits, probes and modeled
+        // device time (the spliced probe table is byte-identical).
+        for (q, b) in queries.iter().zip(&before) {
+            let a = idx.search(q, 5).unwrap();
+            assert_eq!(a.hits, b.hits);
+            assert_eq!(a.probed, b.probed);
+            assert_eq!(a.ledger.total(), b.ledger.total());
+        }
+        // Cache entries and blobs moved, not dropped (modulo per-shard
+        // capacity: the destination slice may decline an oversized
+        // entry, which the tiny fixture never produces).
+        assert_eq!(idx.cached_clusters(), cached_before);
+        assert_eq!(idx.stored_clusters(), stored_before);
+        let stats = idx.shard_stats();
+        let (total_in, total_out): (u64, u64) = stats
+            .iter()
+            .fold((0, 0), |(i, o), s| (i + s.migrated_in, o + s.migrated_out));
+        assert_eq!(total_in as usize, moved.len());
+        assert_eq!(total_out as usize, moved.len());
+    }
+
+    #[test]
+    fn migrated_cluster_serves_updates_and_repeat_migrations() {
+        // A migrated cluster keeps working as an update target, and can
+        // migrate again (ping-pong) without losing chunks.
+        let f = fixture();
+        let idx = build_sharded(&f, "mig2", 3);
+        let text = "migration target document zzmigrate yymigrate";
+        let emb = f.embedder.embed_one(text).unwrap();
+        let id = f.corpus.len() as u32 + 21;
+        let g = idx.insert_chunk(id, text, &emb).unwrap();
+        for round in 0..4 {
+            let to = (idx.shard_of(g) + 1) % idx.shards();
+            assert!(idx.migrate_cluster(g, to).unwrap(), "round {round}");
+            assert_eq!(idx.cluster_of(id), Some(g), "round {round}");
+            let out = idx.search(&emb, 3).unwrap();
+            assert_eq!(out.hits[0].0, id, "round {round}: {:?}", out.hits);
+            idx.verify_integrity().unwrap();
+        }
+        // Remove still finds the (twice-moved) owner.
+        assert!(idx.remove_chunk(id).unwrap());
+        assert_eq!(idx.cluster_of(id), None);
+        idx.verify_integrity().unwrap();
+    }
+
+    #[test]
+    fn rebalance_reduces_skewed_spread() {
+        // Adversarial skew: shove every cluster onto shard 0, then let
+        // bounded rebalance rounds equalize the row load.
+        let f = fixture();
+        let idx = build_sharded(&f, "skew", 4);
+        let globals: Vec<u32> = idx
+            .cluster_loads()
+            .iter()
+            .flatten()
+            .map(|c| c.global)
+            .collect();
+        for g in globals {
+            idx.migrate_cluster(g, 0).unwrap();
+        }
+        idx.verify_integrity().unwrap();
+        let before = idx.load_spread();
+        assert!(before > 0, "skew must show as spread");
+        let max_load = idx
+            .cluster_loads()
+            .iter()
+            .flatten()
+            .map(|c| c.load())
+            .max()
+            .unwrap();
+        let mut rounds = 0;
+        loop {
+            let r = idx.rebalance().unwrap();
+            assert!(
+                r.migrated + r.skipped <= idx.max_migrations,
+                "round bound violated: {r:?}"
+            );
+            assert!(r.spread_after <= r.spread_before, "{r:?}");
+            idx.verify_integrity().unwrap();
+            rounds += 1;
+            if r.migrated == 0 || rounds >= 16 {
+                break;
+            }
+        }
+        // Guaranteed endpoint of the greedy equalizer: either the spread
+        // halved, or it is pinned by indivisibly large clusters (a stuck
+        // donor's every cluster exceeds half the remaining gap).
+        let after = idx.load_spread();
+        assert!(
+            after < before && after <= (before / 2).max(2 * max_load),
+            "spread {before} -> {after} (max cluster load {max_load}) \
+             after {rounds} rounds"
+        );
+        // Results still match a fresh un-skewed build query for query.
+        let fresh = build_sharded(&f, "skew-fresh", 4);
+        for i in [0usize, 17, 101, 300] {
+            let q = f.emb.row(i).to_vec();
+            assert_eq!(
+                idx.search(&q, 5).unwrap().hits,
+                fresh.search(&q, 5).unwrap().hits,
+                "query {i}"
+            );
+        }
     }
 
     #[test]

@@ -1,4 +1,6 @@
-//! Online insertion and removal (paper §5.4).
+//! Online insertion and removal (paper §5.4), plus the per-shard halves
+//! of cross-shard cluster migration (the online rebalancer,
+//! `crate::index::rebalance`).
 //!
 //! Insertion routes a new chunk to the nearest existing centroid and
 //! updates that cluster's index; if the updated cluster's generation cost
@@ -7,14 +9,24 @@
 //! the first level). Removal deletes the chunk; clusters that become too
 //! small merge into their nearest neighbour (a tombstone remains in the
 //! centroid table, masked out of probes).
+//!
+//! Migration decomposes into three shard-local operations driven by
+//! [`ShardedEdgeIndex::migrate_cluster`](crate::index::ShardedEdgeIndex::migrate_cluster):
+//! `EdgeIndex::export_cluster` (read-only snapshot of everything a
+//! cluster owns), `EdgeIndex::import_cluster` (append the snapshot as a
+//! fresh local cluster on the destination) and
+//! `EdgeIndex::retire_cluster` (tombstone the source copy and release
+//! its blob/cache/memory resources).
 
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::index::edge::EdgeIndex;
 use crate::simtime::SimDuration;
 use crate::vecmath;
+use crate::vecmath::EmbeddingMatrix;
 
 /// A cluster splits when it exceeds this many members (×  the dataset's
 /// mean would be adaptive; a fixed generous bound keeps behaviour easy to
@@ -22,6 +34,27 @@ use crate::vecmath;
 pub const SPLIT_THRESHOLD: usize = 2048;
 /// A cluster merges away when it falls below this many members.
 pub const MERGE_THRESHOLD: usize = 2;
+
+/// Everything one cluster owns inside a shard, packaged for cross-shard
+/// migration: the centroid, resident metadata, the online-update overlay
+/// rows for its dynamic chunks, its precomputed blob (if stored) and its
+/// cache entry (if resident). Produced read-only by
+/// `EdgeIndex::export_cluster`; consumed by `EdgeIndex::import_cluster`.
+#[derive(Debug, Clone)]
+pub struct ClusterExport {
+    pub(crate) centroid: Vec<f32>,
+    pub(crate) chunk_ids: Vec<u32>,
+    pub(crate) chars: u64,
+    pub(crate) gen_cost: SimDuration,
+    /// `(chunk id, text, embedding)` rows of the source's dynamic overlay
+    /// belonging to this cluster.
+    pub(crate) dynamic: Vec<(u32, String, Vec<f32>)>,
+    /// The precomputed blob contents, when selective storage holds one.
+    pub(crate) blob: Option<EmbeddingMatrix>,
+    /// The cache entry (`Arc`'d embeddings + profiled gen latency), when
+    /// resident. The destination re-admits it with a fresh use counter.
+    pub(crate) cache: Option<(Arc<EmbeddingMatrix>, f64)>,
+}
 
 impl EdgeIndex {
     /// Insert a new chunk (§5.4). `id` must be fresh; `emb` is the chunk's
@@ -227,6 +260,123 @@ impl EdgeIndex {
         }
         self.refresh_cluster(c)?;
         self.refresh_cluster(new_id)?;
+        Ok(())
+    }
+
+    /// Snapshot everything local cluster `c` owns, for migration to
+    /// another shard. Read-only (`&self`): runs under the source shard's
+    /// read lease, so concurrent searches of this shard keep flowing
+    /// while the copy is taken. Fails on tombstoned clusters.
+    pub(crate) fn export_cluster(&self, c: u32) -> Result<ClusterExport> {
+        let ci = c as usize;
+        if !self.active[ci] {
+            bail!("cluster {c} is tombstoned; nothing to export");
+        }
+        let meta = &self.clusters.clusters[ci];
+        let dynamic = meta
+            .chunk_ids
+            .iter()
+            .filter_map(|id| {
+                self.dynamic
+                    .get(id)
+                    .map(|(t, e)| (*id, t.clone(), e.clone()))
+            })
+            .collect();
+        let blob = match &self.blob {
+            Some(b) if b.contains(c) => Some(b.get(c)?),
+            _ => None,
+        };
+        Ok(ClusterExport {
+            centroid: self.clusters.centroids.row(ci).to_vec(),
+            chunk_ids: meta.chunk_ids.clone(),
+            chars: meta.chars,
+            gen_cost: meta.gen_cost,
+            dynamic,
+            blob,
+            cache: self.cached_entry(c),
+        })
+    }
+
+    /// Append an exported cluster as a fresh local cluster of this shard:
+    /// centroid, metadata, chunk routing, dynamic overlay rows, blob and
+    /// cache entry all land here. Returns the new local cluster id.
+    ///
+    /// The fallible blob write runs **first**, before any in-memory
+    /// mutation, so a failed import leaves this shard untouched (the
+    /// orphaned blob file, if any, is removed best-effort). Does **not**
+    /// bump `update_gen`: nothing that existed on this shard changed, so
+    /// in-flight cache intents recorded against it remain valid.
+    pub(crate) fn import_cluster(&mut self, export: &ClusterExport) -> Result<u32> {
+        let local = self.clusters.n_clusters() as u32;
+        if let Some(emb) = &export.blob {
+            let blob = self
+                .blob
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("destination shard has no blob store"))?;
+            blob.put(local, emb)?;
+        }
+        self.clusters.centroids.push(&export.centroid);
+        self.clusters.clusters.push(crate::index::ClusterMeta {
+            id: local,
+            chunk_ids: export.chunk_ids.clone(),
+            chars: export.chars,
+            gen_cost: export.gen_cost,
+        });
+        self.active.push(true);
+        for &cid in &export.chunk_ids {
+            self.chunk_cluster.insert(cid, local);
+        }
+        for (cid, text, emb) in &export.dynamic {
+            self.dynamic.insert(*cid, (text.clone(), emb.clone()));
+        }
+        // Re-admit the cache entry under this shard's cache (fresh use
+        // counter — LFU history does not migrate; the *mass* does, which
+        // is what the load accounting tracks).
+        if let (Some(cache), Some((emb, lat))) = (&self.cache, &export.cache) {
+            let mut c = cache.write().unwrap();
+            let evicted = c.insert(local, emb.clone(), *lat);
+            let mut mem = self.memory.lock().unwrap();
+            for v in evicted {
+                mem.release(self.cache_region(v));
+            }
+            // Oversized entries are declined by the cache (capacity split
+            // across shards may be smaller than the source's was).
+            if c.contains(local) {
+                mem.install(self.cache_region(local), emb.bytes());
+            }
+        }
+        self.invalidate_probe_snapshot();
+        Ok(local)
+    }
+
+    /// Tombstone the source copy of a migrated cluster and release every
+    /// resource it held (chunk routing, dynamic overlay rows, cache entry
+    /// + memory-model region, blob). Bumps `update_gen` so in-flight
+    /// cache intents recorded against the pre-migration state discard
+    /// their admissions instead of re-installing the retired entry.
+    pub(crate) fn retire_cluster(&mut self, c: u32) -> Result<()> {
+        let ci = c as usize;
+        self.update_gen.fetch_add(1, Ordering::Release);
+        self.invalidate_probe_snapshot();
+        let ids = {
+            let meta = &mut self.clusters.clusters[ci];
+            meta.chars = 0;
+            meta.gen_cost = SimDuration::ZERO;
+            std::mem::take(&mut meta.chunk_ids)
+        };
+        for id in &ids {
+            self.chunk_cluster.remove(id);
+            self.dynamic.remove(id);
+        }
+        self.active[ci] = false;
+        if let Some(cache) = &self.cache {
+            if cache.write().unwrap().remove(c) {
+                self.memory.lock().unwrap().release(self.cache_region(c));
+            }
+        }
+        if let Some(blob) = &self.blob {
+            blob.remove(c)?;
+        }
         Ok(())
     }
 

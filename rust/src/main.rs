@@ -137,12 +137,16 @@ USAGE: edgerag <command> [--options]
 COMMANDS
   serve   --dataset NAME --index KIND [--port P] [--device D]
           [--workers N] [--shards N] [--batching true|false]
-          [--batch-window-us U] [--max-inflight N] [--transformer]
+          [--batch-window-us U] [--max-inflight N]
+          [--rebalance true|false] [--rebalance-interval N]
+          [--max-migrations N] [--transformer]
           [--real-prefill] [--live-generation]
           (--shards 0 = auto, one per core — the serve default;
            --shards 1 = single-shard paper-exact index;
            --batching true — the serve default — coalesces concurrent
-           queries' embed/probe kernel calls into fused batches)
+           queries' embed/probe kernel calls into fused batches;
+           --rebalance true — the serve default — migrates hot clusters
+           between shards online when placement drifts under updates)
   query   --text \"...\" [--port P]
   stats   [--port P]
   bench   <table2|fig3|fig4|fig5|fig7|fig10|fig12|fig13|breakdown|
@@ -191,6 +195,22 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(m) = args.get("max-inflight") {
         builder.retrieval.max_inflight = m.parse().context("bad --max-inflight")?;
     }
+    // Serving defaults to online cross-shard rebalancing (the round-robin
+    // placement drifts under online updates); the library/config default
+    // stays off. Same strict true/false parse as --batching.
+    builder.retrieval.rebalance = match args.get("rebalance") {
+        Some("true") | None => true,
+        Some("false") => false,
+        Some(other) => bail!("bad --rebalance `{other}` (expected true or false)"),
+    };
+    if let Some(n) = args.get("rebalance-interval") {
+        builder.retrieval.rebalance_interval_ops =
+            n.parse().context("bad --rebalance-interval")?;
+    }
+    if let Some(n) = args.get("max-migrations") {
+        builder.retrieval.max_migrations_per_round =
+            n.parse().context("bad --max-migrations")?;
+    }
     let shards = builder.retrieval.resolved_shards();
     eprintln!("building dataset `{}` ({} chunks)…", dataset.name, dataset.n_chunks);
     let built = builder.build_dataset(&dataset)?;
@@ -205,11 +225,12 @@ fn serve(args: &Args) -> Result<()> {
     )?;
     eprintln!(
         "serving `{}` with {} index on {addr} (device: {}, {workers} workers, {shards} shard(s), \
-         batching {})",
+         batching {}, rebalance {})",
         dataset.name,
         kind.name(),
         builder.device.name,
-        if builder.retrieval.batching { "on" } else { "off" }
+        if builder.retrieval.batching { "on" } else { "off" },
+        if builder.retrieval.rebalance { "on" } else { "off" }
     );
     server.run()
 }

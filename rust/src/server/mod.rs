@@ -27,6 +27,11 @@
 //!   {"op":"remove","id":N}           → {"removed": bool}
 //!   {"op":"stats"}                   → serving metrics (+ scheduler
 //!                                      stage stats when batching is on)
+//!   {"op":"shard-stats"}             → just the per-shard load rows
+//!                                      (error on an unsharded index)
+//!   {"op":"rebalance"}               → run one cross-shard rebalance
+//!                                      round; reports moves + load
+//!                                      spread (all-zero when unsharded)
 //!   {"op":"ping"}                    → {"ok": true}
 //!   {"op":"shutdown"}                → {"ok": true}, then the server stops
 //!
@@ -303,24 +308,7 @@ fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
                     index.resident_bytes(),
                     index.cache_stats().map(|s| s.hit_rate()).unwrap_or(0.0),
                     index.threshold_ms(),
-                    index.shard_stats().map(|rows| {
-                        // Per-shard rows: where probes/inserts landed,
-                        // each shard's threshold and cache occupancy.
-                        Value::array(rows.into_iter().map(|s| {
-                            Value::object(vec![
-                                ("shard", s.shard.into()),
-                                ("clusters", s.clusters.into()),
-                                ("probes", s.probes.into()),
-                                ("cache_hits", s.cache_hits.into()),
-                                ("generated", s.generated.into()),
-                                ("loaded", s.loaded.into()),
-                                ("inserts", s.inserts.into()),
-                                ("removes", s.removes.into()),
-                                ("threshold_ms", s.threshold_ms.into()),
-                                ("cache_used_bytes", s.cache_used_bytes.into()),
-                            ])
-                        }))
-                    }),
+                    index.shard_stats().map(shard_rows_json),
                 )
             };
             let mut fields = vec![
@@ -351,8 +339,67 @@ fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
             }
             Ok(Value::object(fields))
         }
+        "shard-stats" => {
+            // Just the per-shard load rows — what the rebalance planner
+            // sees (and what the churn suite asserts against).
+            let rows = state
+                .engine
+                .index()
+                .shard_stats()
+                .context("index is not sharded")?;
+            Ok(Value::object(vec![("shards", shard_rows_json(rows))]))
+        }
+        "rebalance" => {
+            // One explicit cross-shard rebalance round (the periodic
+            // trigger is `rebalance_interval_ops`). Concurrent queries
+            // keep serving bit-identical results while clusters move.
+            let r = state.engine.rebalance()?;
+            Ok(Value::object(vec![
+                ("planned", r.planned.into()),
+                ("migrated", r.migrated.into()),
+                ("skipped", r.skipped.into()),
+                ("spread_before", r.spread_before.into()),
+                ("spread_after", r.spread_after.into()),
+            ]))
+        }
         other => anyhow::bail!("unknown op `{other}`"),
     }
+}
+
+/// Per-shard rows: where probes/inserts/migrations landed, each shard's
+/// row-count load, threshold and cache state (shared by the `stats` and
+/// `shard-stats` ops).
+fn shard_rows_json(rows: Vec<crate::index::ShardStats>) -> Value {
+    Value::array(rows.into_iter().map(|s| {
+        Value::object(vec![
+            ("shard", s.shard.into()),
+            ("clusters", s.clusters.into()),
+            ("rows", s.rows.into()),
+            ("probes", s.probes.into()),
+            ("cache_hits", s.cache_hits.into()),
+            ("generated", s.generated.into()),
+            ("loaded", s.loaded.into()),
+            ("inserts", s.inserts.into()),
+            ("removes", s.removes.into()),
+            ("migrated_in", s.migrated_in.into()),
+            ("migrated_out", s.migrated_out.into()),
+            ("threshold_ms", s.threshold_ms.into()),
+            ("cache_used_bytes", s.cache_used_bytes.into()),
+            (
+                "cache",
+                Value::object(vec![
+                    ("hits", s.cache.hits.into()),
+                    ("misses", s.cache.misses.into()),
+                    ("insertions", s.cache.insertions.into()),
+                    ("evictions", s.cache.evictions.into()),
+                    (
+                        "rejected_below_threshold",
+                        s.cache.rejected_below_threshold.into(),
+                    ),
+                ]),
+            ),
+        ])
+    }))
 }
 
 fn stage_json(s: &StageSnapshot) -> Value {

@@ -77,6 +77,14 @@ impl BlobStore {
         self.sizes.lock().unwrap().values().sum()
     }
 
+    /// Ids of every stored cluster, sorted (the rebalancer's
+    /// orphaned-blob invariant check walks this).
+    pub fn cluster_ids(&self) -> Vec<u32> {
+        let mut ids: Vec<u32> = self.sizes.lock().unwrap().keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
     /// Persist a cluster's embeddings as one contiguous blob.
     pub fn put(&self, cluster: u32, emb: &EmbeddingMatrix) -> Result<()> {
         if emb.dim != self.dim {

@@ -22,3 +22,20 @@ pub fn shared_compute() -> ComputeHandle {
     })
     .clone()
 }
+
+/// The seed every randomized test derives its `Rng` from: `default_seed`
+/// unless `EDGERAG_TEST_SEED` overrides it. The effective seed is printed
+/// to stderr so a failing run's captured output always names the seed to
+/// reproduce it with (`EDGERAG_TEST_SEED=<n> cargo test …`) — CI's
+/// unfixed-seed churn job relies on this to make flakes replayable.
+pub fn test_seed(default_seed: u64) -> u64 {
+    let seed = match std::env::var("EDGERAG_TEST_SEED") {
+        Ok(v) => v
+            .trim()
+            .parse()
+            .expect("EDGERAG_TEST_SEED must be an unsigned integer"),
+        Err(_) => default_seed,
+    };
+    eprintln!("EDGERAG_TEST_SEED={seed} (set this env var to reproduce)");
+    seed
+}

@@ -201,4 +201,87 @@ mod tests {
         assert_eq!(argmax(&[0.0, 3.0, 2.0]), 1);
         assert_eq!(argmax(&[-1.0]), 0);
     }
+
+    /// Reference ranking: stable sort by (score desc, candidate position
+    /// asc) — the total order `top_k_hits` must realize.
+    fn reference_top_k(all: &[(u32, f32)], k: usize) -> Vec<(u32, f32)> {
+        let mut idx: Vec<usize> = (0..all.len()).collect();
+        idx.sort_by(|&a, &b| {
+            all[b]
+                .1
+                .partial_cmp(&all[a].1)
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx.into_iter().take(k).map(|i| all[i]).collect()
+    }
+
+    /// Random candidate lists with heavy score collisions (scores
+    /// quantized to 8 levels so ties actually occur).
+    fn random_hits(rng: &mut crate::data::Rng, n: usize) -> Vec<(u32, f32)> {
+        (0..n)
+            .map(|i| (i as u32, (rng.below(8) as f32) * 0.125))
+            .collect()
+    }
+
+    #[test]
+    fn top_k_hits_realizes_a_total_order() {
+        // Property: the selection is exactly the stable
+        // (score desc, position asc) order — ties are never left to
+        // accident, which is what lets the unbatched, batched and
+        // sharded merge paths agree bit for bit.
+        let mut rng = crate::data::Rng::new(crate::testutil::test_seed(0x70B));
+        for case in 0..300 {
+            let n = rng.range(1, 40);
+            let k = rng.below(12) + 1;
+            let all = random_hits(&mut rng, n);
+            let got = top_k_hits(all.clone(), k);
+            let want = reference_top_k(&all, k);
+            assert_eq!(got, want, "case {case}: {all:?} k={k}");
+        }
+    }
+
+    #[test]
+    fn top_k_hits_merge_is_associative() {
+        // Property: reducing per-group candidate lists to their local
+        // top-k, concatenating the reduced groups in group order, and
+        // reducing again gives exactly the direct top-k of the full
+        // concatenation. This is the algebra the sharded (and batched)
+        // merge rests on: each cluster/shard may pre-reduce its
+        // candidates without changing the final ranking or its ties.
+        let mut rng = crate::data::Rng::new(crate::testutil::test_seed(0xA550C));
+        for case in 0..300 {
+            let groups: Vec<Vec<(u32, f32)>> = (0..rng.range(1, 5))
+                .map(|_| {
+                    let n = rng.below(16);
+                    random_hits(&mut rng, n)
+                })
+                .collect();
+            // Re-tag ids so candidate positions are globally unique and
+            // group order is visible in the ids.
+            let mut next = 0u32;
+            let groups: Vec<Vec<(u32, f32)>> = groups
+                .into_iter()
+                .map(|g| {
+                    g.into_iter()
+                        .map(|(_, s)| {
+                            next += 1;
+                            (next, s)
+                        })
+                        .collect()
+                })
+                .collect();
+            let k = rng.below(8) + 1;
+            let direct: Vec<(u32, f32)> =
+                top_k_hits(groups.iter().flatten().copied().collect(), k);
+            let staged: Vec<(u32, f32)> = top_k_hits(
+                groups
+                    .iter()
+                    .flat_map(|g| top_k_hits(g.clone(), k))
+                    .collect(),
+                k,
+            );
+            assert_eq!(direct, staged, "case {case}: {groups:?} k={k}");
+        }
+    }
 }

@@ -1,0 +1,462 @@
+//! Randomized churn suite for the online cross-shard rebalancer
+//! (`rust/src/index/rebalance.rs`).
+//!
+//! Three layers of evidence, all seeded through
+//! `edgerag::testutil::test_seed` (`EDGERAG_TEST_SEED` overrides; the
+//! effective seed is printed so CI flakes are reproducible):
+//!
+//! 1. **Live-migration equivalence** — 8 threads search continuously
+//!    (through the cross-query batch scheduler when
+//!    `EDGERAG_TEST_BATCHING` enables it) while a driver migrates
+//!    clusters between shards and runs rebalance rounds; every single
+//!    search result must be bit-identical to a single-shard oracle.
+//! 2. **Sequential randomized churn** — a seeded interleaving of
+//!    insert / remove / search / rebalance ops replayed against both the
+//!    sharded index and a single-shard oracle, asserting bit-identical
+//!    searches (hits, probes, events, modeled latency), identical
+//!    cluster-id allocation, and the full cross-shard invariant set
+//!    after every rebalance round.
+//! 3. **Concurrent churn smoke** — 8 threads mixing all op kinds with
+//!    periodic auto-rebalance enabled; nothing may deadlock, lose a
+//!    chunk, or break an invariant.
+//!
+//! Scope note: removals are kept above the merge threshold because
+//! merges are *intra-shard by design* (ROADMAP: "merges/splits stay
+//! intra-shard") — a drained cluster merges into its shard-local nearest
+//! neighbour, which legitimately differs from the oracle's global
+//! nearest. Everything else (splits included) is exactly equivalent.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
+use edgerag::coordinator::builder::SystemBuilder;
+use edgerag::data::Rng;
+use edgerag::index::updates::MERGE_THRESHOLD;
+use edgerag::index::{EdgeIndex, ShardedEdgeIndex, VectorIndex};
+use edgerag::sched::{BatchScheduler, SchedConfig};
+use edgerag::testutil::{shared_compute, test_seed};
+
+fn builder(shards: usize, tag: &str) -> SystemBuilder {
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    // Per-test blob-store root: tests in this binary run in parallel and
+    // must not clear each other's stores.
+    b.options.state_dir =
+        std::env::temp_dir().join(format!("edgerag-churn-{tag}-{}", std::process::id()));
+    b.retrieval.nprobe = 4;
+    b.retrieval.shards = shards;
+    b
+}
+
+/// Shard counts under test: `EDGERAG_TEST_SHARDS=N` pins one (the CI
+/// matrix); the default covers the degenerate single shard and 4 shards.
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("EDGERAG_TEST_SHARDS") {
+        Ok(v) => vec![v.parse().expect("EDGERAG_TEST_SHARDS must be an integer")],
+        Err(_) => vec![1, 4],
+    }
+}
+
+/// Batching modes under test: `EDGERAG_TEST_BATCHING=true|false` pins
+/// one (the CI matrix); default covers both.
+fn batching_modes() -> Vec<bool> {
+    match std::env::var("EDGERAG_TEST_BATCHING") {
+        Ok(v) => match v.as_str() {
+            "true" => vec![true],
+            "false" => vec![false],
+            other => panic!("EDGERAG_TEST_BATCHING must be true or false, got `{other}`"),
+        },
+        Err(_) => vec![false, true],
+    }
+}
+
+/// Batched bit-equivalence only holds on the reference backend (compiled
+/// PJRT graphs lower per batch shape) — same qualifier as
+/// `sched_equivalence.rs`.
+fn reference_backend() -> bool {
+    if shared_compute().backend_name() == "pjrt" {
+        eprintln!(
+            "skipping batched leg: bit-equivalence is asserted on the reference backend only"
+        );
+        return false;
+    }
+    true
+}
+
+#[test]
+fn concurrent_searches_during_live_migrations_match_oracle() {
+    // The acceptance property: while clusters migrate between shards,
+    // every concurrently served search is bit-identical to a
+    // single-shard oracle — at 4 shards, with the batch scheduler on.
+    let seed = test_seed(0x11FE);
+    for shards in shard_counts() {
+        for batching in batching_modes() {
+            if batching && !reference_backend() {
+                continue;
+            }
+            let tag = format!("live-{shards}-{batching}");
+            let b_o = builder(1, &format!("{tag}-oracle"));
+            let built_o = b_o.build_dataset(&DatasetProfile::tiny()).unwrap();
+            let oracle = b_o.pipeline(&built_o, IndexKind::EdgeRag).unwrap();
+            oracle.index_mut().pin_threshold(0.0);
+
+            let b = builder(shards, &tag);
+            let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+            let engine = Arc::new(b.pipeline(&built, IndexKind::EdgeRag).unwrap());
+            engine.index_mut().pin_threshold(0.0);
+            let sched = batching.then(|| {
+                BatchScheduler::new(
+                    engine.clone(),
+                    SchedConfig {
+                        batch_window_us: 300,
+                        max_inflight: 0,
+                        bypass: true,
+                    },
+                )
+            });
+
+            let queries: Vec<String> = built
+                .workload
+                .queries
+                .iter()
+                .take(16)
+                .map(|q| q.text.clone())
+                .collect();
+            let expect: Vec<Vec<(u32, f32)>> = queries
+                .iter()
+                .map(|q| oracle.handle(q).unwrap().hits)
+                .collect();
+
+            let done = AtomicBool::new(false);
+            std::thread::scope(|scope| {
+                // 8 searcher threads hammer the engine while migrations
+                // run; each asserts every result against the oracle.
+                for t in 0..8usize {
+                    let engine = &engine;
+                    let sched = &sched;
+                    let queries = &queries;
+                    let expect = &expect;
+                    let done = &done;
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(seed ^ (t as u64 + 1));
+                        for round in 0..40 {
+                            let i = rng.below(queries.len());
+                            let out = match sched {
+                                Some(s) => s.handle(&queries[i]).unwrap(),
+                                None => engine.handle(&queries[i]).unwrap(),
+                            };
+                            assert_eq!(
+                                out.hits, expect[i],
+                                "thread {t} round {round} query {i} diverged mid-migration"
+                            );
+                        }
+                        done.store(true, Ordering::Release);
+                    });
+                }
+                // Driver: migrate clusters ping-pong and run rebalance
+                // rounds until the searchers finish, checking invariants
+                // after every round.
+                let engine = &engine;
+                let done = &done;
+                scope.spawn(move || {
+                    let index = engine.index();
+                    let Some(sharded) = index.as_any().downcast_ref::<ShardedEdgeIndex>() else {
+                        return; // shards=1 leg: nothing to migrate
+                    };
+                    let mut rng = Rng::new(seed ^ 0xD1DE);
+                    let globals: Vec<u32> = sharded
+                        .cluster_loads()
+                        .iter()
+                        .flatten()
+                        .map(|c| c.global)
+                        .collect();
+                    loop {
+                        for i in 0..4 {
+                            let g = globals[rng.below(globals.len())];
+                            // Guarantee real movement: the first pick per
+                            // round targets a different shard.
+                            let cur = sharded.shard_of(g);
+                            let to = if i == 0 {
+                                (cur + 1) % sharded.shards()
+                            } else {
+                                rng.below(sharded.shards())
+                            };
+                            sharded.migrate_cluster(g, to).unwrap();
+                        }
+                        sharded.rebalance().unwrap();
+                        sharded.verify_integrity().unwrap();
+                        if done.load(Ordering::Acquire) {
+                            break;
+                        }
+                    }
+                });
+            });
+
+            // Migration must actually have happened for the sharded legs.
+            if shards > 1 {
+                let index = engine.index();
+                let stats = index.shard_stats().unwrap();
+                let moved: u64 = stats.iter().map(|s| s.migrated_in).sum();
+                assert!(moved > 0, "driver performed no migrations");
+            }
+        }
+    }
+}
+
+#[test]
+fn sequential_randomized_churn_matches_oracle_replay() {
+    // Replay one seeded op sequence against the sharded index and a
+    // single-shard oracle: searches (uncommitted, so cache capacity
+    // splits cannot legitimately diverge events) must match bit for bit,
+    // inserts must land in identically numbered clusters, and the
+    // invariant suite must hold after every rebalance round.
+    let seed = test_seed(0x5EC1);
+    for shards in shard_counts() {
+        let b_o = builder(1, &format!("seq-oracle-{shards}"));
+        let built_o = b_o.build_dataset(&DatasetProfile::tiny()).unwrap();
+        let (mut oracle, _mem_o) = b_o.index(&built_o, IndexKind::EdgeRag).unwrap();
+
+        let b = builder(shards, &format!("seq-{shards}"));
+        let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+        let (mut subject, _mem_s) = b.index(&built, IndexKind::EdgeRag).unwrap();
+
+        let embedder = b.embedder();
+        let mut rng = Rng::new(seed ^ shards as u64);
+        let mut alive: Vec<u32> = (0..built.corpus.len() as u32).collect();
+        let mut next_id = built.corpus.len() as u32 + 1_000;
+        let mut spread_checks = 0u32;
+
+        for step in 0..240 {
+            match rng.below(100) {
+                // -------- search (45%) --------
+                0..=44 => {
+                    let q = &built.workload.queries[rng.below(built.workload.queries.len())];
+                    let emb = embedder.embed_one(&q.text).unwrap();
+                    let sa = oracle.search(&emb, 5).unwrap();
+                    let sb = subject.search(&emb, 5).unwrap();
+                    assert_eq!(sa.hits, sb.hits, "step {step} hits");
+                    assert_eq!(sa.probed, sb.probed, "step {step} probes");
+                    assert_eq!(sa.events.generated, sb.events.generated, "step {step}");
+                    assert_eq!(sa.events.loaded, sb.events.loaded, "step {step}");
+                    assert_eq!(
+                        sa.ledger.total(),
+                        sb.ledger.total(),
+                        "step {step} modeled latency"
+                    );
+                }
+                // -------- insert (25%) --------
+                45..=69 => {
+                    let text = format!("churn document {next_id} marker zzchurn{next_id}");
+                    let emb = embedder.embed_one(&text).unwrap();
+                    let ca = oracle.insert_chunk(next_id, &text, &emb).unwrap();
+                    let cb = if subject.supports_concurrent_updates() {
+                        subject.insert_chunk_concurrent(next_id, &text, &emb).unwrap()
+                    } else {
+                        subject.insert_chunk(next_id, &text, &emb).unwrap()
+                    };
+                    assert_eq!(ca, cb, "step {step}: cluster-id allocation diverged");
+                    alive.push(next_id);
+                    next_id += 1;
+                }
+                // -------- remove (15%) --------
+                70..=84 => {
+                    if alive.is_empty() {
+                        continue;
+                    }
+                    let i = rng.below(alive.len());
+                    let id = alive[i];
+                    // Keep clusters above the merge threshold: merges are
+                    // intra-shard by design and legitimately diverge from
+                    // the oracle's global nearest-neighbour merge.
+                    let big_enough = oracle
+                        .as_any()
+                        .downcast_ref::<EdgeIndex>()
+                        .unwrap()
+                        .cluster_of(id)
+                        .is_some_and(|c| {
+                            oracle.as_any().downcast_ref::<EdgeIndex>().unwrap().clusters()
+                                .clusters[c as usize]
+                                .len()
+                                > MERGE_THRESHOLD + 1
+                        });
+                    if !big_enough {
+                        continue;
+                    }
+                    let ra = oracle.remove_chunk(id).unwrap();
+                    let rb = if subject.supports_concurrent_updates() {
+                        subject.remove_chunk_concurrent(id).unwrap()
+                    } else {
+                        subject.remove_chunk(id).unwrap()
+                    };
+                    assert_eq!(ra, rb, "step {step} removed flags");
+                    assert!(ra, "step {step}: alive chunk not removed");
+                    alive.swap_remove(i);
+                }
+                // -------- rebalance (15%) --------
+                _ => {
+                    if let Some(sharded) = subject.as_any().downcast_ref::<ShardedEdgeIndex>() {
+                        let r = sharded.rebalance().unwrap();
+                        assert!(r.spread_after <= r.spread_before, "step {step}: {r:?}");
+                        assert!(
+                            r.migrated + r.skipped == r.planned,
+                            "step {step}: unexecuted plan: {r:?}"
+                        );
+                        sharded.verify_integrity().unwrap();
+                        spread_checks += 1;
+                    }
+                }
+            }
+        }
+        if shards > 1 {
+            assert!(spread_checks > 0, "op mix never exercised rebalance");
+            let sharded = subject.as_any().downcast_ref::<ShardedEdgeIndex>().unwrap();
+            let moved: u64 = sharded
+                .shard_stats()
+                .iter()
+                .map(|s| s.migrated_in)
+                .sum();
+            // Inserts skew the round-robin placement, so rounds must
+            // eventually move something.
+            assert!(moved > 0, "churn never migrated a cluster");
+        }
+
+        // Terminal state agreement: every alive chunk sits in the same
+        // (globally numbered) cluster on both sides.
+        for &id in &alive {
+            let a = oracle
+                .as_any()
+                .downcast_ref::<EdgeIndex>()
+                .unwrap()
+                .cluster_of(id);
+            let b = match subject.as_any().downcast_ref::<ShardedEdgeIndex>() {
+                Some(s) => s.cluster_of(id),
+                None => subject.as_any().downcast_ref::<EdgeIndex>().unwrap().cluster_of(id),
+            };
+            assert_eq!(a, b, "chunk {id} routed differently after churn");
+        }
+    }
+}
+
+#[test]
+fn concurrent_churn_smoke_holds_invariants() {
+    // All op kinds at once, with the periodic auto-rebalance trigger
+    // enabled: no deadlocks, no lost chunks, invariants intact.
+    let seed = test_seed(0xC0DE);
+    let shards = *shard_counts().last().unwrap();
+    let mut b = builder(shards, "smoke");
+    b.retrieval.rebalance = true;
+    b.retrieval.rebalance_interval_ops = 8;
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let engine = Arc::new(b.pipeline(&built, IndexKind::EdgeRag).unwrap());
+
+    let inserted: std::sync::Mutex<Vec<u32>> = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|scope| {
+        for t in 0..8usize {
+            let engine = &engine;
+            let built = &built;
+            let inserted = &inserted;
+            scope.spawn(move || {
+                let mut rng = Rng::new(seed ^ (0x100 + t as u64));
+                let mut mine: Vec<u32> = Vec::new();
+                for step in 0..40 {
+                    match rng.below(100) {
+                        0..=54 => {
+                            let q =
+                                &built.workload.queries[rng.below(built.workload.queries.len())];
+                            let out = engine.handle(&q.text).unwrap();
+                            assert!(!out.hits.is_empty(), "thread {t} step {step}");
+                        }
+                        55..=79 => {
+                            let text =
+                                format!("smoke doc thread {t} step {step} zzsmoke{t}x{step}");
+                            let (id, _cluster) = engine.insert(&text).unwrap();
+                            mine.push(id);
+                        }
+                        80..=89 => {
+                            if let Some(id) = mine.pop() {
+                                assert!(engine.remove(id).unwrap(), "thread {t} step {step}");
+                            }
+                        }
+                        _ => {
+                            engine.rebalance().unwrap();
+                        }
+                    }
+                }
+                inserted.lock().unwrap().extend(mine);
+            });
+        }
+    });
+
+    let index = engine.index();
+    if let Some(sharded) = index.as_any().downcast_ref::<ShardedEdgeIndex>() {
+        sharded.verify_integrity().unwrap();
+        for &id in inserted.lock().unwrap().iter() {
+            assert!(sharded.cluster_of(id).is_some(), "chunk {id} lost");
+        }
+    } else {
+        for &id in inserted.lock().unwrap().iter() {
+            let edge = index.as_any().downcast_ref::<EdgeIndex>().unwrap();
+            assert!(edge.cluster_of(id).is_some(), "chunk {id} lost");
+        }
+    }
+}
+
+#[test]
+fn skewed_placement_rebalances_under_live_traffic() {
+    // The bench-sweep property as a test: seed one shard with every
+    // cluster (the worst drift), then require bounded rebalance rounds
+    // to cut the load spread in half while searches stay bit-identical
+    // to an untouched oracle.
+    let _ = test_seed(0x5CE3); // print the seed header for CI logs
+    for shards in shard_counts() {
+        if shards < 2 {
+            continue;
+        }
+        let b_o = builder(1, &format!("skew-oracle-{shards}"));
+        let built_o = b_o.build_dataset(&DatasetProfile::tiny()).unwrap();
+        let (oracle, _mem_o) = b_o.index(&built_o, IndexKind::EdgeRag).unwrap();
+
+        let b = builder(shards, &format!("skew-{shards}"));
+        let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+        let (subject, _mem_s) = b.index(&built, IndexKind::EdgeRag).unwrap();
+        let sharded = subject.as_any().downcast_ref::<ShardedEdgeIndex>().unwrap();
+
+        let loads = sharded.cluster_loads();
+        let globals: Vec<u32> = loads.iter().flatten().map(|c| c.global).collect();
+        let max_load = loads.iter().flatten().map(|c| c.load()).max().unwrap();
+        for &g in &globals {
+            sharded.migrate_cluster(g, 0).unwrap();
+        }
+        sharded.verify_integrity().unwrap();
+        let before = sharded.load_spread();
+        assert!(before > 0, "all-on-one-shard placement must show spread");
+
+        let embedder = b.embedder();
+        let mut rounds = 0;
+        loop {
+            let r = sharded.rebalance().unwrap();
+            sharded.verify_integrity().unwrap();
+            rounds += 1;
+            // Live traffic between rounds stays oracle-identical.
+            let q = &built.workload.queries[rounds % built.workload.queries.len()];
+            let emb = embedder.embed_one(&q.text).unwrap();
+            assert_eq!(
+                oracle.search(&emb, 5).unwrap().hits,
+                subject.search(&emb, 5).unwrap().hits,
+                "round {rounds}"
+            );
+            if r.migrated == 0 || rounds >= 16 {
+                break;
+            }
+        }
+        // The greedy equalizer's guaranteed endpoint: spread halves, or
+        // is pinned by indivisibly large clusters (a stuck donor's every
+        // cluster exceeds half the remaining gap).
+        let after = sharded.load_spread();
+        assert!(
+            after < before && after <= (before / 2).max(2 * max_load),
+            "spread {before} -> {after} (max cluster load {max_load}) after {rounds} rounds"
+        );
+    }
+}

@@ -27,23 +27,36 @@ fn builder(shards: usize, tag: &str) -> SystemBuilder {
     b
 }
 
+/// Shard count for the sharded side of each test: `EDGERAG_TEST_SHARDS`
+/// pins it (the CI churn matrix re-runs this suite across {1, 4} — 1 is
+/// the degenerate single-shard-vs-single-shard sanity leg), default 4.
+fn sharded_count() -> usize {
+    match std::env::var("EDGERAG_TEST_SHARDS") {
+        Ok(v) => v.parse().expect("EDGERAG_TEST_SHARDS must be an integer"),
+        Err(_) => 4,
+    }
+}
+
 #[test]
 fn sharded_four_matches_unsharded_exactly() {
+    let k = sharded_count();
     let b1 = builder(1, "eq1");
-    let b4 = builder(4, "eq4");
+    let b4 = builder(k, "eq4");
     let built1 = b1.build_dataset(&DatasetProfile::tiny()).unwrap();
     let built4 = b4.build_dataset(&DatasetProfile::tiny()).unwrap();
 
     let (mut one, _mem1) = b1.index(&built1, IndexKind::EdgeRag).unwrap();
-    let (four, _mem4) = b4.index(&built4, IndexKind::EdgeRag).unwrap();
-    // shards=1 must take the plain single-index path; shards=4 the
+    let (mut four, _mem4) = b4.index(&built4, IndexKind::EdgeRag).unwrap();
+    // shards=1 must take the plain single-index path; shards>1 the
     // sharded one.
     assert!(one.as_any().downcast_ref::<EdgeIndex>().is_some());
-    let sharded = four
-        .as_any()
-        .downcast_ref::<ShardedEdgeIndex>()
-        .expect("shards=4 builds a ShardedEdgeIndex");
-    assert_eq!(sharded.shards(), 4);
+    if k > 1 {
+        let sharded = four
+            .as_any()
+            .downcast_ref::<ShardedEdgeIndex>()
+            .expect("shards>1 builds a ShardedEdgeIndex");
+        assert_eq!(sharded.shards(), k);
+    }
 
     // Pin both thresholds to 0 (admit everything): the per-shard
     // feedback controllers see different miss streams, so leaving them
@@ -54,7 +67,7 @@ fn sharded_four_matches_unsharded_exactly() {
         .downcast_mut::<EdgeIndex>()
         .unwrap()
         .pin_threshold(0.0);
-    sharded.pin_threshold(0.0);
+    four.pin_threshold(0.0);
 
     let embedder = b1.embedder();
     for (i, q) in built1.workload.queries.iter().take(32).enumerate() {
@@ -77,9 +90,9 @@ fn sharded_four_matches_unsharded_exactly() {
     // exactly (shard-local ids mapped back to global ones), and so do
     // the insertion counters.
     let edge = one.as_any().downcast_ref::<EdgeIndex>().unwrap();
-    assert_eq!(edge.cached_clusters(), sharded.cached_clusters());
+    assert_eq!(edge.cached_clusters(), four.cached_clusters());
     let s1 = edge.cache_stats().unwrap();
-    let s4 = sharded.cache_stats().unwrap();
+    let s4 = four.cache_stats().unwrap();
     assert_eq!(s1.insertions, s4.insertions);
     assert_eq!(s1.hits, s4.hits);
     assert_eq!(s1.misses, s4.misses);
@@ -87,7 +100,12 @@ fn sharded_four_matches_unsharded_exactly() {
 
 #[test]
 fn insert_overlaps_queries_to_other_shards() {
-    let b = builder(4, "overlap");
+    let k = sharded_count();
+    if k < 2 {
+        eprintln!("skipping: shard-overlap semantics need at least 2 shards");
+        return;
+    }
+    let b = builder(k, "overlap");
     let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
     let engine = Arc::new(b.pipeline(&built, IndexKind::EdgeRag).unwrap());
     let embedder = b.embedder();
@@ -166,7 +184,7 @@ fn insert_overlaps_queries_to_other_shards() {
     let index = engine.index();
     let sharded = index.as_any().downcast_ref::<ShardedEdgeIndex>().unwrap();
     let stats = sharded.shard_stats();
-    assert_eq!(stats.len(), 4);
+    assert_eq!(stats.len(), k);
     let total_inserts: u64 = stats.iter().map(|s| s.inserts).sum();
     assert_eq!(total_inserts, 13);
     let total_probes: u64 = stats.iter().map(|s| s.probes).sum();
@@ -176,7 +194,12 @@ fn insert_overlaps_queries_to_other_shards() {
 #[test]
 fn sharded_server_serves_inserts_and_per_shard_stats() {
     // End-to-end over TCP with the sharded index `serve` defaults to.
-    let b = builder(4, "server");
+    let k = sharded_count();
+    if k < 2 {
+        eprintln!("skipping: per-shard stats rows need a sharded index");
+        return;
+    }
+    let b = builder(k, "server");
     let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
     let pipeline = b.pipeline(&built, IndexKind::EdgeRag).unwrap();
     let server = Server::bind_with_workers("127.0.0.1:0", pipeline, b.embedder(), 4).unwrap();
@@ -210,7 +233,7 @@ fn sharded_server_serves_inserts_and_per_shard_stats() {
         .get("shards")
         .and_then(|v| v.as_array())
         .expect("sharded stats expose per-shard rows");
-    assert_eq!(shards.len(), 4);
+    assert_eq!(shards.len(), k);
     let inserts: u64 = shards
         .iter()
         .map(|s| s.get("inserts").and_then(|v| v.as_u64()).unwrap())
@@ -229,4 +252,32 @@ fn sharded_server_serves_inserts_and_per_shard_stats() {
         ]))
         .unwrap();
     assert_eq!(rem.get("removed").and_then(|v| v.as_bool()), Some(true), "{rem}");
+
+    // The dedicated per-shard load view: same rows as `stats.shards`,
+    // including the rebalancer's row-count load measure.
+    let ss = c
+        .call(&Value::object(vec![("op", Value::str("shard-stats"))]))
+        .unwrap();
+    let rows = ss
+        .get("shards")
+        .and_then(|v| v.as_array())
+        .expect("shard-stats returns per-shard rows");
+    assert_eq!(rows.len(), k);
+    let total_rows: u64 = rows
+        .iter()
+        .map(|s| s.get("rows").and_then(|v| v.as_u64()).unwrap())
+        .sum();
+    assert!(total_rows > 0, "per-shard row loads exposed");
+
+    // An explicit rebalance round over the wire: a full report comes
+    // back and the server keeps serving afterwards.
+    let rb = c
+        .call(&Value::object(vec![("op", Value::str("rebalance"))]))
+        .unwrap();
+    let before = rb.get("spread_before").and_then(|v| v.as_u64()).unwrap();
+    let after = rb.get("spread_after").and_then(|v| v.as_u64()).unwrap();
+    assert!(after <= before, "{rb}");
+    assert!(rb.get("migrated").is_some(), "{rb}");
+    let resp = c.query("c1 c2 words t0w1 t0w2").unwrap();
+    assert!(resp.get("hits").is_some(), "server serves after rebalance: {resp}");
 }
