@@ -285,7 +285,13 @@ impl CostAwareCache {
             .fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Remove one entry (threshold-driven eviction or cluster removal).
+    /// Remove one entry (threshold-driven eviction, cluster removal, a
+    /// migration retiring its source copy, or a merge invalidating both
+    /// sides — the absorbed rows' cache entry does *not* hand off to the
+    /// merge victim: the victim's own entry is stale the moment its
+    /// membership grows, so both entries drop and the merged cluster
+    /// re-admits through the normal threshold gate on its next miss,
+    /// exactly as the unsharded inline path behaves).
     pub fn remove(&mut self, cluster: u32) -> bool {
         if let Some(e) = self.entries.remove(&cluster) {
             self.used_bytes -= e.bytes;

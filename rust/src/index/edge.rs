@@ -285,6 +285,15 @@ impl EdgeIndex {
         self.blob.as_ref().map_or(0, |b| b.len())
     }
 
+    /// This index's blob store, when selective storage is on. Exposed for
+    /// the crash-consistency suites, which arm
+    /// [`BlobStore::inject_put_failures`] /
+    /// [`BlobStore::inject_remove_failures`] to prove the composed
+    /// structural ops abort cleanly mid-merge.
+    pub fn blob_store(&self) -> Option<&BlobStore> {
+        self.blob.as_ref()
+    }
+
     pub fn stored_bytes(&self) -> u64 {
         self.blob.as_ref().map_or(0, |b| b.total_bytes())
     }

@@ -59,6 +59,7 @@ use std::sync::atomic::Ordering;
 use anyhow::Result;
 
 use crate::index::shard::{ShardedEdgeIndex, ORPHAN};
+use crate::index::updates::ClusterExport;
 
 /// One cluster's contribution to its shard's load.
 #[derive(Debug, Clone, Copy)]
@@ -127,6 +128,17 @@ pub struct RebalanceReport {
 /// resulting global spread). A step is only taken when it *strictly*
 /// reduces the spread, so the projected spread is monotonically
 /// non-increasing over the plan and the plan never exceeds `max_moves`.
+///
+/// Composition with cross-shard merges: a plan draws exclusively from
+/// its input snapshot, and [`ShardedEdgeIndex::cluster_loads`] lists
+/// only owned, *active* clusters — a merged (tombstoned) cluster can
+/// never be scheduled, and a victim's absorbed mass is re-accounted the
+/// moment the next snapshot is taken. A *stale* plan naming a cluster
+/// that merged (or moved) after planning is defused at execution time:
+/// [`ShardedEdgeIndex::migrate_cluster`] re-validates liveness and
+/// placement under the structural-updates mutex — the same mutex merges
+/// hold — and skips the move. `rust/tests/merge_routing.rs` pins both
+/// properties.
 pub fn plan_rebalance(shard_loads: &[Vec<ClusterLoad>], max_moves: usize) -> MigrationPlan {
     let k = shard_loads.len();
     let mut totals: Vec<u64> = shard_loads
@@ -306,14 +318,33 @@ impl ShardedEdgeIndex {
             guard.export_cluster(local)?
         };
 
-        // Import: the destination gains an (as yet unregistered, hence
-        // invisible) local copy. A failure here leaves every map
-        // untouched — the migration simply didn't happen.
-        let new_local = self.shards[dest].write().unwrap().import_cluster(&export)?;
+        self.adopt_exported(&export, global, src, local, dest)?;
+        Ok(true)
+    }
 
-        // Flip: from here on every search routes the global id at the
-        // destination. Acquiring the write lock drains in-flight
-        // searches still walking under the old mapping.
+    /// The shared migration tail — import → flip → retire → account —
+    /// used by both a plain migration and the composed cross-shard
+    /// merge (`ShardedEdgeIndex::remove_chunk`'s migrate-then-merge), so
+    /// the two paths cannot drift. `export` was taken from `(src,
+    /// local)`; caller holds the structural-updates mutex and no shard
+    /// lease. Returns the destination's new local id.
+    ///
+    /// * **Import**: the destination gains an (as yet unregistered,
+    ///   hence invisible) local copy. A failure here leaves every map
+    ///   untouched — the migration simply didn't happen.
+    /// * **Flip**: from here on every search routes the global id at
+    ///   the destination. Acquiring the ownership write lock drains
+    ///   in-flight searches still walking under the old mapping.
+    /// * **Retire**: no search can reach the source copy any more.
+    pub(crate) fn adopt_exported(
+        &self,
+        export: &ClusterExport,
+        global: u32,
+        src: usize,
+        local: u32,
+        dest: usize,
+    ) -> Result<u32> {
+        let new_local = self.shards[dest].write().unwrap().import_cluster(export)?;
         {
             let mut own = self.ownership.write().unwrap();
             own.owner[global as usize] = (dest as u32, new_local);
@@ -321,17 +352,14 @@ impl ShardedEdgeIndex {
             debug_assert_eq!(own.locals[dest].len(), new_local as usize);
             own.locals[dest].push(global);
         }
-
-        // Retire: no search can reach the source copy any more.
         self.shards[src].write().unwrap().retire_cluster(local)?;
-
         self.counters[src]
             .migrated_out
             .fetch_add(1, Ordering::Relaxed);
         self.counters[dest]
             .migrated_in
             .fetch_add(1, Ordering::Relaxed);
-        Ok(true)
+        Ok(new_local)
     }
 
     /// Check every cross-shard structural invariant, quiescing structural
@@ -517,6 +545,29 @@ mod tests {
             for m in &plan.moves {
                 assert_eq!(at.get(&m.cluster), Some(&m.from), "case {case}: {m:?}");
                 at.insert(m.cluster, m.to);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_draws_only_from_its_snapshot() {
+        // The merge-composition guarantee at the planner level: a plan
+        // can only name clusters present in its input snapshot, so a
+        // load snapshot that excludes merging/tombstoned clusters (as
+        // `cluster_loads` does) yields a plan that cannot touch them.
+        let mut rng = Rng::new(test_seed(0x9E64));
+        for case in 0..200 {
+            let shards = rng.range(2, 6);
+            let loads = random_loads(&mut rng, shards);
+            let known: std::collections::HashSet<u32> =
+                loads.iter().flatten().map(|c| c.global).collect();
+            let plan = plan_rebalance(&loads, 8);
+            for m in &plan.moves {
+                assert!(
+                    known.contains(&m.cluster),
+                    "case {case}: planned unknown cluster {}: {plan:?}",
+                    m.cluster
+                );
             }
         }
     }

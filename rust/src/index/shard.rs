@@ -72,10 +72,11 @@
 //! two shard locks at once (probing reads only the snapshot; routing and
 //! snapshot rebuilds visit shards sequentially, one read lock at a time;
 //! fan-out workers each take exactly one). Structural mutations (insert,
-//! remove, migrate) serialize on the updates mutex — they are rare and
-//! heavy, and serializing them keeps migration's copy→flip→retire
-//! sequence atomic against other structural ops; searches never touch
-//! the mutex. A search holds the ownership **read** lock from probe-list
+//! remove, migrate, merge) serialize on the updates mutex — they are
+//! rare and heavy, and serializing them keeps the composed structural
+//! sequences (migration's copy→flip→retire, a cross-shard merge's
+//! migrate-then-merge) atomic against other structural ops; searches
+//! never touch the mutex. A search holds the ownership **read** lock from probe-list
 //! grouping through its cluster walks, so a migration's ownership flip
 //! (the write lock) naturally drains every search still routed at the
 //! pre-flip owner before the source copy is retired. See
@@ -103,6 +104,11 @@ use crate::vecmath::{self, EmbeddingMatrix};
 /// Hard ceiling on the shard count: shard `i` namespaces its memory-model
 /// regions at `i << 24`, leaving 24 bits of local cluster ids per shard.
 pub const MAX_SHARDS: usize = 256;
+
+/// Rows of per-cluster probe heat surfaced per shard in
+/// [`ShardStats::hot_clusters`] (the full table is available through
+/// [`ShardedEdgeIndex::cluster_probe_heat`]).
+pub const HOT_CLUSTERS: usize = 16;
 
 /// `Ownership::locals` marker for a local slot whose cluster migrated
 /// away: the slot stays (local ids are never reused) but maps to no
@@ -164,6 +170,9 @@ pub(crate) struct ShardCounters {
     removes: AtomicU64,
     pub(crate) migrated_in: AtomicU64,
     pub(crate) migrated_out: AtomicU64,
+    /// Drained clusters this shard absorbed as a merge victim (local or
+    /// cross-shard).
+    merges: AtomicU64,
 }
 
 /// One shard's serving statistics snapshot (the `stats` / `shard-stats`
@@ -195,6 +204,15 @@ pub struct ShardStats {
     pub migrated_in: u64,
     /// Clusters migrated **out of** this shard by the rebalancer.
     pub migrated_out: u64,
+    /// Drained clusters this shard absorbed as a merge victim (the
+    /// cross-shard merge router counts the absorbing side).
+    pub merges: u64,
+    /// Hottest clusters currently owned by this shard: `(global id,
+    /// probes)` in descending probe-heat order, capped at
+    /// [`HOT_CLUSTERS`] rows — the per-cluster half of the probe
+    /// counters (the per-shard totals ride in `probes`), and the input a
+    /// future affinity-aware placement policy would score on.
+    pub hot_clusters: Vec<(u32, u64)>,
     /// This shard's current adaptive caching threshold (ms).
     pub threshold_ms: f64,
     /// Bytes resident in this shard's embedding cache.
@@ -262,6 +280,15 @@ pub struct ShardedEdgeIndex {
     /// trigger exactly one rebuild and later rebuilds see every
     /// completed update.
     table_rebuild: Mutex<()>,
+    /// Per-cluster probe-heat counters, indexed by global cluster id
+    /// (ROADMAP gap: probe counters used to be per-shard only). Grown
+    /// lazily as new globals are probed; read-mostly — searches bump
+    /// counters under the read lock. Sits between the ownership lock
+    /// and the shard leases in the hierarchy: searches take it (briefly,
+    /// under ownership read) before their walks, `shard_stats` holds it
+    /// across shard read leases, and nothing holding a shard lease ever
+    /// acquires it.
+    probe_heat: RwLock<Vec<AtomicU64>>,
 }
 
 impl ShardedEdgeIndex {
@@ -389,6 +416,7 @@ impl ShardedEdgeIndex {
             })),
             table_stale: AtomicBool::new(false),
             table_rebuild: Mutex::new(()),
+            probe_heat: RwLock::new((0..n).map(|_| AtomicU64::new(0)).collect()),
         };
         {
             let _serial = index.table_rebuild.lock().unwrap();
@@ -607,14 +635,68 @@ impl ShardedEdgeIndex {
         None
     }
 
+    /// Count one search's probed globals into the per-cluster heat
+    /// table, growing it when a probe names a global past the current
+    /// end (a split registered since the table last grew).
+    fn note_probes(&self, probed: &[u32]) {
+        let need = probed.iter().map(|&g| g as usize + 1).max().unwrap_or(0);
+        {
+            let heat = self.probe_heat.read().unwrap();
+            if heat.len() >= need {
+                for &g in probed {
+                    heat[g as usize].fetch_add(1, Ordering::Relaxed);
+                }
+                return;
+            }
+        }
+        let mut heat = self.probe_heat.write().unwrap();
+        while heat.len() < need {
+            heat.push(AtomicU64::new(0));
+        }
+        for &g in probed {
+            heat[g as usize].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// The full per-cluster probe-heat table: `(global id, probes)` for
+    /// every global id probed at least once, ascending by id. Tombstoned
+    /// clusters keep their history (heat is per-global, placement-
+    /// independent), which is exactly what an affinity-aware placement
+    /// policy wants to score over.
+    pub fn cluster_probe_heat(&self) -> Vec<(u32, u64)> {
+        self.probe_heat
+            .read()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(g, h)| (g as u32, h.load(Ordering::Relaxed)))
+            .filter(|&(_, n)| n > 0)
+            .collect()
+    }
+
     /// Per-shard serving statistics.
     pub fn shard_stats(&self) -> Vec<ShardStats> {
+        // Per-shard heat rows need the ownership table; acquisition
+        // follows the hierarchy: ownership → heat → shard leases.
+        let own = self.ownership.read().unwrap();
+        let heat = self.probe_heat.read().unwrap();
         self.shards
             .iter()
             .enumerate()
             .map(|(i, shard)| {
                 let guard = shard.read().unwrap();
                 let c = &self.counters[i];
+                let mut hot: Vec<(u32, u64)> = own.locals[i]
+                    .iter()
+                    .enumerate()
+                    .filter(|&(l, &g)| g != ORPHAN && guard.active_flags()[l])
+                    .filter_map(|(_, &g)| {
+                        let n = heat.get(g as usize)?.load(Ordering::Relaxed);
+                        (n > 0).then_some((g, n))
+                    })
+                    .collect();
+                hot.sort_by_key(|&(g, n)| (std::cmp::Reverse(n), g));
+                hot.truncate(HOT_CLUSTERS);
                 ShardStats {
                     shard: i,
                     clusters: guard.active_clusters(),
@@ -627,6 +709,8 @@ impl ShardedEdgeIndex {
                     removes: c.removes.load(Ordering::Relaxed),
                     migrated_in: c.migrated_in.load(Ordering::Relaxed),
                     migrated_out: c.migrated_out.load(Ordering::Relaxed),
+                    merges: c.merges.load(Ordering::Relaxed),
+                    hot_clusters: hot,
                     threshold_ms: guard.threshold_ms(),
                     cache_used_bytes: guard.cache_used_bytes(),
                     cache: guard.cache_stats().unwrap_or_default(),
@@ -725,6 +809,20 @@ impl ShardedEdgeIndex {
 
     /// Remove a chunk (§5.4), write-leasing only the shard that owns it.
     /// Returns false if the chunk is unknown.
+    ///
+    /// A cluster that drains below
+    /// [`MERGE_THRESHOLD`](crate::index::updates::MERGE_THRESHOLD)
+    /// merges into its **global** nearest active neighbour — selected
+    /// against the spliced probe snapshot, exactly the choice the
+    /// unsharded oracle makes — not merely the nearest on its own shard.
+    /// When the victim lives on another shard the merge executes as a
+    /// composed migrate-then-merge (see
+    /// [`ShardedEdgeIndex::merge_drained`]), so every removal sequence
+    /// stays bit-identical to the single-shard oracle. A merge failure
+    /// (e.g. a blob-store error) leaves both shards consistent with the
+    /// chunk removed and the cluster still drained; the error propagates
+    /// and the merge retries on the next structural touch (or via
+    /// [`ShardedEdgeIndex::merge_drained`]).
     pub fn remove_chunk(&self, id: u32) -> Result<bool> {
         let removed = {
             let _serial = self.updates_serial.lock().unwrap();
@@ -742,19 +840,19 @@ impl ShardedEdgeIndex {
                 })
             };
             let Some(s) = owner else { return Ok(false) };
-            let (removed, merged) = {
+            let (removed, drained) = {
                 let mut guard = self.shards[s].write().unwrap();
-                let active_before = guard.active_clusters();
-                let removed = guard.remove_chunk(id)?;
-                (removed, guard.active_clusters() != active_before)
+                guard.remove_chunk_deferred(id)?
             };
             if removed {
                 self.counters[s].removes.fetch_add(1, Ordering::Relaxed);
-                // Only a merge touches the first level (it tombstones a
-                // cluster); a plain removal leaves the probe snapshot
-                // valid.
-                if merged {
-                    self.table_stale.store(true, Ordering::Release);
+                // A plain removal changes neither centroids nor liveness,
+                // so the probe snapshot stays valid; only a merge (below)
+                // touches the first level.
+                if let Some(local) = drained {
+                    if self.merge_drained_locked(s, local)? {
+                        self.table_stale.store(true, Ordering::Release);
+                    }
                 }
             }
             removed
@@ -763,6 +861,175 @@ impl ShardedEdgeIndex {
             self.note_update_op();
         }
         Ok(removed)
+    }
+
+    /// The global merge victim a drained cluster would be absorbed into:
+    /// the nearest active centroid across **all** shards, scored against
+    /// the spliced probe snapshot in ascending global-id order with self
+    /// and tombstones masked — bit-for-bit the choice
+    /// [`EdgeIndex::merge_victim`] makes on the unsharded oracle, for
+    /// any shard count and any ownership permutation (the snapshot is
+    /// placement-independent). Returns None when at most one cluster is
+    /// active (nothing to merge into; the oracle's guard).
+    pub fn merge_victim(&self, global: u32) -> Result<Option<u32>> {
+        let _serial = self.updates_serial.lock().unwrap();
+        let Some((s, local)) = self.ownership.read().unwrap().owner_of(global) else {
+            return Ok(None);
+        };
+        let centroid = self.with_shard(s, |e| e.clusters().centroids.row(local as usize).to_vec());
+        self.select_merge_victim(global, &centroid)
+    }
+
+    /// Victim selection against the (current — caller holds the updates
+    /// mutex, so no structural op is in flight) probe snapshot.
+    fn select_merge_victim(&self, global: u32, centroid: &[f32]) -> Result<Option<u32>> {
+        if self.active_clusters() <= 1 {
+            return Ok(None);
+        }
+        let table = self.probe_table_current();
+        // Under the updates mutex the snapshot is exactly current, so it
+        // covers every global id ever allocated (ascending, ids[g] == g).
+        anyhow::ensure!(
+            (global as usize) < table.len(),
+            "probe snapshot is missing cluster {global}"
+        );
+        let mut scores = table.masked_scores(&self.scorer, centroid)?;
+        scores[global as usize] = f32::NEG_INFINITY;
+        Ok(Some(table.ids[vecmath::argmax(&scores)]))
+    }
+
+    /// Merge the drained cluster `global` into its global nearest
+    /// neighbour now, if it is still active and below the merge
+    /// threshold. Returns true when a merge ran. This is the public
+    /// retry hook for a merge that failed mid-flight (blob fault): the
+    /// failed attempt left both shards consistent, and calling this
+    /// completes the merge.
+    pub fn merge_drained(&self, global: u32) -> Result<bool> {
+        let merged = {
+            let _serial = self.updates_serial.lock().unwrap();
+            let Some((s, local)) = self.ownership.read().unwrap().owner_of(global) else {
+                return Ok(false);
+            };
+            let drained = self.with_shard(s, |e| {
+                e.active_flags()[local as usize]
+                    && e.clusters().clusters[local as usize].len()
+                        < crate::index::updates::MERGE_THRESHOLD
+            });
+            if !drained {
+                return Ok(false);
+            }
+            self.merge_drained_locked(s, local)?
+        };
+        if merged {
+            self.table_stale.store(true, Ordering::Release);
+            self.note_update_op();
+        }
+        Ok(merged)
+    }
+
+    /// Route and execute the merge of a drained cluster (`shard`,
+    /// `local`). Caller holds the updates mutex and no shard lease.
+    /// Returns false when there is nothing to merge into (at most one
+    /// active cluster — the drained cluster stays active, exactly like
+    /// the oracle).
+    fn merge_drained_locked(&self, shard: usize, local: u32) -> Result<bool> {
+        let global = self
+            .ownership
+            .read()
+            .unwrap()
+            .global_of(shard, local)
+            .ok_or_else(|| anyhow::anyhow!("drained cluster {shard}/{local} has no owner"))?;
+        let centroid =
+            self.with_shard(shard, |e| e.clusters().centroids.row(local as usize).to_vec());
+        let Some(victim) = self.select_merge_victim(global, &centroid)? else {
+            return Ok(false);
+        };
+        let (vs, vl) = self
+            .ownership
+            .read()
+            .unwrap()
+            .owner_of(victim)
+            .ok_or_else(|| anyhow::anyhow!("merge victim {victim} has no owner"))?;
+        if vs == shard {
+            // Victim on the same shard: the inline path under one write
+            // lease (no search observes an intermediate state; blob
+            // failures abort before any in-memory mutation).
+            self.shards[shard].write().unwrap().merge_into(local, vl)?;
+        } else {
+            self.merge_cross_shard(global, shard, local, vs, vl)?;
+        }
+        self.counters[vs].merges.fetch_add(1, Ordering::Relaxed);
+        Ok(true)
+    }
+
+    /// The composed cross-shard merge: migrate-then-merge, reusing the
+    /// rebalancer's copy → flip → retire primitive and ordering every
+    /// fallible blob operation before any irreversible mutation.
+    ///
+    /// ```text
+    ///  [export]  source READ lease: centroid + members + dynamic rows +
+    ///            gathered embeddings (no blob/cache payload — the merge
+    ///            deletes both)                              (fallible)
+    ///  [plan]    victim shard READ lease: post-merge accounting and the
+    ///            combined blob, if one must exist           (fallible)
+    ///  [unstore] source WRITE lease: drop the drained blob  (fallible —
+    ///            a failure aborts with nothing changed; after it the
+    ///            drained cluster regenerates instead of loading until
+    ///            the flip, the same bounded window a stale probe
+    ///            snapshot already implies)
+    ///  [import]  victim-shard WRITE lease: adopt the drained cluster as
+    ///            a fresh local copy (no blob, no cache)     (infallible)
+    ///  [flip]    ownership WRITE lock: the global id maps to the victim
+    ///            shard; the write acquire drains in-flight searches
+    ///  [retire]  source WRITE lease: tombstone the orphan   (infallible:
+    ///            its blob is already gone)
+    ///  [merge]   victim-shard WRITE lease: victim blob transition
+    ///            (fallible — a failure here aborts leaving a plain,
+    ///            fully consistent migration; the still-drained cluster
+    ///            retries as a same-shard merge), then the infallible
+    ///            membership rewire
+    /// ```
+    ///
+    /// At every instant a concurrent search sees each cluster on exactly
+    /// one shard with blob/membership consistent, and a failure at any
+    /// fallible step leaves `verify_integrity` green.
+    fn merge_cross_shard(
+        &self,
+        global: u32,
+        src: usize,
+        local: u32,
+        dest: usize,
+        victim_local: u32,
+    ) -> Result<()> {
+        // Export + plan: read leases only, searches keep flowing.
+        let (export, rows) = self.shards[src].read().unwrap().export_for_merge(local)?;
+        let extra = crate::index::updates::MergeExtra::from_export(&export, rows);
+        let plan = self.shards[dest].read().unwrap().plan_merge(victim_local, &extra)?;
+
+        // Drop the drained cluster's blob while the source copy still
+        // owns it — the last chance to abort with *zero* mutations.
+        {
+            let guard = self.shards[src].write().unwrap();
+            if let Some(blob) = guard.blob_store() {
+                if blob.contains(local) {
+                    blob.remove(local)?;
+                }
+            }
+        }
+
+        // Import → flip → retire: literally the migration tail a plain
+        // `migrate_cluster` runs (shared `adopt_exported`), minus the
+        // blob/cache payloads the export skipped.
+        let new_local = self.adopt_exported(&export, global, src, local, dest)?;
+
+        // Merge on the victim shard under one write lease: the fallible
+        // blob transition first (an abort here leaves a plain migration
+        // — both shards consistent, the merge retryable), then the
+        // infallible membership rewire.
+        let mut guard = self.shards[dest].write().unwrap();
+        guard.apply_merge_blob(&plan, None)?;
+        guard.apply_merge_members(new_local, &plan);
+        Ok(())
     }
 
     /// Count one completed structural update toward the periodic
@@ -910,6 +1177,7 @@ impl ShardedEdgeIndex {
                 .probes
                 .fetch_add(group.len() as u64, Ordering::Relaxed);
         }
+        self.note_probes(&probed);
 
         // Fan the cluster walks out and merge.
         let mut walks = self.run_walks(query, work, k)?;

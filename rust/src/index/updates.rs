@@ -1,6 +1,8 @@
 //! Online insertion and removal (paper §5.4), plus the per-shard halves
-//! of cross-shard cluster migration (the online rebalancer,
-//! `crate::index::rebalance`).
+//! of the cross-shard structural operations (cluster migration and
+//! cross-shard merge routing — the online rebalancer,
+//! `crate::index::rebalance`, and
+//! [`ShardedEdgeIndex::remove_chunk`](crate::index::ShardedEdgeIndex)).
 //!
 //! Insertion routes a new chunk to the nearest existing centroid and
 //! updates that cluster's index; if the updated cluster's generation cost
@@ -8,7 +10,12 @@
 //! stored. Excessively large clusters split in two (the new cluster joins
 //! the first level). Removal deletes the chunk; clusters that become too
 //! small merge into their nearest neighbour (a tombstone remains in the
-//! centroid table, masked out of probes).
+//! centroid table, masked out of probes). Victim selection
+//! ([`EdgeIndex::merge_victim`]) is separated from merge execution
+//! (`EdgeIndex::merge_into`) so the sharded index can select the
+//! **global** nearest neighbour and, when the victim lives on another
+//! shard, compose the merge from the migration primitive
+//! (migrate-then-merge — see `crate::index::shard`).
 //!
 //! Migration decomposes into three shard-local operations driven by
 //! [`ShardedEdgeIndex::migrate_cluster`](crate::index::ShardedEdgeIndex::migrate_cluster):
@@ -17,6 +24,17 @@
 //! fresh local cluster on the destination) and
 //! `EdgeIndex::retire_cluster` (tombstone the source copy and release
 //! its blob/cache/memory resources).
+//!
+//! Merge execution splits the same way, into a fallible planning half
+//! and an infallible mutation half, so the composed cross-shard op can
+//! order **every fallible blob operation before any irreversible
+//! in-memory mutation** (blob-first failure atomicity): a `MergePlan` is
+//! computed read-only (`EdgeIndex::plan_merge`), the blob transition
+//! applies under the destination's write lease
+//! (`EdgeIndex::apply_merge_blob`) and only then does the infallible
+//! `EdgeIndex::apply_merge_members` rewire membership. A failure at
+//! any fallible step leaves the index serving its previous, consistent
+//! state and the merge retries cleanly.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -93,10 +111,27 @@ impl EdgeIndex {
         Ok(self.chunk_cluster[&id])
     }
 
-    /// Remove a chunk (§5.4). Returns false if unknown.
+    /// Remove a chunk (§5.4). Returns false if unknown. A cluster that
+    /// drains below [`MERGE_THRESHOLD`] merges into its nearest active
+    /// neighbour inline — the single-index (oracle) semantics.
     pub fn remove_chunk(&mut self, id: u32) -> Result<bool> {
+        let (removed, drained) = self.remove_chunk_deferred(id)?;
+        if let Some(cluster) = drained {
+            self.merge_cluster(cluster)?;
+        }
+        Ok(removed)
+    }
+
+    /// Remove a chunk **without** the inline merge: when the owning
+    /// cluster drains below [`MERGE_THRESHOLD`] its id is returned
+    /// instead, so the caller can route the merge itself. This is the
+    /// sharded index's entry point: the shard-local nearest neighbour is
+    /// not necessarily the *global* nearest, so the sharded wrapper
+    /// selects the victim against the spliced probe snapshot and merges
+    /// cross-shard when the victim lives elsewhere.
+    pub(crate) fn remove_chunk_deferred(&mut self, id: u32) -> Result<(bool, Option<u32>)> {
         let Some(cluster) = self.chunk_cluster.remove(&id) else {
-            return Ok(false);
+            return Ok((false, None));
         };
         self.update_gen.fetch_add(1, Ordering::Release);
         self.invalidate_probe_snapshot();
@@ -118,10 +153,9 @@ impl EdgeIndex {
         }
         self.refresh_cluster(cluster)?;
 
-        if self.clusters.clusters[cluster as usize].len() < MERGE_THRESHOLD {
-            self.merge_cluster(cluster)?;
-        }
-        Ok(true)
+        let drained = (self.clusters.clusters[cluster as usize].len() < MERGE_THRESHOLD)
+            .then_some(cluster);
+        Ok((true, drained))
     }
 
     /// Number of active (non-tombstone) clusters.
@@ -381,10 +415,25 @@ impl EdgeIndex {
     }
 
     /// Merge a too-small cluster into its nearest active neighbour and
-    /// tombstone it.
+    /// tombstone it (the single-index / oracle path; the sharded index
+    /// routes the same decision globally).
     fn merge_cluster(&mut self, c: u32) -> Result<()> {
-        if self.active_clusters() <= 1 {
+        let Some(target) = self.merge_victim(c)? else {
             return Ok(()); // nothing to merge into
+        };
+        self.merge_into(c, target)
+    }
+
+    /// The nearest active neighbour a drained cluster would merge into,
+    /// or None when this index has nothing else to merge into (at most
+    /// one active cluster). This is the *oracle* victim choice the
+    /// sharded index's global selection must reproduce bit for bit:
+    /// scores of `c`'s centroid against every centroid row in ascending
+    /// cluster-id order, self and tombstones masked to `-inf`, first
+    /// maximum wins ([`crate::vecmath::argmax`]).
+    pub fn merge_victim(&self, c: u32) -> Result<Option<u32>> {
+        if self.active_clusters() <= 1 {
+            return Ok(None);
         }
         let centroid = self.clusters.centroids.row(c as usize).to_vec();
         let mut scores = self.scorer.scores(&centroid, &self.clusters.centroids)?;
@@ -394,31 +443,212 @@ impl EdgeIndex {
                 *s = f32::NEG_INFINITY;
             }
         }
-        let target = vecmath::argmax(&scores) as u32;
+        Ok(Some(vecmath::argmax(&scores) as u32))
+    }
 
-        let (ids, chars) = {
-            let meta = &mut self.clusters.clusters[c as usize];
-            (std::mem::take(&mut meta.chunk_ids), std::mem::replace(&mut meta.chars, 0))
+    /// Merge local cluster `c` into local cluster `target`, start to
+    /// finish: plan (fallible, read-only), blob transition (fallible),
+    /// membership rewire (infallible). Caller holds `&mut self` — the
+    /// engine or shard write lease — so no search observes an
+    /// intermediate state and a failure at either fallible step aborts
+    /// with the index still serving its previous, consistent state.
+    pub(crate) fn merge_into(&mut self, c: u32, target: u32) -> Result<()> {
+        let extra = {
+            let meta = &self.clusters.clusters[c as usize];
+            MergeExtra {
+                chars: meta.chars,
+                rows: if self.blob.is_some() {
+                    Some(self.gather(c)?)
+                } else {
+                    None
+                },
+                len: meta.len(),
+            }
         };
-        for id in &ids {
-            self.chunk_cluster.insert(*id, target);
+        let plan = self.plan_merge(target, &extra)?;
+        self.apply_merge_blob(&plan, Some(c))?;
+        self.apply_merge_members(c, &plan);
+        Ok(())
+    }
+}
+
+/// What a drained cluster contributes to its merge victim: member chars,
+/// member count, and (when selective storage is on) its embedding rows
+/// in member order — gathered on the *source* shard, which is the only
+/// side that can resolve the drained cluster's dynamic overlay.
+#[derive(Debug, Clone)]
+pub(crate) struct MergeExtra {
+    pub(crate) chars: u64,
+    pub(crate) len: usize,
+    pub(crate) rows: Option<EmbeddingMatrix>,
+}
+
+impl MergeExtra {
+    /// Package a [`ClusterExport`]'s contribution (the cross-shard path:
+    /// the export was taken on the source shard, rows included).
+    pub(crate) fn from_export(export: &ClusterExport, rows: Option<EmbeddingMatrix>) -> MergeExtra {
+        MergeExtra {
+            chars: export.chars,
+            len: export.chunk_ids.len(),
+            rows,
         }
-        {
-            let meta = &mut self.clusters.clusters[target as usize];
-            meta.chunk_ids.extend(ids);
-            meta.chars += chars;
-        }
-        self.active[c as usize] = false;
-        if let Some(blob) = &self.blob {
-            blob.remove(c)?;
-        }
-        if let Some(cache) = &self.cache {
-            if cache.write().unwrap().remove(c) {
-                self.memory.lock().unwrap().release(self.cache_region(c));
+    }
+}
+
+/// The precomputed, fallible half of a merge: the victim's post-merge
+/// accounting and (when selective storage applies) the combined
+/// embedding blob, materialized **before** any in-memory mutation so a
+/// blob failure aborts the merge cleanly. Produced by
+/// [`EdgeIndex::plan_merge`]; consumed by [`EdgeIndex::apply_merge_blob`]
+/// and [`EdgeIndex::apply_merge_members`].
+#[derive(Debug)]
+pub(crate) struct MergePlan {
+    /// Local id of the absorbing cluster.
+    pub(crate) target: u32,
+    pub(crate) new_chars: u64,
+    pub(crate) new_gen: SimDuration,
+    /// The victim's post-merge blob, when its post-merge gen cost
+    /// crosses the storage limit (the same `refresh_cluster` rule the
+    /// inline path applies): the victim's current rows followed by the
+    /// drained cluster's — exactly the member order a post-merge
+    /// `gather` would produce.
+    pub(crate) store: Option<EmbeddingMatrix>,
+}
+
+impl EdgeIndex {
+    /// Compute a [`MergePlan`] for absorbing `extra` into local cluster
+    /// `target`. Read-only and fallible (gathers the victim's rows when
+    /// the post-merge state must be stored); performs no mutation.
+    pub(crate) fn plan_merge(&self, target: u32, extra: &MergeExtra) -> Result<MergePlan> {
+        let meta = &self.clusters.clusters[target as usize];
+        let new_chars = meta.chars + extra.chars;
+        let new_len = meta.len() + extra.len;
+        let new_gen = self.device.embed_gen_cost(new_chars);
+        let store = if self.blob.is_some() && new_len > 0 && new_gen > self.store_limit {
+            let mut combined = self.gather(target)?;
+            if let Some(rows) = &extra.rows {
+                for i in 0..rows.len() {
+                    combined.push(rows.row(i));
+                }
+            }
+            Some(combined)
+        } else {
+            None
+        };
+        Ok(MergePlan {
+            target,
+            new_chars,
+            new_gen,
+            store,
+        })
+    }
+
+    /// Apply a merge's blob transition — the only fallible step of merge
+    /// execution, ordered so any failure leaves every blob consistent
+    /// with the (still unmodified) membership: the drained cluster's
+    /// blob is dropped first (a missing blob merely re-generates), then
+    /// the victim's blob is overwritten with the combined rows or
+    /// dropped per the plan. Caller holds the shard write lease, so no
+    /// search observes the blob/membership transition half-applied.
+    pub(crate) fn apply_merge_blob(&self, plan: &MergePlan, drained: Option<u32>) -> Result<()> {
+        let Some(blob) = &self.blob else {
+            return Ok(());
+        };
+        if let Some(c) = drained {
+            if blob.contains(c) {
+                blob.remove(c)?;
             }
         }
-        self.refresh_cluster(target)?;
+        match &plan.store {
+            Some(combined) => blob.put(plan.target, combined)?,
+            None => {
+                if blob.contains(plan.target) {
+                    blob.remove(plan.target)?;
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// The infallible half of a merge: move the drained cluster's
+    /// members (appended in order, exactly as the inline path extends),
+    /// install the planned accounting on the victim, tombstone the
+    /// drained cluster and drop both clusters' cache entries (the
+    /// victim's embeddings are stale, the drained cluster's are gone —
+    /// the same invalidations `refresh_cluster` performs inline). Bumps
+    /// `update_gen` so in-flight cache admissions recorded against the
+    /// pre-merge state are discarded at commit.
+    pub(crate) fn apply_merge_members(&mut self, c: u32, plan: &MergePlan) {
+        self.update_gen.fetch_add(1, Ordering::Release);
+        self.invalidate_probe_snapshot();
+        let ids = {
+            let meta = &mut self.clusters.clusters[c as usize];
+            meta.chars = 0;
+            meta.gen_cost = SimDuration::ZERO;
+            std::mem::take(&mut meta.chunk_ids)
+        };
+        for id in &ids {
+            self.chunk_cluster.insert(*id, plan.target);
+        }
+        {
+            let meta = &mut self.clusters.clusters[plan.target as usize];
+            meta.chunk_ids.extend(ids);
+            meta.chars = plan.new_chars;
+            meta.gen_cost = plan.new_gen;
+        }
+        self.active[c as usize] = false;
+        if let Some(cache) = &self.cache {
+            let mut cw = cache.write().unwrap();
+            if cw.remove(c) {
+                self.memory.lock().unwrap().release(self.cache_region(c));
+            }
+            if cw.remove(plan.target) {
+                self.memory
+                    .lock()
+                    .unwrap()
+                    .release(self.cache_region(plan.target));
+            }
+        }
+    }
+
+    /// Export a drained cluster for a cross-shard merge: like
+    /// [`EdgeIndex::export_cluster`] but without the blob and cache
+    /// payloads (the merge deletes both anyway — nothing to hand off)
+    /// and with the cluster's embedding rows gathered here, on the only
+    /// shard that can resolve its dynamic overlay. Read-only.
+    pub(crate) fn export_for_merge(
+        &self,
+        c: u32,
+    ) -> Result<(ClusterExport, Option<EmbeddingMatrix>)> {
+        let ci = c as usize;
+        if !self.active[ci] {
+            bail!("cluster {c} is tombstoned; nothing to merge");
+        }
+        let meta = &self.clusters.clusters[ci];
+        let dynamic = meta
+            .chunk_ids
+            .iter()
+            .filter_map(|id| {
+                self.dynamic
+                    .get(id)
+                    .map(|(t, e)| (*id, t.clone(), e.clone()))
+            })
+            .collect();
+        let export = ClusterExport {
+            centroid: self.clusters.centroids.row(ci).to_vec(),
+            chunk_ids: meta.chunk_ids.clone(),
+            chars: meta.chars,
+            gen_cost: meta.gen_cost,
+            dynamic,
+            blob: None,
+            cache: None,
+        };
+        let rows = if self.blob.is_some() {
+            Some(self.gather(c)?)
+        } else {
+            None
+        };
+        Ok((export, rows))
     }
 }
 

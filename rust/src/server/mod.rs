@@ -383,6 +383,15 @@ fn shard_rows_json(rows: Vec<crate::index::ShardStats>) -> Value {
             ("removes", s.removes.into()),
             ("migrated_in", s.migrated_in.into()),
             ("migrated_out", s.migrated_out.into()),
+            ("merges", s.merges.into()),
+            (
+                // Per-cluster probe heat (hottest first): the input a
+                // future affinity-aware placement policy scores on.
+                "hot_clusters",
+                Value::array(s.hot_clusters.iter().map(|&(g, n)| {
+                    Value::object(vec![("cluster", g.into()), ("probes", n.into())])
+                })),
+            ),
             ("threshold_ms", s.threshold_ms.into()),
             ("cache_used_bytes", s.cache_used_bytes.into()),
             (

@@ -10,6 +10,7 @@
 use std::collections::HashMap;
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
@@ -24,6 +25,15 @@ pub struct BlobStore {
     /// Blob sizes by cluster id (index kept in memory, like the paper's
     /// first-level references to stored second-level indexes).
     sizes: Mutex<HashMap<u32, u64>>,
+    /// Fault injection (crash-consistency tests): fail the next N `put`
+    /// calls. An injected failure returns `Err` *before* touching the
+    /// file or the size index — the clean abort the structural-op
+    /// composition layer is designed around.
+    fail_puts: AtomicU32,
+    /// Fault injection: fail the next N `remove` calls that would
+    /// actually delete a blob (removes of absent blobs don't consume a
+    /// charge).
+    fail_removes: AtomicU32,
 }
 
 impl BlobStore {
@@ -48,7 +58,29 @@ impl BlobStore {
             dir: dir.to_path_buf(),
             dim,
             sizes: Mutex::new(sizes),
+            fail_puts: AtomicU32::new(0),
+            fail_removes: AtomicU32::new(0),
         })
+    }
+
+    /// Arm fault injection: the next `n` [`BlobStore::put`] calls fail
+    /// cleanly (no file or index mutation). Test hook for the
+    /// crash-consistency suites (`rust/tests/merge_faults.rs`).
+    pub fn inject_put_failures(&self, n: u32) {
+        self.fail_puts.store(n, Ordering::SeqCst);
+    }
+
+    /// Arm fault injection: the next `n` effective [`BlobStore::remove`]
+    /// calls fail cleanly.
+    pub fn inject_remove_failures(&self, n: u32) {
+        self.fail_removes.store(n, Ordering::SeqCst);
+    }
+
+    /// Consume one charge from an armed fault counter.
+    fn take_fault(counter: &AtomicU32) -> bool {
+        counter
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+            .is_ok()
     }
 
     fn path(&self, cluster: u32) -> PathBuf {
@@ -90,6 +122,9 @@ impl BlobStore {
         if emb.dim != self.dim {
             bail!("blob dim {} != store dim {}", emb.dim, self.dim);
         }
+        if Self::take_fault(&self.fail_puts) {
+            bail!("injected blob fault: put(cluster {cluster})");
+        }
         let mut bytes = Vec::with_capacity(emb.data.len() * 4);
         for v in &emb.data {
             bytes.extend_from_slice(&v.to_le_bytes());
@@ -129,6 +164,9 @@ impl BlobStore {
 
     /// Remove a blob (EdgeRAG removal path, §5.4).
     pub fn remove(&self, cluster: u32) -> Result<()> {
+        if self.contains(cluster) && Self::take_fault(&self.fail_removes) {
+            bail!("injected blob fault: remove(cluster {cluster})");
+        }
         let path = self.path(cluster);
         if path.exists() {
             fs::remove_file(&path)?;

@@ -1,0 +1,246 @@
+//! Crash-consistency tests for the migrate-then-merge path
+//! (`ShardedEdgeIndex::remove_chunk` → cross-shard merge routing).
+//!
+//! An injectable failing blob store ([`BlobStore::inject_put_failures`]
+//! / [`inject_remove_failures`]) proves the composed structural op's
+//! blob-first ordering: a blob fault at any fallible step leaves **both
+//! shards consistent** (`verify_integrity` passes, the old state keeps
+//! serving, no chunk is lost) and the merge **retries cleanly** through
+//! [`ShardedEdgeIndex::merge_drained`].
+//!
+//! Three fault points are exercised:
+//! 1. the victim-blob `put` of a **cross-shard** merge — fails after the
+//!    migrate half, leaving a plain (fully consistent) migration;
+//! 2. the source-blob `remove` of a cross-shard merge — fails before
+//!    anything moved, leaving the pre-merge state untouched;
+//! 3. the victim-blob `put` of a **same-shard** merge — fails before any
+//!    membership mutation.
+
+use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
+use edgerag::coordinator::builder::SystemBuilder;
+use edgerag::index::updates::MERGE_THRESHOLD;
+use edgerag::index::{ShardedEdgeIndex, VectorIndex};
+use edgerag::testutil::shared_compute;
+
+fn builder(shards: usize, tag: &str, store_slo_fraction: f64) -> SystemBuilder {
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    b.options.state_dir =
+        std::env::temp_dir().join(format!("edgerag-mfault-{tag}-{}", std::process::id()));
+    b.retrieval.nprobe = 4;
+    b.retrieval.shards = shards;
+    // store_slo_fraction = 0 ⇒ store_limit = 0 ⇒ every non-empty cluster
+    // keeps a blob, so the merge's victim-blob `put` always runs.
+    b.retrieval.store_slo_fraction = store_slo_fraction;
+    b
+}
+
+struct Fx {
+    b: SystemBuilder,
+    built: edgerag::coordinator::builder::BuiltDataset,
+    sharded_box: Box<dyn VectorIndex>,
+    _mem: edgerag::index::SharedMemory,
+    n_chunks: u32,
+}
+
+impl Fx {
+    fn sharded(&self) -> &ShardedEdgeIndex {
+        self.sharded_box
+            .as_any()
+            .downcast_ref::<ShardedEdgeIndex>()
+            .unwrap()
+    }
+
+    /// Embed a chunk's own text — its top hit must be itself.
+    fn self_query(&self, chunk: u32) -> Vec<f32> {
+        self.b
+            .embedder()
+            .embed_one(&self.built.corpus.chunks[chunk as usize].text)
+            .unwrap()
+    }
+}
+
+fn fixture(tag: &str, store_slo_fraction: f64) -> Fx {
+    let b = builder(2, tag, store_slo_fraction);
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let (sharded_box, _mem) = b.index(&built, IndexKind::EdgeRag).unwrap();
+    let n_chunks = built.corpus.len() as u32;
+    Fx {
+        b,
+        built,
+        sharded_box,
+        _mem,
+        n_chunks,
+    }
+}
+
+/// Pick a drainable cluster, arrange its merge victim on the requested
+/// side (same shard or cross-shard, by migrating the drained cluster —
+/// victim selection is placement-independent, so the victim does not
+/// move), then drain it to exactly `MERGE_THRESHOLD` members. Returns
+/// `(global, victim, survivor, trigger)`: removing `trigger` fires the
+/// merge and `survivor` must land in `victim`.
+fn stage_drain(fx: &Fx, cross_shard: bool) -> (u32, u32, u32, u32) {
+    let sharded = fx.sharded();
+    let loads = sharded.cluster_loads();
+    let (g, _) = loads
+        .iter()
+        .flatten()
+        .filter(|c| c.rows > MERGE_THRESHOLD as u64)
+        .map(|c| (c.global, c.rows))
+        .min_by_key(|&(g, r)| (r, g))
+        .expect("a drainable cluster exists");
+    let victim = sharded
+        .merge_victim(g)
+        .unwrap()
+        .expect("more than one active cluster");
+    let vs = sharded.shard_of(victim);
+    let want = if cross_shard {
+        (vs + 1) % sharded.shards()
+    } else {
+        vs
+    };
+    if sharded.shard_of(g) != want {
+        assert!(sharded.migrate_cluster(g, want).unwrap());
+    }
+    assert_eq!(
+        sharded.merge_victim(g).unwrap(),
+        Some(victim),
+        "victim selection must be placement-independent"
+    );
+
+    let mut members: Vec<u32> = (0..fx.n_chunks)
+        .filter(|&id| sharded.cluster_of(id) == Some(g))
+        .collect();
+    while members.len() > MERGE_THRESHOLD {
+        let id = members.pop().unwrap();
+        assert!(sharded.remove_chunk(id).unwrap());
+    }
+    let trigger = members.pop().unwrap();
+    let survivor = members.pop().unwrap();
+    sharded.verify_integrity().unwrap();
+    (g, victim, survivor, trigger)
+}
+
+#[test]
+fn victim_put_fault_mid_cross_shard_merge_is_recoverable() {
+    let fx = fixture("xput", 0.0);
+    let sharded = fx.sharded();
+    let (g, victim, survivor, trigger) = stage_drain(&fx, true);
+    let src = sharded.shard_of(g);
+    let vs = sharded.shard_of(victim);
+    assert_ne!(src, vs, "staged a cross-shard merge");
+
+    // The merge's only `put` on the victim shard is the combined victim
+    // blob — fail it. (The triggering removal's own refresh `put` runs
+    // on the source shard and does not consume this charge.)
+    sharded.with_shard(vs, |e| e.blob_store().unwrap().inject_put_failures(1));
+    let err = sharded.remove_chunk(trigger);
+    assert!(err.is_err(), "injected put fault must surface");
+
+    // The chunk is removed; the merge did not complete: the drained
+    // cluster was migrated to the victim's shard (the composed op's
+    // migrate half) but still owns its survivor, and every invariant
+    // holds on both shards.
+    sharded.verify_integrity().unwrap();
+    assert_eq!(sharded.cluster_of(trigger), None, "removal took effect");
+    assert_eq!(
+        sharded.cluster_of(survivor),
+        Some(g),
+        "failed merge must leave the drained cluster serving its survivor"
+    );
+    assert_eq!(
+        sharded.shard_of(g),
+        vs,
+        "the migrate half completed before the fault"
+    );
+
+    // Old state keeps serving: the survivor is still retrievable.
+    let out = sharded.search(&fx.self_query(survivor), 3).unwrap();
+    assert_eq!(out.hits[0].0, survivor, "hits: {:?}", out.hits);
+
+    // Retry (now a same-shard merge) completes cleanly.
+    assert!(sharded.merge_drained(g).unwrap());
+    sharded.verify_integrity().unwrap();
+    assert_eq!(sharded.cluster_of(survivor), Some(victim));
+    let out = sharded.search(&fx.self_query(survivor), 3).unwrap();
+    assert_eq!(out.hits[0].0, survivor, "post-retry hits: {:?}", out.hits);
+    let merges: u64 = sharded.shard_stats().iter().map(|s| s.merges).sum();
+    assert_eq!(merges, 1, "exactly the retried merge completed");
+}
+
+#[test]
+fn source_remove_fault_aborts_cross_shard_merge_untouched() {
+    let fx = fixture("xremove", 0.0);
+    let sharded = fx.sharded();
+    let (g, victim, survivor, trigger) = stage_drain(&fx, true);
+    let src = sharded.shard_of(g);
+    let vs = sharded.shard_of(victim);
+    assert_ne!(src, vs, "staged a cross-shard merge");
+
+    // Fail the drained cluster's blob drop — the first mutating step of
+    // the composed op. Everything before it is read-only, so the abort
+    // must leave the placement fully untouched.
+    sharded.with_shard(src, |e| e.blob_store().unwrap().inject_remove_failures(1));
+    let err = sharded.remove_chunk(trigger);
+    assert!(err.is_err(), "injected remove fault must surface");
+
+    sharded.verify_integrity().unwrap();
+    assert_eq!(sharded.cluster_of(trigger), None, "removal took effect");
+    assert_eq!(sharded.cluster_of(survivor), Some(g));
+    assert_eq!(
+        sharded.shard_of(g),
+        src,
+        "nothing may migrate when the op aborts at its first fallible write"
+    );
+
+    // Retry runs the full cross-shard composition.
+    assert!(sharded.merge_drained(g).unwrap());
+    sharded.verify_integrity().unwrap();
+    assert_eq!(sharded.cluster_of(survivor), Some(victim));
+    assert_eq!(sharded.shard_of(g), vs, "retried merge migrated the drained cluster");
+    let stats = sharded.shard_stats();
+    let merges: u64 = stats.iter().map(|s| s.merges).sum();
+    assert_eq!(merges, 1);
+    assert_eq!(stats[vs].migrated_in, 1, "the retry's migrate half is accounted");
+}
+
+#[test]
+fn victim_put_fault_mid_local_merge_leaves_membership_untouched() {
+    // Same-shard merge: a light store limit keeps the *drained* cluster
+    // below the storage threshold (its refresh on the triggering removal
+    // must not consume the injected charge) while normal clusters stay
+    // stored, so the armed fault fires exactly at the merge's victim
+    // `put`.
+    let fx = fixture("localput", 0.05);
+    let sharded = fx.sharded();
+    let (g, victim, survivor, trigger) = stage_drain(&fx, false);
+    let vs = sharded.shard_of(victim);
+    assert_eq!(sharded.shard_of(g), vs, "staged a same-shard merge");
+    let victim_stored = sharded.with_shard(vs, |e| e.stored_clusters() > 0);
+    assert!(
+        victim_stored,
+        "fixture needs stored clusters for the fault to be reachable"
+    );
+
+    sharded.with_shard(vs, |e| e.blob_store().unwrap().inject_put_failures(1));
+    let res = sharded.remove_chunk(trigger);
+    sharded.verify_integrity().unwrap();
+    assert_eq!(sharded.cluster_of(trigger), None, "removal took effect");
+
+    if res.is_err() {
+        // The fault fired inside the merge: membership must be
+        // untouched and the retry must complete it.
+        assert_eq!(sharded.cluster_of(survivor), Some(g));
+        assert!(sharded.merge_drained(g).unwrap());
+    } else {
+        // The victim's post-merge state did not need a stored blob (its
+        // gen cost sits below the limit), so no put ran and the merge
+        // completed first try — consume the unused charge.
+        sharded.with_shard(vs, |e| e.blob_store().unwrap().inject_put_failures(0));
+    }
+    sharded.verify_integrity().unwrap();
+    assert_eq!(sharded.cluster_of(survivor), Some(victim));
+    let merges: u64 = sharded.shard_stats().iter().map(|s| s.merges).sum();
+    assert_eq!(merges, 1);
+}

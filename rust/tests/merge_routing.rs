@@ -1,0 +1,200 @@
+//! Property tests for cross-shard merge routing
+//! (`rust/src/index/updates.rs` + `rust/src/index/shard.rs`).
+//!
+//! The tentpole guarantee: a drained cluster's merge victim is the
+//! **global** nearest active neighbour — bit-for-bit the unsharded
+//! oracle's choice — for any shard count and any ownership permutation
+//! the online rebalancer can produce. And the rebalance planner composes
+//! safely with merges: its input excludes tombstoned clusters, and a
+//! stale plan naming a since-merged cluster skips it at execution time
+//! instead of resurrecting or double-moving it.
+
+use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
+use edgerag::coordinator::builder::SystemBuilder;
+use edgerag::data::Rng;
+use edgerag::index::{plan_rebalance, EdgeIndex, ShardedEdgeIndex, VectorIndex};
+use edgerag::testutil::{shared_compute, test_seed};
+
+fn builder(shards: usize, tag: &str) -> SystemBuilder {
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    b.options.state_dir =
+        std::env::temp_dir().join(format!("edgerag-mroute-{tag}-{}", std::process::id()));
+    b.retrieval.nprobe = 4;
+    b.retrieval.shards = shards;
+    b
+}
+
+/// Every chunk currently routed to global cluster `g` (public-API
+/// membership discovery: the corpus plus churn ids are scanned through
+/// `cluster_of`).
+fn members_of(sharded: &ShardedEdgeIndex, g: u32, id_ceiling: u32) -> Vec<u32> {
+    (0..id_ceiling)
+        .filter(|&id| sharded.cluster_of(id) == Some(g))
+        .collect()
+}
+
+#[test]
+fn merge_victim_matches_oracle_for_any_placement() {
+    // For shards ∈ {1, 2, 3, 4, 8} and several seeded ownership
+    // permutations (random migrations), the sharded victim choice must
+    // equal the unsharded oracle's for every global cluster — including
+    // after merges have tombstoned some of them (victim selection must
+    // skip tombstones identically).
+    let seed = test_seed(0x4EE7);
+    // shards = 1 builds a plain EdgeIndex (no routing to test); the
+    // degenerate case is covered by the churn suite's shards=1 legs.
+    for shards in [2usize, 3, 4, 8] {
+        let b_o = builder(1, &format!("vic-oracle-{shards}"));
+        let built_o = b_o.build_dataset(&DatasetProfile::tiny()).unwrap();
+        let (mut oracle, _mem_o) = b_o.index(&built_o, IndexKind::EdgeRag).unwrap();
+
+        let b = builder(shards, &format!("vic-{shards}"));
+        let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+        let (subject, _mem_s) = b.index(&built, IndexKind::EdgeRag).unwrap();
+
+        let mut rng = Rng::new(seed ^ shards as u64);
+        for round in 0..3 {
+            {
+                let sharded = subject.as_any().downcast_ref::<ShardedEdgeIndex>().unwrap();
+                // A fresh seeded ownership permutation each round.
+                let globals: Vec<u32> = sharded
+                    .cluster_loads()
+                    .iter()
+                    .flatten()
+                    .map(|c| c.global)
+                    .collect();
+                for _ in 0..globals.len() * 2 {
+                    let g = globals[rng.below(globals.len())];
+                    sharded
+                        .migrate_cluster(g, rng.below(sharded.shards()))
+                        .unwrap();
+                }
+                sharded.verify_integrity().unwrap();
+
+                let oracle_edge = oracle.as_any().downcast_ref::<EdgeIndex>().unwrap();
+                let total = oracle_edge.clusters().n_clusters() as u32;
+                for g in 0..total {
+                    assert_eq!(
+                        oracle_edge.merge_victim(g).unwrap(),
+                        sharded.merge_victim(g).unwrap(),
+                        "round {round}: victim of cluster {g} diverged at {shards} shards"
+                    );
+                }
+            }
+
+            // Tombstone one cluster on both replicas (drain the currently
+            // smallest through the merge threshold) so the next round's
+            // victim selection must mask it identically.
+            let victim_chunks = {
+                let oracle_edge = oracle.as_any().downcast_ref::<EdgeIndex>().unwrap();
+                oracle_edge
+                    .clusters()
+                    .clusters
+                    .iter()
+                    .filter(|m| !m.is_empty())
+                    .min_by_key(|m| (m.len(), m.id))
+                    .map(|m| m.chunk_ids.clone())
+                    .unwrap()
+            };
+            for id in victim_chunks {
+                assert!(oracle.remove_chunk(id).unwrap());
+                assert!(subject.remove_chunk_concurrent(id).unwrap());
+            }
+        }
+    }
+}
+
+#[test]
+fn planner_input_excludes_merged_clusters() {
+    // The planner can never schedule a migration for a merged (or
+    // mid-merge — merges are atomic under the structural-updates mutex)
+    // cluster because its input, `cluster_loads`, lists only owned,
+    // active clusters. Merge a few clusters away and check both the
+    // snapshot and a fresh plan.
+    let b = builder(4, "planner-input");
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let (subject, _mem) = b.index(&built, IndexKind::EdgeRag).unwrap();
+    let sharded = subject.as_any().downcast_ref::<ShardedEdgeIndex>().unwrap();
+    let n_chunks = built.corpus.len() as u32;
+
+    let mut merged = Vec::new();
+    for _ in 0..2 {
+        let loads = sharded.cluster_loads();
+        let (g, _) = loads
+            .iter()
+            .flatten()
+            .filter(|c| c.rows > 0)
+            .map(|c| (c.global, c.load()))
+            .min_by_key(|&(g, l)| (l, g))
+            .unwrap();
+        for id in members_of(sharded, g, n_chunks + 1) {
+            sharded.remove_chunk(id).unwrap();
+        }
+        merged.push(g);
+        sharded.verify_integrity().unwrap();
+    }
+
+    let loads = sharded.cluster_loads();
+    for &g in &merged {
+        assert!(
+            !loads.iter().flatten().any(|c| c.global == g),
+            "merged cluster {g} still in the planner's load snapshot"
+        );
+    }
+    let plan = plan_rebalance(&loads, 8);
+    for m in &plan.moves {
+        assert!(
+            !merged.contains(&m.cluster),
+            "planner scheduled merged cluster {}: {plan:?}",
+            m.cluster
+        );
+    }
+}
+
+#[test]
+fn stale_plan_skips_merged_clusters() {
+    // A plan computed before a merge may name the merged cluster; the
+    // execution primitive must skip it (no resurrection, no invariant
+    // damage) while the rest of the plan executes.
+    let b = builder(4, "stale-plan");
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let (subject, _mem) = b.index(&built, IndexKind::EdgeRag).unwrap();
+    let sharded = subject.as_any().downcast_ref::<ShardedEdgeIndex>().unwrap();
+    let n_chunks = built.corpus.len() as u32;
+
+    // Worst-case skew makes the plan non-trivial.
+    let globals: Vec<u32> = sharded
+        .cluster_loads()
+        .iter()
+        .flatten()
+        .map(|c| c.global)
+        .collect();
+    for &g in &globals {
+        sharded.migrate_cluster(g, 0).unwrap();
+    }
+    let plan = plan_rebalance(&sharded.cluster_loads(), 4);
+    assert!(!plan.moves.is_empty(), "skewed placement must plan moves");
+
+    // Merge the first planned cluster away before the plan executes.
+    let doomed = plan.moves[0].cluster;
+    for id in members_of(sharded, doomed, n_chunks + 1) {
+        sharded.remove_chunk(id).unwrap();
+    }
+    assert!(
+        !sharded
+            .cluster_loads()
+            .iter()
+            .flatten()
+            .any(|c| c.global == doomed),
+        "cluster {doomed} should have merged away"
+    );
+
+    for m in &plan.moves {
+        let did = sharded.migrate_cluster(m.cluster, m.to).unwrap();
+        if m.cluster == doomed {
+            assert!(!did, "stale move executed against merged cluster {doomed}");
+        }
+    }
+    sharded.verify_integrity().unwrap();
+}

@@ -1,7 +1,7 @@
 //! Randomized churn suite for the online cross-shard rebalancer
 //! (`rust/src/index/rebalance.rs`).
 //!
-//! Three layers of evidence, all seeded through
+//! Four layers of evidence, all seeded through
 //! `edgerag::testutil::test_seed` (`EDGERAG_TEST_SEED` overrides; the
 //! effective seed is printed so CI flakes are reproducible):
 //!
@@ -19,12 +19,18 @@
 //! 3. **Concurrent churn smoke** — 8 threads mixing all op kinds with
 //!    periodic auto-rebalance enabled; nothing may deadlock, lose a
 //!    chunk, or break an invariant.
+//! 4. **Merge-heavy churn** — a removal-dominant op mix driven through
+//!    the full engine (and the batch scheduler on the batching legs)
+//!    that drains clusters through `MERGE_THRESHOLD` continuously,
+//!    asserting oracle equality at shards ∈ {1, 2, 4, 8}.
 //!
-//! Scope note: removals are kept above the merge threshold because
-//! merges are *intra-shard by design* (ROADMAP: "merges/splits stay
-//! intra-shard") — a drained cluster merges into its shard-local nearest
-//! neighbour, which legitimately differs from the oracle's global
-//! nearest. Everything else (splits included) is exactly equivalent.
+//! The op space is **unrestricted**: removals deliberately drain
+//! clusters through the merge threshold to empty. Merges route to the
+//! *global* nearest-neighbour centroid (cross-shard when the victim
+//! lives elsewhere — the composed migrate-then-merge), so every op kind,
+//! merges included, is bit-comparable to the single-shard oracle. (The
+//! historical steering that kept removals above `MERGE_THRESHOLD + 1` —
+//! the last documented oracle divergence — is gone.)
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -32,7 +38,6 @@ use std::sync::Arc;
 use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
 use edgerag::coordinator::builder::SystemBuilder;
 use edgerag::data::Rng;
-use edgerag::index::updates::MERGE_THRESHOLD;
 use edgerag::index::{EdgeIndex, ShardedEdgeIndex, VectorIndex};
 use edgerag::sched::{BatchScheduler, SchedConfig};
 use edgerag::testutil::{shared_compute, test_seed};
@@ -55,6 +60,35 @@ fn shard_counts() -> Vec<usize> {
     match std::env::var("EDGERAG_TEST_SHARDS") {
         Ok(v) => vec![v.parse().expect("EDGERAG_TEST_SHARDS must be an integer")],
         Err(_) => vec![1, 4],
+    }
+}
+
+/// Shard counts for the merge-routing suites — the "bit-identical at any
+/// N" acceptance sweep. `EDGERAG_TEST_SHARDS` pins one (the CI matrix).
+fn merge_shard_counts() -> Vec<usize> {
+    match std::env::var("EDGERAG_TEST_SHARDS") {
+        Ok(v) => vec![v.parse().expect("EDGERAG_TEST_SHARDS must be an integer")],
+        Err(_) => vec![1, 2, 4, 8],
+    }
+}
+
+/// Pick a removal victim: half the time a chunk from the currently
+/// smallest non-empty cluster of the oracle (deterministically draining
+/// clusters through `MERGE_THRESHOLD` to empty, so merges fire
+/// constantly), otherwise a uniformly random alive chunk. Both replicas
+/// replay the identical choice.
+fn removal_victim(rng: &mut Rng, oracle: &EdgeIndex, alive: &[u32]) -> u32 {
+    if rng.below(2) == 0 {
+        oracle
+            .clusters()
+            .clusters
+            .iter()
+            .filter(|m| !m.is_empty())
+            .min_by_key(|m| (m.len(), m.id))
+            .map(|m| m.chunk_ids[0])
+            .expect("alive chunks imply a non-empty cluster")
+    } else {
+        alive[rng.below(alive.len())]
     }
 }
 
@@ -209,10 +243,12 @@ fn sequential_randomized_churn_matches_oracle_replay() {
     // Replay one seeded op sequence against the sharded index and a
     // single-shard oracle: searches (uncommitted, so cache capacity
     // splits cannot legitimately diverge events) must match bit for bit,
-    // inserts must land in identically numbered clusters, and the
-    // invariant suite must hold after every rebalance round.
+    // inserts must land in identically numbered clusters, removals may
+    // drain any cluster through the merge threshold to empty (merges
+    // now route globally, so they are part of the compared op space),
+    // and the invariant suite must hold after every rebalance round.
     let seed = test_seed(0x5EC1);
-    for shards in shard_counts() {
+    for shards in merge_shard_counts() {
         let b_o = builder(1, &format!("seq-oracle-{shards}"));
         let built_o = b_o.build_dataset(&DatasetProfile::tiny()).unwrap();
         let (mut oracle, _mem_o) = b_o.index(&built_o, IndexKind::EdgeRag).unwrap();
@@ -221,16 +257,21 @@ fn sequential_randomized_churn_matches_oracle_replay() {
         let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
         let (mut subject, _mem_s) = b.index(&built, IndexKind::EdgeRag).unwrap();
 
+        let initial_active = oracle
+            .as_any()
+            .downcast_ref::<EdgeIndex>()
+            .unwrap()
+            .active_clusters();
         let embedder = b.embedder();
         let mut rng = Rng::new(seed ^ shards as u64);
         let mut alive: Vec<u32> = (0..built.corpus.len() as u32).collect();
         let mut next_id = built.corpus.len() as u32 + 1_000;
         let mut spread_checks = 0u32;
 
-        for step in 0..240 {
+        for step in 0..320 {
             match rng.below(100) {
-                // -------- search (45%) --------
-                0..=44 => {
+                // -------- search (35%) --------
+                0..=34 => {
                     let q = &built.workload.queries[rng.below(built.workload.queries.len())];
                     let emb = embedder.embed_one(&q.text).unwrap();
                     let sa = oracle.search(&emb, 5).unwrap();
@@ -245,8 +286,8 @@ fn sequential_randomized_churn_matches_oracle_replay() {
                         "step {step} modeled latency"
                     );
                 }
-                // -------- insert (25%) --------
-                45..=69 => {
+                // -------- insert (20%) --------
+                35..=54 => {
                     let text = format!("churn document {next_id} marker zzchurn{next_id}");
                     let emb = embedder.embed_one(&text).unwrap();
                     let ca = oracle.insert_chunk(next_id, &text, &emb).unwrap();
@@ -259,30 +300,16 @@ fn sequential_randomized_churn_matches_oracle_replay() {
                     alive.push(next_id);
                     next_id += 1;
                 }
-                // -------- remove (15%) --------
-                70..=84 => {
+                // -------- remove (30%), unrestricted --------
+                55..=84 => {
                     if alive.is_empty() {
                         continue;
                     }
-                    let i = rng.below(alive.len());
-                    let id = alive[i];
-                    // Keep clusters above the merge threshold: merges are
-                    // intra-shard by design and legitimately diverge from
-                    // the oracle's global nearest-neighbour merge.
-                    let big_enough = oracle
-                        .as_any()
-                        .downcast_ref::<EdgeIndex>()
-                        .unwrap()
-                        .cluster_of(id)
-                        .is_some_and(|c| {
-                            oracle.as_any().downcast_ref::<EdgeIndex>().unwrap().clusters()
-                                .clusters[c as usize]
-                                .len()
-                                > MERGE_THRESHOLD + 1
-                        });
-                    if !big_enough {
-                        continue;
-                    }
+                    let id = removal_victim(
+                        &mut rng,
+                        oracle.as_any().downcast_ref::<EdgeIndex>().unwrap(),
+                        &alive,
+                    );
                     let ra = oracle.remove_chunk(id).unwrap();
                     let rb = if subject.supports_concurrent_updates() {
                         subject.remove_chunk_concurrent(id).unwrap()
@@ -291,6 +318,10 @@ fn sequential_randomized_churn_matches_oracle_replay() {
                     };
                     assert_eq!(ra, rb, "step {step} removed flags");
                     assert!(ra, "step {step}: alive chunk not removed");
+                    let i = alive
+                        .iter()
+                        .position(|&a| a == id)
+                        .expect("removed chunk was tracked alive");
                     alive.swap_remove(i);
                 }
                 // -------- rebalance (15%) --------
@@ -308,17 +339,72 @@ fn sequential_randomized_churn_matches_oracle_replay() {
                 }
             }
         }
+        // Deterministic drain tail: remove the smallest cluster's chunks
+        // one by one until a merge tombstones it, so every seed — not
+        // just removal-lucky ones — exercises the drain-through-
+        // threshold-to-empty path end to end.
+        let pre_drain = oracle
+            .as_any()
+            .downcast_ref::<EdgeIndex>()
+            .unwrap()
+            .active_clusters();
+        while pre_drain > 1
+            && oracle
+                .as_any()
+                .downcast_ref::<EdgeIndex>()
+                .unwrap()
+                .active_clusters()
+                == pre_drain
+        {
+            let id = oracle
+                .as_any()
+                .downcast_ref::<EdgeIndex>()
+                .unwrap()
+                .clusters()
+                .clusters
+                .iter()
+                .filter(|m| !m.is_empty())
+                .min_by_key(|m| (m.len(), m.id))
+                .map(|m| m.chunk_ids[0])
+                .expect("alive chunks imply a non-empty cluster");
+            let ra = oracle.remove_chunk(id).unwrap();
+            let rb = if subject.supports_concurrent_updates() {
+                subject.remove_chunk_concurrent(id).unwrap()
+            } else {
+                subject.remove_chunk(id).unwrap()
+            };
+            assert!(ra && rb, "drain-tail removal of chunk {id}");
+            let i = alive.iter().position(|&a| a == id).unwrap();
+            alive.swap_remove(i);
+        }
+
+        // The widened op space must actually have drained clusters into
+        // merges, and both replicas must agree on the surviving set.
+        let oracle_active = oracle
+            .as_any()
+            .downcast_ref::<EdgeIndex>()
+            .unwrap()
+            .active_clusters();
+        assert!(
+            oracle_active < initial_active,
+            "churn never merged a cluster ({initial_active} -> {oracle_active})"
+        );
         if shards > 1 {
             assert!(spread_checks > 0, "op mix never exercised rebalance");
             let sharded = subject.as_any().downcast_ref::<ShardedEdgeIndex>().unwrap();
-            let moved: u64 = sharded
-                .shard_stats()
-                .iter()
-                .map(|s| s.migrated_in)
-                .sum();
+            assert_eq!(
+                sharded.active_clusters(),
+                oracle_active,
+                "active-cluster sets diverged after churn"
+            );
+            sharded.verify_integrity().unwrap();
+            let stats = sharded.shard_stats();
+            let moved: u64 = stats.iter().map(|s| s.migrated_in).sum();
             // Inserts skew the round-robin placement, so rounds must
             // eventually move something.
             assert!(moved > 0, "churn never migrated a cluster");
+            let merges: u64 = stats.iter().map(|s| s.merges).sum();
+            assert!(merges > 0, "churn never routed a merge");
         }
 
         // Terminal state agreement: every alive chunk sits in the same
@@ -334,6 +420,175 @@ fn sequential_randomized_churn_matches_oracle_replay() {
                 None => subject.as_any().downcast_ref::<EdgeIndex>().unwrap().cluster_of(id),
             };
             assert_eq!(a, b, "chunk {id} routed differently after churn");
+        }
+    }
+}
+
+#[test]
+fn merge_heavy_churn_matches_oracle() {
+    // The CI merge leg: a removal-dominant seeded op mix replayed
+    // through the full engine — and through the cross-query batch
+    // scheduler with bypass disabled on the batching legs, so every
+    // search takes the fused-probe path whose snapshots merges keep
+    // invalidating. Clusters drain through MERGE_THRESHOLD continuously;
+    // every search must stay bit-identical (hits, events, modeled
+    // retrieval) to a single-shard oracle engine replaying the same ops,
+    // at shards ∈ {1, 2, 4, 8}.
+    let seed = test_seed(0x3E67);
+    for shards in merge_shard_counts() {
+        for batching in batching_modes() {
+            if batching && !reference_backend() {
+                continue;
+            }
+            let tag = format!("mh-{shards}-{batching}");
+            let mut b_o = builder(1, &format!("{tag}-oracle"));
+            b_o.retrieval.cache_capacity_bytes = 32 << 20;
+            let built_o = b_o.build_dataset(&DatasetProfile::tiny()).unwrap();
+            let oracle = b_o.pipeline(&built_o, IndexKind::EdgeRag).unwrap();
+            oracle.index_mut().pin_threshold(0.0);
+
+            let mut b = builder(shards, &tag);
+            // Ample budget: the per-shard capacity slice must never bind,
+            // so cache behaviour (and with it events + modeled latency)
+            // cannot legitimately diverge from the unsharded policy.
+            b.retrieval.cache_capacity_bytes = 32 << 20;
+            let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+            let engine = Arc::new(b.pipeline(&built, IndexKind::EdgeRag).unwrap());
+            engine.index_mut().pin_threshold(0.0);
+            let sched = batching.then(|| {
+                BatchScheduler::new(
+                    engine.clone(),
+                    SchedConfig {
+                        batch_window_us: 200,
+                        max_inflight: 0,
+                        bypass: false,
+                    },
+                )
+            });
+
+            let mut rng = Rng::new(seed ^ ((shards as u64) << 1) ^ batching as u64);
+            let mut alive: Vec<u32> = (0..built.corpus.len() as u32).collect();
+            for step in 0..260 {
+                match rng.below(100) {
+                    // -------- search (30%) --------
+                    0..=29 => {
+                        let q =
+                            &built.workload.queries[rng.below(built.workload.queries.len())].text;
+                        let a = oracle.handle(q).unwrap();
+                        let s = match &sched {
+                            Some(sched) => sched.handle(q).unwrap(),
+                            None => engine.handle(q).unwrap(),
+                        };
+                        assert_eq!(a.hits, s.hits, "step {step} hits");
+                        assert_eq!(
+                            a.events.generated, s.events.generated,
+                            "step {step} generated"
+                        );
+                        assert_eq!(a.events.loaded, s.events.loaded, "step {step} loaded");
+                        assert_eq!(
+                            a.events.cache_hits, s.events.cache_hits,
+                            "step {step} cache hits"
+                        );
+                        assert_eq!(a.retrieval, s.retrieval, "step {step} modeled retrieval");
+                    }
+                    // -------- insert (15%) --------
+                    30..=44 => {
+                        let text = format!("merge heavy doc {step} marker zzmh{step}");
+                        let a = oracle.insert(&text).unwrap();
+                        let s = engine.insert(&text).unwrap();
+                        assert_eq!(a, s, "step {step}: insert id/cluster diverged");
+                        alive.push(a.0);
+                    }
+                    // -------- remove (45%): the merge pressure --------
+                    45..=89 => {
+                        if alive.is_empty() {
+                            continue;
+                        }
+                        let id = {
+                            let guard = oracle.index();
+                            let edge = guard.as_any().downcast_ref::<EdgeIndex>().unwrap();
+                            removal_victim(&mut rng, edge, &alive)
+                        };
+                        let ra = oracle.remove(id).unwrap();
+                        let rs = engine.remove(id).unwrap();
+                        assert_eq!(ra, rs, "step {step} removed flags");
+                        assert!(ra, "step {step}: alive chunk not removed");
+                        let i = alive.iter().position(|&a| a == id).unwrap();
+                        alive.swap_remove(i);
+                    }
+                    // -------- rebalance (10%) --------
+                    _ => {
+                        engine.rebalance().unwrap();
+                        let guard = engine.index();
+                        if let Some(sh) = guard.as_any().downcast_ref::<ShardedEdgeIndex>() {
+                            sh.verify_integrity().unwrap();
+                        }
+                    }
+                }
+            }
+            if let Some(sched) = sched {
+                sched.shutdown();
+            }
+
+            // Deterministic drain tail (mirrors the sequential suite):
+            // guarantee at least one drain-through-threshold merge on
+            // every seed, including the nightly's unfixed ones.
+            let pre_drain = {
+                let guard = oracle.index();
+                guard
+                    .as_any()
+                    .downcast_ref::<EdgeIndex>()
+                    .unwrap()
+                    .active_clusters()
+            };
+            loop {
+                let (active, id) = {
+                    let guard = oracle.index();
+                    let edge = guard.as_any().downcast_ref::<EdgeIndex>().unwrap();
+                    let id = edge
+                        .clusters()
+                        .clusters
+                        .iter()
+                        .filter(|m| !m.is_empty())
+                        .min_by_key(|m| (m.len(), m.id))
+                        .map(|m| m.chunk_ids[0]);
+                    (edge.active_clusters(), id)
+                };
+                if active != pre_drain || active <= 1 {
+                    break;
+                }
+                let Some(id) = id else { break };
+                let ra = oracle.remove(id).unwrap();
+                let rs = engine.remove(id).unwrap();
+                assert!(ra && rs, "drain-tail removal of chunk {id}");
+                let i = alive.iter().position(|&a| a == id).unwrap();
+                alive.swap_remove(i);
+            }
+
+            // Merges must actually have fired, both replicas must agree
+            // on the survivors, and the caches must be in an identical
+            // (globally numbered) state.
+            let o_guard = oracle.index();
+            let o_edge = o_guard.as_any().downcast_ref::<EdgeIndex>().unwrap();
+            let s_guard = engine.index();
+            assert!(
+                o_edge.active_clusters()
+                    < o_edge.clusters().n_clusters(),
+                "merge-heavy mix never tombstoned a cluster"
+            );
+            assert_eq!(o_guard.cached_clusters(), s_guard.cached_clusters());
+            match s_guard.as_any().downcast_ref::<ShardedEdgeIndex>() {
+                Some(sh) => {
+                    assert_eq!(sh.active_clusters(), o_edge.active_clusters());
+                    sh.verify_integrity().unwrap();
+                    let merges: u64 = sh.shard_stats().iter().map(|s| s.merges).sum();
+                    assert!(merges > 0, "no merge was routed");
+                }
+                None => {
+                    let s_edge = s_guard.as_any().downcast_ref::<EdgeIndex>().unwrap();
+                    assert_eq!(s_edge.active_clusters(), o_edge.active_clusters());
+                }
+            }
         }
     }
 }
