@@ -45,6 +45,57 @@ pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (u64, u64, u64
     (mean, samples[iters / 2], samples[iters * 95 / 100])
 }
 
+/// True when the bench was invoked with `--smoke`: CI mode, shrink
+/// iteration counts so the whole bench finishes in seconds while still
+/// exercising every code path and emitting a schema-complete trajectory.
+#[allow(dead_code)]
+pub fn smoke() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+}
+
+/// Where the recorded trajectory goes: `$EDGERAG_BENCH_OUT` if set, else
+/// `BENCH_6.json` in the current directory.
+#[allow(dead_code)]
+pub fn bench_out_path() -> std::path::PathBuf {
+    std::env::var("EDGERAG_BENCH_OUT")
+        .map(Into::into)
+        .unwrap_or_else(|_| "BENCH_6.json".into())
+}
+
+/// Record one section of the machine-readable bench trajectory
+/// (`edgerag-bench/v1`, see README). Read-modify-write so the two bench
+/// binaries compose into a single `BENCH_6.json`: each call replaces its
+/// own section and leaves the others intact. Validate the result with
+/// `edgerag bench-validate`.
+#[allow(dead_code)]
+pub fn bench_record(section: &str, value: edgerag::json::Value) {
+    use edgerag::json::Value;
+    let path = bench_out_path();
+    let root = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|s| edgerag::json::parse(&s).ok())
+        .unwrap_or(Value::Null);
+    let mut map = match root {
+        Value::Object(m) => m,
+        _ => Default::default(),
+    };
+    map.insert("schema".into(), Value::str("edgerag-bench/v1"));
+    map.insert("pr".into(), Value::num(6.0));
+    map.insert(section.into(), value);
+    std::fs::write(&path, Value::Object(map).pretty()).expect("write bench trajectory");
+    eprintln!("[bench] recorded section `{section}` -> {}", path.display());
+}
+
+/// Nearest-rank percentile over an already-sorted nanosecond slice.
+#[allow(dead_code)]
+pub fn pctl_ns(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
 #[allow(dead_code)]
 pub fn fmt_ns(ns: u64) -> String {
     if ns >= 1_000_000 {

@@ -1,9 +1,14 @@
 //! L3 micro benches: wall-clock cost of the coordinator hot paths that sit
 //! in front of every PJRT call — cache access/insert, top-k selection,
 //! tokenizer featurization, centroid-probe masking, memory-model touch,
-//! JSON protocol encode/decode. These are the perf-pass targets: the
-//! coordinator must be invisible next to the modeled device latencies
-//! (§Perf in EXPERIMENTS.md).
+//! JSON protocol encode/decode — plus the scalar-vs-SIMD A/B legs for
+//! the reference kernels (`dot`, `sim`, `proj`). These are the perf-pass
+//! targets: the coordinator must be invisible next to the modeled device
+//! latencies (§Perf in EXPERIMENTS.md).
+//!
+//! The A/B results are recorded to the machine-readable trajectory
+//! (`BENCH_6.json`, section `micro_hotpath`) — validate with
+//! `edgerag bench-validate`. `--smoke` shrinks shapes/iterations for CI.
 
 mod common;
 
@@ -11,9 +16,54 @@ use edgerag::cache::CostAwareCache;
 use edgerag::data::Rng;
 use edgerag::embedding::tokenizer;
 use edgerag::json;
+use edgerag::runtime::reference::RefCompute;
+use edgerag::runtime::{Manifest, Tensor};
 use edgerag::storage::{MemoryModel, Region};
+use edgerag::testutil::artifacts_dir;
 use edgerag::vecmath::{self, EmbeddingMatrix};
 use std::sync::Arc;
+
+/// Untiled scalar-dot similarity — the retired implementation, kept
+/// here as the A/B baseline for the cache-blocked lane-reduction kernel.
+fn sim_scalar(q: &[f32], rows: &[f32], a: usize, n: usize, d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; a * n];
+    for i in 0..a {
+        for j in 0..n {
+            out[i * n + j] = vecmath::dot_scalar(&q[i * d..(i + 1) * d], &rows[j * d..(j + 1) * d]);
+        }
+    }
+    out
+}
+
+/// Projection rows over synthetic weights; `simd` toggles the inner
+/// accumulation between the scalar loop (retired) and `vecmath::axpy`
+/// (shipped) — identical data, so the ratio isolates the unroll.
+fn proj_rows(feats: &[f32], dims: (usize, usize, usize), w: &[f32], bias: &[f32], simd: bool) -> Vec<f32> {
+    let (b, vocab, dim) = dims;
+    let mut out = vec![0.0f32; b * dim];
+    for r in 0..b {
+        let frow = &feats[r * vocab..(r + 1) * vocab];
+        let orow = &mut out[r * dim..(r + 1) * dim];
+        orow.copy_from_slice(bias);
+        for (v, &f) in frow.iter().enumerate() {
+            if f != 0.0 {
+                let wrow = &w[v * dim..(v + 1) * dim];
+                if simd {
+                    vecmath::axpy(f, wrow, orow);
+                } else {
+                    for (o, &x) in orow.iter_mut().zip(wrow) {
+                        *o += f * x;
+                    }
+                }
+            }
+        }
+        let norm = (orow.iter().map(|x| (x * x) as f64).sum::<f64>() + 1e-6).sqrt() as f32;
+        for o in orow.iter_mut() {
+            *o /= norm;
+        }
+    }
+    out
+}
 
 fn emb(rows: usize, dim: usize) -> Arc<EmbeddingMatrix> {
     let mut rng = Rng::new(7);
@@ -145,5 +195,131 @@ fn main() {
         common::fmt_ns(mean),
         common::fmt_ns(p50),
         common::fmt_ns(p95)
+    );
+
+    // 8. scalar-vs-SIMD A/B: the retired scalar kernels against the
+    //    shipped lane-reduction dot, cache-blocked sim and unrolled
+    //    axpy. Identical inputs per pair; results recorded to the
+    //    trajectory so speedups are tracked release over release.
+    println!("\n== kernel A/B: retired scalar vs shipped SIMD reference ==");
+    let smoke = common::smoke();
+    let manifest = Manifest::load(&artifacts_dir())
+        .unwrap_or_else(|_| Manifest::builtin(&artifacts_dir()));
+    let refc = RefCompute::new(&manifest);
+    let dim = manifest.dim;
+    let mut rng = Rng::new(42);
+    let mut kernels: Vec<(&str, json::Value)> = Vec::new();
+    let entry = |mean: u64, p50: u64, p95: u64| {
+        json::Value::object(vec![
+            ("mean_ns", mean.into()),
+            ("p50_ns", p50.into()),
+            ("p95_ns", p95.into()),
+        ])
+    };
+
+    // dot: 256 vector pairs per iteration so timer overhead amortizes.
+    let pairs: Vec<(Vec<f32>, Vec<f32>)> = (0..256)
+        .map(|_| {
+            let a: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            (a, b)
+        })
+        .collect();
+    let iters = if smoke { 100 } else { 2000 };
+    let (m_sc, p50_sc, p95_sc) = common::time(iters / 10, iters, || {
+        let mut acc = 0.0f32;
+        for (a, b) in &pairs {
+            acc += vecmath::dot_scalar(a, b);
+        }
+        std::hint::black_box(acc);
+    });
+    let (m_sd, p50_sd, p95_sd) = common::time(iters / 10, iters, || {
+        let mut acc = 0.0f32;
+        for (a, b) in &pairs {
+            acc += vecmath::dot(a, b);
+        }
+        std::hint::black_box(acc);
+    });
+    let dot_speedup = m_sc as f64 / m_sd.max(1) as f64;
+    println!(
+        "dot ({dim}-dim, 256 pairs): scalar mean {} vs simd mean {} (×{dot_speedup:.2})",
+        common::fmt_ns(m_sc),
+        common::fmt_ns(m_sd)
+    );
+    kernels.push(("dot_scalar", entry(m_sc, p50_sc, p95_sc)));
+    kernels.push(("dot_simd", entry(m_sd, p50_sd, p95_sd)));
+
+    // sim: scalar naive double loop vs the production cache-blocked
+    // kernel (RefCompute::run, bit-identical output ordering).
+    let (a, n) = if smoke { (8, 512) } else { (32, 2048) };
+    let q: Vec<f32> = (0..a * dim).map(|_| rng.normal() as f32).collect();
+    let rows: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+    let sim_inputs = [
+        Tensor::F32(q.clone(), vec![a, dim]),
+        Tensor::F32(rows.clone(), vec![n, dim]),
+    ];
+    let iters = if smoke { 5 } else { 30 };
+    let (m_sc, p50_sc, p95_sc) = common::time(2, iters, || {
+        std::hint::black_box(sim_scalar(&q, &rows, a, n, dim));
+    });
+    let (m_sd, p50_sd, p95_sd) = common::time(2, iters, || {
+        std::hint::black_box(refc.run("sim_bench", &sim_inputs).unwrap());
+    });
+    let sim_speedup = m_sc as f64 / m_sd.max(1) as f64;
+    println!(
+        "sim ({a}×{n}×{dim}): scalar mean {} vs simd mean {} (×{sim_speedup:.2})",
+        common::fmt_ns(m_sc),
+        common::fmt_ns(m_sd)
+    );
+    kernels.push(("sim_scalar", entry(m_sc, p50_sc, p95_sc)));
+    kernels.push(("sim_simd", entry(m_sd, p50_sd, p95_sd)));
+
+    // proj: same synthetic weights + real tokenizer sparsity for both
+    // legs; only the inner accumulation differs.
+    let b = if smoke { 2 } else { 4 };
+    let mut feats = vec![0.0f32; b * tokenizer::VOCAB];
+    for (r, row) in feats.chunks_exact_mut(tokenizer::VOCAB).enumerate() {
+        let text = "edge retrieval augments generation with online indexing "
+            .repeat(3 + r);
+        tokenizer::features_into(&text, row);
+    }
+    let w: Vec<f32> = (0..tokenizer::VOCAB * dim).map(|_| rng.normal() as f32).collect();
+    let bias: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+    let iters = if smoke { 50 } else { 400 };
+    let (m_sc, p50_sc, p95_sc) = common::time(iters / 10, iters, || {
+        std::hint::black_box(proj_rows(&feats, (b, tokenizer::VOCAB, dim), &w, &bias, false));
+    });
+    let (m_sd, p50_sd, p95_sd) = common::time(iters / 10, iters, || {
+        std::hint::black_box(proj_rows(&feats, (b, tokenizer::VOCAB, dim), &w, &bias, true));
+    });
+    let proj_speedup = m_sc as f64 / m_sd.max(1) as f64;
+    println!(
+        "proj ({b}×{}×{dim} sparse axpy): scalar mean {} vs simd mean {} (×{proj_speedup:.2})",
+        tokenizer::VOCAB,
+        common::fmt_ns(m_sc),
+        common::fmt_ns(m_sd)
+    );
+    kernels.push(("proj_scalar", entry(m_sc, p50_sc, p95_sc)));
+    kernels.push(("proj_simd", entry(m_sd, p50_sd, p95_sd)));
+
+    common::bench_record("backend", json::Value::str(ctx.builder.compute.backend_name()));
+    common::bench_record(
+        "micro_hotpath",
+        json::Value::object(vec![
+            (
+                "kernels",
+                json::Value::Object(
+                    kernels.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+                ),
+            ),
+            (
+                "speedup",
+                json::Value::object(vec![
+                    ("dot", dot_speedup.into()),
+                    ("sim", sim_speedup.into()),
+                    ("proj", proj_speedup.into()),
+                ]),
+            ),
+        ]),
     );
 }

@@ -1,11 +1,16 @@
 //! Concurrent-serving throughput bench: the same query stream driven
 //! through one shared `Engine` by 1, 2 and 4 client threads, then a
-//! shard-count sweep (`shards` ∈ {1, 2, 4}) at a fixed client count,
+//! shard-count sweep (`shards` ∈ {1, 4, 8}) at a fixed client count,
 //! then a cross-query batching sweep (scheduler off vs on) at ≥8
-//! clients, then a skewed-placement rebalance sweep (one shard seeded
-//! with every cluster; spread before/after bounded rebalance rounds).
+//! clients, then an executor-pool sweep (`--compute-threads` ∈
+//! {1, 2, 4}), then a skewed-placement rebalance sweep (one shard
+//! seeded with every cluster; spread before/after bounded rounds).
 //!
-//!     cargo bench --bench throughput_scaling [-- --limit N]
+//!     cargo bench --bench throughput_scaling [-- --limit N | --smoke]
+//!
+//! Each sweep records qps + per-request p50/p95/p99 wall latency into
+//! the machine-readable trajectory (`BENCH_6.json`, section
+//! `throughput_scaling`) — validate with `edgerag bench-validate`.
 //!
 //! Before the read-parallel refactor every request serialized on a
 //! `Mutex<RagPipeline>`, so thread count could not change throughput.
@@ -28,21 +33,57 @@
 mod common;
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use edgerag::config::IndexKind;
 use edgerag::coordinator::{Engine, QueryOutcome};
+use edgerag::json;
+
+/// One sweep point's measurements: elapsed wall clock, served queries,
+/// summed modeled per-query wall µs, and the sorted per-request
+/// wall-clock latencies (real time, this testbed) for percentiles.
+struct Driven {
+    secs: f64,
+    served: u64,
+    wall_us: u64,
+    lat_ns: Vec<u64>,
+}
+
+impl Driven {
+    fn qps(&self) -> f64 {
+        self.served as f64 / self.secs
+    }
+
+    fn mean_wall_us(&self) -> u64 {
+        self.wall_us / self.served.max(1)
+    }
+
+    fn p_us(&self, p: f64) -> f64 {
+        common::pctl_ns(&self.lat_ns, p) as f64 / 1e3
+    }
+
+    /// A trajectory row: `extra` labels (shards/clients/...) plus the
+    /// qps + p50/p95/p99 every row of the schema carries.
+    fn row(&self, extra: Vec<(&str, json::Value)>) -> json::Value {
+        let mut pairs = extra;
+        pairs.push(("qps", self.qps().into()));
+        pairs.push(("p50_us", self.p_us(50.0).into()));
+        pairs.push(("p95_us", self.p_us(95.0).into()));
+        pairs.push(("p99_us", self.p_us(99.0).into()));
+        json::Value::object(pairs)
+    }
+}
 
 /// Drive `passes` full passes over `queries` from `threads` workers
-/// through an arbitrary query handler. Returns (elapsed seconds, served
-/// queries, summed per-query coordinator wall time in µs).
-fn drive_with<F>(handle: F, queries: &[String], threads: usize, passes: usize) -> (f64, u64, u64)
+/// through an arbitrary query handler.
+fn drive_with<F>(handle: F, queries: &[String], threads: usize, passes: usize) -> Driven
 where
     F: Fn(&str) -> anyhow::Result<QueryOutcome> + Sync,
 {
     let next = AtomicUsize::new(0);
     let wall_us = AtomicU64::new(0);
     let served = AtomicU64::new(0);
+    let lat_ns: Mutex<Vec<u64>> = Mutex::new(Vec::with_capacity(queries.len() * passes));
     let total = queries.len() * passes;
     let start = std::time::Instant::now();
     std::thread::scope(|s| {
@@ -50,27 +91,38 @@ where
             let next = &next;
             let wall_us = &wall_us;
             let served = &served;
+            let lat_ns = &lat_ns;
             let handle = &handle;
-            s.spawn(move || loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= total {
-                    break;
+            s.spawn(move || {
+                let mut local = Vec::with_capacity(total / threads + 1);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= total {
+                        break;
+                    }
+                    let t = std::time::Instant::now();
+                    let out = handle(&queries[i % queries.len()]).unwrap();
+                    local.push(t.elapsed().as_nanos() as u64);
+                    wall_us.fetch_add(out.wall.as_micros() as u64, Ordering::Relaxed);
+                    served.fetch_add(1, Ordering::Relaxed);
                 }
-                let out = handle(&queries[i % queries.len()]).unwrap();
-                wall_us.fetch_add(out.wall.as_micros() as u64, Ordering::Relaxed);
-                served.fetch_add(1, Ordering::Relaxed);
+                lat_ns.lock().unwrap().extend_from_slice(&local);
             });
         }
     });
-    (
-        start.elapsed().as_secs_f64(),
-        served.load(Ordering::Relaxed),
-        wall_us.load(Ordering::Relaxed),
-    )
+    let secs = start.elapsed().as_secs_f64();
+    let mut lat_ns = lat_ns.into_inner().unwrap();
+    lat_ns.sort_unstable();
+    Driven {
+        secs,
+        served: served.load(Ordering::Relaxed),
+        wall_us: wall_us.load(Ordering::Relaxed),
+        lat_ns,
+    }
 }
 
 /// Drive against the shared engine directly (the unbatched path).
-fn drive(engine: &Engine, queries: &[String], threads: usize, passes: usize) -> (f64, u64, u64) {
+fn drive(engine: &Engine, queries: &[String], threads: usize, passes: usize) -> Driven {
     drive_with(|q| engine.handle(q), queries, threads, passes)
 }
 
@@ -90,7 +142,7 @@ fn main() {
         .workload
         .queries
         .iter()
-        .take(32)
+        .take(if common::smoke() { 8 } else { 32 })
         .map(|q| q.text.clone())
         .collect();
 
@@ -100,30 +152,33 @@ fn main() {
         engine.handle(q).unwrap();
     }
 
-    let passes = 8;
+    let passes = if common::smoke() { 2 } else { 8 };
     // qps at shards=1 / 1 client — the serial baseline both sections
     // normalize against.
     let mut qps_serial = 0.0;
     for threads in [1usize, 2, 4] {
-        let (secs, served, wall_us) = drive(&engine, &queries, threads, passes);
-        let qps = served as f64 / secs;
+        let d = drive(&engine, &queries, threads, passes);
         if threads == 1 {
-            qps_serial = qps;
+            qps_serial = d.qps();
         }
         println!(
-            "{threads} client thread(s): {served} queries in {secs:.3}s → {qps:8.1} q/s \
+            "{threads} client thread(s): {} queries in {:.3}s → {:8.1} q/s \
              (speedup ×{:.2}, mean wall {}µs/query)",
-            qps / qps_serial,
-            wall_us / served.max(1)
+            d.served,
+            d.secs,
+            d.qps(),
+            d.qps() / qps_serial,
+            d.mean_wall_us()
         );
     }
 
-    // ---- shard sweep: fixed client count, shards ∈ {1, 2, 4} ----
+    // ---- shard sweep: fixed client count, shards ∈ {1, 4, 8} ----
     let clients = 4;
     println!("\n== shard sweep: {clients} client threads ==");
     let mut qps_one_shard = 0.0;
     let mut qps_best = 0.0;
-    for shards in [1usize, 2, 4] {
+    let mut shard_rows: Vec<json::Value> = Vec::new();
+    for shards in [1usize, 4, 8] {
         let mut b = ctx.builder.clone();
         b.retrieval.shards = shards;
         let engine = b
@@ -132,19 +187,29 @@ fn main() {
         for q in &queries {
             engine.handle(q).unwrap(); // warm each engine identically
         }
-        let (secs, served, wall_us) = drive(&engine, &queries, clients, passes);
-        let qps = served as f64 / secs;
+        let d = drive(&engine, &queries, clients, passes);
         if shards == 1 {
-            qps_one_shard = qps;
+            qps_one_shard = d.qps();
         }
-        qps_best = qps_best.max(qps);
+        qps_best = qps_best.max(d.qps());
         println!(
-            "shards={shards}: {served} queries in {secs:.3}s → {qps:8.1} q/s \
-             (vs shards=1 ×{:.2}, vs serial ×{:.2}, mean wall {}µs/query)",
-            qps / qps_one_shard,
-            qps / qps_serial,
-            wall_us / served.max(1)
+            "shards={shards}: {} queries in {:.3}s → {:8.1} q/s \
+             (vs shards=1 ×{:.2}, vs serial ×{:.2}, mean wall {}µs/query, \
+             p50/p95/p99 {:.0}/{:.0}/{:.0}µs)",
+            d.served,
+            d.secs,
+            d.qps(),
+            d.qps() / qps_one_shard,
+            d.qps() / qps_serial,
+            d.mean_wall_us(),
+            d.p_us(50.0),
+            d.p_us(95.0),
+            d.p_us(99.0)
         );
+        shard_rows.push(d.row(vec![
+            ("shards", shards.into()),
+            ("clients", clients.into()),
+        ]));
     }
     println!(
         "\nacceptance: shards=1 is bit-identical to the unsharded EdgeIndex \
@@ -165,6 +230,7 @@ fn main() {
     println!("\n== batching sweep: {clients} client threads ==");
     let mut qps_off = 0.0;
     let mut qps_on = 0.0;
+    let mut batching_rows: Vec<json::Value> = Vec::new();
     for batching in [false, true] {
         let engine = Arc::new(
             ctx.builder
@@ -175,24 +241,31 @@ fn main() {
             engine.handle(q).unwrap(); // warm identically
         }
         if !batching {
-            let (secs, served, wall_us) = drive(&engine, &queries, clients, passes);
-            qps_off = served as f64 / secs;
+            let d = drive(&engine, &queries, clients, passes);
+            qps_off = d.qps();
             println!(
-                "batching off: {served} queries in {secs:.3}s → {qps_off:8.1} q/s \
+                "batching off: {} queries in {:.3}s → {qps_off:8.1} q/s \
                  (mean wall {}µs/query)",
-                wall_us / served.max(1)
+                d.served,
+                d.secs,
+                d.mean_wall_us()
             );
+            batching_rows.push(d.row(vec![
+                ("batching", false.into()),
+                ("clients", clients.into()),
+            ]));
         } else {
             let sched = ctx.builder.scheduler(engine.clone());
-            let (secs, served, wall_us) =
-                drive_with(|q| sched.handle(q), &queries, clients, passes);
-            qps_on = served as f64 / secs;
+            let d = drive_with(|q| sched.handle(q), &queries, clients, passes);
+            qps_on = d.qps();
             let s = sched.stats();
             println!(
-                "batching on:  {served} queries in {secs:.3}s → {qps_on:8.1} q/s \
+                "batching on:  {} queries in {:.3}s → {qps_on:8.1} q/s \
                  (vs off ×{:.2}, mean wall {}µs/query)",
+                d.served,
+                d.secs,
                 qps_on / qps_off,
-                wall_us / served.max(1)
+                d.mean_wall_us()
             );
             println!(
                 "              embed occupancy {:.1} ({} batches, {} full-width, {} window-expired); \
@@ -205,6 +278,10 @@ fn main() {
                 s.probe.batches,
                 s.bypassed,
             );
+            batching_rows.push(d.row(vec![
+                ("batching", true.into()),
+                ("clients", clients.into()),
+            ]));
         }
     }
     println!(
@@ -212,6 +289,58 @@ fn main() {
          (bit-identical results; fused-call occupancy above shows the \
          dispatch amortization the compiled backend banks on)",
         qps_on / qps_off
+    );
+
+    // ---- executor-pool sweep: compute threads ∈ {1, 2, 4} ----
+    // Same engine config, but the compute service behind `ComputeHandle`
+    // is restarted with an explicit pool width (the `--compute-threads`
+    // serve knob). With the PJRT backend each width is a real executor
+    // pool (one `Runtime` per thread, shared job queue); the reference
+    // fallback executes caller-side (`pool 0` below) and the sweep then
+    // records that dispatch adds no overhead as the knob moves.
+    let clients = 4;
+    println!("\n== executor-pool sweep: {clients} client threads ==");
+    let mut pool_rows: Vec<json::Value> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let compute = edgerag::runtime::ComputeHandle::start_with_threads(
+            &edgerag::testutil::artifacts_dir(),
+            threads,
+        )
+        .expect("restart compute service");
+        let pool = compute.executor_threads();
+        let mut b = ctx.builder.clone();
+        b.compute = compute;
+        let engine = b
+            .pipeline(&built, IndexKind::EdgeRag)
+            .expect("build engine on fresh pool");
+        for q in &queries {
+            engine.handle(q).unwrap(); // warm identically
+        }
+        let d = drive(&engine, &queries, clients, passes);
+        println!(
+            "compute-threads={threads} (pool {pool}, {} backend): {} queries \
+             in {:.3}s → {:8.1} q/s (mean wall {}µs/query)",
+            b.compute.backend_name(),
+            d.served,
+            d.secs,
+            d.qps(),
+            d.mean_wall_us()
+        );
+        pool_rows.push(d.row(vec![
+            ("compute_threads", threads.into()),
+            ("pool_threads", pool.into()),
+            ("clients", clients.into()),
+        ]));
+    }
+
+    common::bench_record("backend", json::Value::str(ctx.builder.compute.backend_name()));
+    common::bench_record(
+        "throughput_scaling",
+        json::Value::object(vec![
+            ("shard_sweep", json::Value::array(shard_rows)),
+            ("batching_sweep", json::Value::array(batching_rows)),
+            ("executor_pool", json::Value::array(pool_rows)),
+        ]),
     );
 
     // ---- rebalance sweep: skewed placement, live migration, spread ----
@@ -272,11 +401,13 @@ fn main() {
             spread_after as f64 / spread_before.max(1) as f64
         );
     }
-    let (secs, served, wall_us) = drive(&engine, &queries, clients, passes);
+    let d = drive(&engine, &queries, clients, passes);
     println!(
-        "post-rebalance serving: {served} queries in {secs:.3}s → {:8.1} q/s \
+        "post-rebalance serving: {} queries in {:.3}s → {:8.1} q/s \
          (mean wall {}µs/query)",
-        served as f64 / secs,
-        wall_us / served.max(1)
+        d.served,
+        d.secs,
+        d.qps(),
+        d.mean_wall_us()
     );
 }

@@ -12,16 +12,18 @@
 //! and compute percentiles without mutating anything, so the stats
 //! endpoint can be served from a shared reference.
 //!
-//! ## Bounded retention
+//! ## Streaming quantiles
 //!
-//! Each percentile query sorts a copy of the retained samples —
-//! O(n log n) per stats call — so retention is **capped**: every stripe
-//! is a ring buffer of [`RING_CAPACITY`] samples ([`MAX_RETAINED`] =
-//! `RING_CAPACITY × SHARDS` total). Long-running servers therefore
-//! compute percentiles over a sliding window of the most recent
-//! ~65k samples at a bounded cost, while [`Metrics::queries`] keeps
-//! counting every sample ever recorded (component means divide by the
-//! true totals, not the window).
+//! [`LatencySeries`] is a fixed-bin **log histogram** (HDR-style:
+//! [`SUB_BUCKETS`] sub-buckets per power of two, ≤ 1/32 ≈ 3.1% relative
+//! bin width), not a sample buffer. Recording is O(1), a percentile read
+//! walks the ~[`NUM_BINS`] bins — no sort, no copy — and memory is a few
+//! KiB regardless of how many samples a long-running server records.
+//! Count, sum (→ mean) and max are tracked **exactly** alongside the
+//! bins; percentiles are exact for values below [`SUB_BUCKETS`] ns and
+//! land on a deterministic bin upper bound above it (capped at the exact
+//! max), so tests can assert exact equality via
+//! [`LatencySeries::bin_value`].
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -29,16 +31,51 @@ use std::sync::{Mutex, RwLock};
 
 use crate::simtime::{Breakdown, Component, SimDuration};
 
-/// A latency series snapshot with exact percentile queries (we keep raw
-/// samples — workloads are ≤ thousands of queries, exactness beats
-/// HDR-style bucketing at this scale). All queries take `&self`: sorting
-/// happens on an internal copy, so snapshots can be shared freely.
+/// Sub-buckets per power-of-two octave (2^[`SUB_BITS`]). Bounds the
+/// relative quantization error of a percentile at 1/32 ≈ 3.1%.
+pub const SUB_BUCKETS: u64 = 1 << SUB_BITS;
+const SUB_BITS: u32 = 5;
+/// Total bins needed to cover the full u64 nanosecond range: the two
+/// exact leading octaves (indices 0..64 cover values 0..64 one-to-one)
+/// plus 32 log-spaced bins for each of the remaining 58 octaves.
+pub const NUM_BINS: usize = ((64 - SUB_BITS as usize) + 1) * SUB_BUCKETS as usize;
+
+/// Bin index for a nanosecond value. Values below `2 × SUB_BUCKETS` map
+/// one-to-one (exact); above that, each octave splits into
+/// [`SUB_BUCKETS`] equal-width bins.
+fn bin_index(ns: u64) -> usize {
+    if ns < 2 * SUB_BUCKETS {
+        return ns as usize;
+    }
+    let h = 63 - ns.leading_zeros(); // 2^h <= ns, h >= SUB_BITS + 1
+    let shift = h - SUB_BITS;
+    (((shift + 1) as usize) << SUB_BITS) + ((ns >> shift) & (SUB_BUCKETS - 1)) as usize
+}
+
+/// Upper bound (inclusive) of a bin — the deterministic value a
+/// percentile query reports for samples in that bin.
+fn bin_upper(index: usize) -> u64 {
+    if index < 2 * SUB_BUCKETS as usize {
+        return index as u64;
+    }
+    let shift = (index >> SUB_BITS) as u32 - 1;
+    let sub = index as u64 & (SUB_BUCKETS - 1);
+    let lower = (SUB_BUCKETS + sub) << shift;
+    lower + ((1u64 << shift) - 1)
+}
+
+/// A latency series as a streaming quantile sketch: a fixed-bin log
+/// histogram plus exact count/sum/max. All queries take `&self` and do
+/// no allocation or sorting, so snapshots can be shared freely and the
+/// stats endpoint stays O([`NUM_BINS`]) under any load.
 #[derive(Debug, Clone, Default)]
 pub struct LatencySeries {
-    samples_ns: Vec<u64>,
-    /// True when `samples_ns` is known-sorted (snapshots sort once at
-    /// construction); percentile queries on a sorted series are O(1).
-    sorted: bool,
+    /// Sample counts per log bin; allocated to [`NUM_BINS`] on first
+    /// record (an empty series carries no storage).
+    bins: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    max_ns: u64,
 }
 
 impl LatencySeries {
@@ -46,145 +83,143 @@ impl LatencySeries {
         Self::default()
     }
 
-    /// Build a snapshot, sorting once so every subsequent percentile /
-    /// cdf query borrows instead of re-sorting.
-    pub fn from_nanos(mut samples_ns: Vec<u64>) -> Self {
-        samples_ns.sort_unstable();
-        LatencySeries {
-            samples_ns,
-            sorted: true,
+    /// Build a series from raw samples (bench/test helper).
+    pub fn from_nanos(samples_ns: Vec<u64>) -> Self {
+        let mut s = Self::new();
+        for ns in samples_ns {
+            s.record(SimDuration::from_nanos(ns));
         }
+        s
+    }
+
+    /// The deterministic value [`percentile`](Self::percentile) reports
+    /// for any sample that fell in `d`'s bin (its inclusive upper
+    /// bound). Exact-match assertions in tests anchor on this instead of
+    /// hard-coding bin arithmetic.
+    pub fn bin_value(d: SimDuration) -> SimDuration {
+        SimDuration::from_nanos(bin_upper(bin_index(d.as_nanos())))
     }
 
     pub fn record(&mut self, d: SimDuration) {
-        self.samples_ns.push(d.as_nanos());
-        self.sorted = false;
+        let ns = d.as_nanos();
+        if self.bins.is_empty() {
+            self.bins = vec![0; NUM_BINS];
+        }
+        self.bins[bin_index(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Merge another series into this one (bin-wise; count/sum/max stay
+    /// exact). Used to splice the per-thread stripes into one snapshot.
+    pub fn merge(&mut self, other: &LatencySeries) {
+        if other.count == 0 {
+            return;
+        }
+        if self.bins.is_empty() {
+            self.bins = vec![0; NUM_BINS];
+        }
+        for (b, o) in self.bins.iter_mut().zip(&other.bins) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
     }
 
     pub fn len(&self) -> usize {
-        self.samples_ns.len()
+        self.count as usize
     }
 
     pub fn is_empty(&self) -> bool {
-        self.samples_ns.is_empty()
+        self.count == 0
     }
 
-    fn sorted(&self) -> std::borrow::Cow<'_, [u64]> {
-        if self.sorted {
-            std::borrow::Cow::Borrowed(&self.samples_ns)
-        } else {
-            let mut v = self.samples_ns.clone();
-            v.sort_unstable();
-            std::borrow::Cow::Owned(v)
+    /// Nanosecond value at `rank` (1-based, nearest-rank): the upper
+    /// bound of the bin holding the rank-th smallest sample, capped at
+    /// the exact max so the top of the distribution never over-reports.
+    fn value_at_rank(&self, rank: u64) -> u64 {
+        let mut cum = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bin_upper(i).min(self.max_ns);
+            }
         }
+        self.max_ns
     }
 
-    /// Exact percentile (nearest-rank), `p` in [0, 100]. Non-mutating:
-    /// safe on a shared snapshot.
+    /// Percentile (nearest-rank over the histogram bins), `p` in
+    /// [0, 100]. Deterministic: the reported value is always a bin upper
+    /// bound ([`LatencySeries::bin_value`]) capped at the exact max —
+    /// within 3.1% of the exact sample, and bit-equal across runs that
+    /// record the same multiset of samples in any order.
     pub fn percentile(&self, p: f64) -> SimDuration {
-        if self.samples_ns.is_empty() {
+        if self.count == 0 {
             return SimDuration::ZERO;
         }
-        let sorted = self.sorted();
-        let n = sorted.len();
-        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
-        SimDuration::from_nanos(sorted[rank.min(n) - 1])
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        SimDuration::from_nanos(self.value_at_rank(rank.min(self.count)))
     }
 
     pub fn median(&self) -> SimDuration {
         self.percentile(50.0)
     }
 
+    /// Exact mean (sum and count are tracked outside the bins).
     pub fn mean(&self) -> SimDuration {
-        if self.samples_ns.is_empty() {
+        if self.count == 0 {
             return SimDuration::ZERO;
         }
-        let sum: u128 = self.samples_ns.iter().map(|&x| x as u128).sum();
-        SimDuration::from_nanos((sum / self.samples_ns.len() as u128) as u64)
+        SimDuration::from_nanos((self.sum_ns / self.count as u128) as u64)
     }
 
+    /// Exact maximum.
     pub fn max(&self) -> SimDuration {
-        SimDuration::from_nanos(self.samples_ns.iter().copied().max().unwrap_or(0))
+        SimDuration::from_nanos(self.max_ns)
     }
 
-    /// Fraction of samples at or below `slo`.
+    /// Fraction of samples in bins at or below `slo`'s bin. Boundary
+    /// semantics are bin-deterministic: a sample counts as attained iff
+    /// its bin index ≤ the SLO's bin index (samples equal to the SLO
+    /// always count; samples in the same bin but above it do too — the
+    /// ≤3.1% quantization the sketch trades for O(1) recording).
     pub fn slo_attainment(&self, slo: SimDuration) -> f64 {
-        if self.samples_ns.is_empty() {
+        if self.count == 0 {
             return 1.0;
         }
-        let ok = self
-            .samples_ns
-            .iter()
-            .filter(|&&s| s <= slo.as_nanos())
-            .count();
-        ok as f64 / self.samples_ns.len() as f64
+        let cut = bin_index(slo.as_nanos());
+        let ok: u64 = self.bins.iter().take(cut + 1).sum();
+        ok as f64 / self.count as f64
     }
 
     /// CDF points (latency, cumulative fraction) — Fig. 12's distribution.
     pub fn cdf(&self, points: usize) -> Vec<(SimDuration, f64)> {
-        if self.samples_ns.is_empty() {
+        if self.count == 0 {
             return Vec::new();
         }
-        let sorted = self.sorted();
-        let n = sorted.len();
         (1..=points)
             .map(|i| {
                 let frac = i as f64 / points as f64;
-                let idx = ((frac * n as f64).ceil() as usize).min(n) - 1;
-                (SimDuration::from_nanos(sorted[idx]), frac)
+                let rank = ((frac * self.count as f64).ceil() as u64).min(self.count).max(1);
+                (SimDuration::from_nanos(self.value_at_rank(rank)), frac)
             })
             .collect()
     }
 }
 
-/// Per-stripe ring capacity. Bounds both memory and the O(n log n)
-/// sort a percentile snapshot pays: at most [`MAX_RETAINED`] samples are
-/// ever retained, with the oldest overwritten first.
-pub const RING_CAPACITY: usize = 8_192;
-
-/// Total retained-sample cap across all stripes (the percentile window).
-pub const MAX_RETAINED: usize = RING_CAPACITY * SHARDS;
-
-/// Fixed-capacity overwrite-oldest sample buffer (one stripe). The
-/// recorded-total lives *inside* the same mutex as the buffer, so
-/// `record` vs `clear` races can never desync counts from contents.
-#[derive(Debug, Default)]
-struct Ring {
-    buf: Vec<u64>,
-    /// Next overwrite position once `buf` reaches capacity.
-    next: usize,
-    /// Samples recorded into this stripe since the last clear
-    /// (monotone; unaffected by overwrites).
-    recorded: u64,
-}
-
-impl Ring {
-    fn push(&mut self, v: u64) {
-        self.recorded += 1;
-        if self.buf.len() < RING_CAPACITY {
-            self.buf.push(v);
-        } else {
-            self.buf[self.next] = v;
-            self.next = (self.next + 1) % RING_CAPACITY;
-        }
-    }
-
-    fn clear(&mut self) {
-        self.buf.clear();
-        self.next = 0;
-        self.recorded = 0;
-    }
-}
-
 /// Mutex-striped sample sink: `record` locks one stripe briefly, keyed by
 /// the calling thread, so concurrent recorders rarely contend. Each
-/// stripe retains at most [`RING_CAPACITY`] samples (oldest overwritten);
-/// `len` counts every record made since the last `clear`, derived from
-/// the stripes themselves (no separate counter), so `len`, reads and
-/// `clear` can never desync even when they race concurrent recorders.
+/// stripe is a [`LatencySeries`] histogram — O(1) per record, a few KiB
+/// per stripe, **no** retention window: every sample since the last
+/// `clear` is represented, at bounded memory, however long the server
+/// runs. `len` is derived from the stripes themselves (no separate
+/// counter), so `len`, reads and `clear` can never desync even when they
+/// race concurrent recorders.
 #[derive(Debug)]
 struct ShardedSeries {
-    shards: Vec<Mutex<Ring>>,
+    shards: Vec<Mutex<LatencySeries>>,
 }
 
 const SHARDS: usize = 8;
@@ -192,7 +227,9 @@ const SHARDS: usize = 8;
 impl ShardedSeries {
     fn new() -> Self {
         ShardedSeries {
-            shards: (0..SHARDS).map(|_| Mutex::new(Ring::default())).collect(),
+            shards: (0..SHARDS)
+                .map(|_| Mutex::new(LatencySeries::new()))
+                .collect(),
         }
     }
 
@@ -204,31 +241,30 @@ impl ShardedSeries {
     }
 
     fn record(&self, ns: u64) {
-        self.shards[Self::shard_index()].lock().unwrap().push(ns);
+        self.shards[Self::shard_index()]
+            .lock()
+            .unwrap()
+            .record(SimDuration::from_nanos(ns));
     }
 
-    /// Samples recorded since the last clear (may exceed the retained
-    /// window once rings wrap).
+    /// Samples recorded since the last clear.
     fn len(&self) -> usize {
-        self.shards
-            .iter()
-            .map(|s| s.lock().unwrap().recorded as usize)
-            .sum()
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
-    /// Snapshot of the *retained* window (≤ [`MAX_RETAINED`] most recent
-    /// samples).
+    /// Merged snapshot of every stripe (all samples since the last
+    /// clear — histograms merge losslessly, so there is no window).
     fn snapshot(&self) -> LatencySeries {
-        let mut all = Vec::new();
+        let mut all = LatencySeries::new();
         for s in &self.shards {
-            all.extend_from_slice(&s.lock().unwrap().buf);
+            all.merge(&s.lock().unwrap());
         }
-        LatencySeries::from_nanos(all)
+        all
     }
 
     fn clear(&self) {
         for s in &self.shards {
-            s.lock().unwrap().clear();
+            *s.lock().unwrap() = LatencySeries::new();
         }
     }
 }
@@ -296,13 +332,13 @@ impl Metrics {
             .unwrap_or(0)
     }
 
-    /// Snapshot of the retrieval-latency series (the retained window of
-    /// at most [`MAX_RETAINED`] most recent samples).
+    /// Snapshot of the retrieval-latency series (merged across stripes;
+    /// covers every sample since the last reset — no retention window).
     pub fn retrieval(&self) -> LatencySeries {
         self.retrieval.snapshot()
     }
 
-    /// Snapshot of the TTFT series (same retention window).
+    /// Snapshot of the TTFT series (same coverage).
     pub fn ttft(&self) -> LatencySeries {
         self.ttft.snapshot()
     }
@@ -349,9 +385,12 @@ mod tests {
         for v in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
             s.record(ms(v));
         }
-        assert_eq!(s.median(), ms(50));
+        // Interior percentiles land on the deterministic bin upper bound
+        // of the exact sample (≤3.1% away, bit-stable across runs)...
+        assert_eq!(s.median(), LatencySeries::bin_value(ms(50)));
+        assert_eq!(s.percentile(10.0), LatencySeries::bin_value(ms(10)));
+        // ...while the top of the distribution, max and mean stay exact.
         assert_eq!(s.percentile(95.0), ms(100));
-        assert_eq!(s.percentile(10.0), ms(10));
         assert_eq!(s.max(), ms(100));
         assert_eq!(s.mean(), ms(55));
     }
@@ -367,15 +406,25 @@ mod tests {
     #[test]
     fn percentile_does_not_mutate() {
         // The stats endpoint serves from a shared reference: queries must
-        // leave the snapshot untouched (insertion order preserved).
+        // be `&self`, repeatable, and order-insensitive.
         let mut s = LatencySeries::new();
         for v in [50u64, 10, 30] {
             s.record(ms(v));
         }
         let shared = &s;
-        assert_eq!(shared.median(), ms(30));
+        assert_eq!(shared.median(), LatencySeries::bin_value(ms(30)));
         assert_eq!(shared.percentile(100.0), ms(50));
-        assert_eq!(shared.samples_ns, vec![ms(50).as_nanos(), ms(10).as_nanos(), ms(30).as_nanos()]);
+        // Repeating the queries yields identical answers.
+        assert_eq!(shared.median(), LatencySeries::bin_value(ms(30)));
+        assert_eq!(shared.percentile(100.0), ms(50));
+        // Recording in a different order produces a bit-identical series.
+        let reordered = LatencySeries::from_nanos(vec![
+            ms(10).as_nanos(),
+            ms(30).as_nanos(),
+            ms(50).as_nanos(),
+        ]);
+        assert_eq!(reordered.median(), shared.median());
+        assert_eq!(reordered.percentile(100.0), shared.percentile(100.0));
     }
 
     #[test]
@@ -423,21 +472,25 @@ mod tests {
     }
 
     #[test]
-    fn ring_caps_retained_samples() {
-        // Single-threaded: every sample lands in one stripe; past
-        // capacity the oldest are overwritten while totals keep counting.
+    fn histogram_retains_all_samples_in_bounded_memory() {
+        // No retention window: a sample count far beyond the old ring
+        // capacity is fully represented — snapshot len, max and the
+        // bottom of the distribution all see every record.
         let m = Metrics::new();
         let b = Breakdown::default();
-        let n = RING_CAPACITY + 100;
+        let n = 100_000usize;
         for i in 0..n {
             m.record_query(&b, SimDuration::from_nanos(i as u64 + 1), ms(1));
         }
         assert_eq!(m.queries(), n, "totals count every record");
         let snap = m.retrieval();
-        assert_eq!(snap.len(), RING_CAPACITY, "retention capped at the ring");
-        // Newest sample retained; the 100 oldest overwritten.
+        assert_eq!(snap.len(), n, "snapshot covers every sample");
         assert_eq!(snap.max(), SimDuration::from_nanos(n as u64));
-        assert!(snap.percentile(0.0) > SimDuration::from_nanos(100));
+        // The smallest sample (1 ns, below the exact-bin cutoff) is
+        // still present and reported exactly.
+        assert_eq!(snap.percentile(0.0), SimDuration::from_nanos(1));
+        // The sketch itself stays a fixed-size array of bins.
+        assert_eq!(snap.bins.len(), NUM_BINS);
     }
 
     #[test]

@@ -331,7 +331,39 @@ impl EdgeIndex {
     /// Gather a cluster's embeddings, consulting the online-update overlay
     /// for chunks inserted after the initial build (§5.4).
     pub(crate) fn gather(&self, c: u32) -> Result<crate::vecmath::EmbeddingMatrix> {
+        self.gather_members(&self.clusters.clusters[c as usize])
+    }
+
+    /// Gather cluster `c`'s embeddings **as if** member `skip` were
+    /// already removed. The blob-first removal path uses this to write
+    /// the post-removal blob *before* mutating membership, so a blob
+    /// fault aborts the removal with the index untouched.
+    pub(crate) fn gather_without(
+        &self,
+        c: u32,
+        skip: u32,
+    ) -> Result<crate::vecmath::EmbeddingMatrix> {
         let meta = &self.clusters.clusters[c as usize];
+        let remaining = crate::index::ClusterMeta {
+            id: meta.id,
+            chunk_ids: meta
+                .chunk_ids
+                .iter()
+                .copied()
+                .filter(|&id| id != skip)
+                .collect(),
+            chars: 0,
+            gen_cost: crate::simtime::SimDuration::ZERO,
+        };
+        self.gather_members(&remaining)
+    }
+
+    /// The gather body, over an explicit member list (the cluster's own
+    /// meta, or a filtered view of it).
+    fn gather_members(
+        &self,
+        meta: &crate::index::ClusterMeta,
+    ) -> Result<crate::vecmath::EmbeddingMatrix> {
         if self.dynamic.is_empty() {
             return self.source.cluster_embeddings(meta);
         }

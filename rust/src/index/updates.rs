@@ -129,33 +129,69 @@ impl EdgeIndex {
     /// not necessarily the *global* nearest, so the sharded wrapper
     /// selects the victim against the spliced probe snapshot and merges
     /// cross-shard when the victim lives elsewhere.
+    /// Removal is **blob-first**: the post-removal accounting is computed
+    /// read-only, the fallible blob transition runs against that planned
+    /// state (storing the post-removal rows via
+    /// [`EdgeIndex::gather_without`], or dropping the blob), and only
+    /// then does the infallible half mutate membership. A blob fault
+    /// therefore aborts the removal with the index — membership, blob,
+    /// cache — exactly as it was, and a retry re-runs the whole op.
+    /// A removal that *drains* its cluster below [`MERGE_THRESHOLD`]
+    /// drops the blob outright instead of re-storing it: the follow-up
+    /// merge deletes the drained cluster's blob anyway, so re-putting it
+    /// here would be a wasted write (and a wasted fault surface).
     pub(crate) fn remove_chunk_deferred(&mut self, id: u32) -> Result<(bool, Option<u32>)> {
-        let Some(cluster) = self.chunk_cluster.remove(&id) else {
+        let Some(&cluster) = self.chunk_cluster.get(&id) else {
             return Ok((false, None));
         };
-        self.update_gen.fetch_add(1, Ordering::Release);
-        self.invalidate_probe_snapshot();
-        let chars = match self.dynamic.remove(&id) {
-            Some((text, _)) => text.len() as u64,
-            None => {
+        // Plan (read-only): the post-removal accounting.
+        let (chars_removed, new_len) = {
+            let meta = &self.clusters.clusters[cluster as usize];
+            let chars = match self.dynamic.get(&id) {
+                Some((text, _)) => text.len() as u64,
                 // Static chunk: average-out its chars from the meta (exact
                 // per-chunk sizes for static chunks live in the corpus; the
                 // meta keeps totals, so removal uses the cluster mean —
                 // documented approximation).
-                let meta = &self.clusters.clusters[cluster as usize];
-                meta.chars / meta.len().max(1) as u64
-            }
+                None => meta.chars / meta.len().max(1) as u64,
+            };
+            (chars, meta.len() - 1)
         };
+        let new_chars = self.clusters.clusters[cluster as usize]
+            .chars
+            .saturating_sub(chars_removed);
+        let new_gen = self.device.embed_gen_cost(new_chars);
+        let drains = new_len < MERGE_THRESHOLD;
+
+        // Fallible blob transition, before any mutation.
+        if let Some(blob) = &self.blob {
+            if !drains && new_len > 0 && new_gen > self.store_limit {
+                let emb = self.gather_without(cluster, id)?;
+                blob.put(cluster, &emb)?;
+            } else if blob.contains(cluster) {
+                blob.remove(cluster)?;
+            }
+        }
+
+        // Infallible half: rewire membership and drop the stale cache
+        // entry (the same invalidations `refresh_cluster` performs).
+        self.update_gen.fetch_add(1, Ordering::Release);
+        self.invalidate_probe_snapshot();
+        self.chunk_cluster.remove(&id);
+        self.dynamic.remove(&id);
         {
             let meta = &mut self.clusters.clusters[cluster as usize];
             meta.chunk_ids.retain(|&c| c != id);
-            meta.chars = meta.chars.saturating_sub(chars);
+            meta.chars = new_chars;
+            meta.gen_cost = new_gen;
         }
-        self.refresh_cluster(cluster)?;
+        if let Some(cache) = &self.cache {
+            if cache.write().unwrap().remove(cluster) {
+                self.memory.lock().unwrap().release(self.cache_region(cluster));
+            }
+        }
 
-        let drained = (self.clusters.clusters[cluster as usize].len() < MERGE_THRESHOLD)
-            .then_some(cluster);
-        Ok((true, drained))
+        Ok((true, drains.then_some(cluster)))
     }
 
     /// Number of active (non-tombstone) clusters.

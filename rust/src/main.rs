@@ -75,8 +75,17 @@ impl Args {
 
 fn builder_from(args: &Args) -> Result<SystemBuilder> {
     let artifacts = args.get("artifacts").unwrap_or("artifacts");
-    let compute = ComputeHandle::start(std::path::Path::new(artifacts))
-        .context("starting compute executor (run `make artifacts` first)")?;
+    // 0 = auto (one executor per core, clamped to 16). Only the PJRT
+    // backend has an executor pool; the reference backend runs inline.
+    let compute_threads: usize = args
+        .get("compute-threads")
+        .map(|t| t.parse())
+        .transpose()
+        .context("bad --compute-threads")?
+        .unwrap_or(0);
+    let compute =
+        ComputeHandle::start_with_threads(std::path::Path::new(artifacts), compute_threads)
+            .context("starting compute executor (run `make artifacts` first)")?;
     let device = match args.get("device") {
         Some(name) => {
             DeviceProfile::by_name(name).with_context(|| format!("unknown device `{name}`"))?
@@ -114,6 +123,7 @@ fn run() -> Result<()> {
         "query" => query(&args),
         "stats" => stats(&args),
         "bench" => bench(&args),
+        "bench-validate" => bench_validate(&args),
         "build" => build(&args),
         "tune" => tune(&args),
         "config" => config(&args),
@@ -139,8 +149,10 @@ COMMANDS
           [--workers N] [--shards N] [--batching true|false]
           [--batch-window-us U] [--max-inflight N]
           [--rebalance true|false] [--rebalance-interval N]
-          [--max-migrations N] [--transformer]
-          [--real-prefill] [--live-generation]
+          [--max-migrations N] [--compute-threads N]
+          [--transformer] [--real-prefill] [--live-generation]
+          (--compute-threads 0 = auto, one PJRT executor per core;
+           ignored by the inline reference backend)
           (--shards 0 = auto, one per core — the serve default;
            --shards 1 = single-shard paper-exact index;
            --batching true — the serve default — coalesces concurrent
@@ -152,6 +164,7 @@ COMMANDS
   bench   <table2|fig3|fig4|fig5|fig7|fig10|fig12|fig13|breakdown|
            headline|ablation-storage|ablation-decay|all>
           [--dataset NAME] [--full] [--limit N] [--device D]
+  bench-validate [--file PATH]          check a BENCH_*.json against the schema
   build   [--dataset NAME|--all]        pre-build dataset caches
   tune    --dataset NAME                nprobe normalization vs flat
   config                                print default config JSON
@@ -309,6 +322,73 @@ fn bench(args: &Args) -> Result<()> {
         }
         other => bail!("unknown bench `{other}` (see `edgerag help`)"),
     }
+}
+
+/// Validate a `BENCH_*.json` trajectory file against the
+/// `edgerag-bench/v1` schema (see README "Benchmark trajectory"). Used
+/// by the CI `bench-smoke` job after running both benches, and by hand
+/// before committing an updated trajectory.
+fn bench_validate(args: &Args) -> Result<()> {
+    let path = args.get("file").unwrap_or("BENCH_6.json");
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let v = edgerag::json::parse(&text).with_context(|| format!("parsing {path}"))?;
+
+    let stat_keys = ["mean_ns", "p50_ns", "p95_ns"];
+    let sweep_keys = ["qps", "p50_us", "p95_us", "p99_us"];
+
+    let schema = v.req("schema")?.as_str().context("`schema` must be a string")?;
+    anyhow::ensure!(
+        schema == "edgerag-bench/v1",
+        "unknown schema `{schema}` (expected edgerag-bench/v1)"
+    );
+    v.req("backend")?.as_str().context("`backend` must be a string")?;
+
+    let micro = v.req("micro_hotpath")?;
+    let kernels = micro
+        .req("kernels")?
+        .as_object()
+        .context("`micro_hotpath.kernels` must be an object")?;
+    anyhow::ensure!(!kernels.is_empty(), "`micro_hotpath.kernels` is empty");
+    for (name, stats) in kernels {
+        for key in stat_keys {
+            stats
+                .req(key)?
+                .as_f64()
+                .with_context(|| format!("kernel `{name}`: `{key}` must be a number"))?;
+        }
+    }
+    for pair in ["dot", "sim", "proj"] {
+        for leg in ["scalar", "simd"] {
+            anyhow::ensure!(
+                kernels.contains_key(&format!("{pair}_{leg}")),
+                "missing A/B kernel entry `{pair}_{leg}`"
+            );
+        }
+        micro
+            .req("speedup")?
+            .req(pair)?
+            .as_f64()
+            .with_context(|| format!("`speedup.{pair}` must be a number"))?;
+    }
+
+    let tput = v.req("throughput_scaling")?;
+    for sweep in ["shard_sweep", "batching_sweep", "executor_pool"] {
+        let rows = tput
+            .req(sweep)?
+            .as_array()
+            .with_context(|| format!("`throughput_scaling.{sweep}` must be an array"))?;
+        anyhow::ensure!(!rows.is_empty(), "`throughput_scaling.{sweep}` is empty");
+        for (i, row) in rows.iter().enumerate() {
+            for key in sweep_keys {
+                row.req(key)?
+                    .as_f64()
+                    .with_context(|| format!("{sweep}[{i}]: `{key}` must be a number"))?;
+            }
+        }
+    }
+
+    println!("{path}: valid edgerag-bench/v1 trajectory");
+    Ok(())
 }
 
 fn build(args: &Args) -> Result<()> {

@@ -19,7 +19,7 @@ use anyhow::Result;
 
 pub use executable::{Executable, HostTensor};
 pub use manifest::{ArtifactSpec, DType, InputKind, Manifest};
-pub use service::{ComputeHandle, Tensor};
+pub use service::{default_compute_threads, ComputeHandle, Tensor};
 
 /// The process-wide PJRT runtime: one CPU client + compiled-executable
 /// registry keyed by artifact name.

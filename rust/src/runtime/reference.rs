@@ -122,7 +122,21 @@ impl RefCompute {
         }
     }
 
+    /// Row tile for the cache-blocked similarity kernel: 64 rows × 512
+    /// dims × 4 bytes = 128 KiB of `rows` per tile, sized to stay
+    /// resident in L2 while every query row streams over it.
+    const SIM_TILE_ROWS: usize = 64;
+
     /// `sim_{A}x{N}`: inner products, row-major (A × N) output.
+    ///
+    /// Cache-blocked over the lane-reduction dot: the row matrix is
+    /// walked in [`Self::SIM_TILE_ROWS`]-row tiles and every query row
+    /// scores a whole tile before the next tile is touched, so for
+    /// multi-query batches each tile of `rows` is loaded from memory
+    /// once instead of A times. Each output element is still exactly one
+    /// `vecmath::dot` call — the tiling permutes the *order* elements
+    /// are computed in, never the reduction inside one, so results are
+    /// bit-identical to the naive double loop.
     fn run_sim(&self, artifact: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
         let (q, qs) = Self::f32_input(artifact, inputs, 0)?;
         let (rows, rs) = Self::f32_input(artifact, inputs, 1)?;
@@ -131,12 +145,15 @@ impl RefCompute {
         if d != self.dim || rs[1] != d || q.len() != a * d || rows.len() != n * d {
             bail!("{artifact}: shape mismatch (q {qs:?}, rows {rs:?})");
         }
-        let mut out = Vec::with_capacity(a * n);
-        for i in 0..a {
-            let qi = &q[i * d..(i + 1) * d];
-            for j in 0..n {
-                let rj = &rows[j * d..(j + 1) * d];
-                out.push(crate::vecmath::dot(qi, rj));
+        let mut out = vec![0.0f32; a * n];
+        for j0 in (0..n).step_by(Self::SIM_TILE_ROWS) {
+            let j1 = (j0 + Self::SIM_TILE_ROWS).min(n);
+            for i in 0..a {
+                let qi = &q[i * d..(i + 1) * d];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in j0..j1 {
+                    orow[j] = crate::vecmath::dot(qi, &rows[j * d..(j + 1) * d]);
+                }
             }
         }
         Ok(vec![out])
@@ -156,13 +173,15 @@ impl RefCompute {
             let frow = &feats[r * vocab..(r + 1) * vocab];
             let orow = &mut out[r * dim..(r + 1) * dim];
             orow.copy_from_slice(&self.proj_b);
-            // Bag-of-tokens features are sparse: skip zero counts.
+            // Bag-of-tokens features are sparse: skip zero counts. The
+            // accumulation over nonzero tokens stays sequential (that
+            // order is the numeric contract); `axpy` vectorizes the dim
+            // axis, where per-element updates are independent and the
+            // unroll is bit-exact.
             for (v, &f) in frow.iter().enumerate() {
                 if f != 0.0 {
                     let wrow = &self.proj_w[v * dim..(v + 1) * dim];
-                    for (o, w) in orow.iter_mut().zip(wrow) {
-                        *o += f * w;
-                    }
+                    crate::vecmath::axpy(f, wrow, orow);
                 }
             }
             let norm = (orow.iter().map(|x| (x * x) as f64).sum::<f64>() + 1e-6).sqrt() as f32;
@@ -325,5 +344,78 @@ mod tests {
     fn unknown_artifact_rejected() {
         let b = backend();
         assert!(b.run("nope_3", &[]).is_err());
+    }
+
+    fn random_mat(rng: &mut Rng, rows: usize, dim: usize) -> Vec<f32> {
+        (0..rows * dim).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn tiled_sim_bit_identical_to_naive_loop() {
+        // Property: across shapes that hit partial tiles (n not a
+        // multiple of SIM_TILE_ROWS) and multi-query batches, the
+        // cache-blocked kernel equals the retired naive double loop
+        // bit for bit — same dot per element, different visit order.
+        let b = backend();
+        let dim = b.dim;
+        let mut rng = Rng::new(crate::testutil::test_seed(0x51A));
+        for &(a, n) in &[(1usize, 1usize), (1, 63), (1, 64), (1, 65), (4, 128), (3, 200), (8, 257)] {
+            let q = random_mat(&mut rng, a, dim);
+            let rows = random_mat(&mut rng, n, dim);
+            let got = &b
+                .run(
+                    "sim_1x128",
+                    &[
+                        Tensor::F32(q.clone(), vec![a, dim]),
+                        Tensor::F32(rows.clone(), vec![n, dim]),
+                    ],
+                )
+                .unwrap()[0];
+            let mut want = Vec::with_capacity(a * n);
+            for i in 0..a {
+                let qi = &q[i * dim..(i + 1) * dim];
+                for j in 0..n {
+                    want.push(crate::vecmath::dot(qi, &rows[j * dim..(j + 1) * dim]));
+                }
+            }
+            assert_eq!(got.len(), want.len(), "shape {a}x{n}");
+            for (e, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "shape {a}x{n} elem {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_projection_bit_identical_to_scalar_accumulation() {
+        // Property: the vectorized projection equals the retired
+        // elementwise inner loop bit for bit, including the f64 norm.
+        let b = backend();
+        let (vocab, dim) = (b.vocab, b.dim);
+        let mut rng = Rng::new(crate::testutil::test_seed(0xA8A));
+        for case in 0..6 {
+            let mut feats = vec![0.0f32; vocab];
+            for _ in 0..rng.below(40) + 1 {
+                feats[rng.below(vocab)] = (rng.below(5) + 1) as f32;
+            }
+            let got = &b
+                .run("proj_1", &[Tensor::F32(feats.clone(), vec![1, vocab])])
+                .unwrap()[0];
+            let mut want = b.proj_b.clone();
+            for (v, &f) in feats.iter().enumerate() {
+                if f != 0.0 {
+                    let wrow = &b.proj_w[v * dim..(v + 1) * dim];
+                    for (o, w) in want.iter_mut().zip(wrow) {
+                        *o += f * w;
+                    }
+                }
+            }
+            let norm = (want.iter().map(|x| (x * x) as f64).sum::<f64>() + 1e-6).sqrt() as f32;
+            for o in want.iter_mut() {
+                *o /= norm;
+            }
+            for (e, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "case {case} elem {e}");
+            }
+        }
     }
 }

@@ -1,18 +1,22 @@
 //! Compute service: the serving-engine pattern, with two backends.
 //!
 //! * **PJRT** — the `xla` crate's handles are `Rc`-based
-//!   (single-threaded), so all PJRT state — client, compiled executables,
-//!   uploaded weights — lives on one dedicated executor thread.
-//!   Coordinator/server threads hold a cheap [`ComputeHandle`]
-//!   (`Clone + Send + Sync`) and submit jobs over a channel; replies come
-//!   back on per-call channels. This mirrors how production servers
-//!   isolate an inference engine behind a submission queue.
+//!   (single-threaded), so PJRT state — client, compiled executables,
+//!   uploaded weights — is thread-confined. Instead of one executor
+//!   thread, the service runs a **pool of N executor threads**, each
+//!   owning its own [`Runtime`] (its own client + executable cache),
+//!   all draining one shared job queue. Coordinator/server threads hold
+//!   a cheap [`ComputeHandle`] (`Clone + Send + Sync`) and submit jobs
+//!   over the queue; replies come back on per-call channels. N defaults
+//!   to the core count (clamped to 16) and is settable with the
+//!   `--compute-threads` CLI knob, so the compiled backend scales with
+//!   cores the way the reference backend always has.
 //! * **Reference** — when PJRT (or the `artifacts/` directory) is
 //!   unavailable, the service transparently falls back to the
 //!   deterministic pure-rust [`RefCompute`](super::reference::RefCompute)
 //!   backend, which is `Sync` and executes **inline on the calling
 //!   thread** — so concurrent queries scale with cores instead of
-//!   funneling through the executor channel.
+//!   funneling through the executor queue.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -52,12 +56,16 @@ enum Job {
 }
 
 enum Backend {
-    /// Dedicated executor thread driving compiled PJRT executables. The
-    /// sender sits behind a mutex so the handle stays `Sync` on every
-    /// toolchain; the lock is held only for the (non-blocking) enqueue.
+    /// Executor pool driving compiled PJRT executables: one `Runtime`
+    /// per thread, one shared MPSC queue. The sender sits behind a mutex
+    /// so the handle stays `Sync` on every toolchain; the lock is held
+    /// only for the (non-blocking) enqueue. `threads` is the number of
+    /// workers that survived startup — shutdown sends that many
+    /// `Shutdown` jobs, each consumed by exactly one worker.
     Pjrt {
         tx: Mutex<mpsc::Sender<Job>>,
-        join: Mutex<Option<std::thread::JoinHandle<()>>>,
+        joins: Mutex<Vec<std::thread::JoinHandle<()>>>,
+        threads: usize,
     },
     /// In-process deterministic fallback; executes on the caller thread.
     Reference(RefCompute),
@@ -69,21 +77,43 @@ struct Shared {
     calls: AtomicU64,
 }
 
+/// Default executor-pool width: one worker per core, clamped to 1..=16
+/// (matches the shard-count clamp — past that, queue contention beats
+/// parallel compile wins on edge parts).
+pub fn default_compute_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 16)
+}
+
 /// Handle to the compute service. Cloneable and thread-safe; dropping the
-/// last handle shuts a PJRT executor down.
+/// last handle shuts a PJRT executor pool down.
 #[derive(Clone)]
 pub struct ComputeHandle {
     shared: Arc<Shared>,
 }
 
 impl ComputeHandle {
-    /// Start the compute service for `artifacts_dir`.
+    /// Start the compute service for `artifacts_dir` with the default
+    /// (per-core) executor-pool width.
+    pub fn start(artifacts_dir: &Path) -> Result<ComputeHandle> {
+        Self::start_with_threads(artifacts_dir, 0)
+    }
+
+    /// Start the compute service with an explicit executor-pool width
+    /// (`0` means auto: [`default_compute_threads`]).
     ///
-    /// Tries, in order: real manifest + PJRT executor thread; real
+    /// Tries, in order: real manifest + PJRT executor pool; real
     /// manifest + reference backend (PJRT unavailable); built-in manifest
     /// + reference backend (no artifacts at all). The caller never has to
     /// care which one it got — only golden-parity tests do.
-    pub fn start(artifacts_dir: &Path) -> Result<ComputeHandle> {
+    pub fn start_with_threads(artifacts_dir: &Path, threads: usize) -> Result<ComputeHandle> {
+        let threads = if threads == 0 {
+            default_compute_threads()
+        } else {
+            threads
+        };
         let manifest = match Manifest::load(artifacts_dir) {
             Ok(m) => m,
             Err(e) => {
@@ -94,11 +124,15 @@ impl ComputeHandle {
                 Manifest::builtin(artifacts_dir)
             }
         };
-        let backend = match spawn_pjrt_executor(artifacts_dir) {
-            Ok((tx, join)) => Backend::Pjrt {
-                tx: Mutex::new(tx),
-                join: Mutex::new(Some(join)),
-            },
+        let backend = match spawn_pjrt_pool(artifacts_dir, threads) {
+            Ok((tx, joins)) => {
+                let threads = joins.len();
+                Backend::Pjrt {
+                    tx: Mutex::new(tx),
+                    joins: Mutex::new(joins),
+                    threads,
+                }
+            }
             Err(e) => {
                 eprintln!(
                     "edgerag: PJRT executor unavailable ({e:#}); \
@@ -132,6 +166,15 @@ impl ComputeHandle {
         }
     }
 
+    /// Width of the PJRT executor pool, or `0` for the reference backend
+    /// (which runs inline on callers — effectively one lane per caller).
+    pub fn executor_threads(&self) -> usize {
+        match &self.shared.backend {
+            Backend::Pjrt { threads, .. } => *threads,
+            Backend::Reference(_) => 0,
+        }
+    }
+
     /// Total executions submitted through this service.
     pub fn calls(&self) -> u64 {
         self.shared.calls.load(Ordering::Relaxed)
@@ -139,7 +182,8 @@ impl ComputeHandle {
 
     /// Execute an artifact with owned inputs; blocks for the result. On
     /// the reference backend this runs inline on the calling thread, so
-    /// concurrent callers execute concurrently.
+    /// concurrent callers execute concurrently; on PJRT the job is
+    /// picked up by whichever pool worker frees first.
     pub fn run(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Vec<f32>>> {
         self.shared.calls.fetch_add(1, Ordering::Relaxed);
         match &self.shared.backend {
@@ -152,24 +196,38 @@ impl ComputeHandle {
                         inputs,
                         reply,
                     })
-                    .map_err(|_| anyhow!("compute thread gone"))?;
-                rx.recv().map_err(|_| anyhow!("compute thread dropped reply"))?
+                    .map_err(|_| anyhow!("compute pool gone"))?;
+                rx.recv().map_err(|_| anyhow!("compute pool dropped reply"))?
             }
             Backend::Reference(r) => r.run(artifact, &inputs),
         }
     }
 
-    /// Eagerly compile all artifacts (server startup). No-op on the
-    /// reference backend.
+    /// Eagerly compile all artifacts (server startup). One warmup job
+    /// per pool worker, so every per-thread executable cache is primed;
+    /// a worker that misses its job (another drained two) still compiles
+    /// lazily on first use. No-op on the reference backend.
     pub fn warmup(&self) -> Result<()> {
         match &self.shared.backend {
-            Backend::Pjrt { tx, .. } => {
+            Backend::Pjrt { tx, threads, .. } => {
                 let (reply, rx) = mpsc::channel();
-                tx.lock()
-                    .unwrap()
-                    .send(Job::Warmup { reply })
-                    .map_err(|_| anyhow!("compute thread gone"))?;
-                rx.recv().map_err(|_| anyhow!("compute thread dropped reply"))?
+                {
+                    let tx = tx.lock().unwrap();
+                    for _ in 0..*threads {
+                        tx.send(Job::Warmup {
+                            reply: reply.clone(),
+                        })
+                        .map_err(|_| anyhow!("compute pool gone"))?;
+                    }
+                }
+                drop(reply);
+                let mut result = Ok(());
+                while let Ok(r) = rx.recv() {
+                    if r.is_err() && result.is_ok() {
+                        result = r;
+                    }
+                }
+                result
             }
             Backend::Reference(_) => Ok(()),
         }
@@ -178,43 +236,89 @@ impl ComputeHandle {
 
 impl Drop for Shared {
     fn drop(&mut self) {
-        if let Backend::Pjrt { tx, join } = &self.backend {
-            let _ = tx.lock().unwrap().send(Job::Shutdown);
-            if let Some(j) = join.lock().unwrap().take() {
+        if let Backend::Pjrt { tx, joins, threads } = &self.backend {
+            {
+                let tx = tx.lock().unwrap();
+                // One Shutdown per live worker; each worker exits after
+                // consuming exactly one.
+                for _ in 0..*threads {
+                    let _ = tx.send(Job::Shutdown);
+                }
+            }
+            for j in joins.lock().unwrap().drain(..) {
                 let _ = j.join();
             }
         }
     }
 }
 
-/// Spawn the PJRT executor thread; fails fast (with the underlying PJRT /
-/// artifact error) when the runtime cannot load, so `start` can fall back.
-fn spawn_pjrt_executor(
+/// Spawn the PJRT executor pool; fails fast (with the underlying PJRT /
+/// artifact error) when **no** worker can load the runtime, so `start`
+/// can fall back. Workers that fail individually (e.g. device memory
+/// exhausted after the first few clients) are dropped from the pool;
+/// any surviving subset keeps the service alive.
+fn spawn_pjrt_pool(
     dir: &Path,
-) -> Result<(mpsc::Sender<Job>, std::thread::JoinHandle<()>)> {
-    let dir: PathBuf = dir.to_path_buf();
+    threads: usize,
+) -> Result<(mpsc::Sender<Job>, Vec<std::thread::JoinHandle<()>>)> {
     let (tx, rx) = mpsc::channel::<Job>();
+    let rx = Arc::new(Mutex::new(rx));
     let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
-    let join = std::thread::Builder::new()
-        .name("edgerag-compute".into())
-        .spawn(move || executor_loop(&dir, rx, ready_tx))
-        .context("spawning compute thread")?;
+    let mut handles = Vec::with_capacity(threads);
+    for i in 0..threads {
+        let dir: PathBuf = dir.to_path_buf();
+        let rx = Arc::clone(&rx);
+        let ready = ready_tx.clone();
+        let join = std::thread::Builder::new()
+            .name(format!("edgerag-compute-{i}"))
+            .spawn(move || executor_loop(&dir, rx, ready))
+            .context("spawning compute pool thread")?;
+        handles.push(join);
+    }
+    drop(ready_tx);
 
-    match ready_rx.recv() {
-        Ok(Ok(())) => Ok((tx, join)),
-        Ok(Err(e)) => {
-            let _ = join.join();
-            Err(e)
-        }
-        Err(_) => {
-            let _ = join.join();
-            Err(anyhow!("compute thread died during startup"))
+    let mut ok = 0usize;
+    let mut first_err: Option<anyhow::Error> = None;
+    for _ in 0..threads {
+        match ready_rx.recv() {
+            Ok(Ok(())) => ok += 1,
+            Ok(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            Err(_) => {
+                if first_err.is_none() {
+                    first_err = Some(anyhow!("compute pool thread died during startup"));
+                }
+            }
         }
     }
+    if ok == 0 {
+        for j in handles {
+            let _ = j.join();
+        }
+        return Err(first_err.unwrap_or_else(|| anyhow!("empty compute pool")));
+    }
+    // Keep only the workers that reported ready; the failed ones have
+    // already exited — reap their join handles now.
+    if ok < threads {
+        let (live, dead): (Vec<_>, Vec<_>) =
+            handles.into_iter().partition(|j| !j.is_finished());
+        for j in dead {
+            let _ = j.join();
+        }
+        handles = live;
+    }
+    Ok((tx, handles))
 }
 
-fn executor_loop(dir: &Path, rx: mpsc::Receiver<Job>, ready: mpsc::Sender<Result<()>>) {
+fn executor_loop(
+    dir: &Path,
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
+    ready: mpsc::Sender<Result<()>>,
+) {
     let runtime = match Runtime::load(dir) {
         Ok(rt) => {
             let _ = ready.send(Ok(()));
@@ -225,7 +329,13 @@ fn executor_loop(dir: &Path, rx: mpsc::Receiver<Job>, ready: mpsc::Sender<Result
             return;
         }
     };
-    while let Ok(job) = rx.recv() {
+    loop {
+        // Hold the queue lock only for the dequeue, never across an
+        // execution, so the other pool workers keep draining.
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => break,
+        };
         match job {
             Job::Run {
                 artifact,

@@ -1,9 +1,13 @@
-//! Dense vector storage + small CPU-side helpers.
+//! Dense vector storage + the CPU-side kernel primitives.
 //!
 //! The heavy scoring math runs through the PJRT executables (Pallas
-//! similarity kernel); this module provides the host-side containers and
-//! the cheap glue (top-k selection, normalization checks, reference dot
-//! products for tests).
+//! similarity kernel) when artifacts are available; everything else —
+//! the reference backend's similarity/projection kernels, centroid
+//! probing, top-k selection — bottoms out in this module. [`dot`] is the
+//! *single shared* dot product for every path (oracle, sharded,
+//! batched), so its reduction order is a determinism contract: all the
+//! bit-equality suites compare results that flowed through the same
+//! lanes.
 
 /// A row-major matrix of embeddings (n × dim, f32).
 #[derive(Debug, Clone, Default)]
@@ -76,20 +80,135 @@ impl EmbeddingMatrix {
     }
 }
 
-/// Reference dot product (tests / fallbacks).
+/// Number of independent accumulator lanes in [`dot`]. Part of the
+/// determinism contract: changing it changes every f32 score in the
+/// system at the ulp level, so the golden files would need regeneration.
+pub const DOT_LANES: usize = 8;
+
+/// Dot product over a fixed 8-lane strided accumulator.
+///
+/// Element `i` always lands in lane `i % 8` and the lanes are combined
+/// in a fixed pairwise tree, so the reduction order — and therefore the
+/// exact f32 result — depends only on the input length, never on the
+/// call site. The lane structure has no data dependence between
+/// consecutive elements, which is what lets LLVM keep 8 multiplies in
+/// flight (and auto-vectorize to whatever SIMD width the target has)
+/// where the retired sequential fold ([`dot_scalar`]) serialized on one
+/// accumulator.
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; DOT_LANES];
+    let ac = a.chunks_exact(DOT_LANES);
+    let bc = b.chunks_exact(DOT_LANES);
+    let (ar, br) = (ac.remainder(), bc.remainder());
+    for (xs, ys) in ac.zip(bc) {
+        for l in 0..DOT_LANES {
+            lanes[l] += xs[l] * ys[l];
+        }
+    }
+    // Scalar tail: fewer than 8 trailing elements, each still in its own
+    // lane slot (index `len - tail + l` maps to lane `l` because the
+    // chunked prefix length is a multiple of DOT_LANES).
+    for (l, (x, y)) in ar.iter().zip(br).enumerate() {
+        lanes[l] += x * y;
+    }
+    // Fixed pairwise reduction tree — NOT a left fold. This order is
+    // load-bearing for bit-equality across call paths.
+    ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+}
+
+/// The retired sequential dot product (single left-fold accumulator).
+/// Kept as the scalar A/B baseline for `micro_hotpath` and as the model
+/// the SIMD property tests measure drift against. Not used on any
+/// serving path.
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `out[i] += alpha * x[i]`, 8-wide unrolled. Each output element sees
+/// exactly one fused-free multiply-add per call, in the same order as
+/// the naive loop, so this is *bit-identical* to the scalar form — the
+/// unroll only removes the loop-carried bookkeeping so the compiler can
+/// vectorize the independent element updates.
+pub fn axpy(alpha: f32, x: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    let xc = x.chunks_exact(DOT_LANES);
+    let tail = xc.remainder();
+    let mut oc = out.chunks_exact_mut(DOT_LANES);
+    for (os, xs) in (&mut oc).zip(xc) {
+        for l in 0..DOT_LANES {
+            os[l] += alpha * xs[l];
+        }
+    }
+    for (o, x) in oc.into_remainder().iter_mut().zip(tail) {
+        *o += alpha * x;
+    }
 }
 
 pub fn l2_norm(a: &[f32]) -> f32 {
     dot(a, a).sqrt()
 }
 
+/// Largest `k` the branch-light stack-buffer scan handles; larger `k`
+/// takes the general heap-free selection. Every retrieval call site
+/// (`final_k`, `nprobe`, k-means assignment) sits at or below this.
+const TOP_K_INLINE: usize = 16;
+
 /// Indices + scores of the k largest entries, descending (stable on ties
 /// by lower index). Scores for padded rows can be excluded by passing the
-/// true `n`.
+/// true `n`. Scores must be NaN-free (they are: every producer is a dot
+/// of finite normalized embeddings).
 pub fn top_k(scores: &[f32], n: usize, k: usize) -> Vec<(usize, f32)> {
+    let n = n.min(scores.len());
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    if k <= TOP_K_INLINE {
+        top_k_small(&scores[..n], k)
+    } else {
+        top_k_select(scores, n, k)
+    }
+}
+
+/// Branch-light selection for k ≤ [`TOP_K_INLINE`]: the candidate buffer
+/// lives in two stack arrays (no `Vec` insert/remove shifting), the hot
+/// rejection test is a single compare against the current floor, and the
+/// insertion walks backward shifting at most k slots. Bit-identical to
+/// [`top_k_select`] for NaN-free input: the backward walk stops at the
+/// first `val[p-1] >= s`, which is exactly the forward scan's first
+/// `s > val[j]` position, so ties keep their lower-index preference.
+fn top_k_small(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
+    debug_assert!(k <= TOP_K_INLINE && k > 0);
+    let mut idx = [0usize; TOP_K_INLINE];
+    let mut val = [f32::NEG_INFINITY; TOP_K_INLINE];
+    let mut len = 0usize;
+    for (i, &s) in scores.iter().enumerate() {
+        // Hot path: buffer full and s does not beat the floor (NaN-free
+        // input makes `<=` the exact negation of the insert test).
+        if len == k && s <= val[k - 1] {
+            continue;
+        }
+        let insert_len = if len < k { len + 1 } else { k };
+        let mut p = insert_len - 1;
+        while p > 0 && s > val[p - 1] {
+            val[p] = val[p - 1];
+            idx[p] = idx[p - 1];
+            p -= 1;
+        }
+        val[p] = s;
+        idx[p] = i;
+        len = insert_len;
+    }
+    (0..len).map(|j| (idx[j], val[j])).collect()
+}
+
+/// The general selection (and the retired sole implementation): sorted
+/// `Vec` buffer with forward-scan insertion. Kept for k > 16 and as the
+/// reference model `top_k_small`'s property tests compare against.
+fn top_k_select(scores: &[f32], n: usize, k: usize) -> Vec<(usize, f32)> {
     let n = n.min(scores.len());
     let k = k.min(n);
     if k == 0 {
@@ -200,6 +319,108 @@ mod tests {
     fn argmax_basic() {
         assert_eq!(argmax(&[0.0, 3.0, 2.0]), 1);
         assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    /// Independent model of [`dot`]'s lane semantics, written as the
+    /// contract reads — element `i` into lane `i % 8`, fixed pairwise
+    /// tree — with none of the chunking machinery. Pins the reduction
+    /// order as an explicit spec, not an implementation accident.
+    fn dot_lane_model(a: &[f32], b: &[f32]) -> f32 {
+        let mut lanes = [0.0f32; DOT_LANES];
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            lanes[i % DOT_LANES] += x * y;
+        }
+        ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+    }
+
+    fn random_vec(rng: &mut crate::data::Rng, n: usize) -> Vec<f32> {
+        // Spread across magnitudes so reduction-order differences are
+        // visible at the ulp level if they exist.
+        (0..n)
+            .map(|_| (rng.below(2001) as f32 - 1000.0) * 1.7e-3)
+            .collect()
+    }
+
+    #[test]
+    fn dot_matches_lane_model_all_lengths() {
+        // Property: for every length 0..=513 (odd remainders, unaligned
+        // tails, the exact-multiple boundaries) the production dot is
+        // bit-identical to the independently written lane model.
+        let mut rng = crate::data::Rng::new(crate::testutil::test_seed(0xD07));
+        for n in 0..=513usize {
+            let a = random_vec(&mut rng, n);
+            let b = random_vec(&mut rng, n);
+            let got = dot(&a, &b);
+            let want = dot_lane_model(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "len {n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn dot_is_close_to_sequential_scalar() {
+        // The lane reduction is NOT bit-identical to the retired left
+        // fold — only numerically equivalent. Pin the tolerance so an
+        // accidental fma or reassociation regression shows up.
+        let mut rng = crate::data::Rng::new(crate::testutil::test_seed(0xD08));
+        for n in [1usize, 7, 8, 64, 257, 512] {
+            let a = random_vec(&mut rng, n);
+            let b = random_vec(&mut rng, n);
+            let simd = dot(&a, &b);
+            let scalar = dot_scalar(&a, &b);
+            let scale = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum::<f32>();
+            assert!(
+                (simd - scalar).abs() <= 1e-5 * scale.max(1.0),
+                "len {n}: {simd} vs {scalar}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_bit_identical_to_scalar_loop() {
+        let mut rng = crate::data::Rng::new(crate::testutil::test_seed(0xA49));
+        for n in 0..=130usize {
+            let x = random_vec(&mut rng, n);
+            let alpha = (rng.below(100) as f32 - 50.0) * 0.03;
+            let base = random_vec(&mut rng, n);
+            let mut fast = base.clone();
+            axpy(alpha, &x, &mut fast);
+            let mut slow = base;
+            for (o, xv) in slow.iter_mut().zip(&x) {
+                *o += alpha * xv;
+            }
+            for (i, (f, s)) in fast.iter().zip(&slow).enumerate() {
+                assert_eq!(f.to_bits(), s.to_bits(), "len {n} elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_small_bit_identical_to_select() {
+        // Property: for every k the dispatch can route to the inline
+        // path (1..=16), the stack-buffer scan returns exactly what the
+        // retired Vec selection returns — indices, scores, tie order —
+        // across random lengths with heavy score collisions.
+        let mut rng = crate::data::Rng::new(crate::testutil::test_seed(0x70C));
+        for case in 0..400 {
+            let n = rng.below(80) + 1;
+            let k = rng.below(TOP_K_INLINE) + 1;
+            let scores: Vec<f32> = (0..n).map(|_| (rng.below(8) as f32) * 0.125).collect();
+            let got = top_k_small(&scores, k.min(n));
+            let want = top_k_select(&scores, n, k);
+            assert_eq!(got, want, "case {case}: n={n} k={k} {scores:?}");
+        }
+    }
+
+    #[test]
+    fn top_k_dispatch_consistent_across_k_boundary() {
+        // The k=16 → k=17 dispatch switch must be invisible: on input
+        // where both agree on the first 16, the prefix is shared.
+        let mut rng = crate::data::Rng::new(crate::testutil::test_seed(0x70D));
+        let scores: Vec<f32> = (0..64).map(|_| rng.below(1000) as f32).collect();
+        let small = top_k(&scores, 64, 16);
+        let large = top_k(&scores, 64, 17);
+        assert_eq!(&large[..16], &small[..]);
     }
 
     /// Reference ranking: stable sort by (score desc, candidate position

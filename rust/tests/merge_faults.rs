@@ -1,20 +1,28 @@
-//! Crash-consistency tests for the migrate-then-merge path
-//! (`ShardedEdgeIndex::remove_chunk` → cross-shard merge routing).
+//! Crash-consistency tests for the removal path and the migrate-then-merge
+//! path (`ShardedEdgeIndex::remove_chunk` → cross-shard merge routing).
 //!
 //! An injectable failing blob store ([`BlobStore::inject_put_failures`]
-//! / [`inject_remove_failures`]) proves the composed structural op's
-//! blob-first ordering: a blob fault at any fallible step leaves **both
-//! shards consistent** (`verify_integrity` passes, the old state keeps
-//! serving, no chunk is lost) and the merge **retries cleanly** through
-//! [`ShardedEdgeIndex::merge_drained`].
+//! / [`inject_remove_failures`]) proves the blob-first ordering of every
+//! structural op on this path: a blob fault at any fallible step leaves
+//! **both shards consistent** (`verify_integrity` passes, the old state
+//! keeps serving, no chunk is lost) and the op **retries cleanly** —
+//! a faulted removal by calling `remove_chunk` again, a faulted merge
+//! through [`ShardedEdgeIndex::merge_drained`].
 //!
-//! Three fault points are exercised:
+//! Five fault points are exercised:
 //! 1. the victim-blob `put` of a **cross-shard** merge — fails after the
 //!    migrate half, leaving a plain (fully consistent) migration;
-//! 2. the source-blob `remove` of a cross-shard merge — fails before
-//!    anything moved, leaving the pre-merge state untouched;
+//! 2. the drained cluster's blob `remove` inside the triggering removal —
+//!    the removal's first fallible write, so the whole removal (and the
+//!    merge behind it) aborts with the placement untouched;
 //! 3. the victim-blob `put` of a **same-shard** merge — fails before any
-//!    membership mutation.
+//!    membership mutation;
+//! 4. the post-removal blob `put` of a plain (non-draining) removal —
+//!    runs before membership mutates, so the fault aborts the removal
+//!    atomically instead of stranding a stale blob;
+//! 5. (absence) a drain-crossing removal must **not** re-put the blob the
+//!    merge immediately deletes — an armed put fault on the source shard
+//!    stays unconsumed while the composed remove+merge completes.
 
 use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
 use edgerag::coordinator::builder::SystemBuilder;
@@ -132,8 +140,9 @@ fn victim_put_fault_mid_cross_shard_merge_is_recoverable() {
     assert_ne!(src, vs, "staged a cross-shard merge");
 
     // The merge's only `put` on the victim shard is the combined victim
-    // blob — fail it. (The triggering removal's own refresh `put` runs
-    // on the source shard and does not consume this charge.)
+    // blob — fail it. (The triggering removal drops the drained blob on
+    // the *source* shard — a `remove`, not a `put` — so nothing before
+    // the merge can consume this charge.)
     sharded.with_shard(vs, |e| e.blob_store().unwrap().inject_put_failures(1));
     let err = sharded.remove_chunk(trigger);
     assert!(err.is_err(), "injected put fault must surface");
@@ -170,7 +179,7 @@ fn victim_put_fault_mid_cross_shard_merge_is_recoverable() {
 }
 
 #[test]
-fn source_remove_fault_aborts_cross_shard_merge_untouched() {
+fn source_remove_fault_aborts_removal_and_merge_untouched() {
     let fx = fixture("xremove", 0.0);
     let sharded = fx.sharded();
     let (g, victim, survivor, trigger) = stage_drain(&fx, true);
@@ -178,15 +187,20 @@ fn source_remove_fault_aborts_cross_shard_merge_untouched() {
     let vs = sharded.shard_of(victim);
     assert_ne!(src, vs, "staged a cross-shard merge");
 
-    // Fail the drained cluster's blob drop — the first mutating step of
-    // the composed op. Everything before it is read-only, so the abort
-    // must leave the placement fully untouched.
+    // Fail the drained cluster's blob drop. Removal is blob-first, so
+    // this is the removal's *own* first fallible write — before any
+    // membership mutation — and the whole composed op (removal + merge)
+    // must abort with the placement fully untouched.
     sharded.with_shard(src, |e| e.blob_store().unwrap().inject_remove_failures(1));
     let err = sharded.remove_chunk(trigger);
     assert!(err.is_err(), "injected remove fault must surface");
 
     sharded.verify_integrity().unwrap();
-    assert_eq!(sharded.cluster_of(trigger), None, "removal took effect");
+    assert_eq!(
+        sharded.cluster_of(trigger),
+        Some(g),
+        "blob-first removal aborts atomically — the chunk is still routed"
+    );
     assert_eq!(sharded.cluster_of(survivor), Some(g));
     assert_eq!(
         sharded.shard_of(g),
@@ -194,11 +208,17 @@ fn source_remove_fault_aborts_cross_shard_merge_untouched() {
         "nothing may migrate when the op aborts at its first fallible write"
     );
 
-    // Retry runs the full cross-shard composition.
-    assert!(sharded.merge_drained(g).unwrap());
+    // The aborted removal keeps serving: the trigger is still retrievable.
+    let out = sharded.search(&fx.self_query(trigger), 3).unwrap();
+    assert_eq!(out.hits[0].0, trigger, "hits: {:?}", out.hits);
+
+    // Retry the removal itself; it re-runs the blob drop and then the
+    // full cross-shard merge composition inline.
+    assert!(sharded.remove_chunk(trigger).unwrap());
     sharded.verify_integrity().unwrap();
+    assert_eq!(sharded.cluster_of(trigger), None);
     assert_eq!(sharded.cluster_of(survivor), Some(victim));
-    assert_eq!(sharded.shard_of(g), vs, "retried merge migrated the drained cluster");
+    assert_eq!(sharded.shard_of(g), vs, "retried op migrated the drained cluster");
     let stats = sharded.shard_stats();
     let merges: u64 = stats.iter().map(|s| s.merges).sum();
     assert_eq!(merges, 1);
@@ -208,10 +228,10 @@ fn source_remove_fault_aborts_cross_shard_merge_untouched() {
 #[test]
 fn victim_put_fault_mid_local_merge_leaves_membership_untouched() {
     // Same-shard merge: a light store limit keeps the *drained* cluster
-    // below the storage threshold (its refresh on the triggering removal
-    // must not consume the injected charge) while normal clusters stay
-    // stored, so the armed fault fires exactly at the merge's victim
-    // `put`.
+    // below the storage threshold (the triggering removal then performs
+    // no blob operation at all — a drain-crossing removal never puts,
+    // and there is no blob to drop) while normal clusters stay stored,
+    // so the armed fault fires exactly at the merge's victim `put`.
     let fx = fixture("localput", 0.05);
     let sharded = fx.sharded();
     let (g, victim, survivor, trigger) = stage_drain(&fx, false);
@@ -243,4 +263,79 @@ fn victim_put_fault_mid_local_merge_leaves_membership_untouched() {
     assert_eq!(sharded.cluster_of(survivor), Some(victim));
     let merges: u64 = sharded.shard_stats().iter().map(|s| s.merges).sum();
     assert_eq!(merges, 1);
+}
+
+#[test]
+fn removal_put_fault_leaves_membership_untouched() {
+    // A plain (non-draining) removal of a stored cluster's member must
+    // re-store the post-removal blob *before* mutating membership: a
+    // put fault aborts the removal atomically instead of leaving the
+    // membership updated with a stale blob still serving the removed
+    // chunk's row.
+    let fx = fixture("remput", 0.0);
+    let sharded = fx.sharded();
+    let loads = sharded.cluster_loads();
+    let (g, _) = loads
+        .iter()
+        .flatten()
+        .filter(|c| c.rows > MERGE_THRESHOLD as u64 + 1)
+        .map(|c| (c.global, c.rows))
+        .min_by_key(|&(g, r)| (r, g))
+        .expect("a cluster that survives one removal exists");
+    let id = (0..fx.n_chunks)
+        .find(|&id| sharded.cluster_of(id) == Some(g))
+        .expect("cluster has members");
+    let s = sharded.shard_of(g);
+
+    sharded.with_shard(s, |e| e.blob_store().unwrap().inject_put_failures(1));
+    let err = sharded.remove_chunk(id);
+    assert!(err.is_err(), "injected put fault must surface");
+
+    sharded.verify_integrity().unwrap();
+    assert_eq!(
+        sharded.cluster_of(id),
+        Some(g),
+        "blob-first removal aborts atomically — the chunk is still routed"
+    );
+    let out = sharded.search(&fx.self_query(id), 3).unwrap();
+    assert_eq!(out.hits[0].0, id, "aborted removal keeps serving: {:?}", out.hits);
+
+    // Retry completes: charge consumed, put succeeds, membership rewires.
+    assert!(sharded.remove_chunk(id).unwrap());
+    sharded.verify_integrity().unwrap();
+    assert_eq!(sharded.cluster_of(id), None);
+    let out = sharded.search(&fx.self_query(id), 3).unwrap();
+    assert_ne!(out.hits[0].0, id, "removed chunk no longer served");
+}
+
+#[test]
+fn drain_crossing_removal_skips_blob_reput() {
+    // The removal that drains a cluster below MERGE_THRESHOLD must not
+    // re-put the drained blob the merge immediately deletes. Proof by
+    // armed fault: with a put fault armed on the *source* shard, the
+    // composed remove + cross-shard merge completes anyway — the
+    // removal's only source-side blob op is a `remove`, and the merge's
+    // only `put` lands on the victim shard. (The retired refresh-based
+    // removal re-put the drained blob and tripped this charge.)
+    let fx = fixture("noreput", 0.0);
+    let sharded = fx.sharded();
+    let (g, victim, survivor, trigger) = stage_drain(&fx, true);
+    let src = sharded.shard_of(g);
+    let vs = sharded.shard_of(victim);
+    assert_ne!(src, vs, "staged a cross-shard merge");
+
+    sharded.with_shard(src, |e| e.blob_store().unwrap().inject_put_failures(1));
+    assert!(
+        sharded.remove_chunk(trigger).unwrap(),
+        "drain-crossing removal performs no source-side put"
+    );
+    sharded.verify_integrity().unwrap();
+    assert_eq!(sharded.cluster_of(trigger), None);
+    assert_eq!(sharded.cluster_of(survivor), Some(victim));
+    assert_eq!(sharded.shard_of(g), vs, "merge migrated the drained cluster");
+    let merges: u64 = sharded.shard_stats().iter().map(|s| s.merges).sum();
+    assert_eq!(merges, 1);
+
+    // The charge must still be armed — disarm it so teardown is clean.
+    sharded.with_shard(src, |e| e.blob_store().unwrap().inject_put_failures(0));
 }
