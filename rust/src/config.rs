@@ -506,6 +506,16 @@ pub struct RetrievalConfig {
     /// copy/flip/retire work a single round may impose on the serving
     /// path.
     pub max_migrations_per_round: usize,
+    /// Structural write-ahead log: every insert/remove/migrate/threshold
+    /// op is journalled before its irreversible mutation and replayed on
+    /// startup (`docs/ARCHITECTURE.md` § Durability). **Off by default**
+    /// — the library stays ephemeral and byte-for-byte unchanged;
+    /// `edgerag serve` turns it on.
+    pub wal: bool,
+    /// Consolidate the WAL into its snapshot (and truncate the live log)
+    /// after every this many appended records. 0 disables periodic
+    /// snapshots — the log then only compacts on clean shutdown.
+    pub snapshot_interval_ops: usize,
 }
 
 /// One shard per available core, clamped to a sensible serving range —
@@ -535,6 +545,8 @@ impl Default for RetrievalConfig {
             rebalance: false,
             rebalance_interval_ops: 128,
             max_migrations_per_round: 4,
+            wal: false,
+            snapshot_interval_ops: 512,
         }
     }
 }
@@ -570,6 +582,11 @@ impl RetrievalConfig {
             (
                 "max_migrations_per_round",
                 self.max_migrations_per_round.into(),
+            ),
+            ("wal", self.wal.into()),
+            (
+                "snapshot_interval_ops",
+                self.snapshot_interval_ops.into(),
             ),
         ])
     }
@@ -626,6 +643,15 @@ impl RetrievalConfig {
             max_migrations_per_round: match v.get("max_migrations_per_round") {
                 Some(n) => n.as_usize().context("max_migrations_per_round")?,
                 None => 4,
+            },
+            // Optional for configs written before the structural WAL.
+            wal: match v.get("wal") {
+                Some(b) => b.as_bool().context("wal")?,
+                None => false,
+            },
+            snapshot_interval_ops: match v.get("snapshot_interval_ops") {
+                Some(n) => n.as_usize().context("snapshot_interval_ops")?,
+                None => 512,
             },
         })
     }

@@ -25,7 +25,7 @@ use crate::index::{
 use crate::llm::Llm;
 use crate::runtime::ComputeHandle;
 use crate::simtime::SimDuration;
-use crate::storage::BlobStore;
+use crate::storage::{BlobStore, WriteAheadLog};
 use crate::vecmath::EmbeddingMatrix;
 
 #[derive(Debug, Clone)]
@@ -50,6 +50,10 @@ pub struct BuildOptions {
     /// from-scratch k-means++ tends to balance away on uniform synthetic
     /// topics (DESIGN.md §7).
     pub topic_init: Option<bool>,
+    /// Directory for the structural write-ahead log (only used when
+    /// `retrieval.wal` is on). None derives
+    /// `state_dir/{dataset}/{kind}-wal`, next to the blob layout.
+    pub wal_dir: Option<PathBuf>,
 }
 
 impl Default for BuildOptions {
@@ -64,6 +68,7 @@ impl Default for BuildOptions {
             nlist: None,
             prebuilt_generation: true,
             topic_init: None,
+            wal_dir: None,
         }
     }
 }
@@ -300,7 +305,7 @@ impl SystemBuilder {
                             .join(&built.profile.name)
                             .join(format!("{}-sharded", kind.name()))
                     });
-                    Box::new(ShardedEdgeIndex::build(
+                    let mut idx = ShardedEdgeIndex::build(
                         kind,
                         set,
                         self.embed_source(built),
@@ -312,7 +317,19 @@ impl SystemBuilder {
                         store_limit,
                         built.profile.slo(),
                         shards,
-                    )?)
+                    )?;
+                    // Startup recovery: replay the surviving snapshot+tail
+                    // through the ordinary update path, then attach the
+                    // log (strictly after — replayed ops are not
+                    // re-logged). `ShardedEdgeIndex::build` is a pure
+                    // function of the dataset, so replay lands on exactly
+                    // the structure the records were logged against.
+                    if let Some(wal) = self.open_wal(built, kind)? {
+                        let ops = wal.take_recovered();
+                        idx.replay_wal(&ops)?;
+                        idx.attach_wal(wal);
+                    }
+                    Box::new(idx)
                 } else {
                     let blob = if kind.uses_storage() {
                         let dir = self
@@ -324,7 +341,7 @@ impl SystemBuilder {
                     } else {
                         None
                     };
-                    Box::new(EdgeIndex::build(
+                    let mut idx = EdgeIndex::build(
                         kind,
                         set,
                         self.embed_source(built),
@@ -335,11 +352,44 @@ impl SystemBuilder {
                         &self.retrieval,
                         store_limit,
                         built.profile.slo(),
-                    )?)
+                    )?;
+                    if let Some(wal) = self.open_wal(built, kind)? {
+                        let ops = wal.take_recovered();
+                        idx.replay_wal(&ops)?;
+                        idx.attach_wal(wal);
+                    }
+                    Box::new(idx)
                 }
             }
         };
         Ok((index, memory))
+    }
+
+    /// Open — and crash-recover — the structural write-ahead log for one
+    /// configuration, when `retrieval.wal` is on. The directory is
+    /// `options.wal_dir`, or the derived
+    /// `state_dir/{dataset}/{kind}-wal` next to the blob layout. The
+    /// returned log still holds its recovered ops
+    /// ([`WriteAheadLog::take_recovered`]); the caller replays them
+    /// before attaching.
+    fn open_wal(
+        &self,
+        built: &BuiltDataset,
+        kind: IndexKind,
+    ) -> Result<Option<Arc<WriteAheadLog>>> {
+        if !self.retrieval.wal {
+            return Ok(None);
+        }
+        let dir = self.options.wal_dir.clone().unwrap_or_else(|| {
+            self.options
+                .state_dir
+                .join(&built.profile.name)
+                .join(format!("{}-wal", kind.name()))
+        });
+        Ok(Some(Arc::new(WriteAheadLog::open(
+            &dir,
+            self.retrieval.snapshot_interval_ops,
+        )?)))
     }
 
     /// Wrap an engine in the cross-query batch scheduler configured from

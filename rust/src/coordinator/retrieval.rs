@@ -21,7 +21,7 @@
 //! write lease ([`Engine::index_mut`]), draining in-flight searches
 //! first. The lock hierarchy is documented in `docs/ARCHITECTURE.md`.
 
-use std::sync::{RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{Arc, OnceLock, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -64,6 +64,11 @@ pub struct Engine {
     top_k: usize,
     real_prefill: bool,
     metrics: Metrics,
+    /// The scheduler's fused embed stage, wired (once) by
+    /// [`crate::sched::BatchScheduler::new`]: with it set,
+    /// [`Engine::insert`] embeds through the same cross-query batching
+    /// path served queries use instead of calling the embedder inline.
+    embed_stage: OnceLock<Arc<crate::sched::EmbedBatcher>>,
 }
 
 /// Former name of [`Engine`], kept so existing call sites and docs keep
@@ -89,7 +94,16 @@ impl Engine {
             top_k,
             real_prefill,
             metrics: Metrics::new(),
+            embed_stage: OnceLock::new(),
         }
+    }
+
+    /// Route this engine's insert-path embedding through a fused embed
+    /// stage (called once by [`crate::sched::BatchScheduler::new`]), so
+    /// served queries and online inserts take one embedding code path
+    /// and fuse into the same kernel batches. Later calls are ignored.
+    pub fn set_embed_stage(&self, stage: Arc<crate::sched::EmbedBatcher>) {
+        let _ = self.embed_stage.set(stage);
     }
 
     /// Shared (read-leased) access to the index — concurrent with queries.
@@ -118,8 +132,13 @@ impl Engine {
     /// concurrent query can never retrieve an id whose text is missing.
     pub fn insert(&self, text: &str) -> Result<(u32, u32)> {
         // Embed outside any lease: queries keep flowing while the
-        // embedder works.
-        let emb = self.embedder.embed_one(text)?;
+        // embedder works. With a scheduler in front, go through its
+        // fused embed stage — bit-identical rows, but concurrent inserts
+        // and queries coalesce into one kernel batch.
+        let emb = match self.embed_stage.get() {
+            Some(stage) => stage.embed_one(text)?,
+            None => self.embedder.embed_one(text)?,
+        };
         {
             let index = self.index.read().unwrap();
             if index.supports_concurrent_updates() {

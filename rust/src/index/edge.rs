@@ -45,7 +45,7 @@ use crate::index::{
     SearchEvents, SearchOutcome, SharedMemory, VectorIndex,
 };
 use crate::simtime::{Component, LatencyLedger, SimDuration};
-use crate::storage::{BlobStore, Region};
+use crate::storage::{BlobStore, Region, WalOp, WriteAheadLog};
 use crate::vecmath;
 
 /// Which optional stages are enabled (Table 4).
@@ -113,6 +113,17 @@ pub struct EdgeIndex {
     /// Memoized first-level snapshot for (batched) lock-free probing;
     /// invalidated by every structural update. See [`ProbeTable`].
     probe_snapshot: RwLock<Option<Arc<ProbeTable>>>,
+    /// Structural write-ahead log. `None` for library builds and for the
+    /// per-shard indexes inside a [`ShardedEdgeIndex`] (the wrapper owns
+    /// the log there); attached by [`EdgeIndex::attach_wal`] *after* any
+    /// startup replay so replayed ops are not re-logged.
+    pub(crate) wal: Option<Arc<WriteAheadLog>>,
+    /// `(parent, new_cluster)` of the most recent committed split, parked
+    /// here by `split_cluster` so the caller that triggered it (this
+    /// index's own insert path, or the sharded wrapper holding the write
+    /// lease) can emit the derived `WalOp::Split` audit record with the
+    /// ids it knows (local here, global in the wrapper).
+    pub(crate) last_split: Option<(u32, u32)>,
 }
 
 /// One probed cluster's candidate hits, tagged with the cluster's
@@ -209,6 +220,8 @@ impl EdgeIndex {
             update_gen: AtomicU64::new(0),
             region_base: 0,
             probe_snapshot: RwLock::new(None),
+            wal: None,
+            last_split: None,
         })
     }
 
@@ -306,9 +319,71 @@ impl EdgeIndex {
         self.nprobe = nprobe;
     }
 
+    /// Attach a structural write-ahead log. Every structural mutation
+    /// from here on appends its record *before* the irreversible step.
+    /// Call this after [`EdgeIndex::replay_wal`], never before — replayed
+    /// ops must not be re-logged.
+    pub fn attach_wal(&mut self, wal: Arc<WriteAheadLog>) {
+        self.wal = Some(wal);
+    }
+
+    /// The attached WAL, if any (fault-injection suites arm its crash
+    /// points through this).
+    pub fn wal(&self) -> Option<&Arc<WriteAheadLog>> {
+        self.wal.as_ref()
+    }
+
+    /// Append `op` to the attached WAL; a no-op without one. Callers
+    /// invoke this *before* the mutation the record describes and abort
+    /// on error, so the log never lags the index.
+    pub(crate) fn wal_append(&self, op: &WalOp) -> Result<()> {
+        match &self.wal {
+            Some(w) => w.append(op),
+            None => Ok(()),
+        }
+    }
+
+    /// `(parent, new_cluster)` of the most recent committed split, taken
+    /// at most once. The sharded wrapper reads this inside the same write
+    /// lease as the insert that triggered the split, translates both ids
+    /// to global, and emits the `WalOp::Split` audit record.
+    pub(crate) fn take_last_split(&mut self) -> Option<(u32, u32)> {
+        self.last_split.take()
+    }
+
+    /// Rebuild structural state from a recovered WAL op sequence by
+    /// driving the ordinary public update path. Only replayable ops are
+    /// applied: `Split`/`Merge` are derived audit records (the replayed
+    /// inserts/removes re-derive them deterministically) and `Migrate`
+    /// has no meaning on a single index. Call on a freshly built index
+    /// with no WAL attached; attach the log afterwards.
+    pub fn replay_wal(&mut self, ops: &[WalOp]) -> Result<()> {
+        for op in ops {
+            match op {
+                WalOp::Insert { id, text, emb } => {
+                    self.insert_chunk(*id, text, emb)?;
+                }
+                WalOp::Remove { id } => {
+                    self.remove_chunk(*id)?;
+                }
+                WalOp::PinThreshold { ms } => self.pin_threshold(*ms),
+                WalOp::Migrate { .. } | WalOp::Split { .. } | WalOp::Merge { .. } => {}
+            }
+        }
+        Ok(())
+    }
+
     /// Pin the caching threshold to a fixed value and disable adaptation
     /// (the Fig. 7 sweep).
     pub fn pin_threshold(&mut self, threshold_ms: f64) {
+        // Record-before-mutation: if the WAL refuses the record, leave
+        // the threshold untouched rather than mutate unlogged state.
+        if self
+            .wal_append(&WalOp::PinThreshold { ms: threshold_ms })
+            .is_err()
+        {
+            return;
+        }
         self.adaptive = false;
         self.controller.write().unwrap().pin(threshold_ms);
         if let Some(cache) = &self.cache {
@@ -704,6 +779,13 @@ impl VectorIndex for EdgeIndex {
 
     fn remove_chunk(&mut self, id: u32) -> Result<bool> {
         EdgeIndex::remove_chunk(self, id)
+    }
+
+    fn wal_checkpoint(&self) -> Result<()> {
+        match &self.wal {
+            Some(w) => w.checkpoint(),
+            None => Ok(()),
+        }
     }
 
     fn probe_table(&self) -> Option<Arc<ProbeTable>> {

@@ -292,6 +292,13 @@ pub trait VectorIndex: Send + Sync {
         Ok(RebalanceReport::default())
     }
 
+    /// Flush the structural write-ahead log's snapshot (consolidating
+    /// the log into the snapshot and truncating the tail) — the server's
+    /// clean-shutdown hook. Inert for configurations without a WAL.
+    fn wal_checkpoint(&self) -> Result<()> {
+        Ok(())
+    }
+
     // ---- online updates (§5.4) ----
 
     /// True when [`VectorIndex::insert_chunk_concurrent`] /

@@ -60,6 +60,7 @@ use anyhow::Result;
 
 use crate::index::shard::{ShardedEdgeIndex, ORPHAN};
 use crate::index::updates::ClusterExport;
+use crate::storage::WalOp;
 
 /// One cluster's contribution to its shard's load.
 #[derive(Debug, Clone, Copy)]
@@ -317,6 +318,16 @@ impl ShardedEdgeIndex {
             }
             guard.export_cluster(local)?
         };
+
+        // Record-before-mutation: once the move is known live (owner
+        // resolved, source active, export taken), it hits the WAL before
+        // the destination imports anything. An append failure aborts
+        // with both shards untouched; a crash after the append replays
+        // the same (global → dest) move.
+        self.wal_append(&WalOp::Migrate {
+            global,
+            dest: dest as u32,
+        })?;
 
         self.adopt_exported(&export, global, src, local, dest)?;
         Ok(true)

@@ -98,7 +98,7 @@ use crate::index::{
 };
 use crate::pool::{Job, SubmitError, WorkerPool};
 use crate::simtime::{Component, LatencyLedger, SimDuration};
-use crate::storage::BlobStore;
+use crate::storage::{BlobStore, WalOp, WriteAheadLog};
 use crate::vecmath::{self, EmbeddingMatrix};
 
 /// Hard ceiling on the shard count: shard `i` namespaces its memory-model
@@ -289,6 +289,18 @@ pub struct ShardedEdgeIndex {
     /// across shard read leases, and nothing holding a shard lease ever
     /// acquires it.
     probe_heat: RwLock<Vec<AtomicU64>>,
+    /// Structural write-ahead log, owned at the *wrapper* level: the
+    /// per-shard [`EdgeIndex`]es keep `wal: None`, so their internal
+    /// appends no-op and every record here carries **global** ids.
+    /// Appends run under `updates_serial`, before the shard write lease
+    /// (level 2 of the lock hierarchy); the WAL takes no index locks.
+    wal: Option<Arc<WriteAheadLog>>,
+    /// True while [`ShardedEdgeIndex::replay_wal`] drives recovered ops
+    /// through the normal update path: suppresses the periodic-rebalance
+    /// trigger, whose decisions depend on cache state that is defined
+    /// cold after recovery — replay must be a pure function of the op
+    /// sequence.
+    replaying: AtomicBool,
 }
 
 impl ShardedEdgeIndex {
@@ -417,6 +429,8 @@ impl ShardedEdgeIndex {
             table_stale: AtomicBool::new(false),
             table_rebuild: Mutex::new(()),
             probe_heat: RwLock::new((0..n).map(|_| AtomicU64::new(0)).collect()),
+            wal: None,
+            replaying: AtomicBool::new(false),
         };
         {
             let _serial = index.table_rebuild.lock().unwrap();
@@ -529,9 +543,80 @@ impl ShardedEdgeIndex {
         self.nprobe = nprobe;
     }
 
+    /// Attach a structural write-ahead log at the wrapper level (the
+    /// per-shard indexes stay WAL-less, so records carry global ids).
+    /// Call after [`ShardedEdgeIndex::replay_wal`], never before —
+    /// replayed ops must not be re-logged.
+    pub fn attach_wal(&mut self, wal: Arc<WriteAheadLog>) {
+        self.wal = Some(wal);
+    }
+
+    /// The attached WAL, if any (fault-injection suites arm its crash
+    /// points through this).
+    pub fn wal(&self) -> Option<&Arc<WriteAheadLog>> {
+        self.wal.as_ref()
+    }
+
+    /// Append `op` before the mutation it describes; a no-op without an
+    /// attached WAL. Caller holds `updates_serial` and no shard lease.
+    pub(crate) fn wal_append(&self, op: &WalOp) -> Result<()> {
+        match &self.wal {
+            Some(w) => w.append(op),
+            None => Ok(()),
+        }
+    }
+
+    /// Rebuild structural state from a recovered WAL op sequence by
+    /// driving the ordinary update path: inserts route, split, and
+    /// allocate global ids exactly as they did live; removes re-derive
+    /// their merges; migrations re-execute (skipped when the recorded
+    /// destination exceeds this deployment's shard count — a log is
+    /// portable down-shard, and placement re-converges via rebalance).
+    /// `Split`/`Merge` are derived audit records and are skipped. The
+    /// periodic-rebalance trigger is suppressed throughout: replay must
+    /// be a pure function of the op sequence, while the trigger's
+    /// decisions depend on cache state that is defined cold after
+    /// recovery. Call on a freshly built index with no WAL attached;
+    /// attach the log afterwards.
+    pub fn replay_wal(&self, ops: &[WalOp]) -> Result<()> {
+        self.replaying.store(true, Ordering::Release);
+        let result = (|| -> Result<()> {
+            for op in ops {
+                match op {
+                    WalOp::Insert { id, text, emb } => {
+                        self.insert_chunk(*id, text, emb)?;
+                    }
+                    WalOp::Remove { id } => {
+                        self.remove_chunk(*id)?;
+                    }
+                    WalOp::Migrate { global, dest } => {
+                        if (*dest as usize) < self.shards.len() {
+                            self.migrate_cluster(*global, *dest as usize)?;
+                        }
+                    }
+                    WalOp::PinThreshold { ms } => self.pin_threshold(*ms),
+                    WalOp::Split { .. } | WalOp::Merge { .. } => {}
+                }
+            }
+            Ok(())
+        })();
+        self.replaying.store(false, Ordering::Release);
+        result
+    }
+
     /// Pin every shard's caching threshold and disable adaptation (the
-    /// Fig. 7 sweep, applied uniformly).
+    /// Fig. 7 sweep, applied uniformly). Serialized with the structural
+    /// ops so its WAL record lands in a deterministic position.
     pub fn pin_threshold(&self, threshold_ms: f64) {
+        let _serial = self.updates_serial.lock().unwrap();
+        // Record-before-mutation: an append failure skips the pin rather
+        // than mutate unlogged state.
+        if self
+            .wal_append(&WalOp::PinThreshold { ms: threshold_ms })
+            .is_err()
+        {
+            return;
+        }
         for shard in self.shards.iter() {
             shard.write().unwrap().pin_threshold(threshold_ms);
         }
@@ -767,15 +852,27 @@ impl ShardedEdgeIndex {
         let (global, split) = {
             let _serial = self.updates_serial.lock().unwrap();
             let target = self.route(emb)?;
+            // Record-before-mutation: the routed insert hits the WAL
+            // before the shard write lease. An append failure aborts
+            // with every shard untouched; a crash after the append
+            // replays the insert (which re-routes identically — routing
+            // is a pure function of the structural state the log
+            // rebuilds).
+            self.wal_append(&WalOp::Insert {
+                id,
+                text: text.to_string(),
+                emb: emb.to_vec(),
+            })?;
             // Routing released its leases before this write acquire; the
             // shard re-probes internally under the write lease, and the
             // updates mutex keeps merges/splits/migrations from racing
             // the routing decision.
-            let (local, n_before, n_after) = {
+            let (local, n_before, n_after, parked_split) = {
                 let mut guard = self.shards[target].write().unwrap();
                 let n_before = guard.clusters().n_clusters();
                 let local = guard.insert_chunk(id, text, emb)?;
-                (local, n_before, guard.clusters().n_clusters())
+                let parked = guard.take_last_split();
+                (local, n_before, guard.clusters().n_clusters(), parked)
             };
             self.counters[target].inserts.fetch_add(1, Ordering::Relaxed);
             // Only a split touches the first level: it appends a fresh
@@ -787,6 +884,25 @@ impl ShardedEdgeIndex {
             let split = n_after > n_before;
             if split {
                 self.register_new_locals(target, n_after);
+                // Derived audit record with *global* ids: the split ran
+                // inside the shard (whose index has no WAL); translate
+                // the parked (parent, new) locals now that registration
+                // allocated the new cluster's global id. Best-effort —
+                // replay re-derives splits from the parent inserts.
+                if self.wal.is_some() {
+                    if let Some((pl, nl)) = parked_split {
+                        let (pg, ng) = {
+                            let own = self.ownership.read().unwrap();
+                            (own.global_of(target, pl), own.global_of(target, nl))
+                        };
+                        if let (Some(pg), Some(ng)) = (pg, ng) {
+                            let _ = self.wal_append(&WalOp::Split {
+                                cluster: pg,
+                                new_cluster: ng,
+                            });
+                        }
+                    }
+                }
             }
             let global = self
                 .ownership
@@ -840,6 +956,8 @@ impl ShardedEdgeIndex {
                 })
             };
             let Some(s) = owner else { return Ok(false) };
+            // Record-before-mutation, once the chunk is known to exist.
+            self.wal_append(&WalOp::Remove { id })?;
             let (removed, drained) = {
                 let mut guard = self.shards[s].write().unwrap();
                 guard.remove_chunk_deferred(id)?
@@ -950,6 +1068,15 @@ impl ShardedEdgeIndex {
             .unwrap()
             .owner_of(victim)
             .ok_or_else(|| anyhow::anyhow!("merge victim {victim} has no owner"))?;
+        // Derived audit record (global ids): replay re-derives the merge
+        // — victim selection included — from the parent removes, so this
+        // is best-effort bookkeeping. The cross-shard path deliberately
+        // logs no `Migrate` either: its internal migration is part of
+        // the same derived merge.
+        let _ = self.wal_append(&WalOp::Merge {
+            source: global,
+            victim,
+        });
         if vs == shard {
             // Victim on the same shard: the inline path under one write
             // lease (no search observes an intermediate state; blob
@@ -1039,6 +1166,13 @@ impl ShardedEdgeIndex {
     /// update that triggered the round already succeeded; an explicit
     /// `rebalance` op surfaces them.
     fn note_update_op(&self) {
+        // Recovery replay never triggers rebalance rounds: the trigger's
+        // migration choices depend on cache/heat state that is defined
+        // cold after recovery, while replay must re-derive exactly the
+        // structure the log records.
+        if self.replaying.load(Ordering::Relaxed) {
+            return;
+        }
         if self.rebalance_every == 0 {
             return;
         }
@@ -1319,6 +1453,13 @@ impl VectorIndex for ShardedEdgeIndex {
 
     fn remove_chunk_concurrent(&self, id: u32) -> Result<bool> {
         ShardedEdgeIndex::remove_chunk(self, id)
+    }
+
+    fn wal_checkpoint(&self) -> Result<()> {
+        match &self.wal {
+            Some(w) => w.checkpoint(),
+            None => Ok(()),
+        }
     }
 
     fn probe_table(&self) -> Option<Arc<ProbeTable>> {

@@ -43,6 +43,7 @@ use anyhow::{bail, Result};
 
 use crate::index::edge::EdgeIndex;
 use crate::simtime::SimDuration;
+use crate::storage::WalOp;
 use crate::vecmath;
 use crate::vecmath::EmbeddingMatrix;
 
@@ -83,6 +84,14 @@ impl EdgeIndex {
         if self.chunk_cluster.contains_key(&id) {
             bail!("chunk id {id} already present");
         }
+        // Record-before-mutation: once validation passes, the op hits the
+        // WAL before anything irreversible. An append failure aborts here
+        // with the index untouched; a crash after the append replays it.
+        self.wal_append(&WalOp::Insert {
+            id,
+            text: text.to_string(),
+            emb: emb.to_vec(),
+        })?;
         // Invalidate in-flight cache intents: admissions gathered before
         // this update may carry stale embeddings. The probe snapshot is
         // dropped too (no reader can rebuild it mid-update: we hold
@@ -144,6 +153,9 @@ impl EdgeIndex {
         let Some(&cluster) = self.chunk_cluster.get(&id) else {
             return Ok((false, None));
         };
+        // Record-before-mutation (ahead of the blob transition too: the
+        // blob store is idempotent under replay, membership is not).
+        self.wal_append(&WalOp::Remove { id })?;
         // Plan (read-only): the post-removal accounting.
         let (chars_removed, new_len) = {
             let meta = &self.clusters.clusters[cluster as usize];
@@ -330,6 +342,16 @@ impl EdgeIndex {
         }
         self.refresh_cluster(c)?;
         self.refresh_cluster(new_id)?;
+        // Split is a *derived* record: replay re-derives it from the
+        // parent inserts, so it is audit bookkeeping — best-effort, and
+        // never un-does a committed split. The ids are parked in
+        // `last_split` so a sharded wrapper (whose per-shard indexes have
+        // no WAL) can emit the record with global ids instead.
+        self.last_split = Some((c, new_id));
+        let _ = self.wal_append(&WalOp::Split {
+            cluster: c,
+            new_cluster: new_id,
+        });
         Ok(())
     }
 
@@ -502,6 +524,13 @@ impl EdgeIndex {
             }
         };
         let plan = self.plan_merge(target, &extra)?;
+        // Merge is a derived audit record (replay re-derives it from the
+        // parent removes): best-effort, and an aborted blob step below
+        // merely leaves a spurious audit line replay ignores.
+        let _ = self.wal_append(&WalOp::Merge {
+            source: c,
+            victim: target,
+        });
         self.apply_merge_blob(&plan, Some(c))?;
         self.apply_merge_members(c, &plan);
         Ok(())

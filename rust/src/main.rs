@@ -150,6 +150,8 @@ COMMANDS
           [--batch-window-us U] [--max-inflight N]
           [--rebalance true|false] [--rebalance-interval N]
           [--max-migrations N] [--compute-threads N]
+          [--wal true|false] [--wal-dir PATH]
+          [--snapshot-interval-ops N]
           [--transformer] [--real-prefill] [--live-generation]
           (--compute-threads 0 = auto, one PJRT executor per core;
            ignored by the inline reference backend)
@@ -158,7 +160,11 @@ COMMANDS
            --batching true — the serve default — coalesces concurrent
            queries' embed/probe kernel calls into fused batches;
            --rebalance true — the serve default — migrates hot clusters
-           between shards online when placement drifts under updates)
+           between shards online when placement drifts under updates;
+           --wal true — the serve default — logs structural updates to a
+           write-ahead log and replays it on restart; --wal-dir overrides
+           the per-dataset default location; --snapshot-interval-ops 0
+           compacts the log only on clean shutdown)
   query   --text \"...\" [--port P]
   stats   [--port P]
   bench   <table2|fig3|fig4|fig5|fig7|fig10|fig12|fig13|breakdown|
@@ -224,6 +230,22 @@ fn serve(args: &Args) -> Result<()> {
         builder.retrieval.max_migrations_per_round =
             n.parse().context("bad --max-migrations")?;
     }
+    // Serving defaults to durability: structural updates go through the
+    // write-ahead log and are replayed on restart. The library/config
+    // default stays off (benchmarks and tests build throwaway indexes).
+    // Same strict true/false parse as --batching.
+    builder.retrieval.wal = match args.get("wal") {
+        Some("true") | None => true,
+        Some("false") => false,
+        Some(other) => bail!("bad --wal `{other}` (expected true or false)"),
+    };
+    if let Some(dir) = args.get("wal-dir") {
+        builder.options.wal_dir = Some(std::path::PathBuf::from(dir));
+    }
+    if let Some(n) = args.get("snapshot-interval-ops") {
+        builder.retrieval.snapshot_interval_ops =
+            n.parse().context("bad --snapshot-interval-ops")?;
+    }
     let shards = builder.retrieval.resolved_shards();
     eprintln!("building dataset `{}` ({} chunks)…", dataset.name, dataset.n_chunks);
     let built = builder.build_dataset(&dataset)?;
@@ -238,12 +260,13 @@ fn serve(args: &Args) -> Result<()> {
     )?;
     eprintln!(
         "serving `{}` with {} index on {addr} (device: {}, {workers} workers, {shards} shard(s), \
-         batching {}, rebalance {})",
+         batching {}, rebalance {}, wal {})",
         dataset.name,
         kind.name(),
         builder.device.name,
         if builder.retrieval.batching { "on" } else { "off" },
-        if builder.retrieval.rebalance { "on" } else { "off" }
+        if builder.retrieval.rebalance { "on" } else { "off" },
+        if builder.retrieval.wal { "on" } else { "off" }
     );
     server.run()
 }

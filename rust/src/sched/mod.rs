@@ -165,6 +165,10 @@ impl BatchScheduler {
         let embedder = engine.embedder().clone();
         let scorer = Scorer::new(embedder.compute().clone());
         let embed = EmbedBatcher::new(embedder, window);
+        // Carried PR 3 lever: the engine's insert path embeds through
+        // this same fused stage from now on — WAL'd inserts and served
+        // queries take one embedding code path.
+        engine.set_embed_stage(embed.clone());
         let probe = ProbeBatcher::new(scorer, window);
         Arc::new(BatchScheduler {
             engine,

@@ -164,6 +164,13 @@ impl Server {
         if let Some(sched) = &self.state.sched {
             sched.shutdown();
         }
+        // Clean-shutdown flush: consolidate the structural WAL into its
+        // snapshot and truncate the live log, so the next start replays
+        // one compact archive instead of a long tail. Best-effort — a
+        // flush failure just leaves the (recoverable) log as-is.
+        if let Err(e) = self.state.engine.index().wal_checkpoint() {
+            eprintln!("wal checkpoint on shutdown failed: {e:#}");
+        }
         Ok(())
     }
 }

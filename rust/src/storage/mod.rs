@@ -1,11 +1,13 @@
 //! Storage substrate: the modeled flash device, the real on-disk blob
-//! store for precomputed cluster embeddings, and the memory-budget /
-//! thrash model.
+//! store for precomputed cluster embeddings, the structural write-ahead
+//! log, and the memory-budget / thrash model.
 
 pub mod blob;
 pub mod device;
 pub mod memory;
+pub mod wal;
 
 pub use blob::BlobStore;
 pub use device::StorageDevice;
 pub use memory::{MemoryModel, Region, PAGE_BYTES};
+pub use wal::{WalOp, WriteAheadLog};

@@ -1,0 +1,475 @@
+//! Crash-recovery equivalence for the structural write-ahead log
+//! (`rust/src/storage/wal.rs` + the recovery path in
+//! `SystemBuilder::index`).
+//!
+//! The recovery invariant under test: **fresh build + replay of the
+//! surviving log ≡ fresh build + the same external op sequence.** A
+//! seeded churn (the `rebalance_churn` op mix) runs against a WAL'd
+//! index and is killed at a seeded random op with no checkpoint; the
+//! builder then recovers from the on-disk log alone, and every
+//! observable — search hits, probed sets, cache events, modeled
+//! latency, cluster-id allocation, cluster membership, the cross-shard
+//! invariant suite — must be bit-identical to a fresh single-shard
+//! oracle replaying the recorded op prefix. Cache and adaptive state
+//! are defined **cold** after recovery on both sides (searches during
+//! churn are uncommitted, so neither replica accumulates cache state).
+//!
+//! Three layers:
+//!
+//! 1. **Kill-at-random-op equivalence** at shards ∈ {1, 2, 4, 8}, with
+//!    a snapshot interval small enough that rotation fires repeatedly
+//!    mid-churn — recovery reads snapshot *and* tail.
+//! 2. **Replay determinism** — recovering the same log twice yields
+//!    bit-identical indexes, and a post-recovery insert allocates the
+//!    same cluster id as the oracle (the allocator state recovered
+//!    exactly).
+//! 3. **Clean-shutdown checkpoint** — `wal_checkpoint` truncates the
+//!    log into the snapshot; snapshot-only recovery is equivalent too.
+//!
+//! Plus shard-count portability: a log written at 4 shards recovers at
+//! 2 and at 1 (out-of-range migrations are skipped; placement never
+//! affects search results).
+
+use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
+use edgerag::coordinator::builder::{BuiltDataset, SystemBuilder};
+use edgerag::data::Rng;
+use edgerag::embedding::Embedder;
+use edgerag::index::{EdgeIndex, ShardedEdgeIndex, VectorIndex};
+use edgerag::storage::WalOp;
+use edgerag::testutil::{shared_compute, test_seed};
+
+fn builder(shards: usize, tag: &str) -> SystemBuilder {
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    // Per-test state root: blob stores and WAL dirs must not collide
+    // across parallel tests (and across the oracle/subject pair).
+    b.options.state_dir =
+        std::env::temp_dir().join(format!("edgerag-recov-{tag}-{}", std::process::id()));
+    b.retrieval.nprobe = 4;
+    b.retrieval.shards = shards;
+    b
+}
+
+/// Shard counts for the recovery sweep — the "oracle-exact at any N"
+/// acceptance. `EDGERAG_TEST_SHARDS` pins one (the CI matrix).
+fn shard_counts() -> Vec<usize> {
+    match std::env::var("EDGERAG_TEST_SHARDS") {
+        Ok(v) => vec![v.parse().expect("EDGERAG_TEST_SHARDS must be an integer")],
+        Err(_) => vec![1, 2, 4, 8],
+    }
+}
+
+/// Pick a removal victim (same policy as `rebalance_churn`): half the
+/// time a chunk from the smallest non-empty cluster of the lockstep
+/// oracle (draining clusters through the merge threshold), otherwise a
+/// uniformly random alive chunk.
+fn removal_victim(rng: &mut Rng, oracle: &EdgeIndex, alive: &[u32]) -> u32 {
+    if rng.below(2) == 0 {
+        oracle
+            .clusters()
+            .clusters
+            .iter()
+            .filter(|m| !m.is_empty())
+            .min_by_key(|m| (m.len(), m.id))
+            .map(|m| m.chunk_ids[0])
+            .expect("alive chunks imply a non-empty cluster")
+    } else {
+        alive[rng.below(alive.len())]
+    }
+}
+
+/// One search's full observable surface.
+type Observation = (Vec<(u32, f32)>, Vec<u32>, usize, usize, usize, edgerag::simtime::SimDuration);
+
+/// Run a fixed query battery and capture every observable the oracle
+/// comparison cares about: hits, probed set, cache events, modeled
+/// latency. Searches are uncommitted — the battery itself is
+/// side-effect-free and repeatable.
+fn battery(idx: &dyn VectorIndex, qembs: &[Vec<f32>]) -> Vec<Observation> {
+    qembs
+        .iter()
+        .map(|q| {
+            let s = idx.search(q, 5).unwrap();
+            (
+                s.hits,
+                s.probed,
+                s.events.generated,
+                s.events.loaded,
+                s.events.cache_hits,
+                s.ledger.total(),
+            )
+        })
+        .collect()
+}
+
+/// Replay a recorded external-op trace into a fresh oracle through the
+/// ordinary public update paths — the reference side of the recovery
+/// invariant.
+fn apply_trace(idx: &mut Box<dyn VectorIndex>, trace: &[WalOp]) {
+    for op in trace {
+        match op {
+            WalOp::Insert { id, text, emb } => {
+                idx.insert_chunk(*id, text, emb).unwrap();
+            }
+            WalOp::Remove { id } => {
+                assert!(idx.remove_chunk(*id).unwrap(), "traced removal of {id}");
+            }
+            WalOp::PinThreshold { ms } => idx.pin_threshold(*ms),
+            op => unreachable!("trace holds external replayable ops only, got {op:?}"),
+        }
+    }
+}
+
+fn active_clusters(idx: &dyn VectorIndex) -> usize {
+    match idx.as_any().downcast_ref::<ShardedEdgeIndex>() {
+        Some(s) => s.active_clusters(),
+        None => idx.as_any().downcast_ref::<EdgeIndex>().unwrap().active_clusters(),
+    }
+}
+
+fn cluster_of(idx: &dyn VectorIndex, id: u32) -> Option<u32> {
+    match idx.as_any().downcast_ref::<ShardedEdgeIndex>() {
+        Some(s) => s.cluster_of(id),
+        None => idx.as_any().downcast_ref::<EdgeIndex>().unwrap().cluster_of(id),
+    }
+}
+
+fn verify_if_sharded(idx: &dyn VectorIndex) {
+    if let Some(s) = idx.as_any().downcast_ref::<ShardedEdgeIndex>() {
+        s.verify_integrity().unwrap();
+    }
+}
+
+/// Assert full structural agreement between a recovered index and the
+/// oracle: membership of every tracked chunk, the surviving cluster
+/// count, the invariant suite, and the query battery.
+fn assert_oracle_equal(
+    recovered: &dyn VectorIndex,
+    oracle: &dyn VectorIndex,
+    ids: &[u32],
+    qembs: &[Vec<f32>],
+    what: &str,
+) {
+    verify_if_sharded(recovered);
+    assert_eq!(
+        active_clusters(recovered),
+        active_clusters(oracle),
+        "{what}: active-cluster sets diverged"
+    );
+    for &id in ids {
+        assert_eq!(
+            cluster_of(recovered, id),
+            cluster_of(oracle, id),
+            "{what}: chunk {id} routed differently after recovery"
+        );
+    }
+    assert_eq!(
+        battery(recovered, qembs),
+        battery(oracle, qembs),
+        "{what}: search battery diverged"
+    );
+}
+
+/// The seeded churn driven before the crash. Applies ops to the WAL'd
+/// subject and a lockstep single-shard oracle (victim selection +
+/// pre-crash sanity), recording every external structural op into the
+/// trace the post-crash oracle replays.
+struct Churn<'a> {
+    rng: Rng,
+    alive: Vec<u32>,
+    next_id: u32,
+    trace: Vec<WalOp>,
+    embedder: &'a Embedder,
+    built: &'a BuiltDataset,
+}
+
+impl<'a> Churn<'a> {
+    fn new(seed: u64, embedder: &'a Embedder, built: &'a BuiltDataset) -> Churn<'a> {
+        Churn {
+            rng: Rng::new(seed),
+            alive: (0..built.corpus.len() as u32).collect(),
+            next_id: built.corpus.len() as u32 + 1_000,
+            trace: Vec::new(),
+            embedder,
+            built,
+        }
+    }
+
+    /// One churn step (the `rebalance_churn` op mix): search 35%,
+    /// insert 20%, remove 30%, rebalance 15%.
+    fn step(
+        &mut self,
+        subject: &mut Box<dyn VectorIndex>,
+        oracle: &mut Box<dyn VectorIndex>,
+        step: usize,
+    ) {
+        match self.rng.below(100) {
+            0..=34 => {
+                let queries = &self.built.workload.queries;
+                let q = &queries[self.rng.below(queries.len())];
+                let emb = self.embedder.embed_one(&q.text).unwrap();
+                let sa = oracle.search(&emb, 5).unwrap();
+                let sb = subject.search(&emb, 5).unwrap();
+                assert_eq!(sa.hits, sb.hits, "pre-crash step {step} hits");
+                assert_eq!(sa.probed, sb.probed, "pre-crash step {step} probes");
+            }
+            35..=54 => {
+                let id = self.next_id;
+                let text = format!("churn document {id} marker zzchurn{id}");
+                let emb = self.embedder.embed_one(&text).unwrap();
+                let ca = oracle.insert_chunk(id, &text, &emb).unwrap();
+                let cb = if subject.supports_concurrent_updates() {
+                    subject.insert_chunk_concurrent(id, &text, &emb).unwrap()
+                } else {
+                    subject.insert_chunk(id, &text, &emb).unwrap()
+                };
+                assert_eq!(ca, cb, "pre-crash step {step}: cluster-id allocation diverged");
+                self.trace.push(WalOp::Insert { id, text, emb });
+                self.alive.push(id);
+                self.next_id += 1;
+            }
+            55..=84 => {
+                if self.alive.is_empty() {
+                    return;
+                }
+                let id = removal_victim(
+                    &mut self.rng,
+                    oracle.as_any().downcast_ref::<EdgeIndex>().unwrap(),
+                    &self.alive,
+                );
+                let ra = oracle.remove_chunk(id).unwrap();
+                let rb = if subject.supports_concurrent_updates() {
+                    subject.remove_chunk_concurrent(id).unwrap()
+                } else {
+                    subject.remove_chunk(id).unwrap()
+                };
+                assert_eq!(ra, rb, "pre-crash step {step} removed flags");
+                assert!(ra, "pre-crash step {step}: alive chunk not removed");
+                self.trace.push(WalOp::Remove { id });
+                let i = self.alive.iter().position(|&a| a == id).unwrap();
+                self.alive.swap_remove(i);
+            }
+            _ => {
+                // Rebalance: migrations are logged as Migrate records
+                // and replayed positionally; the single-shard oracle has
+                // nothing to move, so the trace records nothing.
+                if let Some(sharded) = subject.as_any().downcast_ref::<ShardedEdgeIndex>() {
+                    sharded.rebalance().unwrap();
+                    sharded.verify_integrity().unwrap();
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn kill_at_random_op_recovers_to_oracle_exact_index() {
+    let seed = test_seed(0x4EC0);
+    for shards in shard_counts() {
+        let tag = format!("kill-{shards}");
+
+        // Lockstep oracle (no WAL): removal-victim selection and
+        // pre-crash sanity checks.
+        let b_live = builder(1, &format!("{tag}-live"));
+        let built_live = b_live.build_dataset(&DatasetProfile::tiny()).unwrap();
+        let (mut live_oracle, _ml) = b_live.index(&built_live, IndexKind::EdgeRag).unwrap();
+
+        // Subject: WAL on, snapshot interval small enough that churn
+        // rotates the log several times — recovery must merge snapshot
+        // and tail, not just read a flat log.
+        let mut b = builder(shards, &tag);
+        b.retrieval.wal = true;
+        b.retrieval.snapshot_interval_ops = 16;
+        let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+        let wal_dir = b
+            .options
+            .state_dir
+            .join(&built.profile.name)
+            .join(format!("{}-wal", IndexKind::EdgeRag.name()));
+        let _ = std::fs::remove_dir_all(&wal_dir);
+        let (mut subject, _ms) = b.index(&built, IndexKind::EdgeRag).unwrap();
+
+        let embedder = b.embedder();
+        let mut churn = Churn::new(seed ^ shards as u64, &embedder, &built);
+
+        // Pin the threshold through the WAL'd path: the pin must itself
+        // be recovered (a lost pin would re-enable adaptation and
+        // diverge modeled latency).
+        subject.pin_threshold(0.0);
+        live_oracle.pin_threshold(0.0);
+        churn.trace.push(WalOp::PinThreshold { ms: 0.0 });
+
+        // Churn, then crash at a seeded random op: drop the index with
+        // no checkpoint. The on-disk snapshot + log is all that survives.
+        let kill_at = 120 + churn.rng.below(120);
+        for step in 0..kill_at {
+            churn.step(&mut subject, &mut live_oracle, step);
+        }
+        drop(subject);
+        drop(live_oracle);
+
+        // The post-crash reference: a fresh single-shard build replaying
+        // the recorded external-op prefix.
+        let b_fresh = builder(1, &format!("{tag}-fresh"));
+        let built_fresh = b_fresh.build_dataset(&DatasetProfile::tiny()).unwrap();
+        let (mut oracle, _mf) = b_fresh.index(&built_fresh, IndexKind::EdgeRag).unwrap();
+        apply_trace(&mut oracle, &churn.trace);
+
+        let qembs: Vec<Vec<f32>> = built
+            .workload
+            .queries
+            .iter()
+            .take(24)
+            .map(|q| embedder.embed_one(&q.text).unwrap())
+            .collect();
+
+        // Recover through the builder path (fresh build + replay of the
+        // surviving log + attach) and demand full structural agreement.
+        let (recovered, _mr) = b.index(&built, IndexKind::EdgeRag).unwrap();
+        assert_oracle_equal(
+            recovered.as_ref(),
+            oracle.as_ref(),
+            &churn.alive,
+            &qembs,
+            &format!("shards={shards} first recovery"),
+        );
+        let first_battery = battery(recovered.as_ref(), &qembs);
+        drop(recovered);
+
+        // Replay determinism: the same log recovers to a bit-identical
+        // index every time.
+        let (recovered, _mr) = b.index(&built, IndexKind::EdgeRag).unwrap();
+        assert_eq!(
+            battery(recovered.as_ref(), &qembs),
+            first_battery,
+            "shards={shards}: two recoveries of one log diverged"
+        );
+
+        // The allocator state recovered exactly: the next insert lands
+        // in the same (globally numbered) cluster on both sides — and is
+        // itself logged, so the next recovery must carry it too.
+        let mut recovered = recovered;
+        let id = churn.next_id;
+        let text = format!("churn document {id} marker zzchurn{id}");
+        let emb = embedder.embed_one(&text).unwrap();
+        let ca = oracle.insert_chunk(id, &text, &emb).unwrap();
+        let cb = if recovered.supports_concurrent_updates() {
+            recovered.insert_chunk_concurrent(id, &text, &emb).unwrap()
+        } else {
+            recovered.insert_chunk(id, &text, &emb).unwrap()
+        };
+        assert_eq!(
+            ca, cb,
+            "shards={shards}: post-recovery insert allocated a different cluster id"
+        );
+        let mut ids = churn.alive.clone();
+        ids.push(id);
+
+        // Clean shutdown: checkpoint consolidates the log into the
+        // snapshot; recovery must then reconstruct from the snapshot
+        // alone — including the post-recovery insert.
+        recovered.wal_checkpoint().unwrap();
+        assert_eq!(
+            std::fs::metadata(wal_dir.join("wal.log")).unwrap().len(),
+            0,
+            "checkpoint must truncate the log"
+        );
+        assert!(
+            wal_dir.join("wal.snapshot").exists(),
+            "checkpoint must publish a snapshot"
+        );
+        drop(recovered);
+
+        let (recovered, _mr) = b.index(&built, IndexKind::EdgeRag).unwrap();
+        assert!(
+            cluster_of(recovered.as_ref(), id).is_some(),
+            "shards={shards}: snapshot-only recovery lost the post-recovery insert"
+        );
+        assert_oracle_equal(
+            recovered.as_ref(),
+            oracle.as_ref(),
+            &ids,
+            &qembs,
+            &format!("shards={shards} snapshot-only recovery"),
+        );
+    }
+}
+
+#[test]
+fn log_written_at_four_shards_recovers_at_two_and_one() {
+    // Shard-count portability: placement is the only thing Migrate
+    // records carry, and placement never affects results — so a log
+    // taken at 4 shards must recover on a 2-shard (migrations to shards
+    // ≥ 2 skipped) and a single-shard (all migrations skipped) build,
+    // oracle-exactly.
+    let seed = test_seed(0xD05D);
+    let tag = "portable";
+
+    let b_live = builder(1, &format!("{tag}-live"));
+    let built_live = b_live.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let (mut live_oracle, _ml) = b_live.index(&built_live, IndexKind::EdgeRag).unwrap();
+
+    let mut b4 = builder(4, tag);
+    b4.retrieval.wal = true;
+    b4.retrieval.snapshot_interval_ops = 16;
+    let built = b4.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let wal_dir = b4
+        .options
+        .state_dir
+        .join(&built.profile.name)
+        .join(format!("{}-wal", IndexKind::EdgeRag.name()));
+    let _ = std::fs::remove_dir_all(&wal_dir);
+    let (mut subject, _ms) = b4.index(&built, IndexKind::EdgeRag).unwrap();
+
+    let embedder = b4.embedder();
+    let mut churn = Churn::new(seed, &embedder, &built);
+    for step in 0..80 {
+        churn.step(&mut subject, &mut live_oracle, step);
+    }
+
+    // Guarantee Migrate records whose destination does not exist on the
+    // down-shard recoveries: push four clusters explicitly to the two
+    // highest shards, then crash.
+    {
+        let sharded = subject.as_any().downcast_ref::<ShardedEdgeIndex>().unwrap();
+        let globals: Vec<u32> = sharded
+            .cluster_loads()
+            .iter()
+            .flatten()
+            .map(|c| c.global)
+            .take(4)
+            .collect();
+        for (i, &g) in globals.iter().enumerate() {
+            sharded.migrate_cluster(g, 2 + i % 2).unwrap();
+        }
+        sharded.verify_integrity().unwrap();
+    }
+    drop(subject);
+    drop(live_oracle);
+
+    let b_fresh = builder(1, &format!("{tag}-fresh"));
+    let built_fresh = b_fresh.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let (mut oracle, _mf) = b_fresh.index(&built_fresh, IndexKind::EdgeRag).unwrap();
+    apply_trace(&mut oracle, &churn.trace);
+
+    let qembs: Vec<Vec<f32>> = built
+        .workload
+        .queries
+        .iter()
+        .take(16)
+        .map(|q| embedder.embed_one(&q.text).unwrap())
+        .collect();
+
+    for shards in [4usize, 2, 1] {
+        let mut bn = b4.clone();
+        bn.retrieval.shards = shards;
+        let (recovered, _mr) = bn.index(&built, IndexKind::EdgeRag).unwrap();
+        assert_oracle_equal(
+            recovered.as_ref(),
+            oracle.as_ref(),
+            &churn.alive,
+            &qembs,
+            &format!("portable recovery at shards={shards}"),
+        );
+    }
+}

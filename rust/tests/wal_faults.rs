@@ -1,0 +1,436 @@
+//! Crash-point fault matrix for the structural write-ahead log
+//! (`rust/src/storage/wal.rs`), in the style of `merge_faults.rs`: arm
+//! one injected fault, drive the op that trips it, then prove the index
+//! **recovers to a `verify_integrity`-green, oracle-equal state** from
+//! whatever survived on disk.
+//!
+//! Crash points exercised, one per test:
+//!
+//! 1. **Torn tail record** — the log ends mid-frame (power loss during
+//!    an append): recovery truncates back to the last good record and
+//!    the index equals the oracle of the surviving prefix; appends
+//!    continue at the next sequence number.
+//! 2. **Corrupt byte mid-log** — a flipped byte fails the frame
+//!    checksum; everything from that record on is dropped.
+//! 3. **Append fault before the write** — the op aborts with neither a
+//!    record nor a mutation; log and index agree that nothing happened,
+//!    and the retry goes through.
+//! 4. **Crash between append and mutation (insert)** — the record is
+//!    durable, the mutation never ran: the append is the commit point,
+//!    so recovery *applies* the op.
+//! 5. **Crash between append and mutation (removal)** — same, for the
+//!    removal record class.
+//! 6. **Crash between append and mutation (migration)** — same, for the
+//!    rebalancer's placement records: the recovered index completes the
+//!    recorded move.
+//! 7. **Crash mid-snapshot** — the staged temp snapshot is discarded;
+//!    the old snapshot + full log still hold every record.
+//! 8. **Crash between snapshot publication and log truncation** — every
+//!    record briefly exists in two places; recovery skips the covered
+//!    log records (no double-apply) and completes the truncation.
+
+use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
+use edgerag::coordinator::builder::{BuiltDataset, SystemBuilder};
+use edgerag::index::{EdgeIndex, ShardedEdgeIndex, SharedMemory, VectorIndex};
+use edgerag::storage::{WalOp, WriteAheadLog};
+use edgerag::testutil::shared_compute;
+use std::sync::Arc;
+
+fn builder(tag: &str) -> SystemBuilder {
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    b.options.state_dir =
+        std::env::temp_dir().join(format!("edgerag-wfault-{tag}-{}", std::process::id()));
+    b.retrieval.nprobe = 4;
+    b.retrieval.shards = 2;
+    b.retrieval.wal = true;
+    b.retrieval.snapshot_interval_ops = 0; // rotation only via checkpoint
+    b.options.wal_dir = Some(b.options.state_dir.join("wal"));
+    b
+}
+
+struct Fx {
+    b: SystemBuilder,
+    built: BuiltDataset,
+    idx: Option<Box<dyn VectorIndex>>,
+    // Keep every generation's shared-memory handle alive for the
+    // index's lifetime (same idiom as merge_faults' `_mem`).
+    _mems: Vec<SharedMemory>,
+    n_chunks: u32,
+}
+
+impl Fx {
+    fn sharded(&self) -> &ShardedEdgeIndex {
+        self.idx
+            .as_ref()
+            .unwrap()
+            .as_any()
+            .downcast_ref::<ShardedEdgeIndex>()
+            .unwrap()
+    }
+
+    fn wal(&self) -> Arc<WriteAheadLog> {
+        self.sharded().wal().unwrap().clone()
+    }
+
+    /// Simulated crash + restart: drop the index (no checkpoint — the
+    /// on-disk snapshot + log is all that survives), then rebuild
+    /// through the builder's recovery path.
+    fn crash_and_recover(&mut self) {
+        self.idx = None;
+        let (idx, mem) = self.b.index(&self.built, IndexKind::EdgeRag).unwrap();
+        self.idx = Some(idx);
+        self._mems.push(mem);
+    }
+
+    /// The deterministic (id → payload) scheme fault tests insert with.
+    fn doc(&self, id: u32) -> (String, Vec<f32>) {
+        let text = format!("wal fault doc {id} marker zzwalf{id}");
+        let emb = self.b.embedder().embed_one(&text).unwrap();
+        (text, emb)
+    }
+
+    fn insert(&self, id: u32) -> anyhow::Result<u32> {
+        let (text, emb) = self.doc(id);
+        self.sharded().insert_chunk(id, &text, &emb)
+    }
+
+    /// A chunk's own text must retrieve it as the top hit.
+    fn assert_serving(&self, text: &str, id: u32) {
+        let emb = self.b.embedder().embed_one(text).unwrap();
+        let out = self.sharded().search(&emb, 3).unwrap();
+        assert_eq!(out.hits[0].0, id, "chunk {id} not served: {:?}", out.hits);
+    }
+}
+
+fn fixture(tag: &str) -> Fx {
+    let b = builder(tag);
+    let _ = std::fs::remove_dir_all(b.options.wal_dir.as_ref().unwrap());
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let (idx, mem) = b.index(&built, IndexKind::EdgeRag).unwrap();
+    let n_chunks = built.corpus.len() as u32;
+    Fx {
+        b,
+        built,
+        idx: Some(idx),
+        _mems: vec![mem],
+        n_chunks,
+    }
+}
+
+/// Assert the recovered index equals a fresh single-shard oracle that
+/// applied `ops` through the ordinary public update paths: invariant
+/// suite, surviving cluster count, membership of every id in play, and
+/// a bit-compared search battery.
+fn assert_matches_oracle(fx: &Fx, tag: &str, ops: &[WalOp]) {
+    let mut b_o = builder(&format!("{tag}-oracle"));
+    b_o.retrieval.shards = 1;
+    b_o.retrieval.wal = false;
+    let built_o = b_o.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let (mut oracle, _m) = b_o.index(&built_o, IndexKind::EdgeRag).unwrap();
+    let mut ids: Vec<u32> = (0..fx.n_chunks).collect();
+    for op in ops {
+        match op {
+            WalOp::Insert { id, text, emb } => {
+                oracle.insert_chunk(*id, text, emb).unwrap();
+                ids.push(*id);
+            }
+            WalOp::Remove { id } => {
+                assert!(oracle.remove_chunk(*id).unwrap());
+            }
+            op => unreachable!("oracle ops are inserts/removes only, got {op:?}"),
+        }
+    }
+    let oracle_edge = oracle.as_any().downcast_ref::<EdgeIndex>().unwrap();
+
+    let sharded = fx.sharded();
+    sharded.verify_integrity().unwrap();
+    assert_eq!(
+        sharded.active_clusters(),
+        oracle_edge.active_clusters(),
+        "{tag}: active-cluster sets diverged"
+    );
+    for id in ids {
+        assert_eq!(
+            sharded.cluster_of(id),
+            oracle_edge.cluster_of(id),
+            "{tag}: chunk {id} routed differently"
+        );
+    }
+    let embedder = fx.b.embedder();
+    for q in fx.built.workload.queries.iter().take(8) {
+        let emb = embedder.embed_one(&q.text).unwrap();
+        let a = oracle.search(&emb, 5).unwrap();
+        let s = sharded.search(&emb, 5).unwrap();
+        assert_eq!(a.hits, s.hits, "{tag}: hits diverged");
+        assert_eq!(a.probed, s.probed, "{tag}: probed sets diverged");
+        assert_eq!(a.ledger.total(), s.ledger.total(), "{tag}: modeled latency diverged");
+    }
+}
+
+/// Find the byte offset of `needle` (a record payload) inside the log.
+fn find_payload(log: &[u8], needle: &[u8]) -> usize {
+    log.windows(needle.len())
+        .position(|w| w == needle)
+        .expect("record payload present in the log")
+}
+
+#[test]
+fn torn_tail_record_recovers_to_the_log_prefix() {
+    let mut fx = fixture("torn");
+    let base = fx.n_chunks;
+    for i in 0..3 {
+        fx.insert(base + i).unwrap();
+    }
+    fx.sharded().verify_integrity().unwrap();
+    let log_path = fx.wal().log_path();
+    fx.idx = None; // crash
+
+    // Tear the log mid-way through the third insert's frame: its header
+    // survives, its payload does not.
+    let bytes = std::fs::read(&log_path).unwrap();
+    let (text2, emb2) = fx.doc(base + 2);
+    let payload = WalOp::Insert { id: base + 2, text: text2, emb: emb2 }.encode();
+    let pos = find_payload(&bytes, &payload);
+    std::fs::OpenOptions::new()
+        .write(true)
+        .open(&log_path)
+        .unwrap()
+        .set_len((pos + payload.len() / 2) as u64)
+        .unwrap();
+
+    let (idx, mem) = fx.b.index(&fx.built, IndexKind::EdgeRag).unwrap();
+    fx.idx = Some(idx);
+    fx._mems.push(mem);
+
+    // The torn insert is gone; the two durable ones survived exactly.
+    assert_eq!(fx.sharded().cluster_of(base + 2), None, "torn record must not replay");
+    let mut surviving = Vec::new();
+    for i in 0..2 {
+        let (text, emb) = fx.doc(base + i);
+        assert!(fx.sharded().cluster_of(base + i).is_some(), "durable insert {i} lost");
+        fx.assert_serving(&text, base + i);
+        surviving.push(WalOp::Insert { id: base + i, text, emb });
+    }
+    assert_matches_oracle(&fx, "torn", &surviving);
+
+    // Appends continue past the truncated tail: re-issuing the lost op
+    // survives the next crash.
+    fx.insert(base + 2).unwrap();
+    fx.crash_and_recover();
+    let (text2, _) = fx.doc(base + 2);
+    fx.assert_serving(&text2, base + 2);
+    fx.sharded().verify_integrity().unwrap();
+}
+
+#[test]
+fn corrupt_byte_mid_log_drops_the_suffix() {
+    let mut fx = fixture("corrupt");
+    let base = fx.n_chunks;
+    for i in 0..3 {
+        fx.insert(base + i).unwrap();
+    }
+    let log_path = fx.wal().log_path();
+    fx.idx = None; // crash
+
+    // Flip one byte inside the *second* insert's payload: the frame
+    // checksum rejects it, and recovery must stop there — replaying a
+    // corrupted record would be worse than losing its suffix.
+    let mut bytes = std::fs::read(&log_path).unwrap();
+    let (text1, emb1) = fx.doc(base + 1);
+    let payload = WalOp::Insert { id: base + 1, text: text1, emb: emb1 }.encode();
+    let pos = find_payload(&bytes, &payload);
+    bytes[pos + payload.len() / 2] ^= 0xFF;
+    std::fs::write(&log_path, &bytes).unwrap();
+
+    let (idx, mem) = fx.b.index(&fx.built, IndexKind::EdgeRag).unwrap();
+    fx.idx = Some(idx);
+    fx._mems.push(mem);
+
+    let (text0, emb0) = fx.doc(base);
+    assert!(fx.sharded().cluster_of(base).is_some(), "record before the corruption lost");
+    assert_eq!(fx.sharded().cluster_of(base + 1), None, "corrupt record replayed");
+    assert_eq!(fx.sharded().cluster_of(base + 2), None, "record after the corruption replayed");
+    fx.assert_serving(&text0, base);
+    assert_matches_oracle(
+        &fx,
+        "corrupt",
+        &[WalOp::Insert { id: base, text: text0, emb: emb0 }],
+    );
+}
+
+#[test]
+fn append_fault_before_write_leaves_log_and_index_agreed() {
+    let mut fx = fixture("prefault");
+    let base = fx.n_chunks;
+
+    fx.wal().inject_append_failures(1);
+    let err = fx.insert(base);
+    assert!(err.is_err(), "injected append fault must surface");
+    assert_eq!(fx.sharded().cluster_of(base), None, "faulted insert must not mutate");
+    fx.sharded().verify_integrity().unwrap();
+
+    // Retry goes through; recovery sees exactly one copy.
+    fx.insert(base).unwrap();
+    fx.crash_and_recover();
+    let (text, emb) = fx.doc(base);
+    fx.assert_serving(&text, base);
+    assert_matches_oracle(&fx, "prefault", &[WalOp::Insert { id: base, text, emb }]);
+}
+
+#[test]
+fn crash_between_append_and_mutation_replays_the_insert() {
+    let mut fx = fixture("postins");
+    let base = fx.n_chunks;
+
+    // The record lands durably, then the "process dies" before the
+    // in-memory mutation: the append is the commit point, so the
+    // recovered index — unlike the pre-crash one — contains the chunk.
+    fx.wal().inject_post_append_failures(1);
+    let err = fx.insert(base);
+    assert!(err.is_err(), "injected post-append fault must surface");
+    assert_eq!(
+        fx.sharded().cluster_of(base),
+        None,
+        "the op must abort pre-mutation — the pre-crash index never sees it"
+    );
+    fx.sharded().verify_integrity().unwrap();
+
+    fx.crash_and_recover();
+    let (text, emb) = fx.doc(base);
+    assert!(
+        fx.sharded().cluster_of(base).is_some(),
+        "recovery must apply the durably logged insert"
+    );
+    fx.assert_serving(&text, base);
+    assert_matches_oracle(&fx, "postins", &[WalOp::Insert { id: base, text, emb }]);
+}
+
+#[test]
+fn crash_between_append_and_mutation_replays_the_removal() {
+    let mut fx = fixture("postrem");
+    let victim = 0u32;
+    let cluster = fx.sharded().cluster_of(victim).expect("corpus chunk 0 is routed");
+
+    fx.wal().inject_post_append_failures(1);
+    let err = fx.sharded().remove_chunk(victim);
+    assert!(err.is_err(), "injected post-append fault must surface");
+    assert_eq!(
+        fx.sharded().cluster_of(victim),
+        Some(cluster),
+        "the removal must abort pre-mutation"
+    );
+    fx.sharded().verify_integrity().unwrap();
+
+    fx.crash_and_recover();
+    assert_eq!(
+        fx.sharded().cluster_of(victim),
+        None,
+        "recovery must apply the durably logged removal"
+    );
+    assert_matches_oracle(&fx, "postrem", &[WalOp::Remove { id: victim }]);
+}
+
+#[test]
+fn crash_between_append_and_mutation_replays_the_migration() {
+    let mut fx = fixture("postmig");
+    let sharded = fx.sharded();
+    let g = sharded.cluster_loads()[0]
+        .first()
+        .expect("shard 0 owns a cluster")
+        .global;
+    let src = sharded.shard_of(g);
+    let dest = 1 - src;
+
+    fx.wal().inject_post_append_failures(1);
+    let err = sharded.migrate_cluster(g, dest);
+    assert!(err.is_err(), "injected post-append fault must surface");
+    assert_eq!(
+        sharded.shard_of(g),
+        src,
+        "the migration must abort with both shards untouched"
+    );
+    sharded.verify_integrity().unwrap();
+
+    fx.crash_and_recover();
+    assert_eq!(
+        fx.sharded().shard_of(g),
+        dest,
+        "recovery must complete the durably logged move"
+    );
+    fx.sharded().verify_integrity().unwrap();
+    // Placement changed; structure didn't — the oracle comparison pins
+    // that the replayed migration perturbed nothing observable.
+    assert_matches_oracle(&fx, "postmig", &[]);
+}
+
+#[test]
+fn crash_mid_snapshot_loses_nothing() {
+    let mut fx = fixture("midsnap");
+    let base = fx.n_chunks;
+    let mut ops = Vec::new();
+    for i in 0..4 {
+        fx.insert(base + i).unwrap();
+        let (text, emb) = fx.doc(base + i);
+        ops.push(WalOp::Insert { id: base + i, text, emb });
+    }
+
+    // Die after staging the temp snapshot, before the atomic rename.
+    let wal = fx.wal();
+    wal.inject_rotate_failures(1);
+    let err = fx.idx.as_ref().unwrap().wal_checkpoint();
+    assert!(err.is_err(), "injected rotate fault must surface");
+    assert!(wal.snapshot_tmp_path().exists(), "temp snapshot staged");
+    assert!(!wal.snapshot_path().exists(), "snapshot must not be published");
+    drop(wal);
+
+    // Recovery discards the temp and replays the intact log.
+    fx.crash_and_recover();
+    assert!(!fx.wal().snapshot_tmp_path().exists(), "stale temp must be deleted");
+    for i in 0..4 {
+        let (text, _) = fx.doc(base + i);
+        fx.assert_serving(&text, base + i);
+    }
+    assert_matches_oracle(&fx, "midsnap", &ops);
+}
+
+#[test]
+fn crash_between_snapshot_and_truncation_never_double_applies() {
+    let mut fx = fixture("trunc");
+    let base = fx.n_chunks;
+    let mut ops = Vec::new();
+    for i in 0..4 {
+        fx.insert(base + i).unwrap();
+        let (text, emb) = fx.doc(base + i);
+        ops.push(WalOp::Insert { id: base + i, text, emb });
+    }
+
+    // Die after the snapshot rename, before the log truncation: every
+    // record now exists in both files.
+    let wal = fx.wal();
+    wal.inject_truncate_failures(1);
+    let err = fx.idx.as_ref().unwrap().wal_checkpoint();
+    assert!(err.is_err(), "injected truncate fault must surface");
+    assert!(wal.snapshot_path().exists(), "snapshot was published");
+    assert!(
+        std::fs::metadata(wal.log_path()).unwrap().len() > 0,
+        "log not yet truncated"
+    );
+    let log_path = wal.log_path();
+    drop(wal);
+
+    // Recovery must skip the covered log records — a double-applied
+    // insert would bail on the duplicate id and recovery itself would
+    // fail — and complete the interrupted truncation.
+    fx.crash_and_recover();
+    assert_eq!(
+        std::fs::metadata(&log_path).unwrap().len(),
+        0,
+        "recovery completes the interrupted truncation"
+    );
+    for i in 0..4 {
+        let (text, _) = fx.doc(base + i);
+        fx.assert_serving(&text, base + i);
+    }
+    assert_matches_oracle(&fx, "trunc", &ops);
+}
