@@ -7,7 +7,7 @@
 //! latencies (§Perf in EXPERIMENTS.md).
 //!
 //! The A/B results are recorded to the machine-readable trajectory
-//! (`BENCH_6.json`, section `micro_hotpath`) — validate with
+//! (`BENCH_8.json`, section `micro_hotpath`) — validate with
 //! `edgerag bench-validate`. `--smoke` shrinks shapes/iterations for CI.
 
 mod common;

@@ -3,13 +3,15 @@
 //! shard-count sweep (`shards` ∈ {1, 4, 8}) at a fixed client count,
 //! then a cross-query batching sweep (scheduler off vs on) at ≥8
 //! clients, then an executor-pool sweep (`--compute-threads` ∈
-//! {1, 2, 4}), then a skewed-placement rebalance sweep (one shard
-//! seeded with every cluster; spread before/after bounded rounds).
+//! {1, 2, 4}), then a tracing sweep (the query-scoped tracing plane
+//! dark vs armed — overhead must stay within a few percent), then a
+//! skewed-placement rebalance sweep (one shard seeded with every
+//! cluster; spread before/after bounded rounds).
 //!
 //!     cargo bench --bench throughput_scaling [-- --limit N | --smoke]
 //!
 //! Each sweep records qps + per-request p50/p95/p99 wall latency into
-//! the machine-readable trajectory (`BENCH_6.json`, section
+//! the machine-readable trajectory (`BENCH_8.json`, section
 //! `throughput_scaling`) — validate with `edgerag bench-validate`.
 //!
 //! Before the read-parallel refactor every request serialized on a
@@ -333,6 +335,79 @@ fn main() {
         ]));
     }
 
+    // ---- tracing sweep: the query-scoped tracing plane, dark vs armed ----
+    // Runs LAST among the recorded sweeps: the first `Tracer::new` arms
+    // the process-global enable flag permanently, so the off row (and
+    // every sweep above) measures the true dark path — one relaxed
+    // atomic load per record site, zero allocation. The on row gives
+    // every query an active trace, records the full span tree, and
+    // (threshold 0) pushes every trace through the slow ring too — the
+    // worst case. Acceptance: within a few percent of the dark row.
+    let clients = 4;
+    println!("\n== tracing sweep: {clients} client threads ==");
+    let mut qps_dark = 0.0;
+    let mut tracing_rows: Vec<json::Value> = Vec::new();
+    for tracing in [false, true] {
+        let engine = Arc::new(
+            ctx.builder
+                .pipeline(&built, IndexKind::EdgeRag)
+                .expect("build engine"),
+        );
+        for q in &queries {
+            engine.handle(q).unwrap(); // warm identically
+        }
+        if !tracing {
+            let d = drive(&engine, &queries, clients, passes);
+            qps_dark = d.qps();
+            println!(
+                "tracing off: {} queries in {:.3}s → {qps_dark:8.1} q/s \
+                 (mean wall {}µs/query)",
+                d.served,
+                d.secs,
+                d.mean_wall_us()
+            );
+            tracing_rows.push(d.row(vec![
+                ("tracing", false.into()),
+                ("clients", clients.into()),
+            ]));
+        } else {
+            let tracer = edgerag::trace::Tracer::new(0);
+            let d = drive_with(
+                |q| {
+                    let guard = tracer.begin("query", std::time::Instant::now());
+                    let out = engine.handle(q);
+                    let _ = guard.finish();
+                    out
+                },
+                &queries,
+                clients,
+                passes,
+            );
+            let ts = tracer.stats();
+            println!(
+                "tracing on:  {} queries in {:.3}s → {:8.1} q/s \
+                 (vs off ×{:.2}, mean wall {}µs/query; {} traces captured, \
+                 {} through the slow ring)",
+                d.served,
+                d.secs,
+                d.qps(),
+                d.qps() / qps_dark,
+                d.mean_wall_us(),
+                ts.finished,
+                ts.slow
+            );
+            println!(
+                "acceptance: tracing-on throughput ×{:.2} of dark \
+                 (target ≥0.95 — span capture must stay observational)",
+                d.qps() / qps_dark
+            );
+            tracing_rows.push(d.row(vec![
+                ("tracing", true.into()),
+                ("clients", clients.into()),
+            ]));
+        }
+    }
+
     common::bench_record("backend", json::Value::str(ctx.builder.compute.backend_name()));
     common::bench_record(
         "throughput_scaling",
@@ -340,6 +415,7 @@ fn main() {
             ("shard_sweep", json::Value::array(shard_rows)),
             ("batching_sweep", json::Value::array(batching_rows)),
             ("executor_pool", json::Value::array(pool_rows)),
+            ("tracing_sweep", json::Value::array(tracing_rows)),
         ]),
     );
 

@@ -516,6 +516,18 @@ pub struct RetrievalConfig {
     /// after every this many appended records. 0 disables periodic
     /// snapshots — the log then only compacts on clean shutdown.
     pub snapshot_interval_ops: usize,
+    /// Query-scoped tracing: each served query/insert records a span
+    /// tree (queue wait, fused-batch shares, per-shard walks, WAL
+    /// appends) into bounded in-memory rings, queryable via the server's
+    /// `trace` op. **Off by default** — the untraced hot path pays one
+    /// relaxed atomic load per potential span and allocates nothing;
+    /// `edgerag serve` turns it on. Purely observational: results are
+    /// bit-identical either way.
+    pub trace: bool,
+    /// Slow-query threshold in µs: traced queries at or above it are
+    /// always captured into the slow-query ring (the sampling ring wraps
+    /// much sooner). Only meaningful with `trace`.
+    pub slow_query_us: u64,
 }
 
 /// One shard per available core, clamped to a sensible serving range —
@@ -547,6 +559,8 @@ impl Default for RetrievalConfig {
             max_migrations_per_round: 4,
             wal: false,
             snapshot_interval_ops: 512,
+            trace: false,
+            slow_query_us: 100_000,
         }
     }
 }
@@ -588,6 +602,8 @@ impl RetrievalConfig {
                 "snapshot_interval_ops",
                 self.snapshot_interval_ops.into(),
             ),
+            ("trace", self.trace.into()),
+            ("slow_query_us", self.slow_query_us.into()),
         ])
     }
 
@@ -652,6 +668,15 @@ impl RetrievalConfig {
             snapshot_interval_ops: match v.get("snapshot_interval_ops") {
                 Some(n) => n.as_usize().context("snapshot_interval_ops")?,
                 None => 512,
+            },
+            // Optional for configs written before query-scoped tracing.
+            trace: match v.get("trace") {
+                Some(b) => b.as_bool().context("trace")?,
+                None => false,
+            },
+            slow_query_us: match v.get("slow_query_us") {
+                Some(n) => n.as_u64().context("slow_query_us")?,
+                None => 100_000,
             },
         })
     }

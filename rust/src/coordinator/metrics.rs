@@ -194,6 +194,30 @@ impl LatencySeries {
         ok as f64 / self.count as f64
     }
 
+    /// Exact sum of all recorded samples in nanoseconds (tracked outside
+    /// the bins, like count and max).
+    pub fn sum_nanos(&self) -> u128 {
+        self.sum_ns
+    }
+
+    /// Cumulative histogram rows for Prometheus exposition: one
+    /// `(upper_bound_ns, cumulative_count)` pair per **occupied** bin, in
+    /// ascending bound order. Emitting only occupied bins keeps the
+    /// exposition bounded by the number of distinct latency bins actually
+    /// hit instead of all [`NUM_BINS`]; cumulative counts make the rows
+    /// valid `le` bucket values as-is.
+    pub fn prom_buckets(&self) -> Vec<(u64, u64)> {
+        let mut rows = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.bins.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                rows.push((bin_upper(i), cum));
+            }
+        }
+        rows
+    }
+
     /// CDF points (latency, cumulative fraction) — Fig. 12's distribution.
     pub fn cdf(&self, points: usize) -> Vec<(SimDuration, f64)> {
         if self.count == 0 {
@@ -332,6 +356,18 @@ impl Metrics {
             .unwrap_or(0)
     }
 
+    /// Every named counter with its current value, sorted by name — the
+    /// metrics exposition iterates this instead of knowing the names.
+    pub fn counters_snapshot(&self) -> Vec<(&'static str, u64)> {
+        let map = self.counters.read().unwrap();
+        let mut rows: Vec<(&'static str, u64)> = map
+            .iter()
+            .map(|(&k, v)| (k, v.load(Ordering::Relaxed)))
+            .collect();
+        rows.sort_unstable_by_key(|&(k, _)| k);
+        rows
+    }
+
     /// Snapshot of the retrieval-latency series (merged across stripes;
     /// covers every sample since the last reset — no retention window).
     pub fn retrieval(&self) -> LatencySeries {
@@ -344,8 +380,9 @@ impl Metrics {
     }
 
     pub fn component_total(&self, c: Component) -> SimDuration {
-        let idx = Component::ALL.iter().position(|x| *x == c).unwrap();
-        SimDuration::from_nanos(self.component_ns[idx].load(Ordering::Relaxed))
+        // Direct discriminant indexing — `Component::index` equals the
+        // position in `ALL` (pinned by a simtime unit test).
+        SimDuration::from_nanos(self.component_ns[c.index()].load(Ordering::Relaxed))
     }
 
     /// Mean per-query time in component `c`.
@@ -452,6 +489,70 @@ mod tests {
             assert!(w[0].1 < w[1].1);
         }
         assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_matches_sorted_oracle_within_documented_error() {
+        // Property test for the ≤1/32 ≈ 3.1% relative quantile error
+        // claim: compare percentile/cdf/slo_attainment against an exact
+        // sorted nearest-rank oracle over random log-uniform samples, and
+        // assert count/mean/max are exact.
+        let mut rng = crate::data::Rng::new(crate::testutil::test_seed(0x81ED));
+        for &n in &[1usize, 7, 100, 2_500] {
+            // Log-uniform over ~1ns..100s so every octave regime of the
+            // sketch (exact bins, sub-bucketed octaves) gets exercised.
+            let samples: Vec<u64> = (0..n)
+                .map(|_| (10f64.powf(rng.f64() * 11.0).max(1.0)) as u64)
+                .collect();
+            let s = LatencySeries::from_nanos(samples.clone());
+            let mut sorted = samples.clone();
+            sorted.sort_unstable();
+
+            // Exact side-channels.
+            assert_eq!(s.len(), n);
+            assert_eq!(s.max().as_nanos(), *sorted.last().unwrap());
+            let exact_sum: u128 = samples.iter().map(|&v| v as u128).sum();
+            assert_eq!(s.sum_nanos(), exact_sum);
+            assert_eq!(s.mean().as_nanos(), (exact_sum / n as u128) as u64);
+
+            // Percentiles: the sketch reports the bin upper bound of the
+            // exact nearest-rank sample, capped at the exact max — never
+            // below the exact value, never more than 1/32 above it.
+            for p in [0.0, 1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 95.0, 99.0, 100.0] {
+                let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+                let exact = sorted[rank.min(n) - 1];
+                let approx = s.percentile(p).as_nanos();
+                assert!(approx >= exact, "p{p} n={n}: {approx} < exact {exact}");
+                assert!(
+                    (approx - exact) as f64 <= exact as f64 / 32.0,
+                    "p{p} n={n}: {approx} vs exact {exact} exceeds 1/32"
+                );
+            }
+
+            // CDF: same bound at every point, fractions exact.
+            for (i, &(v, frac)) in s.cdf(10).iter().enumerate() {
+                assert!((frac - (i + 1) as f64 / 10.0).abs() < 1e-12);
+                let rank = ((frac * n as f64).ceil() as usize).clamp(1, n);
+                let exact = sorted[rank - 1];
+                let approx = v.as_nanos();
+                assert!(approx >= exact);
+                assert!((approx - exact) as f64 <= exact as f64 / 32.0);
+            }
+
+            // SLO attainment: bin-deterministic semantics — exactly the
+            // fraction of samples whose bin is at or below the SLO's bin,
+            // which can only over-count the exact ≤-fraction (by samples
+            // sharing the SLO's bin) and never under-count it.
+            for &slo in sorted.iter().step_by((n / 5).max(1)) {
+                let got = s.slo_attainment(SimDuration::from_nanos(slo));
+                let cut = bin_index(slo);
+                let by_bin =
+                    samples.iter().filter(|&&v| bin_index(v) <= cut).count() as f64 / n as f64;
+                let exact_le = samples.iter().filter(|&&v| v <= slo).count() as f64 / n as f64;
+                assert!((got - by_bin).abs() < 1e-12, "slo={slo} n={n}");
+                assert!(got >= exact_le - 1e-12, "slo={slo} n={n}");
+            }
+        }
     }
 
     #[test]

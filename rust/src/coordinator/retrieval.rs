@@ -33,6 +33,7 @@ use crate::embedding::Embedder;
 use crate::index::{ProbeTable, SearchEvents, VectorIndex};
 use crate::llm::Llm;
 use crate::simtime::{Breakdown, Component, LatencyLedger, SimDuration};
+use crate::trace::{self, TagValue};
 
 /// One served query's full outcome.
 #[derive(Debug, Clone)]
@@ -136,21 +137,45 @@ impl Engine {
         // fused embed stage — bit-identical rows, but concurrent inserts
         // and queries coalesce into one kernel batch.
         let emb = match self.embed_stage.get() {
-            Some(stage) => stage.embed_one(text)?,
-            None => self.embedder.embed_one(text)?,
+            Some(stage) => {
+                let (r, info) = stage.embed_one_info(text);
+                crate::sched::record_stage_spans("embed.wait", "embed.exec", &info);
+                r?
+            }
+            None => {
+                let t0 = trace::clock();
+                let emb = self.embedder.embed_one(text)?;
+                if let Some(t0) = t0 {
+                    trace::record_since("embed.inline", t0, &[]);
+                }
+                emb
+            }
         };
-        {
+        // The index mutation (WAL append included — the WAL records its
+        // own `wal.append`/`wal.rotate` sub-spans) under one span.
+        let t0 = trace::clock();
+        let applied = {
             let index = self.index.read().unwrap();
             if index.supports_concurrent_updates() {
                 let id = self.chunk_texts.push(text.to_string());
-                let cluster = index.insert_chunk_concurrent(id, text, &emb)?;
-                return Ok((id, cluster));
+                Some((id, index.insert_chunk_concurrent(id, text, &emb)?))
+            } else {
+                None
             }
+        };
+        let result = match applied {
+            Some(done) => done,
+            None => {
+                let mut index = self.index.write().unwrap();
+                let id = self.chunk_texts.push(text.to_string());
+                let cluster = index.insert_chunk(id, text, &emb)?;
+                (id, cluster)
+            }
+        };
+        if let Some(t0) = t0 {
+            trace::record_since("insert.apply", t0, &[("cluster", TagValue::U64(u64::from(result.1)))]);
         }
-        let mut index = self.index.write().unwrap();
-        let id = self.chunk_texts.push(text.to_string());
-        let cluster = index.insert_chunk(id, text, &emb)?;
-        Ok((id, cluster))
+        Ok(result)
     }
 
     /// Remove a chunk online (§5.4). Shard-scoped on an index that
@@ -195,7 +220,11 @@ impl Engine {
     /// the (brief) cache-commit, never across embedding or prefill.
     pub fn handle(&self, query_text: &str) -> Result<QueryOutcome> {
         let wall_start = Instant::now();
+        let t0 = trace::clock();
         let q = self.embedder.embed_one(query_text)?;
+        if let Some(t0) = t0 {
+            trace::record_since("embed.inline", t0, &[]);
+        }
         self.handle_prepared(query_text, &q, None, wall_start)
     }
 
@@ -227,6 +256,7 @@ impl Engine {
         );
 
         // Vector search through the configured index (shared read lease).
+        let t_search = trace::clock();
         let search = {
             let index = self.index.read().unwrap();
             match probe {
@@ -235,8 +265,37 @@ impl Engine {
             }
         };
         ledger.merge(&search.ledger);
+        if let Some(t0) = t_search {
+            trace::record_since("search", t0, &[]);
+            // Per-shard walks ran on pool worker threads (no thread-local
+            // trace there); their timings came back by value — attribute
+            // them here, on the query's own thread.
+            for w in &search.shard_walks {
+                trace::record(
+                    "shard.walk",
+                    w.walk_ns,
+                    &[
+                        ("shard", TagValue::U64(u64::from(w.shard))),
+                        ("clusters", TagValue::U64(u64::from(w.clusters))),
+                        ("generated", TagValue::U64(u64::from(w.generated))),
+                        ("loaded", TagValue::U64(u64::from(w.loaded))),
+                        ("cache_hits", TagValue::U64(u64::from(w.cache_hits))),
+                    ],
+                );
+            }
+            trace::record_event(
+                "cache.outcome",
+                &[
+                    ("generated", TagValue::U64(search.events.generated as u64)),
+                    ("loaded", TagValue::U64(search.events.loaded as u64)),
+                    ("cache_hits", TagValue::U64(search.events.cache_hits as u64)),
+                    ("thrash_faults", TagValue::U64(search.events.thrash_faults as u64)),
+                ],
+            );
+        }
 
         // Fetch the matched chunks' text from storage (Fig. 9 step 6).
+        let t_fetch = trace::clock();
         let ids: Vec<u32> = search.hits.iter().map(|&(id, _)| id).collect();
         let texts: Vec<String> = self.chunk_texts.get_many(&ids);
         let texts: Vec<&str> = texts.iter().map(|s| s.as_str()).collect();
@@ -247,10 +306,21 @@ impl Engine {
                 self.device.storage_read_cost(fetch_bytes, true),
             );
         }
+        if let Some(t0) = t_fetch {
+            trace::record_since(
+                "chunk_fetch",
+                t0,
+                &[("bytes", TagValue::U64(fetch_bytes))],
+            );
+        }
 
         // Prompt assembly + prefill (the first-token half of TTFT).
+        let t_prefill = trace::clock();
         let prompt = self.llm.build_prompt(query_text, &texts);
         let prefill = self.llm.prefill(&prompt, &mut ledger, self.real_prefill)?;
+        if let Some(t0) = t_prefill {
+            trace::record_since("prefill", t0, &[]);
+        }
 
         let retrieval = ledger.retrieval();
         let ttft = ledger.total();
@@ -259,9 +329,13 @@ impl Engine {
         // (paper Alg. 3 sees this query's retrieval latency). Re-acquires
         // the read lease: an insert that slipped in between is handled by
         // the index's update-generation check.
+        let t_commit = trace::clock();
         {
             let index = self.index.read().unwrap();
             index.commit(&search.intents, retrieval);
+        }
+        if let Some(t0) = t_commit {
+            trace::record_since("commit", t0, &[]);
         }
 
         let breakdown = Breakdown::from_ledger(&ledger);

@@ -42,10 +42,11 @@ use crate::cache::{CacheStats, CostAwareCache, ThresholdController};
 use crate::config::{DeviceProfile, IndexKind, RetrievalConfig};
 use crate::index::{
     AdmitCandidate, CacheAccess, CacheIntent, ClusterSet, EmbedSource, ProbeTable, Scorer,
-    SearchEvents, SearchOutcome, SharedMemory, VectorIndex,
+    SearchEvents, SearchOutcome, ShardWalk, SharedMemory, VectorIndex,
 };
 use crate::simtime::{Component, LatencyLedger, SimDuration};
-use crate::storage::{BlobStore, Region, WalOp, WriteAheadLog};
+use crate::storage::{BlobStore, Region, WalActivity, WalOp, WriteAheadLog};
+use crate::trace;
 use crate::vecmath;
 
 /// Which optional stages are enabled (Table 4).
@@ -150,6 +151,11 @@ pub struct ClusterWalk {
     pub events: SearchEvents,
     /// Deferred cache mutations for this shard's cache/threshold state.
     pub intent: CacheIntent,
+    /// Wall-clock nanoseconds of the walk, measured on the thread that
+    /// ran it — 0 unless tracing is enabled. Carried by value so sharded
+    /// walks on pool workers can be attributed back to the query's trace
+    /// after the fan-in.
+    pub walk_ns: u64,
 }
 
 impl EdgeIndex {
@@ -530,6 +536,13 @@ impl EdgeIndex {
         probes: &[(u32, u32)],
         k: usize,
     ) -> Result<ClusterWalk> {
+        // Wall-clock the walk only when tracing is on: the two timestamps
+        // are branch-local, so the traced-off hot path stays untouched.
+        let started = if trace::enabled() {
+            Some(std::time::Instant::now())
+        } else {
+            None
+        };
         let mut walk = ClusterWalk {
             intent: CacheIntent {
                 generation: self.update_gen.load(Ordering::Acquire),
@@ -560,7 +573,26 @@ impl EdgeIndex {
                     .collect(),
             });
         }
+        if let Some(t0) = started {
+            walk.walk_ns = t0.elapsed().as_nanos() as u64;
+        }
         Ok(walk)
+    }
+
+    /// Shard-walk trace record for a completed [`ClusterWalk`] (empty
+    /// vec when tracing is off — no allocation on the untraced path).
+    pub(crate) fn walk_records(shard: u32, walk: &ClusterWalk) -> Vec<ShardWalk> {
+        if !trace::enabled() {
+            return Vec::new();
+        }
+        vec![ShardWalk {
+            shard,
+            clusters: walk.groups.len() as u32,
+            walk_ns: walk.walk_ns,
+            generated: walk.events.generated as u32,
+            loaded: walk.events.loaded as u32,
+            cache_hits: walk.events.cache_hits as u32,
+        }]
     }
 
     /// Search using centroid scores a caller already computed against a
@@ -598,6 +630,7 @@ impl EdgeIndex {
 
         let walk = self.search_clusters(query, &list, k)?;
         ledger.merge(&walk.ledger);
+        let shard_walks = Self::walk_records(0, &walk);
 
         let all_hits: Vec<(u32, f32)> = walk.groups.into_iter().flat_map(|g| g.hits).collect();
         let hits = vecmath::top_k_hits(all_hits, k);
@@ -608,6 +641,7 @@ impl EdgeIndex {
             probed,
             events: walk.events,
             intents: vec![walk.intent],
+            shard_walks,
         })
     }
 
@@ -700,6 +734,7 @@ impl VectorIndex for EdgeIndex {
         // (2..6) the cluster walk (shared with the sharded path).
         let walk = self.search_clusters(query, &list, k)?;
         ledger.merge(&walk.ledger);
+        let shard_walks = Self::walk_records(0, &walk);
 
         let all_hits: Vec<(u32, f32)> = walk
             .groups
@@ -714,6 +749,7 @@ impl VectorIndex for EdgeIndex {
             probed,
             events: walk.events,
             intents: vec![walk.intent],
+            shard_walks,
         })
     }
 
@@ -786,6 +822,10 @@ impl VectorIndex for EdgeIndex {
             Some(w) => w.checkpoint(),
             None => Ok(()),
         }
+    }
+
+    fn wal_stats(&self) -> Option<WalActivity> {
+        self.wal.as_ref().map(|w| w.activity())
     }
 
     fn probe_table(&self) -> Option<Arc<ProbeTable>> {

@@ -92,6 +92,7 @@ impl VectorIndex for FlatIndex {
             probed: Vec::new(),
             events,
             intents: Vec::new(),
+            shard_walks: Vec::new(),
         })
     }
 

@@ -123,6 +123,7 @@ impl VectorIndex for IvfIndex {
             probed,
             events,
             intents: Vec::new(),
+            shard_walks: Vec::new(),
         })
     }
 

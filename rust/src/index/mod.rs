@@ -46,7 +46,7 @@ pub use shard::{ShardStats, ShardedEdgeIndex};
 use crate::cache::CacheStats;
 use crate::config::IndexKind;
 use crate::simtime::{LatencyLedger, SimDuration};
-use crate::storage::MemoryModel;
+use crate::storage::{MemoryModel, WalActivity};
 use crate::vecmath::EmbeddingMatrix;
 
 /// Memory model shared between an index and the LLM side of the pipeline
@@ -69,6 +69,29 @@ pub struct SearchEvents {
     pub cache_hits: usize,
     /// Residency faults charged (memory thrash events).
     pub thrash_faults: usize,
+}
+
+/// One shard's cluster-walk record from a single search — which shard
+/// ran, how many clusters it walked, how long the walk took on the wall
+/// clock, and how its cluster embeddings were sourced. Collected only
+/// when tracing is enabled (the vector stays empty otherwise, costing
+/// nothing); the engine converts these into per-shard trace spans after
+/// the search returns, because the walks themselves run on pool worker
+/// threads that do not carry the query's thread-local trace.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardWalk {
+    /// Shard index (0 for an unsharded index).
+    pub shard: u32,
+    /// Clusters this shard walked.
+    pub clusters: u32,
+    /// Wall-clock nanoseconds of the walk on its worker thread.
+    pub walk_ns: u64,
+    /// Clusters whose embeddings were generated online.
+    pub generated: u32,
+    /// Clusters loaded from the blob store.
+    pub loaded: u32,
+    /// Cluster embedding cache hits.
+    pub cache_hits: u32,
 }
 
 /// A freshly generated cluster the search proposes for cache admission.
@@ -201,6 +224,9 @@ pub struct SearchOutcome {
     /// one [`CacheIntent`] per shard the search probed (at most one for
     /// unsharded indexes, empty for the baselines).
     pub intents: Vec<CacheIntent>,
+    /// Per-shard walk records for trace attribution. Populated only when
+    /// tracing is enabled; empty (no allocation) otherwise.
+    pub shard_walks: Vec<ShardWalk>,
 }
 
 /// The interface all five Table-4 configurations serve behind.
@@ -297,6 +323,19 @@ pub trait VectorIndex: Send + Sync {
     /// clean-shutdown hook. Inert for configurations without a WAL.
     fn wal_checkpoint(&self) -> Result<()> {
         Ok(())
+    }
+
+    /// Write-ahead-log activity counters (None for configurations
+    /// without a WAL, or when the WAL is disabled).
+    fn wal_stats(&self) -> Option<WalActivity> {
+        None
+    }
+
+    /// Probe-snapshot rebuilds performed since construction (lazy
+    /// rebuilds after structural updates; 0 for indexes without a
+    /// centroid snapshot).
+    fn probe_rebuilds(&self) -> u64 {
+        0
     }
 
     // ---- online updates (§5.4) ----

@@ -94,11 +94,12 @@ use crate::config::{DeviceProfile, IndexKind, RetrievalConfig};
 use crate::index::edge::{ClusterHits, ClusterWalk};
 use crate::index::{
     CacheIntent, ClusterMeta, ClusterSet, EdgeIndex, EmbedSource, ProbeTable, Scorer,
-    SearchEvents, SearchOutcome, SharedMemory, VectorIndex,
+    SearchEvents, SearchOutcome, ShardWalk, SharedMemory, VectorIndex,
 };
 use crate::pool::{Job, SubmitError, WorkerPool};
 use crate::simtime::{Component, LatencyLedger, SimDuration};
-use crate::storage::{BlobStore, WalOp, WriteAheadLog};
+use crate::storage::{BlobStore, WalActivity, WalOp, WriteAheadLog};
+use crate::trace;
 use crate::vecmath::{self, EmbeddingMatrix};
 
 /// Hard ceiling on the shard count: shard `i` namespaces its memory-model
@@ -301,6 +302,9 @@ pub struct ShardedEdgeIndex {
     /// cold after recovery — replay must be a pure function of the op
     /// sequence.
     replaying: AtomicBool,
+    /// Lazy probe-snapshot rebuilds performed (observability counter;
+    /// bumped under `table_rebuild`, read lock-free).
+    probe_rebuilds: AtomicU64,
 }
 
 impl ShardedEdgeIndex {
@@ -431,6 +435,7 @@ impl ShardedEdgeIndex {
             probe_heat: RwLock::new((0..n).map(|_| AtomicU64::new(0)).collect()),
             wal: None,
             replaying: AtomicBool::new(false),
+            probe_rebuilds: AtomicU64::new(0),
         };
         {
             let _serial = index.table_rebuild.lock().unwrap();
@@ -452,8 +457,13 @@ impl ShardedEdgeIndex {
             // never be silently missed. A rebuild that observed a torn
             // mid-registration split re-marks the flag itself and the
             // old (still oracle-consistent) snapshot keeps serving.
-            if self.table_stale.swap(false, Ordering::AcqRel) && !self.rebuild_probe_table() {
-                self.table_stale.store(true, Ordering::Release);
+            if self.table_stale.swap(false, Ordering::AcqRel) {
+                if self.rebuild_probe_table() {
+                    self.probe_rebuilds.fetch_add(1, Ordering::Relaxed);
+                    trace::record_event("probe_rebuild", &[]);
+                } else {
+                    self.table_stale.store(true, Ordering::Release);
+                }
             }
         }
         self.probe_table.read().unwrap().clone()
@@ -1321,7 +1331,19 @@ impl ShardedEdgeIndex {
         let mut events = SearchEvents::default();
         let mut intents = Vec::with_capacity(walks.len());
         let mut all_groups: Vec<ClusterHits> = Vec::new();
+        let tracing = trace::enabled();
+        let mut shard_walks = Vec::new();
         for (s, mut walk) in walks {
+            if tracing {
+                shard_walks.push(ShardWalk {
+                    shard: s as u32,
+                    clusters: walk.groups.len() as u32,
+                    walk_ns: walk.walk_ns,
+                    generated: walk.events.generated as u32,
+                    loaded: walk.events.loaded as u32,
+                    cache_hits: walk.events.cache_hits as u32,
+                });
+            }
             ledger.merge(&walk.ledger);
             events.generated += walk.events.generated;
             events.loaded += walk.events.loaded;
@@ -1352,6 +1374,7 @@ impl ShardedEdgeIndex {
             probed,
             events,
             intents,
+            shard_walks,
         })
     }
 }
@@ -1460,6 +1483,14 @@ impl VectorIndex for ShardedEdgeIndex {
             Some(w) => w.checkpoint(),
             None => Ok(()),
         }
+    }
+
+    fn wal_stats(&self) -> Option<WalActivity> {
+        self.wal.as_ref().map(|w| w.activity())
+    }
+
+    fn probe_rebuilds(&self) -> u64 {
+        self.probe_rebuilds.load(Ordering::Relaxed)
     }
 
     fn probe_table(&self) -> Option<Arc<ProbeTable>> {

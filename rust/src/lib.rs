@@ -33,4 +33,5 @@ pub mod server;
 pub mod simtime;
 pub mod storage;
 pub mod testutil;
+pub mod trace;
 pub mod vecmath;

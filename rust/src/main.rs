@@ -152,6 +152,7 @@ COMMANDS
           [--max-migrations N] [--compute-threads N]
           [--wal true|false] [--wal-dir PATH]
           [--snapshot-interval-ops N]
+          [--trace true|false] [--slow-query-us U]
           [--transformer] [--real-prefill] [--live-generation]
           (--compute-threads 0 = auto, one PJRT executor per core;
            ignored by the inline reference backend)
@@ -164,7 +165,11 @@ COMMANDS
            --wal true — the serve default — logs structural updates to a
            write-ahead log and replays it on restart; --wal-dir overrides
            the per-dataset default location; --snapshot-interval-ops 0
-           compacts the log only on clean shutdown)
+           compacts the log only on clean shutdown;
+           --trace true — the serve default — captures per-query span
+           trees into bounded rings, queryable via {{\"op\":\"trace\"}};
+           queries slower than --slow-query-us land in the always-kept
+           slow ring)
   query   --text \"...\" [--port P]
   stats   [--port P]
   bench   <table2|fig3|fig4|fig5|fig7|fig10|fig12|fig13|breakdown|
@@ -246,6 +251,19 @@ fn serve(args: &Args) -> Result<()> {
         builder.retrieval.snapshot_interval_ops =
             n.parse().context("bad --snapshot-interval-ops")?;
     }
+    // Serving defaults to the query-scoped tracing plane (per-stage span
+    // attribution, slow-query capture, the `trace`/`metrics` ops); the
+    // library/config default stays off — a library embedder never pays
+    // even the one-atomic-load record sites' ring bookkeeping. Same
+    // strict true/false parse as --batching.
+    builder.retrieval.trace = match args.get("trace") {
+        Some("true") | None => true,
+        Some("false") => false,
+        Some(other) => bail!("bad --trace `{other}` (expected true or false)"),
+    };
+    if let Some(us) = args.get("slow-query-us") {
+        builder.retrieval.slow_query_us = us.parse().context("bad --slow-query-us")?;
+    }
     let shards = builder.retrieval.resolved_shards();
     eprintln!("building dataset `{}` ({} chunks)…", dataset.name, dataset.n_chunks);
     let built = builder.build_dataset(&dataset)?;
@@ -260,13 +278,14 @@ fn serve(args: &Args) -> Result<()> {
     )?;
     eprintln!(
         "serving `{}` with {} index on {addr} (device: {}, {workers} workers, {shards} shard(s), \
-         batching {}, rebalance {}, wal {})",
+         batching {}, rebalance {}, wal {}, trace {})",
         dataset.name,
         kind.name(),
         builder.device.name,
         if builder.retrieval.batching { "on" } else { "off" },
         if builder.retrieval.rebalance { "on" } else { "off" },
-        if builder.retrieval.wal { "on" } else { "off" }
+        if builder.retrieval.wal { "on" } else { "off" },
+        if builder.retrieval.trace { "on" } else { "off" }
     );
     server.run()
 }
@@ -352,7 +371,7 @@ fn bench(args: &Args) -> Result<()> {
 /// by the CI `bench-smoke` job after running both benches, and by hand
 /// before committing an updated trajectory.
 fn bench_validate(args: &Args) -> Result<()> {
-    let path = args.get("file").unwrap_or("BENCH_6.json");
+    let path = args.get("file").unwrap_or("BENCH_8.json");
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let v = edgerag::json::parse(&text).with_context(|| format!("parsing {path}"))?;
 
@@ -395,7 +414,7 @@ fn bench_validate(args: &Args) -> Result<()> {
     }
 
     let tput = v.req("throughput_scaling")?;
-    for sweep in ["shard_sweep", "batching_sweep", "executor_pool"] {
+    for sweep in ["shard_sweep", "batching_sweep", "executor_pool", "tracing_sweep"] {
         let rows = tput
             .req(sweep)?
             .as_array()

@@ -64,16 +64,74 @@ impl StageSnapshot {
     }
 }
 
+/// Why a batch stopped accepting items and executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchClose {
+    /// Reached the kernel's full width.
+    Full,
+    /// The oldest item's deadline expired.
+    Window,
+    /// The submit side disconnected mid-collection.
+    Drain,
+    /// Stage shutdown flushed the queue.
+    Shutdown,
+    /// Never batched: executed inline by the caller (stage refused or
+    /// the scheduler bypassed batching).
+    Inline,
+}
+
+impl BatchClose {
+    /// Stable lowercase label (trace tags, metrics).
+    pub fn name(self) -> &'static str {
+        match self {
+            BatchClose::Full => "full",
+            BatchClose::Window => "window",
+            BatchClose::Drain => "drain",
+            BatchClose::Shutdown => "shutdown",
+            BatchClose::Inline => "inline",
+        }
+    }
+}
+
+/// How one item's batch went: the attribution record each caller gets
+/// back with its result, so a traced query can account its share of the
+/// fused execution it rode in.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchInfo {
+    /// Items in the fused execution (1 for inline).
+    pub width: u32,
+    /// Why the batch closed.
+    pub close: BatchClose,
+    /// Wall time of the fused execution, shared by all `width` items.
+    pub exec_ns: u64,
+    /// This item's enqueue-to-execution wait.
+    pub wait_ns: u64,
+}
+
+impl BatchInfo {
+    /// Attribution record for work executed inline (unbatched).
+    pub fn inline(exec_ns: u64) -> BatchInfo {
+        BatchInfo {
+            width: 1,
+            close: BatchClose::Inline,
+            exec_ns,
+            wait_ns: 0,
+        }
+    }
+}
+
 struct Item<I, O> {
     input: I,
     enqueued: Instant,
-    reply: mpsc::Sender<Result<O>>,
+    reply: mpsc::Sender<(Result<O>, BatchInfo)>,
 }
 
 /// Outcome of a submission attempt.
 pub(crate) enum Submit<O, I> {
-    /// The item went through a (possibly fused) batch.
-    Done(Result<O>),
+    /// The item went through a (possibly fused) batch; the
+    /// [`BatchInfo`] says how wide it was, why it closed, and how long
+    /// this item waited and executed.
+    Done(Result<O>, BatchInfo),
     /// The stage is shut down; the input is handed back so the caller
     /// can execute it inline (unbatched) — queries never fail just
     /// because batching stopped.
@@ -127,11 +185,13 @@ impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
                 return Submit::Refused(e.0.input);
             }
         }
-        Submit::Done(
-            rx.recv()
-                .map_err(|_| anyhow::anyhow!("batch stage dropped the reply"))
-                .and_then(|r| r),
-        )
+        match rx.recv() {
+            Ok((result, info)) => Submit::Done(result, info),
+            Err(_) => Submit::Done(
+                Err(anyhow::anyhow!("batch stage dropped the reply")),
+                BatchInfo::inline(0),
+            ),
+        }
     }
 
     /// Close the stage: already-queued items are flushed as final
@@ -187,27 +247,41 @@ fn batch_loop<I, O, F>(
         }
         // Deadline: wait for stragglers only until the oldest item has
         // been queued for `window`.
+        let mut close = if batch.len() >= width {
+            BatchClose::Full
+        } else if !open {
+            BatchClose::Drain
+        } else {
+            BatchClose::Window // zero window: the deadline is already spent
+        };
         if open && batch.len() < width && !window.is_zero() {
             let deadline = batch[0].enqueued + window;
             loop {
                 let now = Instant::now();
-                if batch.len() >= width || now >= deadline {
+                if batch.len() >= width {
+                    close = BatchClose::Full;
+                    break;
+                }
+                if now >= deadline {
+                    close = BatchClose::Window;
                     break;
                 }
                 match rx.recv_timeout(deadline - now) {
                     Ok(item) => batch.push(item),
                     Err(mpsc::RecvTimeoutError::Timeout) => {
                         counters.window_expired.fetch_add(1, Ordering::Relaxed);
+                        close = BatchClose::Window;
                         break;
                     }
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         open = false;
+                        close = BatchClose::Drain;
                         break;
                     }
                 }
             }
         }
-        run_batch(batch, width, &exec, &counters);
+        run_batch(batch, width, &exec, &counters, close);
     }
     // Clean shutdown with items queued: flush the remainder so every
     // blocked caller completes.
@@ -222,12 +296,17 @@ fn batch_loop<I, O, F>(
         if batch.is_empty() {
             break;
         }
-        run_batch(batch, width, &exec, &counters);
+        run_batch(batch, width, &exec, &counters, BatchClose::Shutdown);
     }
 }
 
-fn run_batch<I, O, F>(batch: Vec<Item<I, O>>, width: usize, exec: &F, counters: &StageCounters)
-where
+fn run_batch<I, O, F>(
+    batch: Vec<Item<I, O>>,
+    width: usize,
+    exec: &F,
+    counters: &StageCounters,
+    close: BatchClose,
+) where
     F: Fn(&[I]) -> Vec<Result<O>>,
 {
     counters.batches.fetch_add(1, Ordering::Relaxed);
@@ -241,17 +320,32 @@ where
     let mut replies = Vec::with_capacity(batch.len());
     for item in batch {
         inputs.push(item.input);
-        replies.push(item.reply);
+        replies.push((item.reply, item.enqueued));
     }
+    // Timed unconditionally: two timestamps per *batch*, amortized over
+    // its width, keep the attribution record accurate whether or not
+    // the caller's query is traced.
+    let run_start = Instant::now();
     let outputs = exec(&inputs);
+    let exec_ns = run_start.elapsed().as_nanos() as u64;
+    let batch_width = inputs.len() as u32;
+    let info_for = |enqueued: Instant| BatchInfo {
+        width: batch_width,
+        close,
+        exec_ns,
+        wait_ns: run_start.saturating_duration_since(enqueued).as_nanos() as u64,
+    };
     let produced = outputs.len();
-    for (reply, out) in replies.iter().zip(outputs) {
-        let _ = reply.send(out); // a caller that gave up is fine to miss
+    for ((reply, enqueued), out) in replies.iter().zip(outputs) {
+        let _ = reply.send((out, info_for(*enqueued))); // a caller that gave up is fine to miss
     }
-    for reply in replies.iter().skip(produced) {
-        let _ = reply.send(Err(anyhow::anyhow!(
-            "stage executor returned {produced} results for a larger batch"
-        )));
+    for (reply, enqueued) in replies.iter().skip(produced) {
+        let _ = reply.send((
+            Err(anyhow::anyhow!(
+                "stage executor returned {produced} results for a larger batch"
+            )),
+            info_for(*enqueued),
+        ));
     }
 }
 
@@ -267,7 +361,14 @@ mod tests {
 
     fn must(s: Submit<u64, u64>) -> u64 {
         match s {
-            Submit::Done(r) => r.unwrap(),
+            Submit::Done(r, _) => r.unwrap(),
+            Submit::Refused(_) => panic!("stage unexpectedly shut down"),
+        }
+    }
+
+    fn must_info(s: Submit<u64, u64>) -> (u64, BatchInfo) {
+        match s {
+            Submit::Done(r, info) => (r.unwrap(), info),
             Submit::Refused(_) => panic!("stage unexpectedly shut down"),
         }
     }
@@ -323,6 +424,22 @@ mod tests {
         );
         let s = b.snapshot();
         assert!(s.full_width >= 1, "{s:?}");
+    }
+
+    #[test]
+    fn batch_info_reports_width_and_close_reason() {
+        // Lone item under a huge width: the deadline closes the batch.
+        let b = doubler(32, Duration::from_millis(20));
+        let (out, info) = must_info(b.submit(21));
+        assert_eq!(out, 42);
+        assert_eq!(info.width, 1);
+        assert_eq!(info.close, BatchClose::Window);
+
+        // Width 1: every submission closes a full batch immediately.
+        let b = doubler(1, Duration::from_secs(30));
+        let (_, info) = must_info(b.submit(3));
+        assert_eq!(info.width, 1);
+        assert_eq!(info.close, BatchClose::Full);
     }
 
     #[test]

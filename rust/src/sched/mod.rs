@@ -73,9 +73,35 @@ use anyhow::Result;
 use crate::config::RetrievalConfig;
 use crate::coordinator::{Engine, QueryOutcome};
 use crate::index::Scorer;
+use crate::trace::{self, TagValue};
 
-pub use batcher::StageSnapshot;
+pub use batcher::{BatchClose, BatchInfo, StageSnapshot};
 pub use stages::{EmbedBatcher, ProbeBatcher};
+
+/// Record one stage's wait/exec span pair into the calling thread's
+/// active trace (no-op — one atomic load — when tracing is off).
+///
+/// The fused execution's wall time is attributed back to each rider as
+/// an equal `exec_ns / width` share, with the batch's full width, close
+/// reason and unshared cost carried as tags, so a slow query can show
+/// whether it waited for a window, rode a full kernel batch, or paid an
+/// inline execution.
+pub(crate) fn record_stage_spans(wait: &'static str, exec: &'static str, info: &BatchInfo) {
+    if !trace::active() {
+        return;
+    }
+    trace::record(wait, info.wait_ns, &[("close", TagValue::Str(info.close.name()))]);
+    let share = info.exec_ns / u64::from(info.width.max(1));
+    trace::record(
+        exec,
+        share,
+        &[
+            ("width", TagValue::U64(u64::from(info.width))),
+            ("close", TagValue::Str(info.close.name())),
+            ("batch_ns", TagValue::U64(info.exec_ns)),
+        ],
+    );
+}
 
 /// Scheduler knobs (the `batching`/`batch_window_us`/`max_inflight`
 /// fields of [`RetrievalConfig`], plus a test hook).
@@ -220,11 +246,14 @@ impl BatchScheduler {
         // with) — serve the exact unbatched path, zero added latency.
         if self.cfg.bypass && self.inflight.load(Ordering::SeqCst) <= 1 {
             self.bypassed.fetch_add(1, Ordering::Relaxed);
+            trace::record_event("sched.bypass", &[]);
             return self.engine.handle(text);
         }
 
         // Stage 1: fused query embedding.
-        let q = self.embed.embed_one(text)?;
+        let (q, embed_info) = self.embed.embed_one_info(text);
+        let q = q?;
+        record_stage_spans("embed.wait", "embed.exec", &embed_info);
 
         // Stage 2: fused centroid probe against the lock-free snapshot.
         // The engine read lease is held only to clone the snapshot Arc,
@@ -232,7 +261,9 @@ impl BatchScheduler {
         let table = { self.engine.index().probe_table() };
         let probe = match table {
             Some(table) => {
-                let scores = self.probe.scores(q.clone(), table.clone())?;
+                let (scores, probe_info) = self.probe.scores_info(q.clone(), table.clone());
+                let scores = scores?;
+                record_stage_spans("probe.wait", "probe.exec", &probe_info);
                 Some((table, scores))
             }
             None => None, // flat baseline: no centroid level to batch

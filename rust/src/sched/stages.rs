@@ -19,13 +19,13 @@
 //! hierarchy trivially (see `docs/ARCHITECTURE.md`).
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::embedding::Embedder;
 use crate::index::{ProbeTable, Scorer};
-use crate::sched::batcher::{Batcher, StageSnapshot, Submit};
+use crate::sched::batcher::{BatchInfo, Batcher, StageSnapshot, Submit};
 use crate::vecmath::EmbeddingMatrix;
 
 // ---------------------------------------------------------------------------
@@ -68,23 +68,41 @@ impl EmbedBatcher {
     /// the request's batch executes; runs inline when the stage is shut
     /// down).
     pub fn embed_texts(&self, texts: &[&str]) -> Result<EmbeddingMatrix> {
+        self.embed_texts_info(texts).0
+    }
+
+    /// Like [`EmbedBatcher::embed_texts`], also returning the
+    /// [`BatchInfo`] attribution record (batch width, close reason,
+    /// fused-execution and wait times) for trace accounting.
+    pub fn embed_texts_info(&self, texts: &[&str]) -> (Result<EmbeddingMatrix>, BatchInfo) {
         match self
             .batcher
             .submit(texts.iter().map(|s| s.to_string()).collect())
         {
-            Submit::Done(r) => r,
+            Submit::Done(r, info) => (r, info),
             Submit::Refused(owned) => {
                 let refs: Vec<&str> = owned.iter().map(|s| s.as_str()).collect();
-                self.embedder.embed_texts(&refs)
+                let started = Instant::now();
+                let r = self.embedder.embed_texts(&refs);
+                (r, BatchInfo::inline(started.elapsed().as_nanos() as u64))
             }
         }
     }
 
     /// Embed a single text (the query-embedding work item).
     pub fn embed_one(&self, text: &str) -> Result<Vec<f32>> {
-        let m = self.embed_texts(&[text])?;
-        anyhow::ensure!(m.len() == 1, "fused embed returned {} rows for 1 text", m.len());
-        Ok(m.row(0).to_vec())
+        self.embed_one_info(text).0
+    }
+
+    /// Like [`EmbedBatcher::embed_one`], also returning the batch
+    /// attribution record.
+    pub fn embed_one_info(&self, text: &str) -> (Result<Vec<f32>>, BatchInfo) {
+        let (r, info) = self.embed_texts_info(&[text]);
+        let row = r.and_then(|m| {
+            anyhow::ensure!(m.len() == 1, "fused embed returned {} rows for 1 text", m.len());
+            Ok(m.row(0).to_vec())
+        });
+        (row, info)
     }
 
     /// Stage counters.
@@ -167,9 +185,23 @@ impl ProbeBatcher {
     /// fused batch with whatever other queries are in flight (inline
     /// when the stage is shut down).
     pub fn scores(&self, query: Vec<f32>, table: Arc<ProbeTable>) -> Result<Vec<f32>> {
+        self.scores_info(query, table).0
+    }
+
+    /// Like [`ProbeBatcher::scores`], also returning the [`BatchInfo`]
+    /// attribution record for trace accounting.
+    pub fn scores_info(
+        &self,
+        query: Vec<f32>,
+        table: Arc<ProbeTable>,
+    ) -> (Result<Vec<f32>>, BatchInfo) {
         match self.batcher.submit((query, table)) {
-            Submit::Done(r) => r,
-            Submit::Refused((q, table)) => table.masked_scores(&self.scorer, &q),
+            Submit::Done(r, info) => (r, info),
+            Submit::Refused((q, table)) => {
+                let started = Instant::now();
+                let r = table.masked_scores(&self.scorer, &q);
+                (r, BatchInfo::inline(started.elapsed().as_nanos() as u64))
+            }
         }
     }
 

@@ -32,26 +32,41 @@
 //!   {"op":"rebalance"}               → run one cross-shard rebalance
 //!                                      round; reports moves + load
 //!                                      spread (all-zero when unsharded)
+//!   {"op":"trace"}                   → recent + slow trace summaries
+//!                                      (tracing enabled); with "id": one
+//!                                      trace's full span tree
+//!   {"op":"metrics"}                 → {"body": "..."} — every counter,
+//!                                      histogram, shard row and WAL/sched/
+//!                                      tracer stat in Prometheus text
+//!                                      exposition format
 //!   {"op":"ping"}                    → {"ok": true}
 //!   {"op":"shutdown"}                → {"ok": true}, then the server stops
+//!
+//! With tracing enabled (`--trace`, the `serve` default), each `query`/
+//! `insert` response carries a `trace_id` field resolvable via the
+//! `trace` op while the trace is still in the bounded rings.
 //!
 //! Shutdown dispatches on the *parsed* `op` — a query whose text merely
 //! contains the word "shutdown" is served like any other query.
 
+use std::fmt::Write as _;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::config::RetrievalConfig;
+use crate::coordinator::metrics::LatencySeries;
 use crate::coordinator::Engine;
 use crate::embedding::Embedder;
 use crate::json::{self, Value};
 use crate::pool::{PoolHandle, SubmitError, WorkerPool};
 use crate::sched::{BatchScheduler, SchedConfig, StageSnapshot};
 use crate::simtime::Component;
+use crate::trace::{QueryTrace, TagValue, Tracer};
 
 // ---------------------------------------------------------------------------
 // Server
@@ -65,7 +80,17 @@ pub struct ServerState {
     pub embedder: Embedder,
     /// The cross-query batch scheduler; None serves the unbatched path.
     sched: Option<Arc<BatchScheduler>>,
+    /// Query-scoped tracing plane; None leaves the record sites dark
+    /// (one relaxed load per site).
+    tracer: Option<Arc<Tracer>>,
     running: AtomicBool,
+}
+
+impl ServerState {
+    /// The tracing plane, when `retrieval.trace` enabled it.
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
+    }
 }
 
 /// The TCP request server: acceptor + per-connection handler threads
@@ -129,11 +154,13 @@ impl Server {
             0 => WorkerPool::new("edgerag-worker", workers),
             cap => WorkerPool::bounded("edgerag-worker", workers, cap),
         };
+        let tracer = retrieval.trace.then(|| Tracer::new(retrieval.slow_query_us));
         Ok(Server {
             state: Arc::new(ServerState {
                 engine,
                 embedder,
                 sched,
+                tracer,
                 running: AtomicBool::new(true),
             }),
             pool,
@@ -226,6 +253,9 @@ fn serve_request(
     if op == "shutdown" {
         return Ok((Value::object(vec![("ok", true.into())]), true));
     }
+    // Admission instant: a traced request's span tree starts here, so
+    // the worker-queue wait shows up as its `admission` span.
+    let queued = Instant::now();
     // Everything else executes on the worker pool: N workers run N
     // requests concurrently against the shared engine (through the batch
     // scheduler when enabled). A full admission queue rejects the
@@ -233,7 +263,7 @@ fn serve_request(
     let (reply_tx, reply_rx) = mpsc::channel();
     let job_state = state.clone();
     let job = Box::new(move || {
-        let _ = reply_tx.send(dispatch(&op, &req, &job_state));
+        let _ = reply_tx.send(dispatch(&op, &req, &job_state, queued));
     });
     match pool.submit(job) {
         Ok(()) => {}
@@ -254,7 +284,32 @@ fn serve_request(
     Ok((response, false))
 }
 
-fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
+/// Execute one op, bracketing `query`/`insert` with the tracing plane
+/// when it is enabled: the worker thread carries the request's trace
+/// from here through the scheduler, engine, index and WAL, and the
+/// completed trace's id is stamped into the response.
+fn dispatch(op: &str, req: &Value, state: &ServerState, queued: Instant) -> Result<Value> {
+    let traced_op: Option<&'static str> = match op {
+        "query" => Some("query"),
+        "insert" => Some("insert"),
+        _ => None,
+    };
+    match (traced_op, &state.tracer) {
+        (Some(name), Some(tracer)) => {
+            let guard = tracer.begin(name, queued);
+            let mut result = dispatch_op(op, req, state);
+            if let Some(trace) = guard.finish() {
+                if let Ok(Value::Object(map)) = &mut result {
+                    map.insert("trace_id".to_string(), trace.id.into());
+                }
+            }
+            result
+        }
+        _ => dispatch_op(op, req, state),
+    }
+}
+
+fn dispatch_op(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
     match op {
         "query" => {
             let text = req.req("text")?.as_str().context("text")?;
@@ -309,13 +364,14 @@ fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
             let queries = m.queries();
             let retrieval = m.retrieval();
             let ttft = m.ttft();
-            let (resident, hit_rate, threshold, shards) = {
+            let (resident, hit_rate, threshold, shards, wal) = {
                 let index = state.engine.index();
                 (
                     index.resident_bytes(),
                     index.cache_stats().map(|s| s.hit_rate()).unwrap_or(0.0),
                     index.threshold_ms(),
                     index.shard_stats().map(shard_rows_json),
+                    index.wal_stats(),
                 )
             };
             let mut fields = vec![
@@ -330,6 +386,19 @@ fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
             ];
             if let Some(rows) = shards {
                 fields.push(("shards", rows));
+            }
+            if let Some(w) = wal {
+                fields.push((
+                    "wal",
+                    Value::object(vec![
+                        ("frames_appended", w.frames_appended.into()),
+                        ("rotations", w.rotations.into()),
+                        ("bytes_on_disk", w.bytes_on_disk.into()),
+                        ("replayed_ops", w.replayed_ops.into()),
+                        ("append_us", (w.append_ns / 1_000).into()),
+                        ("rotate_us", (w.rotate_ns / 1_000).into()),
+                    ]),
+                ));
             }
             if let Some(sched) = &state.sched {
                 let s = sched.stats();
@@ -369,8 +438,83 @@ fn dispatch(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
                 ("spread_after", r.spread_after.into()),
             ]))
         }
+        "trace" => {
+            let tracer = state
+                .tracer
+                .as_ref()
+                .context("tracing is disabled (serve with --trace)")?;
+            if let Some(id) = req.get("id") {
+                let id = id.as_u64().context("id")?;
+                let t = tracer
+                    .find(id)
+                    .with_context(|| format!("trace {id} not captured (rings wrapped?)"))?;
+                return Ok(trace_json(&t));
+            }
+            Ok(Value::object(vec![
+                ("slow_threshold_us", tracer.slow_threshold_us().into()),
+                (
+                    "recent",
+                    Value::array(tracer.recent().iter().map(|t| trace_summary_json(t))),
+                ),
+                (
+                    "slow",
+                    Value::array(tracer.slow().iter().map(|t| trace_summary_json(t))),
+                ),
+            ]))
+        }
+        "metrics" => {
+            // The whole metrics surface — query/TTFT histograms, modeled
+            // component totals, event counters, per-shard rows, scheduler
+            // stages, WAL activity, tracer counters — rendered in
+            // Prometheus text exposition format. The line protocol wraps
+            // the page in a one-field JSON object; an HTTP front-end (or
+            // the CLI) unwraps `body` verbatim.
+            Ok(Value::object(vec![(
+                "body",
+                Value::str(metrics_text(state)),
+            )]))
+        }
         other => anyhow::bail!("unknown op `{other}`"),
     }
+}
+
+/// One-line summary of a captured trace (the `trace` op's ring listing).
+fn trace_summary_json(t: &QueryTrace) -> Value {
+    Value::object(vec![
+        ("id", t.id.into()),
+        ("op", Value::str(t.op)),
+        ("total_us", (t.total_ns / 1_000).into()),
+        ("spans", t.spans.len().into()),
+    ])
+}
+
+/// Full span tree of a captured trace. Spans carry offsets from the
+/// admission instant so the tree renders on one time axis.
+fn trace_json(t: &QueryTrace) -> Value {
+    Value::object(vec![
+        ("id", t.id.into()),
+        ("op", Value::str(t.op)),
+        ("total_us", (t.total_ns / 1_000).into()),
+        ("dropped_spans", t.dropped_spans.into()),
+        (
+            "spans",
+            Value::array(t.spans.iter().map(|s| {
+                let tags = s.tags.iter().map(|&(k, v)| {
+                    let v = match v {
+                        TagValue::U64(n) => n.into(),
+                        TagValue::Str(s) => Value::str(s),
+                    };
+                    (k, v)
+                });
+                Value::object(vec![
+                    ("name", Value::str(s.name)),
+                    ("start_us", (s.start_ns / 1_000).into()),
+                    ("dur_us", (s.dur_ns / 1_000).into()),
+                    ("tags", Value::object(tags.collect())),
+                ])
+            })),
+        ),
+    ])
 }
 
 /// Per-shard rows: where probes/inserts/migrations landed, each shard's
@@ -426,6 +570,284 @@ fn stage_json(s: &StageSnapshot) -> Value {
         ("full_width", s.full_width.into()),
         ("window_expired", s.window_expired.into()),
     ])
+}
+
+/// One Prometheus histogram family from a [`LatencySeries`]: the
+/// occupied log-spaced bins as cumulative `_bucket` lines (upper bounds
+/// in seconds), plus the mandatory `+Inf` bucket, `_sum` and `_count`.
+fn write_histogram(out: &mut String, name: &str, help: &str, series: &LatencySeries) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (upper_ns, cumulative) in series.prom_buckets() {
+        let le = upper_ns as f64 / 1e9;
+        let _ = writeln!(out, "{name}_bucket{{le=\"{le}\"}} {cumulative}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}", series.len());
+    let _ = writeln!(out, "{name}_sum {}", series.sum_nanos() as f64 / 1e9);
+    let _ = writeln!(out, "{name}_count {}", series.len());
+}
+
+/// Render the whole metrics surface in Prometheus text exposition
+/// format: latency histograms, modeled per-component time, event
+/// counters, index/cache gauges, per-shard rows, scheduler stages, WAL
+/// activity and tracer counters. Read-only — snapshots plus one shared
+/// index lease, same as the `stats` op.
+fn metrics_text(state: &ServerState) -> String {
+    let mut out = String::new();
+    let m = state.engine.metrics();
+
+    let _ = writeln!(out, "# HELP edgerag_queries_total Queries served.");
+    let _ = writeln!(out, "# TYPE edgerag_queries_total counter");
+    let _ = writeln!(out, "edgerag_queries_total {}", m.queries());
+
+    write_histogram(
+        &mut out,
+        "edgerag_retrieval_latency_seconds",
+        "End-to-end retrieval latency.",
+        &m.retrieval(),
+    );
+    write_histogram(
+        &mut out,
+        "edgerag_ttft_latency_seconds",
+        "Time to first token (retrieval + prefill).",
+        &m.ttft(),
+    );
+
+    let _ = writeln!(
+        out,
+        "# HELP edgerag_component_seconds_total Modeled time per pipeline component."
+    );
+    let _ = writeln!(out, "# TYPE edgerag_component_seconds_total counter");
+    for c in Component::ALL {
+        let _ = writeln!(
+            out,
+            "edgerag_component_seconds_total{{component=\"{}\"}} {}",
+            c.name(),
+            m.component_total(c).as_secs_f64()
+        );
+    }
+
+    let counters = m.counters_snapshot();
+    if !counters.is_empty() {
+        let _ = writeln!(out, "# HELP edgerag_events_total Named event counters.");
+        let _ = writeln!(out, "# TYPE edgerag_events_total counter");
+        for (name, n) in counters {
+            let _ = writeln!(out, "edgerag_events_total{{event=\"{name}\"}} {n}");
+        }
+    }
+
+    // One shared index lease for everything the index exposes.
+    {
+        let index = state.engine.index();
+        let _ = writeln!(
+            out,
+            "# HELP edgerag_index_resident_bytes Bytes of index state resident in memory."
+        );
+        let _ = writeln!(out, "# TYPE edgerag_index_resident_bytes gauge");
+        let _ = writeln!(out, "edgerag_index_resident_bytes {}", index.resident_bytes());
+        let _ = writeln!(
+            out,
+            "# HELP edgerag_cache_used_bytes Embedding-cache bytes in use."
+        );
+        let _ = writeln!(out, "# TYPE edgerag_cache_used_bytes gauge");
+        let _ = writeln!(out, "edgerag_cache_used_bytes {}", index.cache_used_bytes());
+        let _ = writeln!(
+            out,
+            "# HELP edgerag_stored_clusters Cluster embeddings spilled to disk."
+        );
+        let _ = writeln!(out, "# TYPE edgerag_stored_clusters gauge");
+        let _ = writeln!(out, "edgerag_stored_clusters {}", index.stored_clusters());
+        let _ = writeln!(out, "# HELP edgerag_stored_bytes Bytes spilled to disk.");
+        let _ = writeln!(out, "# TYPE edgerag_stored_bytes gauge");
+        let _ = writeln!(out, "edgerag_stored_bytes {}", index.stored_bytes());
+        let _ = writeln!(
+            out,
+            "# HELP edgerag_cache_admission_threshold_seconds Cost-aware cache admission threshold."
+        );
+        let _ = writeln!(out, "# TYPE edgerag_cache_admission_threshold_seconds gauge");
+        let _ = writeln!(
+            out,
+            "edgerag_cache_admission_threshold_seconds {}",
+            index.threshold_ms() / 1e3
+        );
+        let _ = writeln!(
+            out,
+            "# HELP edgerag_probe_rebuilds_total Lock-free probe-table snapshot rebuilds."
+        );
+        let _ = writeln!(out, "# TYPE edgerag_probe_rebuilds_total counter");
+        let _ = writeln!(out, "edgerag_probe_rebuilds_total {}", index.probe_rebuilds());
+
+        if let Some(c) = index.cache_stats() {
+            let _ = writeln!(
+                out,
+                "# HELP edgerag_cache_ops_total Embedding-cache operations by outcome."
+            );
+            let _ = writeln!(out, "# TYPE edgerag_cache_ops_total counter");
+            for (op, n) in [
+                ("hit", c.hits),
+                ("miss", c.misses),
+                ("insertion", c.insertions),
+                ("eviction", c.evictions),
+                ("rejected_below_threshold", c.rejected_below_threshold),
+            ] {
+                let _ = writeln!(out, "edgerag_cache_ops_total{{op=\"{op}\"}} {n}");
+            }
+        }
+
+        if let Some(rows) = index.shard_stats() {
+            let _ = writeln!(out, "# HELP edgerag_shard_rows Vector rows per shard.");
+            let _ = writeln!(out, "# TYPE edgerag_shard_rows gauge");
+            for s in &rows {
+                let _ = writeln!(out, "edgerag_shard_rows{{shard=\"{}\"}} {}", s.shard, s.rows);
+            }
+            let _ = writeln!(out, "# HELP edgerag_shard_clusters Clusters per shard.");
+            let _ = writeln!(out, "# TYPE edgerag_shard_clusters gauge");
+            for s in &rows {
+                let _ = writeln!(
+                    out,
+                    "edgerag_shard_clusters{{shard=\"{}\"}} {}",
+                    s.shard, s.clusters
+                );
+            }
+            let _ = writeln!(
+                out,
+                "# HELP edgerag_shard_ops_total Per-shard operation counters."
+            );
+            let _ = writeln!(out, "# TYPE edgerag_shard_ops_total counter");
+            for s in &rows {
+                for (op, n) in [
+                    ("probes", s.probes),
+                    ("cache_hits", s.cache_hits),
+                    ("generated", s.generated),
+                    ("loaded", s.loaded),
+                    ("inserts", s.inserts),
+                    ("removes", s.removes),
+                    ("migrated_in", s.migrated_in),
+                    ("migrated_out", s.migrated_out),
+                    ("merges", s.merges),
+                ] {
+                    let _ = writeln!(
+                        out,
+                        "edgerag_shard_ops_total{{shard=\"{}\",op=\"{op}\"}} {n}",
+                        s.shard
+                    );
+                }
+            }
+        }
+
+        if let Some(w) = index.wal_stats() {
+            let _ = writeln!(
+                out,
+                "# HELP edgerag_wal_frames_appended_total Structural WAL frames appended."
+            );
+            let _ = writeln!(out, "# TYPE edgerag_wal_frames_appended_total counter");
+            let _ = writeln!(out, "edgerag_wal_frames_appended_total {}", w.frames_appended);
+            let _ = writeln!(
+                out,
+                "# HELP edgerag_wal_rotations_total Snapshot-consolidation rotations."
+            );
+            let _ = writeln!(out, "# TYPE edgerag_wal_rotations_total counter");
+            let _ = writeln!(out, "edgerag_wal_rotations_total {}", w.rotations);
+            let _ = writeln!(
+                out,
+                "# HELP edgerag_wal_bytes_on_disk Snapshot + live log bytes on disk."
+            );
+            let _ = writeln!(out, "# TYPE edgerag_wal_bytes_on_disk gauge");
+            let _ = writeln!(out, "edgerag_wal_bytes_on_disk {}", w.bytes_on_disk);
+            let _ = writeln!(
+                out,
+                "# HELP edgerag_wal_replayed_ops_total Operations replayed at startup recovery."
+            );
+            let _ = writeln!(out, "# TYPE edgerag_wal_replayed_ops_total counter");
+            let _ = writeln!(out, "edgerag_wal_replayed_ops_total {}", w.replayed_ops);
+            let _ = writeln!(
+                out,
+                "# HELP edgerag_wal_append_seconds_total Wall time spent appending WAL frames."
+            );
+            let _ = writeln!(out, "# TYPE edgerag_wal_append_seconds_total counter");
+            let _ = writeln!(
+                out,
+                "edgerag_wal_append_seconds_total {}",
+                w.append_ns as f64 / 1e9
+            );
+            let _ = writeln!(
+                out,
+                "# HELP edgerag_wal_rotate_seconds_total Wall time spent rotating the WAL."
+            );
+            let _ = writeln!(out, "# TYPE edgerag_wal_rotate_seconds_total counter");
+            let _ = writeln!(
+                out,
+                "edgerag_wal_rotate_seconds_total {}",
+                w.rotate_ns as f64 / 1e9
+            );
+        }
+    }
+
+    if let Some(sched) = &state.sched {
+        let s = sched.stats();
+        let _ = writeln!(
+            out,
+            "# HELP edgerag_sched_requests_total Scheduler admissions by outcome."
+        );
+        let _ = writeln!(out, "# TYPE edgerag_sched_requests_total counter");
+        for (outcome, n) in [
+            ("submitted", s.submitted),
+            ("bypassed", s.bypassed),
+            ("rejected", s.rejected),
+        ] {
+            let _ = writeln!(out, "edgerag_sched_requests_total{{outcome=\"{outcome}\"}} {n}");
+        }
+        let _ = writeln!(
+            out,
+            "# HELP edgerag_stage_ops_total Per-stage batcher counters."
+        );
+        let _ = writeln!(out, "# TYPE edgerag_stage_ops_total counter");
+        let _ = writeln!(out, "# HELP edgerag_stage_occupancy Mean items per fused batch.");
+        let _ = writeln!(out, "# TYPE edgerag_stage_occupancy gauge");
+        for (stage, snap) in [("embed", &s.embed), ("probe", &s.probe)] {
+            for (op, n) in [
+                ("submitted", snap.submitted),
+                ("batches", snap.batches),
+                ("full_width", snap.full_width),
+                ("window_expired", snap.window_expired),
+            ] {
+                let _ = writeln!(
+                    out,
+                    "edgerag_stage_ops_total{{stage=\"{stage}\",op=\"{op}\"}} {n}"
+                );
+            }
+            let _ = writeln!(
+                out,
+                "edgerag_stage_occupancy{{stage=\"{stage}\"}} {}",
+                snap.occupancy()
+            );
+        }
+    }
+
+    if let Some(tracer) = &state.tracer {
+        let t = tracer.stats();
+        let _ = writeln!(out, "# HELP edgerag_traces_total Query traces by state.");
+        let _ = writeln!(out, "# TYPE edgerag_traces_total counter");
+        for (trace_state, n) in [
+            ("started", t.started),
+            ("finished", t.finished),
+            ("slow", t.slow),
+        ] {
+            let _ = writeln!(out, "edgerag_traces_total{{state=\"{trace_state}\"}} {n}");
+        }
+        let _ = writeln!(
+            out,
+            "# HELP edgerag_trace_slow_threshold_seconds Slow-query capture threshold."
+        );
+        let _ = writeln!(out, "# TYPE edgerag_trace_slow_threshold_seconds gauge");
+        let _ = writeln!(
+            out,
+            "edgerag_trace_slow_threshold_seconds {}",
+            tracer.slow_threshold_us() as f64 / 1e6
+        );
+    }
+
+    out
 }
 
 /// Minimal blocking client for the line-JSON protocol (used by the CLI and

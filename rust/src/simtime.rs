@@ -127,6 +127,15 @@ impl Component {
         Component::ModelReload,
     ];
 
+    /// Dense index of this component: its discriminant, which by
+    /// declaration order equals its position in [`Component::ALL`] (a
+    /// unit test pins the mapping). Metrics arrays index by this instead
+    /// of scanning `ALL`.
+    #[inline]
+    pub const fn index(self) -> usize {
+        self as usize
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             Component::CentroidProbe => "centroid_probe",
@@ -209,8 +218,7 @@ impl Breakdown {
     }
 
     pub fn get(&self, c: Component) -> SimDuration {
-        let idx = Component::ALL.iter().position(|x| *x == c).unwrap();
-        SimDuration(self.by_component[idx])
+        SimDuration(self.by_component[c.index()])
     }
 
     pub fn total(&self) -> SimDuration {
@@ -253,6 +261,17 @@ mod tests {
         let mut l = LatencyLedger::new();
         l.charge(Component::Thrash, SimDuration::ZERO);
         assert!(l.is_empty());
+    }
+
+    #[test]
+    fn component_index_matches_all_order() {
+        // `Component::index()` (the discriminant) must agree with the
+        // position in `ALL` — everything that stores per-component
+        // arrays (Breakdown, Metrics) indexes by it directly.
+        for (i, c) in Component::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i, "{}", c.name());
+        }
+        assert_eq!(ALL_LEN, Component::ALL.len());
     }
 
     #[test]

@@ -10,4 +10,4 @@ pub mod wal;
 pub use blob::BlobStore;
 pub use device::StorageDevice;
 pub use memory::{MemoryModel, Region, PAGE_BYTES};
-pub use wal::{WalOp, WriteAheadLog};
+pub use wal::{WalActivity, WalOp, WriteAheadLog};

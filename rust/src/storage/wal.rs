@@ -78,10 +78,13 @@
 use std::fs::{self, File, OpenOptions};
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
+
+use crate::trace;
 
 /// Log file name inside the WAL directory.
 const LOG_FILE: &str = "wal.log";
@@ -204,6 +207,27 @@ impl WalOp {
         }
         Ok(op)
     }
+}
+
+/// Runtime activity counters of a [`WriteAheadLog`] — the durability
+/// visibility row the `stats`/`metrics` endpoints expose. Counts are
+/// since open; `replayed_ops` is what the last recovery handed back;
+/// `bytes_on_disk` is measured from the filesystem on demand.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WalActivity {
+    /// Records appended since this log was opened.
+    pub frames_appended: u64,
+    /// Snapshot rotations completed since open (interval-triggered and
+    /// checkpoints).
+    pub rotations: u64,
+    /// Current bytes on disk: live log + published snapshot.
+    pub bytes_on_disk: u64,
+    /// Ops recovered (snapshot + surviving log tail) at the last open.
+    pub replayed_ops: u64,
+    /// Cumulative wall time spent inside `append` since open (ns).
+    pub append_ns: u64,
+    /// Cumulative wall time spent rotating snapshots since open (ns).
+    pub rotate_ns: u64,
 }
 
 /// Bounds-checked little-endian reader over a payload.
@@ -338,6 +362,16 @@ pub struct WriteAheadLog {
     /// before the log truncation — a crash between snapshot
     /// publication and log cleanup.
     fail_truncate: AtomicU32,
+    /// Records appended since open (activity counter, not a seq).
+    frames_appended: AtomicU64,
+    /// Rotations completed since open.
+    rotations: AtomicU64,
+    /// Cumulative `append` wall time (ns).
+    append_ns: AtomicU64,
+    /// Cumulative rotation wall time (ns).
+    rotate_ns: AtomicU64,
+    /// Ops recovered at open (fixed after construction).
+    replayed_ops: u64,
 }
 
 impl std::fmt::Debug for WriteAheadLog {
@@ -429,6 +463,7 @@ impl WriteAheadLog {
             .open(&log_path)
             .with_context(|| format!("opening wal log {}", log_path.display()))?;
 
+        let replayed_ops = ops.len() as u64;
         Ok(WriteAheadLog {
             dir: dir.to_path_buf(),
             inner: Mutex::new(WalInner {
@@ -442,6 +477,11 @@ impl WriteAheadLog {
             fail_post_append: AtomicU32::new(0),
             fail_rotate: AtomicU32::new(0),
             fail_truncate: AtomicU32::new(0),
+            frames_appended: AtomicU64::new(0),
+            rotations: AtomicU64::new(0),
+            append_ns: AtomicU64::new(0),
+            rotate_ns: AtomicU64::new(0),
+            replayed_ops,
         })
     }
 
@@ -512,6 +552,10 @@ impl WriteAheadLog {
         if Self::take_fault(&self.fail_append) {
             bail!("injected wal fault: append (before write)");
         }
+        // Structural ops are rare and disk-bound, so the two timestamps
+        // are measured unconditionally: activity counters stay accurate
+        // whether or not tracing is on.
+        let started = Instant::now();
         let mut inner = self.inner.lock().unwrap();
         let seq = inner.next_seq;
         let frame = encode_frame(seq, op);
@@ -521,6 +565,10 @@ impl WriteAheadLog {
             .with_context(|| format!("appending wal record {seq}"))?;
         inner.next_seq = seq + 1;
         inner.since_snapshot += 1;
+        self.frames_appended.fetch_add(1, Ordering::Relaxed);
+        let elapsed = started.elapsed().as_nanos() as u64;
+        self.append_ns.fetch_add(elapsed, Ordering::Relaxed);
+        trace::record_since("wal.append", started, &[]);
         if Self::take_fault(&self.fail_post_append) {
             bail!("injected wal fault: crash after durable append of record {seq}");
         }
@@ -556,6 +604,7 @@ impl WriteAheadLog {
     /// it fully covers (skipped by `seq` at recovery). Either way every
     /// record is readable from exactly one place or harmlessly two.
     fn rotate_locked(&self, inner: &mut WalInner) -> Result<()> {
+        let started = Instant::now();
         inner.file.sync_data().context("syncing wal log before rotation")?;
 
         // Consolidate: archived records, then the live log's new tail.
@@ -604,7 +653,27 @@ impl WriteAheadLog {
         inner.file.set_len(0).context("truncating wal log after rotation")?;
         inner.file.sync_data().context("syncing truncated wal log")?;
         inner.since_snapshot = 0;
+        self.rotations.fetch_add(1, Ordering::Relaxed);
+        self.rotate_ns
+            .fetch_add(started.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        trace::record_since("wal.rotate", started, &[]);
         Ok(())
+    }
+
+    /// Activity counters since open plus current on-disk footprint.
+    ///
+    /// `bytes_on_disk` reads file metadata on demand (stats-path only,
+    /// never on the append path); missing files count as zero.
+    pub fn activity(&self) -> WalActivity {
+        let file_len = |p: PathBuf| fs::metadata(p).map(|m| m.len()).unwrap_or(0);
+        WalActivity {
+            frames_appended: self.frames_appended.load(Ordering::Relaxed),
+            rotations: self.rotations.load(Ordering::Relaxed),
+            bytes_on_disk: file_len(self.log_path()) + file_len(self.snapshot_path()),
+            replayed_ops: self.replayed_ops,
+            append_ns: self.append_ns.load(Ordering::Relaxed),
+            rotate_ns: self.rotate_ns.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -931,6 +1000,33 @@ mod tests {
             wal.take_recovered(),
             vec![WalOp::Remove { id: 1 }, WalOp::Remove { id: 2 }]
         );
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn activity_counts_appends_rotations_and_replay() {
+        let dir = tmpdir("activity");
+        let wal = WriteAheadLog::open(&dir, 3).unwrap();
+        for id in 0..5 {
+            wal.append(&WalOp::Remove { id }).unwrap();
+        }
+        let a = wal.activity();
+        assert_eq!(a.frames_appended, 5);
+        assert_eq!(a.rotations, 1, "interval 3 fires once in 5 appends");
+        assert_eq!(a.replayed_ops, 0, "fresh dir recovered nothing");
+        assert!(a.bytes_on_disk > 0, "snapshot + log tail should have bytes");
+        assert!(a.append_ns > 0);
+        assert!(a.rotate_ns > 0);
+        drop(wal);
+
+        // Reopen: counters reset, replayed_ops reports the recovery.
+        let wal = WriteAheadLog::open(&dir, 3).unwrap();
+        let a = wal.activity();
+        assert_eq!(a.frames_appended, 0);
+        assert_eq!(a.rotations, 0);
+        assert_eq!(a.replayed_ops, 5);
+        wal.checkpoint().unwrap();
+        assert_eq!(wal.activity().rotations, 1, "checkpoint counts as rotation");
         fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -1,0 +1,416 @@
+//! Query-scoped tracing: per-stage span attribution through the fused
+//! pipeline, a bounded sampling buffer, and an always-capture slow-query
+//! log.
+//!
+//! ## Design
+//!
+//! The server owns a [`Tracer`] and brackets each traced request with
+//! [`Tracer::begin`] / [`TraceGuard::finish`]. In between, *any* code on
+//! the dispatching thread — the scheduler, the engine, the index walk
+//! merge, the WAL — records spans through the free functions
+//! ([`record`], [`record_since`], [`record_event`]) without holding a
+//! `Tracer` reference: the in-flight trace lives in a thread-local slot
+//! installed by `begin`. Work that executes on *other* threads (fused
+//! kernel batches, per-shard cluster walks on the shard pool) measures
+//! its own duration and returns it by value; the dispatching thread
+//! attributes it back into the trace — that is how one fused batch's
+//! kernel cost lands as a per-query `embed.exec` span tagged with the
+//! batch width and close reason.
+//!
+//! ## Cost model
+//!
+//! * **Tracing off** (no `Tracer` ever constructed — the library
+//!   default): every record site is one relaxed atomic load and a branch.
+//!   No allocation, no syscall, no `Instant::now`.
+//! * **Tracing on, thread not tracing** (pool workers, untraced ops): the
+//!   thread-local slot is `None`; record sites return after the
+//!   thread-local check.
+//! * **Tracing on, thread tracing**: spans append to a `Vec` capped at
+//!   [`MAX_SPANS`]; completed traces land in two fixed-capacity rings
+//!   ([`RECENT_CAPACITY`], [`SLOW_CAPACITY`]). Memory is bounded by
+//!   construction.
+//!
+//! Tracing is **purely observational**: no record site takes an index,
+//! cache or scheduler lock, and nothing on any search/commit path reads
+//! trace state back. The bit-equality suites pass identically with
+//! tracing forced on (`EDGERAG_TEST_TRACE=1` runs that leg in CI).
+//!
+//! Lock hierarchy: the two ring mutexes here are leaf locks — taken only
+//! in `finish`/query paths while holding no other lock, and no index or
+//! scheduler code path ever takes them.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Completed traces kept in the sampling ring (oldest evicted first).
+pub const RECENT_CAPACITY: usize = 256;
+/// Completed traces kept in the slow-query ring.
+pub const SLOW_CAPACITY: usize = 64;
+/// Hard cap on spans per trace (a probe storm cannot grow a trace
+/// unboundedly; later spans are dropped and counted in `dropped_spans`).
+pub const MAX_SPANS: usize = 512;
+
+/// Flipped (permanently) to true by the first [`Tracer`] constructed in
+/// the process. Record sites gate on this before touching the
+/// thread-local, so a library build that never constructs a `Tracer`
+/// pays one relaxed load per site.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+thread_local! {
+    /// The trace in flight on this thread, installed by [`Tracer::begin`].
+    static ACTIVE: RefCell<Option<ActiveTrace>> = const { RefCell::new(None) };
+}
+
+/// A span tag value. `Str` carries static labels (batch close reasons,
+/// cache outcomes); `U64` carries counts and nanosecond durations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TagValue {
+    U64(u64),
+    Str(&'static str),
+}
+
+/// One recorded stage of a traced request. `start_ns` is the offset from
+/// the trace's admission instant (the moment the request was queued), so
+/// a span tree renders on one shared time axis.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub name: &'static str,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub tags: Vec<(&'static str, TagValue)>,
+}
+
+/// A completed request trace.
+#[derive(Debug)]
+pub struct QueryTrace {
+    pub id: u64,
+    /// The server op traced ("query", "insert").
+    pub op: &'static str,
+    /// Queued-to-finished wall time.
+    pub total_ns: u64,
+    pub spans: Vec<Span>,
+    /// Spans discarded past [`MAX_SPANS`].
+    pub dropped_spans: u64,
+}
+
+struct ActiveTrace {
+    id: u64,
+    op: &'static str,
+    /// The admission instant — span offsets and `total_ns` are measured
+    /// from here, so the queue wait is inside the trace.
+    queued: Instant,
+    spans: Vec<Span>,
+    dropped: u64,
+}
+
+/// One relaxed load: has any `Tracer` been constructed? Code that must
+/// measure durations off the tracing thread (pool-side cluster walks)
+/// gates its `Instant::now` calls on this.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// True when the *calling thread* has a trace in flight.
+#[inline]
+pub fn active() -> bool {
+    enabled() && ACTIVE.with(|a| a.borrow().is_some())
+}
+
+/// Record a span that ended now with an externally measured duration
+/// (batch shares, pool-side walk times). No-op unless this thread is
+/// tracing.
+pub fn record(name: &'static str, dur_ns: u64, tags: &[(&'static str, TagValue)]) {
+    if !enabled() {
+        return;
+    }
+    ACTIVE.with(|a| {
+        if let Some(t) = a.borrow_mut().as_mut() {
+            let end = t.queued.elapsed().as_nanos() as u64;
+            t.push(Span {
+                name,
+                start_ns: end.saturating_sub(dur_ns),
+                dur_ns,
+                tags: tags.to_vec(),
+            });
+        }
+    });
+}
+
+/// Record a span from `started` (captured on this thread) to now.
+pub fn record_since(name: &'static str, started: Instant, tags: &[(&'static str, TagValue)]) {
+    if !enabled() {
+        return;
+    }
+    record(name, started.elapsed().as_nanos() as u64, tags);
+}
+
+/// Record a zero-duration marker (probe-snapshot rebuilds, cache
+/// outcomes).
+pub fn record_event(name: &'static str, tags: &[(&'static str, TagValue)]) {
+    record(name, 0, tags);
+}
+
+/// `Instant::now()` only when the calling thread is tracing — the
+/// zero-syscall guard for sites that bracket work with two clock reads.
+#[inline]
+pub fn clock() -> Option<Instant> {
+    if active() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+impl ActiveTrace {
+    fn push(&mut self, span: Span) {
+        if self.spans.len() < MAX_SPANS {
+            self.spans.push(span);
+        } else {
+            self.dropped += 1;
+        }
+    }
+}
+
+/// Aggregate counters a tracer exposes to the metrics endpoint.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TracerStats {
+    /// Traces started.
+    pub started: u64,
+    /// Traces completed and captured.
+    pub finished: u64,
+    /// Traces that crossed the slow-query threshold.
+    pub slow: u64,
+}
+
+/// The server-owned capture plane: assigns trace ids, installs the
+/// thread-local slot for each traced request, and keeps the two bounded
+/// rings of completed traces.
+pub struct Tracer {
+    /// Always-capture threshold: traces at least this long also land in
+    /// the slow ring.
+    slow_us: u64,
+    next_id: AtomicU64,
+    started: AtomicU64,
+    finished: AtomicU64,
+    slow_count: AtomicU64,
+    recent: Mutex<VecDeque<Arc<QueryTrace>>>,
+    slow: Mutex<VecDeque<Arc<QueryTrace>>>,
+}
+
+impl Tracer {
+    /// Construct a tracer and (permanently, process-wide) arm the record
+    /// sites. `slow_us` is the slow-query capture threshold.
+    pub fn new(slow_us: u64) -> Arc<Tracer> {
+        ENABLED.store(true, Ordering::Release);
+        Arc::new(Tracer {
+            slow_us,
+            next_id: AtomicU64::new(1),
+            started: AtomicU64::new(0),
+            finished: AtomicU64::new(0),
+            slow_count: AtomicU64::new(0),
+            recent: Mutex::new(VecDeque::with_capacity(RECENT_CAPACITY)),
+            slow: Mutex::new(VecDeque::with_capacity(SLOW_CAPACITY)),
+        })
+    }
+
+    pub fn slow_threshold_us(&self) -> u64 {
+        self.slow_us
+    }
+
+    /// Begin tracing `op` on the calling thread. `queued` is the instant
+    /// the request was admitted to the worker queue; the elapsed time to
+    /// now is recorded as the `admission` span (queue wait). The returned
+    /// guard must be finished (or dropped) on this same thread.
+    pub fn begin(self: &Arc<Self>, op: &'static str, queued: Instant) -> TraceGuard {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.started.fetch_add(1, Ordering::Relaxed);
+        let wait_ns = queued.elapsed().as_nanos() as u64;
+        let mut t = ActiveTrace {
+            id,
+            op,
+            queued,
+            spans: Vec::with_capacity(16),
+            dropped: 0,
+        };
+        t.push(Span {
+            name: "admission",
+            start_ns: 0,
+            dur_ns: wait_ns,
+            tags: Vec::new(),
+        });
+        ACTIVE.with(|a| *a.borrow_mut() = Some(t));
+        TraceGuard {
+            tracer: self.clone(),
+            finished: false,
+        }
+    }
+
+    /// Capture a completed trace into the rings.
+    fn capture(&self, t: ActiveTrace) -> Arc<QueryTrace> {
+        let total_ns = t.queued.elapsed().as_nanos() as u64;
+        let trace = Arc::new(QueryTrace {
+            id: t.id,
+            op: t.op,
+            total_ns,
+            spans: t.spans,
+            dropped_spans: t.dropped,
+        });
+        self.finished.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut ring = self.recent.lock().unwrap();
+            if ring.len() == RECENT_CAPACITY {
+                ring.pop_front();
+            }
+            ring.push_back(trace.clone());
+        }
+        if total_ns / 1_000 >= self.slow_us {
+            self.slow_count.fetch_add(1, Ordering::Relaxed);
+            let mut ring = self.slow.lock().unwrap();
+            if ring.len() == SLOW_CAPACITY {
+                ring.pop_front();
+            }
+            ring.push_back(trace.clone());
+        }
+        trace
+    }
+
+    /// Completed traces in the sampling ring, oldest first.
+    pub fn recent(&self) -> Vec<Arc<QueryTrace>> {
+        self.recent.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Completed slow traces, oldest first.
+    pub fn slow(&self) -> Vec<Arc<QueryTrace>> {
+        self.slow.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Find a captured trace by id (checks both rings).
+    pub fn find(&self, id: u64) -> Option<Arc<QueryTrace>> {
+        if let Some(t) = self.recent.lock().unwrap().iter().find(|t| t.id == id) {
+            return Some(t.clone());
+        }
+        self.slow.lock().unwrap().iter().find(|t| t.id == id).cloned()
+    }
+
+    pub fn stats(&self) -> TracerStats {
+        TracerStats {
+            started: self.started.load(Ordering::Relaxed),
+            finished: self.finished.load(Ordering::Relaxed),
+            slow: self.slow_count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// RAII handle for one traced request. [`TraceGuard::finish`] captures
+/// the trace and returns it; dropping without finishing (a dispatch
+/// panic) still clears the thread-local slot so the worker thread does
+/// not leak an active trace into its next request.
+pub struct TraceGuard {
+    tracer: Arc<Tracer>,
+    finished: bool,
+}
+
+impl TraceGuard {
+    /// End the trace, capture it, and return it (the server embeds the
+    /// id in the response).
+    pub fn finish(mut self) -> Option<Arc<QueryTrace>> {
+        self.finished = true;
+        let taken = ACTIVE.with(|a| a.borrow_mut().take());
+        taken.map(|t| self.tracer.capture(t))
+    }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        if !self.finished {
+            // Unwound mid-dispatch: still capture what was recorded so a
+            // failing request's partial trace is inspectable.
+            if let Some(t) = ACTIVE.with(|a| a.borrow_mut().take()) {
+                self.tracer.capture(t);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn spans_share_the_admission_time_axis() {
+        let tracer = Tracer::new(u64::MAX / 2_000);
+        let queued = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        let guard = tracer.begin("query", queued);
+        assert!(active());
+        record("work", 1_000, &[("width", TagValue::U64(4))]);
+        record_event("marker", &[("kind", TagValue::Str("probe_rebuild"))]);
+        let trace = guard.finish().expect("trace captured");
+        assert!(!active());
+        assert_eq!(trace.op, "query");
+        assert_eq!(trace.spans.len(), 3);
+        let admission = &trace.spans[0];
+        assert_eq!(admission.name, "admission");
+        assert_eq!(admission.start_ns, 0);
+        assert!(admission.dur_ns >= 2_000_000, "queue wait {}", admission.dur_ns);
+        let work = &trace.spans[1];
+        assert_eq!(work.dur_ns, 1_000);
+        assert!(work.start_ns >= admission.dur_ns);
+        assert_eq!(work.tags, vec![("width", TagValue::U64(4))]);
+        assert!(trace.total_ns >= admission.dur_ns);
+        assert_eq!(tracer.find(trace.id).unwrap().id, trace.id);
+    }
+
+    #[test]
+    fn slow_ring_captures_only_threshold_crossers() {
+        let tracer = Tracer::new(1_000); // 1ms threshold
+        let fast = tracer.begin("query", Instant::now());
+        let fast = fast.finish().unwrap();
+        let queued = Instant::now();
+        std::thread::sleep(Duration::from_millis(3));
+        let slow = tracer.begin("query", queued).finish().unwrap();
+        let slow_ids: Vec<u64> = tracer.slow().iter().map(|t| t.id).collect();
+        assert!(!slow_ids.contains(&fast.id));
+        assert!(slow_ids.contains(&slow.id));
+        assert_eq!(tracer.stats().finished, 2);
+        assert_eq!(tracer.stats().slow, 1);
+        assert_eq!(tracer.recent().len(), 2);
+    }
+
+    #[test]
+    fn rings_stay_bounded() {
+        let tracer = Tracer::new(0); // everything is "slow"
+        for _ in 0..(RECENT_CAPACITY + 10) {
+            tracer.begin("query", Instant::now()).finish().unwrap();
+        }
+        assert_eq!(tracer.recent().len(), RECENT_CAPACITY);
+        assert_eq!(tracer.slow().len(), SLOW_CAPACITY);
+    }
+
+    #[test]
+    fn untraced_thread_records_nothing() {
+        let tracer = Tracer::new(1_000_000);
+        record("orphan", 5, &[]);
+        record_event("orphan2", &[]);
+        assert!(clock().is_none());
+        let t = tracer.begin("insert", Instant::now()).finish().unwrap();
+        assert_eq!(t.spans.len(), 1, "only the admission span");
+    }
+
+    #[test]
+    fn span_cap_bounds_trace_memory() {
+        let tracer = Tracer::new(u64::MAX / 2_000);
+        let guard = tracer.begin("query", Instant::now());
+        for _ in 0..(MAX_SPANS + 50) {
+            record("flood", 1, &[]);
+        }
+        let t = guard.finish().unwrap();
+        assert_eq!(t.spans.len(), MAX_SPANS);
+        assert_eq!(t.dropped_spans, 51); // 50 floods + admission pushed first
+    }
+}

@@ -7,6 +7,11 @@
 //! same request set — for both the single [`EdgeIndex`] and the sharded
 //! index (`EDGERAG_TEST_SHARDS` pins the shard counts; CI runs an
 //! explicit `--shards 4` pass).
+//!
+//! `EDGERAG_TEST_TRACE=1` re-runs the bit-equality legs with the
+//! tracing plane armed and every handled query carrying an active
+//! trace, proving the span record sites are purely observational (CI
+//! runs this leg explicitly).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -16,6 +21,30 @@ use edgerag::coordinator::builder::SystemBuilder;
 use edgerag::coordinator::Engine;
 use edgerag::sched::{BatchScheduler, SchedConfig};
 use edgerag::testutil::shared_compute;
+use edgerag::trace::Tracer;
+
+/// The `EDGERAG_TEST_TRACE=1` tracing plane: arming it turns every span
+/// record site live, and [`traced`] gives each handled query an active
+/// thread-local trace — the bit-equality assertions must hold anyway.
+fn test_tracer() -> Option<Arc<Tracer>> {
+    match std::env::var("EDGERAG_TEST_TRACE") {
+        Ok(v) if v == "1" => Some(Tracer::new(0)),
+        _ => None,
+    }
+}
+
+/// Run one query under an active trace when the trace leg is on.
+fn traced<T>(tracer: &Option<Arc<Tracer>>, f: impl FnOnce() -> T) -> T {
+    match tracer {
+        Some(tr) => {
+            let guard = tr.begin("query", Instant::now());
+            let out = f();
+            let _ = guard.finish();
+            out
+        }
+        None => f(),
+    }
+}
 
 fn builder(shards: usize, tag: &str) -> SystemBuilder {
     let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
@@ -90,14 +119,15 @@ fn forced_batching_is_bit_identical_sequentially() {
     // proj/sim kernels alone (padded batches), which must reproduce the
     // unbatched path bit for bit — hits, scores, probes, events, modeled
     // latency, and the admitted cache set.
+    let tracer = test_tracer();
     for shards in shard_counts() {
         let (_b1, unbatched, queries) = build_engine(shards, &format!("seq-u{shards}"));
         let (_b2, batched_engine, _) = build_engine(shards, &format!("seq-b{shards}"));
         let sched = BatchScheduler::new(batched_engine.clone(), sched_cfg(false));
 
         for (i, q) in queries.iter().enumerate() {
-            let a = unbatched.handle(q).unwrap();
-            let b = sched.handle(q).unwrap();
+            let a = traced(&tracer, || unbatched.handle(q)).unwrap();
+            let b = traced(&tracer, || sched.handle(q)).unwrap();
             assert_eq!(a.hits, b.hits, "shards={shards} query {i} hits");
             assert_eq!(a.retrieval, b.retrieval, "shards={shards} query {i} retrieval");
             assert_eq!(a.ttft, b.ttft, "shards={shards} query {i} ttft");
@@ -139,11 +169,12 @@ fn concurrent_batched_load_matches_serial_results() {
     if !reference_backend() {
         return;
     }
+    let tracer = test_tracer();
     for shards in shard_counts() {
         let (_b1, serial_engine, queries) = build_engine(shards, &format!("conc-s{shards}"));
         let serial: Vec<Vec<(u32, f32)>> = queries
             .iter()
-            .map(|q| serial_engine.handle(q).unwrap().hits)
+            .map(|q| traced(&tracer, || serial_engine.handle(q)).unwrap().hits)
             .collect();
 
         let (_b2, engine, _) = build_engine(shards, &format!("conc-b{shards}"));
@@ -154,10 +185,11 @@ fn concurrent_batched_load_matches_serial_results() {
                 let sched = &sched;
                 let queries = &queries;
                 let serial = &serial;
+                let tracer = &tracer;
                 scope.spawn(move || {
                     for round in 0..passes {
                         for (i, q) in queries.iter().enumerate() {
-                            let out = sched.handle(q).unwrap();
+                            let out = traced(tracer, || sched.handle(q)).unwrap();
                             assert_eq!(
                                 out.hits, serial[i],
                                 "shards={shards} round {round} query {i}"

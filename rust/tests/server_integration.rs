@@ -82,6 +82,197 @@ fn batched_server_serves_and_reports_stage_stats() {
     }
 }
 
+/// Minimal Prometheus text-exposition parser: `(name, labels, value)`
+/// triples, panicking on any malformed line (bad metric name, missing
+/// value, unterminated label set, or a sample with no preceding
+/// `# TYPE` for its family).
+fn parse_prometheus(body: &str) -> Vec<(String, String, f64)> {
+    let mut typed = HashSet::new();
+    let mut samples = Vec::new();
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let name = rest.split_whitespace().next().expect("bare # TYPE line");
+            typed.insert(name.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let (metric, value) = line
+            .rsplit_once(' ')
+            .unwrap_or_else(|| panic!("no value on line: {line}"));
+        let value: f64 = value
+            .parse()
+            .unwrap_or_else(|_| panic!("bad sample value: {line}"));
+        let (name, labels) = match metric.split_once('{') {
+            Some((n, l)) => {
+                assert!(l.ends_with('}'), "unterminated label set: {line}");
+                (n.to_string(), l[..l.len() - 1].to_string())
+            }
+            None => (metric.to_string(), String::new()),
+        };
+        assert!(
+            !name.is_empty()
+                && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "bad metric name: {line}"
+        );
+        let family = name
+            .trim_end_matches("_bucket")
+            .trim_end_matches("_sum")
+            .trim_end_matches("_count");
+        assert!(
+            typed.contains(&name) || typed.contains(family),
+            "sample before its # TYPE line: {line}"
+        );
+        samples.push((name, labels, value));
+    }
+    samples
+}
+
+#[test]
+fn traced_server_exposes_span_trees_and_prometheus_metrics() {
+    // The tracing-plane acceptance test: a traced query's span tree
+    // covers admission, embedding, the search (per-shard walks + cache
+    // outcome) and prefill; a traced insert shows the WAL append; the
+    // `metrics` op renders parseable Prometheus text.
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    b.options.state_dir =
+        std::env::temp_dir().join(format!("edgerag-traceint-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&b.options.state_dir);
+    b.retrieval.nprobe = 4;
+    b.retrieval.batching = true;
+    b.retrieval.trace = true;
+    b.retrieval.slow_query_us = 0; // every request crosses the slow threshold
+    b.retrieval.wal = true;
+    b.options.wal_dir = Some(b.options.state_dir.join("wal"));
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let pipeline = b.pipeline(&built, IndexKind::EdgeRag).unwrap();
+    let server =
+        Server::bind_with_retrieval("127.0.0.1:0", pipeline, b.embedder(), 4, &b.retrieval)
+            .unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || server.run().unwrap());
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+
+    // A traced query stamps a resolvable trace id into its response…
+    let resp = c.query("traced query c1 t0w1").unwrap();
+    let qid = resp
+        .get("trace_id")
+        .and_then(|v| v.as_u64())
+        .unwrap_or_else(|| panic!("query response missing trace_id: {resp}"));
+    let qt = c
+        .call(&Value::object(vec![
+            ("op", Value::str("trace")),
+            ("id", Value::num(qid as f64)),
+        ]))
+        .unwrap();
+    assert_eq!(qt.get("id").and_then(|v| v.as_u64()), Some(qid), "{qt}");
+    let span_names = |t: &Value| -> Vec<String> {
+        t.get("spans")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|s| s.get("name").unwrap().as_str().unwrap().to_string())
+            .collect()
+    };
+    let names = span_names(&qt);
+    // …whose span tree covers the whole pipeline. A lone query rides the
+    // scheduler bypass (inline embedding); under load the same slots are
+    // filled by `embed.wait`/`embed.exec` with batch-width attribution.
+    for required in [
+        "admission",
+        "search",
+        "shard.walk",
+        "cache.outcome",
+        "chunk_fetch",
+        "prefill",
+        "commit",
+    ] {
+        assert!(names.iter().any(|n| n == required), "span `{required}` missing: {names:?}");
+    }
+    assert!(
+        names.iter().any(|n| n == "embed.exec" || n == "embed.inline"),
+        "no embedding span: {names:?}"
+    );
+
+    // A traced insert shows the index mutation and the WAL append.
+    let ins = c
+        .call(&Value::object(vec![
+            ("op", Value::str("insert")),
+            ("text", Value::str("traced insert marker vwxyq")),
+        ]))
+        .unwrap();
+    let iid = ins
+        .get("trace_id")
+        .and_then(|v| v.as_u64())
+        .unwrap_or_else(|| panic!("insert response missing trace_id: {ins}"));
+    let it = c
+        .call(&Value::object(vec![
+            ("op", Value::str("trace")),
+            ("id", Value::num(iid as f64)),
+        ]))
+        .unwrap();
+    let inames = span_names(&it);
+    for required in ["admission", "insert.apply", "wal.append"] {
+        assert!(
+            inames.iter().any(|n| n == required),
+            "insert span `{required}` missing: {inames:?}"
+        );
+    }
+
+    // The ring listing sees both; threshold 0 fills the slow ring too.
+    let listing = c.call(&Value::object(vec![("op", Value::str("trace"))])).unwrap();
+    assert_eq!(listing.get("slow_threshold_us").and_then(|v| v.as_u64()), Some(0));
+    assert!(!listing.get("recent").unwrap().as_array().unwrap().is_empty());
+    assert!(!listing.get("slow").unwrap().as_array().unwrap().is_empty());
+
+    // `stats` exposes the WAL activity block.
+    let stats = c.call(&Value::object(vec![("op", Value::str("stats"))])).unwrap();
+    let wal = stats
+        .get("wal")
+        .unwrap_or_else(|| panic!("stats missing wal block: {stats}"));
+    assert!(
+        wal.get("frames_appended").and_then(|v| v.as_u64()).unwrap() >= 1,
+        "{wal}"
+    );
+
+    // `metrics` renders valid Prometheus text exposition.
+    let met = c.call(&Value::object(vec![("op", Value::str("metrics"))])).unwrap();
+    let body = met.get("body").unwrap().as_str().unwrap();
+    let samples = parse_prometheus(body);
+    let sample = |name: &str, label_frag: &str| -> f64 {
+        samples
+            .iter()
+            .find(|(n, l, _)| n == name && (label_frag.is_empty() || l.contains(label_frag)))
+            .map(|&(_, _, v)| v)
+            .unwrap_or_else(|| panic!("metric `{name}` ({label_frag:?}) missing"))
+    };
+    assert!(sample("edgerag_queries_total", "") >= 1.0);
+    assert!(sample("edgerag_wal_frames_appended_total", "") >= 1.0);
+    assert!(sample("edgerag_sched_requests_total", "outcome=\"submitted\"") >= 1.0);
+    assert!(sample("edgerag_traces_total", "state=\"finished\"") >= 2.0);
+    // Histogram consistency: buckets cumulative, +Inf equals _count.
+    for family in ["edgerag_retrieval_latency_seconds", "edgerag_ttft_latency_seconds"] {
+        let buckets: Vec<f64> = samples
+            .iter()
+            .filter(|(n, _, _)| n == &format!("{family}_bucket"))
+            .map(|&(_, _, v)| v)
+            .collect();
+        assert!(!buckets.is_empty(), "{family} has no buckets");
+        assert!(
+            buckets.windows(2).all(|w| w[0] <= w[1]),
+            "{family} buckets not cumulative: {buckets:?}"
+        );
+        assert_eq!(*buckets.last().unwrap(), sample(&format!("{family}_count"), ""));
+        assert!(sample(&format!("{family}_sum"), "") > 0.0);
+    }
+}
+
 #[test]
 fn full_protocol_roundtrip() {
     let (addr, corpus_len) = spawn_server();
