@@ -54,17 +54,17 @@ pub fn smoke() -> bool {
 }
 
 /// Where the recorded trajectory goes: `$EDGERAG_BENCH_OUT` if set, else
-/// `BENCH_8.json` in the current directory.
+/// `BENCH_9.json` in the current directory.
 #[allow(dead_code)]
 pub fn bench_out_path() -> std::path::PathBuf {
     std::env::var("EDGERAG_BENCH_OUT")
         .map(Into::into)
-        .unwrap_or_else(|_| "BENCH_8.json".into())
+        .unwrap_or_else(|_| "BENCH_9.json".into())
 }
 
 /// Record one section of the machine-readable bench trajectory
 /// (`edgerag-bench/v1`, see README). Read-modify-write so the two bench
-/// binaries compose into a single `BENCH_8.json`: each call replaces its
+/// binaries compose into a single `BENCH_9.json`: each call replaces its
 /// own section and leaves the others intact. Validate the result with
 /// `edgerag bench-validate`.
 #[allow(dead_code)]
@@ -80,7 +80,7 @@ pub fn bench_record(section: &str, value: edgerag::json::Value) {
         _ => Default::default(),
     };
     map.insert("schema".into(), Value::str("edgerag-bench/v1"));
-    map.insert("pr".into(), Value::num(8.0));
+    map.insert("pr".into(), Value::num(9.0));
     map.insert(section.into(), value);
     std::fs::write(&path, Value::Object(map).pretty()).expect("write bench trajectory");
     eprintln!("[bench] recorded section `{section}` -> {}", path.display());

@@ -3,15 +3,18 @@
 //! shard-count sweep (`shards` ∈ {1, 4, 8}) at a fixed client count,
 //! then a cross-query batching sweep (scheduler off vs on) at ≥8
 //! clients, then an executor-pool sweep (`--compute-threads` ∈
-//! {1, 2, 4}), then a tracing sweep (the query-scoped tracing plane
-//! dark vs armed — overhead must stay within a few percent), then a
-//! skewed-placement rebalance sweep (one shard seeded with every
-//! cluster; spread before/after bounded rounds).
+//! {1, 2, 4}), then a connection-scaling sweep over real TCP (the
+//! thread-per-connection front end vs the event-driven reactor at
+//! 1/8/64 persistent connections), then a tracing sweep (the
+//! query-scoped tracing plane dark vs armed — overhead must stay
+//! within a few percent), then a skewed-placement rebalance sweep (one
+//! shard seeded with every cluster; spread before/after bounded
+//! rounds).
 //!
 //!     cargo bench --bench throughput_scaling [-- --limit N | --smoke]
 //!
 //! Each sweep records qps + per-request p50/p95/p99 wall latency into
-//! the machine-readable trajectory (`BENCH_8.json`, section
+//! the machine-readable trajectory (`BENCH_9.json`, section
 //! `throughput_scaling`) — validate with `edgerag bench-validate`.
 //!
 //! Before the read-parallel refactor every request serialized on a
@@ -126,6 +129,51 @@ where
 /// Drive against the shared engine directly (the unbatched path).
 fn drive(engine: &Engine, queries: &[String], threads: usize, passes: usize) -> Driven {
     drive_with(|q| engine.handle(q), queries, threads, passes)
+}
+
+/// Drive a running TCP server from `conns` persistent keep-alive
+/// connections, one blocking client thread each, sharing a fixed total
+/// query budget. Real sockets, real line protocol — this is the sweep
+/// the two front ends (thread-per-connection vs reactor) are compared
+/// on.
+fn drive_tcp(addr: &std::net::SocketAddr, queries: &[String], conns: usize, total: usize) -> Driven {
+    let next = AtomicUsize::new(0);
+    let served = AtomicU64::new(0);
+    let lat_ns: Mutex<Vec<u64>> = Mutex::new(Vec::with_capacity(total));
+    let start = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..conns {
+            let next = &next;
+            let served = &served;
+            let lat_ns = &lat_ns;
+            s.spawn(move || {
+                let mut c = edgerag::server::Client::connect(&addr.to_string())
+                    .expect("connect bench client");
+                let mut local = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= total {
+                        break;
+                    }
+                    let t = std::time::Instant::now();
+                    let resp = c.query(&queries[i % queries.len()]).unwrap();
+                    assert!(resp.get("hits").is_some(), "query failed over the wire: {resp}");
+                    local.push(t.elapsed().as_nanos() as u64);
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+                lat_ns.lock().unwrap().extend_from_slice(&local);
+            });
+        }
+    });
+    let secs = start.elapsed().as_secs_f64();
+    let mut lat_ns = lat_ns.into_inner().unwrap();
+    lat_ns.sort_unstable();
+    Driven {
+        secs,
+        served: served.load(Ordering::Relaxed),
+        wall_us: 0, // modeled device time is not on the wire per-hit here
+        lat_ns,
+    }
 }
 
 fn main() {
@@ -335,6 +383,78 @@ fn main() {
         ]));
     }
 
+    // ---- connection sweep: real TCP, thread-per-connection vs reactor ----
+    // Identical engine configuration behind both front ends, so the
+    // delta is what the serving layer itself adds. The threaded
+    // baseline parks one handler thread (plus a blocking reply channel
+    // per request) on every connection; the reactor multiplexes every
+    // socket onto one poll loop and a fixed worker pool — q/s should
+    // hold or improve as connections grow while its thread count stays
+    // flat.
+    let conn_counts: &[usize] = if common::smoke() { &[1, 8] } else { &[1, 8, 64] };
+    let total = queries.len() * passes;
+    println!("\n== connection sweep: real TCP, {total} queries per point ==");
+    let mut conn_rows: Vec<json::Value> = Vec::new();
+    for mode in ["threaded", "reactor"] {
+        let mut qps_one_conn = 0.0;
+        for &conns in conn_counts {
+            let engine = ctx
+                .builder
+                .pipeline(&built, IndexKind::EdgeRag)
+                .expect("build engine");
+            for q in &queries {
+                engine.handle(q).unwrap(); // warm identically
+            }
+            let server = edgerag::server::Server::bind_with_workers(
+                "127.0.0.1:0",
+                engine,
+                ctx.builder.embedder(),
+                4,
+            )
+            .expect("bind bench server");
+            let addr = server.local_addr().expect("bench server addr");
+            let reactor = mode == "reactor";
+            let running = std::thread::spawn(move || {
+                if reactor {
+                    server.run()
+                } else {
+                    server.run_threaded()
+                }
+            });
+            let d = drive_tcp(&addr, &queries, conns, total);
+            let mut shut = edgerag::server::Client::connect(&addr.to_string())
+                .expect("connect for shutdown");
+            shut.call(&json::Value::object(vec![("op", json::Value::str("shutdown"))]))
+                .expect("shutdown op");
+            running.join().expect("server thread").expect("server run");
+            if conns == conn_counts[0] {
+                qps_one_conn = d.qps();
+            }
+            println!(
+                "{mode:8} conns={conns:3}: {} queries in {:.3}s → {:8.1} q/s \
+                 (vs {} conn(s) ×{:.2}, p50/p95/p99 {:.0}/{:.0}/{:.0}µs)",
+                d.served,
+                d.secs,
+                d.qps(),
+                conn_counts[0],
+                d.qps() / qps_one_conn,
+                d.p_us(50.0),
+                d.p_us(95.0),
+                d.p_us(99.0)
+            );
+            conn_rows.push(d.row(vec![
+                ("mode", json::Value::str(mode)),
+                ("connections", conns.into()),
+            ]));
+        }
+    }
+    println!(
+        "acceptance: reactor q/s holds as connections grow while idle \
+         connections cost a slab slot + buffers instead of a parked \
+         handler thread (tests/server_integration.rs pins the no-thread \
+         property at 200 idle connections)"
+    );
+
     // ---- tracing sweep: the query-scoped tracing plane, dark vs armed ----
     // Runs LAST among the recorded sweeps: the first `Tracer::new` arms
     // the process-global enable flag permanently, so the off row (and
@@ -415,6 +535,7 @@ fn main() {
             ("shard_sweep", json::Value::array(shard_rows)),
             ("batching_sweep", json::Value::array(batching_rows)),
             ("executor_pool", json::Value::array(pool_rows)),
+            ("connection_sweep", json::Value::array(conn_rows)),
             ("tracing_sweep", json::Value::array(tracing_rows)),
         ]),
     );

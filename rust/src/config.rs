@@ -528,6 +528,15 @@ pub struct RetrievalConfig {
     /// always captured into the slow-query ring (the sampling ring wraps
     /// much sooner). Only meaningful with `trace`.
     pub slow_query_us: u64,
+    /// Per-query deadline in µs, stamped at server admission. A query
+    /// whose deadline has already expired when it is dequeued — by a
+    /// server worker, or inside a batch stage — is shed with a distinct
+    /// "deadline exceeded" error instead of executed, and the batch
+    /// scheduler closes partial batches no later than their earliest
+    /// rider's deadline. `0` (the default) derives the deadline as
+    /// `4 × slow_query_us`; a very large value effectively disables
+    /// shedding (the stamp saturates and never expires).
+    pub deadline_us: u64,
 }
 
 /// One shard per available core, clamped to a sensible serving range —
@@ -561,6 +570,7 @@ impl Default for RetrievalConfig {
             snapshot_interval_ops: 512,
             trace: false,
             slow_query_us: 100_000,
+            deadline_us: 0,
         }
     }
 }
@@ -570,6 +580,17 @@ impl RetrievalConfig {
     pub fn resolved_shards(&self) -> usize {
         match self.shards {
             0 => default_shards(),
+            n => n,
+        }
+    }
+
+    /// The effective per-query deadline in µs: `deadline_us` itself, or
+    /// `4 × slow_query_us` when 0 — a query four times over the slow
+    /// threshold is past saving, so shedding it frees capacity for
+    /// queries that can still meet their latency target.
+    pub fn resolved_deadline_us(&self) -> u64 {
+        match self.deadline_us {
+            0 => self.slow_query_us.saturating_mul(4),
             n => n,
         }
     }
@@ -604,6 +625,7 @@ impl RetrievalConfig {
             ),
             ("trace", self.trace.into()),
             ("slow_query_us", self.slow_query_us.into()),
+            ("deadline_us", self.deadline_us.into()),
         ])
     }
 
@@ -677,6 +699,11 @@ impl RetrievalConfig {
             slow_query_us: match v.get("slow_query_us") {
                 Some(n) => n.as_u64().context("slow_query_us")?,
                 None => 100_000,
+            },
+            // Optional for configs written before deadline-aware serving.
+            deadline_us: match v.get("deadline_us") {
+                Some(n) => n.as_u64().context("deadline_us")?,
+                None => 0,
             },
         })
     }

@@ -152,7 +152,7 @@ COMMANDS
           [--max-migrations N] [--compute-threads N]
           [--wal true|false] [--wal-dir PATH]
           [--snapshot-interval-ops N]
-          [--trace true|false] [--slow-query-us U]
+          [--trace true|false] [--slow-query-us U] [--deadline-us U]
           [--transformer] [--real-prefill] [--live-generation]
           (--compute-threads 0 = auto, one PJRT executor per core;
            ignored by the inline reference backend)
@@ -169,7 +169,11 @@ COMMANDS
            --trace true — the serve default — captures per-query span
            trees into bounded rings, queryable via {{\"op\":\"trace\"}};
            queries slower than --slow-query-us land in the always-kept
-           slow ring)
+           slow ring;
+           --deadline-us 0 — the default — derives each query's deadline
+           as 4 × slow-query-us; a query still queued when its deadline
+           expires is shed with a \"deadline exceeded\" error instead of
+           executed, and batch stages close early for expiring riders)
   query   --text \"...\" [--port P]
   stats   [--port P]
   bench   <table2|fig3|fig4|fig5|fig7|fig10|fig12|fig13|breakdown|
@@ -264,6 +268,13 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(us) = args.get("slow-query-us") {
         builder.retrieval.slow_query_us = us.parse().context("bad --slow-query-us")?;
     }
+    // Per-query deadline budget: 0 (the default) derives it from the
+    // slow-query threshold (4 × slow_query_us) so overloaded servers
+    // shed stale queries instead of executing work nobody is waiting
+    // for. An explicit huge value effectively disables shedding.
+    if let Some(us) = args.get("deadline-us") {
+        builder.retrieval.deadline_us = us.parse().context("bad --deadline-us")?;
+    }
     let shards = builder.retrieval.resolved_shards();
     eprintln!("building dataset `{}` ({} chunks)…", dataset.name, dataset.n_chunks);
     let built = builder.build_dataset(&dataset)?;
@@ -278,14 +289,15 @@ fn serve(args: &Args) -> Result<()> {
     )?;
     eprintln!(
         "serving `{}` with {} index on {addr} (device: {}, {workers} workers, {shards} shard(s), \
-         batching {}, rebalance {}, wal {}, trace {})",
+         batching {}, rebalance {}, wal {}, trace {}, deadline {}µs)",
         dataset.name,
         kind.name(),
         builder.device.name,
         if builder.retrieval.batching { "on" } else { "off" },
         if builder.retrieval.rebalance { "on" } else { "off" },
         if builder.retrieval.wal { "on" } else { "off" },
-        if builder.retrieval.trace { "on" } else { "off" }
+        if builder.retrieval.trace { "on" } else { "off" },
+        builder.retrieval.resolved_deadline_us()
     );
     server.run()
 }
@@ -371,7 +383,7 @@ fn bench(args: &Args) -> Result<()> {
 /// by the CI `bench-smoke` job after running both benches, and by hand
 /// before committing an updated trajectory.
 fn bench_validate(args: &Args) -> Result<()> {
-    let path = args.get("file").unwrap_or("BENCH_8.json");
+    let path = args.get("file").unwrap_or("BENCH_9.json");
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let v = edgerag::json::parse(&text).with_context(|| format!("parsing {path}"))?;
 
@@ -414,7 +426,13 @@ fn bench_validate(args: &Args) -> Result<()> {
     }
 
     let tput = v.req("throughput_scaling")?;
-    for sweep in ["shard_sweep", "batching_sweep", "executor_pool", "tracing_sweep"] {
+    for sweep in [
+        "shard_sweep",
+        "batching_sweep",
+        "executor_pool",
+        "tracing_sweep",
+        "connection_sweep",
+    ] {
         let rows = tput
             .req(sweep)?
             .as_array()

@@ -6,14 +6,28 @@
 //! A batch closes when the first of these happens:
 //!
 //! * it reaches the stage's **width** (the kernel's native batch size);
-//! * the **deadline** expires — the oldest item has waited
-//!   `batch_window` since it was enqueued. Under continuous load the
-//!   oldest item typically queued while the previous batch executed, so
-//!   its deadline is already (nearly) spent and the batcher drains
-//!   whatever is queued and executes immediately — the window only
-//!   *delays* sparse traffic, it never throttles a saturated stage;
+//! * the **earliest rider deadline** expires. Each item's close instant
+//!   is `enqueued + batch_window`, pulled *earlier* when the item
+//!   carries a query deadline tighter than its window
+//!   ([`Batcher::submit_at`]); the batch executes at the minimum over
+//!   its riders, so one urgent query drags the whole partial batch
+//!   forward instead of waiting out the fixed window. Under continuous
+//!   load the oldest item typically queued while the previous batch
+//!   executed, so its close instant is already (nearly) spent and the
+//!   batcher drains whatever is queued and executes immediately — the
+//!   window only *delays* sparse traffic, it never throttles a
+//!   saturated stage;
 //! * the stage shuts down — queued items are **flushed** (executed, not
 //!   errored) so a clean shutdown completes in-flight work.
+//!
+//! ## Deadline shedding
+//!
+//! An item whose query deadline has **already expired when the batcher
+//! dequeues it** is shed: its caller gets a distinct "deadline exceeded"
+//! error immediately ([`BatchClose::Shed`], counted in
+//! [`StageSnapshot::shed`]) and the fused kernel never pays for work
+//! nobody is waiting on. Items without a deadline (the library default)
+//! are never shed.
 //!
 //! Callers block on a per-item completion channel; the batcher thread is
 //! the only place the fused executor runs. Executors must not take any
@@ -36,6 +50,7 @@ pub(crate) struct StageCounters {
     batched_items: AtomicU64,
     full_width: AtomicU64,
     window_expired: AtomicU64,
+    shed: AtomicU64,
 }
 
 /// A point-in-time view of one stage's counters.
@@ -51,6 +66,9 @@ pub struct StageSnapshot {
     pub full_width: u64,
     /// Batches that closed because the deadline expired.
     pub window_expired: u64,
+    /// Items shed at dequeue because their query deadline had already
+    /// expired (they never reached a fused execution).
+    pub shed: u64,
 }
 
 impl StageSnapshot {
@@ -78,6 +96,9 @@ pub enum BatchClose {
     /// Never batched: executed inline by the caller (stage refused or
     /// the scheduler bypassed batching).
     Inline,
+    /// Never executed: the item's query deadline had already expired
+    /// when the batcher dequeued it.
+    Shed,
 }
 
 impl BatchClose {
@@ -89,6 +110,7 @@ impl BatchClose {
             BatchClose::Drain => "drain",
             BatchClose::Shutdown => "shutdown",
             BatchClose::Inline => "inline",
+            BatchClose::Shed => "shed",
         }
     }
 }
@@ -123,6 +145,9 @@ impl BatchInfo {
 struct Item<I, O> {
     input: I,
     enqueued: Instant,
+    /// The rider's query deadline: pulls the batch close earlier than
+    /// the window and sheds the item if already expired at dequeue.
+    deadline: Option<Instant>,
     reply: mpsc::Sender<(Result<O>, BatchInfo)>,
 }
 
@@ -170,6 +195,14 @@ impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
     /// Submit one item and block until its batch has executed. A shut
     /// stage refuses and hands the input back for inline execution.
     pub(crate) fn submit(&self, input: I) -> Submit<O, I> {
+        self.submit_at(input, None)
+    }
+
+    /// [`Batcher::submit`] with a query deadline: the batch holding this
+    /// item closes no later than `deadline`, and if the deadline has
+    /// already expired when the batcher dequeues the item it is shed
+    /// with a "deadline exceeded" error instead of executed.
+    pub(crate) fn submit_at(&self, input: I, deadline: Option<Instant>) -> Submit<O, I> {
         self.counters.submitted.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
         {
@@ -180,6 +213,7 @@ impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
             if let Err(e) = tx.send(Item {
                 input,
                 enqueued: Instant::now(),
+                deadline,
                 reply,
             }) {
                 return Submit::Refused(e.0.input);
@@ -207,6 +241,7 @@ impl<I: Send + 'static, O: Send + 'static> Batcher<I, O> {
             batched_items: self.counters.batched_items.load(Ordering::Relaxed),
             full_width: self.counters.full_width.load(Ordering::Relaxed),
             window_expired: self.counters.window_expired.load(Ordering::Relaxed),
+            shed: self.counters.shed.load(Ordering::Relaxed),
         }
     }
 }
@@ -232,12 +267,13 @@ fn batch_loop<I, O, F>(
             Ok(item) => item,
             Err(_) => break, // stage shut down with an empty queue
         };
-        let mut batch = vec![first];
+        let mut batch = Vec::with_capacity(width);
+        admit_or_shed(first, &mut batch, &counters);
         // Greedy drain: take whatever queued while the previous batch
         // executed.
         while batch.len() < width {
             match rx.try_recv() {
-                Ok(item) => batch.push(item),
+                Ok(item) => admit_or_shed(item, &mut batch, &counters),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     open = false;
@@ -245,29 +281,32 @@ fn batch_loop<I, O, F>(
                 }
             }
         }
-        // Deadline: wait for stragglers only until the oldest item has
-        // been queued for `window`.
+        // Close instant: wait for stragglers only until the earliest
+        // rider close — `enqueued + window`, pulled forward by any rider
+        // whose query deadline is tighter than its window.
         let mut close = if batch.len() >= width {
             BatchClose::Full
         } else if !open {
             BatchClose::Drain
         } else {
-            BatchClose::Window // zero window: the deadline is already spent
+            BatchClose::Window // zero window: the close instant is already spent
         };
-        if open && batch.len() < width && !window.is_zero() {
-            let deadline = batch[0].enqueued + window;
+        if open && !batch.is_empty() && batch.len() < width && !window.is_zero() {
             loop {
-                let now = Instant::now();
                 if batch.len() >= width {
                     close = BatchClose::Full;
                     break;
                 }
+                // Recomputed every admission: a late rider with a tight
+                // deadline pulls the whole partial batch forward.
+                let deadline = earliest_close(&batch, window);
+                let now = Instant::now();
                 if now >= deadline {
                     close = BatchClose::Window;
                     break;
                 }
                 match rx.recv_timeout(deadline - now) {
-                    Ok(item) => batch.push(item),
+                    Ok(item) => admit_or_shed(item, &mut batch, &counters),
                     Err(mpsc::RecvTimeoutError::Timeout) => {
                         counters.window_expired.fetch_add(1, Ordering::Relaxed);
                         close = BatchClose::Window;
@@ -281,23 +320,72 @@ fn batch_loop<I, O, F>(
                 }
             }
         }
+        if batch.is_empty() {
+            continue; // everything dequeued this round was shed
+        }
         run_batch(batch, width, &exec, &counters, close);
     }
     // Clean shutdown with items queued: flush the remainder so every
     // blocked caller completes.
     loop {
         let mut batch = Vec::new();
+        let mut drained_any = false;
         while batch.len() < width {
             match rx.try_recv() {
-                Ok(item) => batch.push(item),
+                Ok(item) => {
+                    drained_any = true;
+                    admit_or_shed(item, &mut batch, &counters);
+                }
                 Err(_) => break,
             }
         }
-        if batch.is_empty() {
+        if !batch.is_empty() {
+            run_batch(batch, width, &exec, &counters, BatchClose::Shutdown);
+        } else if !drained_any {
             break;
         }
-        run_batch(batch, width, &exec, &counters, BatchClose::Shutdown);
     }
+}
+
+/// The earliest instant any rider requires the batch to close:
+/// `min(enqueued + window, query deadline)` over the batch. Only called
+/// on non-empty batches.
+fn earliest_close<I, O>(batch: &[Item<I, O>], window: Duration) -> Instant {
+    batch
+        .iter()
+        .map(|item| {
+            let windowed = item.enqueued + window;
+            match item.deadline {
+                Some(d) if d < windowed => d,
+                _ => windowed,
+            }
+        })
+        .min()
+        .expect("earliest_close on a non-empty batch")
+}
+
+/// Admit one dequeued item into the forming batch, or shed it with a
+/// "deadline exceeded" error if its query deadline has already expired.
+fn admit_or_shed<I, O>(item: Item<I, O>, batch: &mut Vec<Item<I, O>>, counters: &StageCounters) {
+    if let Some(d) = item.deadline {
+        if Instant::now() >= d {
+            counters.shed.fetch_add(1, Ordering::Relaxed);
+            let info = BatchInfo {
+                width: 1,
+                close: BatchClose::Shed,
+                exec_ns: 0,
+                wait_ns: item.enqueued.elapsed().as_nanos() as u64,
+            };
+            let _ = item.reply.send((
+                Err(anyhow::anyhow!(
+                    "deadline exceeded: work item expired in the stage queue before its batch dequeued"
+                )),
+                info,
+            ));
+            return;
+        }
+    }
+    batch.push(item);
 }
 
 fn run_batch<I, O, F>(
@@ -440,6 +528,47 @@ mod tests {
         let (_, info) = must_info(b.submit(3));
         assert_eq!(info.width, 1);
         assert_eq!(info.close, BatchClose::Full);
+    }
+
+    #[test]
+    fn expired_deadline_sheds_at_dequeue() {
+        let b = doubler(32, Duration::from_millis(20));
+        // A deadline already in the past: the batcher must shed the item
+        // with a distinct error, never running the executor for it.
+        let past = Instant::now() - Duration::from_millis(5);
+        match b.submit_at(7, Some(past)) {
+            Submit::Done(result, info) => {
+                let err = result.unwrap_err();
+                assert!(
+                    format!("{err:#}").contains("deadline exceeded"),
+                    "unexpected error: {err:#}"
+                );
+                assert_eq!(info.close, BatchClose::Shed);
+            }
+            Submit::Refused(_) => panic!("stage unexpectedly shut down"),
+        }
+        let s = b.snapshot();
+        assert_eq!(s.shed, 1);
+        assert_eq!(s.batches, 0, "shed items never reach a fused execution");
+        // The stage stays healthy: a deadline-free item still executes.
+        assert_eq!(must(b.submit(21)), 42);
+    }
+
+    #[test]
+    fn tight_rider_deadline_closes_batch_before_window() {
+        // A 30s window would hold a lone rider forever; its 50ms query
+        // deadline must pull the close forward.
+        let b = doubler(32, Duration::from_secs(30));
+        let start = Instant::now();
+        let deadline = Instant::now() + Duration::from_millis(50);
+        assert_eq!(must(b.submit_at(21, Some(deadline))), 42);
+        assert!(
+            start.elapsed() < Duration::from_secs(10),
+            "the rider deadline must close the batch, not the 30s window"
+        );
+        let s = b.snapshot();
+        assert_eq!(s.shed, 0, "the item was live at dequeue");
+        assert_eq!(s.batched_items, 1);
     }
 
     #[test]

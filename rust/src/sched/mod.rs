@@ -42,6 +42,13 @@
 //! * **Backpressure**: admissions beyond `max_inflight` are rejected
 //!   immediately (the error reaches the client as a normal protocol
 //!   error), bounding queue depth and memory.
+//! * **Query deadlines**: a query stamped with a deadline (by the server
+//!   at admission, or via `deadline_us`) pulls its stage batches closed
+//!   no later than that instant — the batch window orders by the
+//!   *earliest rider deadline* — and is shed with a distinct "deadline
+//!   exceeded" error if it expires while queued in a stage, so a
+//!   saturated stage never burns fused-kernel time on answers nobody is
+//!   waiting for.
 //!
 //! ## Equivalence
 //!
@@ -117,6 +124,12 @@ pub struct SchedConfig {
     /// latency under light load). Disabled by the equivalence tests to
     /// force every query through the fused kernels.
     pub bypass: bool,
+    /// Per-query deadline in microseconds, stamped at admission when the
+    /// caller didn't stamp one earlier ([`BatchScheduler::handle_at`]).
+    /// Stage batches close no later than the earliest rider deadline,
+    /// and an item already expired at dequeue is shed with a distinct
+    /// "deadline exceeded" error. 0 = no deadline (library default).
+    pub deadline_us: u64,
 }
 
 impl Default for SchedConfig {
@@ -125,6 +138,7 @@ impl Default for SchedConfig {
             batch_window_us: 200,
             max_inflight: 256,
             bypass: true,
+            deadline_us: 0,
         }
     }
 }
@@ -136,6 +150,7 @@ impl SchedConfig {
             batch_window_us: r.batch_window_us,
             max_inflight: r.max_inflight,
             bypass: true,
+            deadline_us: r.resolved_deadline_us(),
         }
     }
 }
@@ -238,8 +253,27 @@ impl BatchScheduler {
     /// under light load). Results are bit-identical to
     /// [`Engine::handle`].
     pub fn handle(&self, text: &str) -> Result<QueryOutcome> {
+        self.handle_at(text, None)
+    }
+
+    /// [`BatchScheduler::handle`] with an explicit query deadline. The
+    /// server stamps the deadline at admission (so front-end queue time
+    /// counts against it); `None` falls back to `cfg.deadline_us` from
+    /// this call's entry, and 0 means no deadline. Stage batches close
+    /// no later than the earliest rider deadline; an item that expires
+    /// while queued in a stage is shed with a distinct "deadline
+    /// exceeded" error (counted in the stage's `shed` counter) instead
+    /// of executed. Deadline stamping never perturbs the *results* of
+    /// queries that do execute — they stay bit-identical to
+    /// [`Engine::handle`].
+    pub fn handle_at(&self, text: &str, deadline: Option<Instant>) -> Result<QueryOutcome> {
         let wall_start = Instant::now();
         self.submitted.fetch_add(1, Ordering::Relaxed);
+        let deadline = deadline.or_else(|| {
+            (self.cfg.deadline_us > 0)
+                .then(|| wall_start.checked_add(Duration::from_micros(self.cfg.deadline_us)))
+                .flatten()
+        });
         let _permit = self.try_admit()?;
 
         // Lone query: the staged path cannot help (nothing to coalesce
@@ -251,9 +285,9 @@ impl BatchScheduler {
         }
 
         // Stage 1: fused query embedding.
-        let (q, embed_info) = self.embed.embed_one_info(text);
-        let q = q?;
+        let (q, embed_info) = self.embed.embed_one_info_at(text, deadline);
         record_stage_spans("embed.wait", "embed.exec", &embed_info);
+        let q = q?;
 
         // Stage 2: fused centroid probe against the lock-free snapshot.
         // The engine read lease is held only to clone the snapshot Arc,
@@ -261,9 +295,10 @@ impl BatchScheduler {
         let table = { self.engine.index().probe_table() };
         let probe = match table {
             Some(table) => {
-                let (scores, probe_info) = self.probe.scores_info(q.clone(), table.clone());
-                let scores = scores?;
+                let (scores, probe_info) =
+                    self.probe.scores_info_at(q.clone(), table.clone(), deadline);
                 record_stage_spans("probe.wait", "probe.exec", &probe_info);
+                let scores = scores?;
                 Some((table, scores))
             }
             None => None, // flat baseline: no centroid level to batch

@@ -75,9 +75,23 @@ impl EmbedBatcher {
     /// [`BatchInfo`] attribution record (batch width, close reason,
     /// fused-execution and wait times) for trace accounting.
     pub fn embed_texts_info(&self, texts: &[&str]) -> (Result<EmbeddingMatrix>, BatchInfo) {
+        self.embed_texts_info_at(texts, None)
+    }
+
+    /// [`EmbedBatcher::embed_texts_info`] with an optional query
+    /// deadline: the stage closes this rider's batch no later than the
+    /// deadline and sheds the item (distinct "deadline exceeded" error)
+    /// if it is already expired at dequeue. The inline fallback for a
+    /// shut stage runs regardless of deadline — shutdown drains always
+    /// complete.
+    pub fn embed_texts_info_at(
+        &self,
+        texts: &[&str],
+        deadline: Option<Instant>,
+    ) -> (Result<EmbeddingMatrix>, BatchInfo) {
         match self
             .batcher
-            .submit(texts.iter().map(|s| s.to_string()).collect())
+            .submit_at(texts.iter().map(|s| s.to_string()).collect(), deadline)
         {
             Submit::Done(r, info) => (r, info),
             Submit::Refused(owned) => {
@@ -97,7 +111,17 @@ impl EmbedBatcher {
     /// Like [`EmbedBatcher::embed_one`], also returning the batch
     /// attribution record.
     pub fn embed_one_info(&self, text: &str) -> (Result<Vec<f32>>, BatchInfo) {
-        let (r, info) = self.embed_texts_info(&[text]);
+        self.embed_one_info_at(text, None)
+    }
+
+    /// [`EmbedBatcher::embed_one_info`] with an optional query deadline
+    /// (see [`EmbedBatcher::embed_texts_info_at`]).
+    pub fn embed_one_info_at(
+        &self,
+        text: &str,
+        deadline: Option<Instant>,
+    ) -> (Result<Vec<f32>>, BatchInfo) {
+        let (r, info) = self.embed_texts_info_at(&[text], deadline);
         let row = r.and_then(|m| {
             anyhow::ensure!(m.len() == 1, "fused embed returned {} rows for 1 text", m.len());
             Ok(m.row(0).to_vec())
@@ -195,7 +219,19 @@ impl ProbeBatcher {
         query: Vec<f32>,
         table: Arc<ProbeTable>,
     ) -> (Result<Vec<f32>>, BatchInfo) {
-        match self.batcher.submit((query, table)) {
+        self.scores_info_at(query, table, None)
+    }
+
+    /// [`ProbeBatcher::scores_info`] with an optional query deadline:
+    /// the batch closes no later than the deadline, and an item already
+    /// expired at dequeue is shed with a "deadline exceeded" error.
+    pub fn scores_info_at(
+        &self,
+        query: Vec<f32>,
+        table: Arc<ProbeTable>,
+        deadline: Option<Instant>,
+    ) -> (Result<Vec<f32>>, BatchInfo) {
+        match self.batcher.submit_at((query, table), deadline) {
             Submit::Done(r, info) => (r, info),
             Submit::Refused((q, table)) => {
                 let started = Instant::now();

@@ -2,13 +2,33 @@
 //!
 //! ## Concurrency
 //!
-//! The crate cache has no async runtime, so the server is thread-based:
-//! one acceptor + one handler thread per connection, all submitting work
-//! to a fixed **worker pool** (the shared [`crate::pool`] utility) that
-//! executes requests against one shared [`Engine`]. The pool's admission
-//! queue is **bounded** (`max_inflight` from the retrieval config):
-//! submissions beyond workers + queued capacity are rejected immediately
-//! with an "overloaded" error instead of queueing without limit.
+//! The crate has no async runtime, so the front end is an **event-driven
+//! reactor** ([`reactor`], Unix): one thread runs every connection
+//! through a non-blocking `poll(2)` readiness loop and a per-connection
+//! state machine (read buffer → line parse → submit to the bounded
+//! admission queue → pending → write buffer). Requests execute on a
+//! fixed **worker pool** (the shared [`crate::pool`] utility) against
+//! one shared [`Engine`]; workers deliver finished responses through a
+//! completion queue plus a wake pipe — no thread ever parks per
+//! connection or per request, so an idle keep-alive connection costs a
+//! buffer, not a thread. The pool's admission queue is **bounded**
+//! (`max_inflight` from the retrieval config): submissions beyond
+//! workers + queued capacity are rejected immediately with an
+//! "overloaded" error instead of queueing without limit. Non-Unix hosts
+//! (and the `connection_sweep` benchmark baseline) fall back to the
+//! PR 1-era thread-per-connection front end ([`Server::run_threaded`]).
+//!
+//! ## Deadlines
+//!
+//! Every query is stamped with a deadline at admission
+//! (`retrieval.deadline_us`, default `4 × slow_query_us` — the
+//! `--deadline-us` serve knob). A query still queued — in the worker
+//! pool or inside a batch stage — when its deadline expires is **shed**
+//! with a distinct "deadline exceeded" error instead of executed, and
+//! the batch scheduler closes partial batches no later than their
+//! earliest rider's deadline. Sheds are counted server-side
+//! (`deadline_shed`) and per stage (`shed`). Queries that do execute
+//! return bit-identical results whether or not deadlines are armed.
 //!
 //! With batching enabled (the `serve` default; `--batching false` or
 //! `RetrievalConfig::batching = false` disables it), queries flow
@@ -49,12 +69,15 @@
 //! Shutdown dispatches on the *parsed* `op` — a query whose text merely
 //! contains the word "shutdown" is served like any other query.
 
+#[cfg(unix)]
+mod reactor;
+
 use std::fmt::Write as _;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -66,7 +89,7 @@ use crate::json::{self, Value};
 use crate::pool::{PoolHandle, SubmitError, WorkerPool};
 use crate::sched::{BatchScheduler, SchedConfig, StageSnapshot};
 use crate::simtime::Component;
-use crate::trace::{QueryTrace, TagValue, Tracer};
+use crate::trace::{self, QueryTrace, TagValue, Tracer};
 
 // ---------------------------------------------------------------------------
 // Server
@@ -84,6 +107,17 @@ pub struct ServerState {
     /// (one relaxed load per site).
     tracer: Option<Arc<Tracer>>,
     running: AtomicBool,
+    /// Per-query deadline stamped at admission; None when the resolved
+    /// deadline is 0 or too large to represent (deadlines disabled).
+    deadline: Option<Duration>,
+    /// The resolved deadline in µs (0 = disabled), for stats/errors.
+    deadline_us: u64,
+    /// Requests turned away because the admission queue was full —
+    /// server-level, so overload is visible with or without batching.
+    rejected: AtomicU64,
+    /// Queries shed at worker dequeue because their deadline had already
+    /// expired (stage-level sheds are counted per stage in `sched`).
+    deadline_shed: AtomicU64,
 }
 
 impl ServerState {
@@ -91,10 +125,22 @@ impl ServerState {
     pub fn tracer(&self) -> Option<&Arc<Tracer>> {
         self.tracer.as_ref()
     }
+
+    /// Count one admission-queue rejection. Mirrored into the
+    /// scheduler's `rejected` stat when batching is on, so its
+    /// historical meaning — "requests turned away by overload control" —
+    /// keeps holding; the server-level counter is authoritative on both
+    /// paths.
+    fn note_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        if let Some(sched) = &self.sched {
+            sched.note_rejected();
+        }
+    }
 }
 
-/// The TCP request server: acceptor + per-connection handler threads
-/// over a fixed worker pool and one shared [`Engine`].
+/// The TCP request server: an event-driven reactor front end (Unix; see
+/// [`Server::run`]) over a fixed worker pool and one shared [`Engine`].
 pub struct Server {
     state: Arc<ServerState>,
     pool: WorkerPool,
@@ -127,6 +173,9 @@ impl Server {
         let retrieval = RetrievalConfig {
             batching: false,
             max_inflight: 0, // historical behavior: unbounded queue
+            // Historical behavior: no deadline shedding (a huge budget
+            // overflows the stamp and disarms — see `bind_with_retrieval`).
+            deadline_us: u64::MAX,
             ..RetrievalConfig::default()
         };
         Self::bind_with_retrieval(addr, engine, embedder, workers, &retrieval)
@@ -155,6 +204,7 @@ impl Server {
             cap => WorkerPool::bounded("edgerag-worker", workers, cap),
         };
         let tracer = retrieval.trace.then(|| Tracer::new(retrieval.slow_query_us));
+        let deadline_us = retrieval.resolved_deadline_us();
         Ok(Server {
             state: Arc::new(ServerState {
                 engine,
@@ -162,6 +212,14 @@ impl Server {
                 sched,
                 tracer,
                 running: AtomicBool::new(true),
+                // A huge knob value (or µs overflow) disables shedding:
+                // the stamp would never expire anyway.
+                deadline: (deadline_us > 0)
+                    .then(|| Duration::from_micros(deadline_us))
+                    .filter(|d| Instant::now().checked_add(*d).is_some()),
+                deadline_us,
+                rejected: AtomicU64::new(0),
+                deadline_shed: AtomicU64::new(0),
             }),
             pool,
             listener,
@@ -173,63 +231,137 @@ impl Server {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Serve until `shutdown` op (blocking).
+    /// Serve until `shutdown` op (blocking). On Unix this runs the
+    /// event-driven reactor front end; elsewhere it falls back to
+    /// [`Server::run_threaded`]. Either way, connections and in-flight
+    /// worker jobs are fully drained *before* the scheduler shuts down
+    /// and the WAL checkpoints — no insert can race the consolidation.
     pub fn run(&self) -> Result<()> {
-        for stream in self.listener.incoming() {
-            if !self.state.running.load(Ordering::SeqCst) {
-                break;
+        #[cfg(unix)]
+        reactor::run(&self.listener, &self.state, &self.pool.handle())?;
+        #[cfg(not(unix))]
+        self.accept_threaded()?;
+        self.finish_shutdown();
+        Ok(())
+    }
+
+    /// The pre-reactor thread-per-connection front end: one acceptor
+    /// plus one handler thread per connection, each request parked on a
+    /// blocking reply channel. Kept as the non-Unix fallback and as the
+    /// baseline arm of the `connection_sweep` benchmark; the accept loop
+    /// polls the running flag over a non-blocking listener (no
+    /// self-connect wake) and drains handler threads before shutdown
+    /// work starts.
+    pub fn run_threaded(&self) -> Result<()> {
+        self.accept_threaded()?;
+        self.finish_shutdown();
+        Ok(())
+    }
+
+    fn accept_threaded(&self) -> Result<()> {
+        self.listener
+            .set_nonblocking(true)
+            .context("nonblocking listener")?;
+        let active = Arc::new(AtomicUsize::new(0));
+        while self.state.running.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    // Accepted sockets inherit non-blocking on some
+                    // platforms; handlers want blocking-with-timeout.
+                    let _ = stream.set_nonblocking(false);
+                    let state = self.state.clone();
+                    let pool = self.pool.handle();
+                    let active_conns = active.clone();
+                    active.fetch_add(1, Ordering::SeqCst);
+                    std::thread::spawn(move || {
+                        let _ = handle_connection(stream, &state, &pool);
+                        active_conns.fetch_sub(1, Ordering::SeqCst);
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
             }
-            let Ok(stream) = stream else { continue };
-            let state = self.state.clone();
-            let pool = self.pool.handle();
-            std::thread::spawn(move || {
-                let _ = handle_connection(stream, &state, &pool);
-            });
         }
-        // Drain-and-stop: close the scheduler stages so queued work
-        // completes and no new batches form.
-        if let Some(sched) = &self.state.sched {
-            sched.shutdown();
-        }
-        // Clean-shutdown flush: consolidate the structural WAL into its
-        // snapshot and truncate the live log, so the next start replays
-        // one compact archive instead of a long tail. Best-effort — a
-        // flush failure just leaves the (recoverable) log as-is.
-        if let Err(e) = self.state.engine.index().wal_checkpoint() {
-            eprintln!("wal checkpoint on shutdown failed: {e:#}");
+        // Drain: handler threads notice the cleared running flag at
+        // their next read timeout (≤200 ms) and exit; waiting them out
+        // means no handler can submit work during shutdown.
+        while active.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(5));
         }
         Ok(())
     }
-}
 
-fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, pool: &PoolHandle) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut out = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(());
+    /// Shutdown tail, run only after the front end has fully drained:
+    /// close the scheduler stages (queued work completes, no new batches
+    /// form), then consolidate the structural WAL into its snapshot so
+    /// the next start replays one compact archive instead of a long
+    /// tail. Best-effort — a flush failure just leaves the (recoverable)
+    /// log as-is.
+    fn finish_shutdown(&self) {
+        if let Some(sched) = &self.state.sched {
+            sched.shutdown();
         }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        let (response, shutdown) = match serve_request(trimmed, state, pool) {
-            Ok(pair) => pair,
-            Err(e) => (
-                Value::object(vec![("error", Value::str(format!("{e:#}")))]),
-                false,
-            ),
-        };
-        writeln!(out, "{response}")?;
-        if shutdown {
-            state.running.store(false, Ordering::SeqCst);
-            // poke the acceptor loop awake
-            let _ = TcpStream::connect(out.local_addr()?);
-            return Ok(());
+        if let Err(e) = self.state.engine.index().wal_checkpoint() {
+            eprintln!("wal checkpoint on shutdown failed: {e:#}");
         }
     }
+}
+
+/// One thread-per-connection handler (the [`Server::run_threaded`]
+/// path). Reads with a timeout over its own line buffer so an idle
+/// keep-alive connection notices a cleared running flag within ~200 ms —
+/// and, unlike `BufReader::read_line` under a socket timeout, never
+/// loses a partially received line.
+fn handle_connection(stream: TcpStream, state: &Arc<ServerState>, pool: &PoolHandle) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let mut out = stream.try_clone()?;
+    let mut stream = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            let raw: Vec<u8> = buf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&raw);
+            let trimmed = line.trim();
+            if trimmed.is_empty() {
+                continue;
+            }
+            let (response, shutdown) = match serve_request(trimmed, state, pool) {
+                Ok(pair) => pair,
+                Err(e) => (
+                    Value::object(vec![("error", Value::str(format!("{e:#}")))]),
+                    false,
+                ),
+            };
+            writeln!(out, "{response}")?;
+            if shutdown {
+                // The non-blocking accept loop polls the flag — no
+                // self-connect poke needed (or wanted: a failed connect
+                // used to leave the server hung on accept).
+                state.running.store(false, Ordering::SeqCst);
+                return Ok(());
+            }
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(()),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if !state.running.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Render a protocol error as a one-line JSON response string.
+pub(crate) fn error_line(e: &anyhow::Error) -> String {
+    Value::object(vec![("error", Value::str(format!("{e:#}")))]).to_string()
 }
 
 /// Parse one request line and execute it. Returns the response plus
@@ -253,9 +385,12 @@ fn serve_request(
     if op == "shutdown" {
         return Ok((Value::object(vec![("ok", true.into())]), true));
     }
-    // Admission instant: a traced request's span tree starts here, so
-    // the worker-queue wait shows up as its `admission` span.
+    // Admission instant: a traced request's span tree starts here (the
+    // worker-queue wait shows up as its `admission` span), and the
+    // query's deadline is stamped from it — front-end queue time counts
+    // against the budget.
     let queued = Instant::now();
+    let deadline = state.deadline.and_then(|d| queued.checked_add(d));
     // Everything else executes on the worker pool: N workers run N
     // requests concurrently against the shared engine (through the batch
     // scheduler when enabled). A full admission queue rejects the
@@ -263,17 +398,15 @@ fn serve_request(
     let (reply_tx, reply_rx) = mpsc::channel();
     let job_state = state.clone();
     let job = Box::new(move || {
-        let _ = reply_tx.send(dispatch(&op, &req, &job_state, queued));
+        let _ = reply_tx.send(dispatch(&op, &req, &job_state, queued, deadline, false));
     });
     match pool.submit(job) {
         Ok(()) => {}
         Err(SubmitError::Full(_)) => {
-            // Surface the rejection in the scheduler's overload stats so
-            // operators watching `{"op":"stats"}` see it, whichever
-            // layer turned the request away.
-            if let Some(sched) = &state.sched {
-                sched.note_rejected();
-            }
+            // Server-level overload stat (mirrored into the scheduler's
+            // when batching is on): operators watching `{"op":"stats"}`
+            // see the rejection on both paths.
+            state.note_rejected();
             anyhow::bail!("server overloaded: admission queue full")
         }
         Err(SubmitError::Closed(_)) => anyhow::bail!("worker pool is shut down"),
@@ -287,8 +420,17 @@ fn serve_request(
 /// Execute one op, bracketing `query`/`insert` with the tracing plane
 /// when it is enabled: the worker thread carries the request's trace
 /// from here through the scheduler, engine, index and WAL, and the
-/// completed trace's id is stamped into the response.
-fn dispatch(op: &str, req: &Value, state: &ServerState, queued: Instant) -> Result<Value> {
+/// completed trace's id is stamped into the response. `from_reactor`
+/// additionally records the front-end queue wait as a `reactor.wait`
+/// span.
+pub(crate) fn dispatch(
+    op: &str,
+    req: &Value,
+    state: &ServerState,
+    queued: Instant,
+    deadline: Option<Instant>,
+    from_reactor: bool,
+) -> Result<Value> {
     let traced_op: Option<&'static str> = match op {
         "query" => Some("query"),
         "insert" => Some("insert"),
@@ -297,7 +439,13 @@ fn dispatch(op: &str, req: &Value, state: &ServerState, queued: Instant) -> Resu
     match (traced_op, &state.tracer) {
         (Some(name), Some(tracer)) => {
             let guard = tracer.begin(name, queued);
-            let mut result = dispatch_op(op, req, state);
+            if from_reactor {
+                // Reactor-parse to worker-pickup wait, as its own span
+                // so operators can split front-end queueing from
+                // execution.
+                trace::record("reactor.wait", queued.elapsed().as_nanos() as u64, &[]);
+            }
+            let mut result = shed_or_dispatch(op, req, state, deadline);
             if let Some(trace) = guard.finish() {
                 if let Ok(Value::Object(map)) = &mut result {
                     map.insert("trace_id".to_string(), trace.id.into());
@@ -305,18 +453,50 @@ fn dispatch(op: &str, req: &Value, state: &ServerState, queued: Instant) -> Resu
             }
             result
         }
-        _ => dispatch_op(op, req, state),
+        _ => shed_or_dispatch(op, req, state, deadline),
     }
 }
 
-fn dispatch_op(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
+/// Worker-dequeue shed gate: a query whose deadline expired while it
+/// waited in the admission queue is answered with a distinct "deadline
+/// exceeded" error instead of executed — under saturation the server
+/// spends its workers on queries that can still be answered in time.
+fn shed_or_dispatch(
+    op: &str,
+    req: &Value,
+    state: &ServerState,
+    deadline: Option<Instant>,
+) -> Result<Value> {
+    if op == "query" {
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                state.deadline_shed.fetch_add(1, Ordering::Relaxed);
+                trace::record_event("deadline.shed", &[]);
+                anyhow::bail!(
+                    "deadline exceeded: query spent its {}µs budget queued (shed before execution)",
+                    state.deadline_us
+                );
+            }
+        }
+    }
+    dispatch_op(op, req, state, deadline)
+}
+
+fn dispatch_op(
+    op: &str,
+    req: &Value,
+    state: &ServerState,
+    deadline: Option<Instant>,
+) -> Result<Value> {
     match op {
         "query" => {
             let text = req.req("text")?.as_str().context("text")?;
             // Read-parallel; through the batch scheduler when enabled
             // (bit-identical results, fused kernel calls under load).
+            // The admission deadline rides along so stage batches close
+            // by it and expired riders shed at stage dequeue.
             let out = match &state.sched {
-                Some(sched) => sched.handle(text)?,
+                Some(sched) => sched.handle_at(text, deadline)?,
                 None => state.engine.handle(text)?,
             };
             let hits = Value::array(out.hits.iter().map(|&(id, score)| {
@@ -352,7 +532,12 @@ fn dispatch_op(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
             ]))
         }
         "remove" => {
-            let id = req.req("id")?.as_u64().context("id")? as u32;
+            // Chunk ids are u32; a silent truncation here used to map id
+            // 2^32+5 onto id 5 and remove the wrong chunk.
+            let raw = req.req("id")?.as_u64().context("id")?;
+            let id = u32::try_from(raw).map_err(|_| {
+                anyhow::anyhow!("id {raw} out of range: chunk ids are u32 (max {})", u32::MAX)
+            })?;
             let removed = state.engine.remove(id)?;
             Ok(Value::object(vec![("removed", removed.into())]))
         }
@@ -383,6 +568,19 @@ fn dispatch_op(op: &str, req: &Value, state: &ServerState) -> Result<Value> {
                 ("resident_bytes", resident.into()),
                 ("cache_hit_rate", hit_rate.into()),
                 ("threshold_ms", threshold.into()),
+                // Server-level overload/deadline stats: visible on both
+                // the batched and unbatched paths.
+                (
+                    "server",
+                    Value::object(vec![
+                        ("rejected", state.rejected.load(Ordering::Relaxed).into()),
+                        (
+                            "deadline_shed",
+                            state.deadline_shed.load(Ordering::Relaxed).into(),
+                        ),
+                        ("deadline_us", state.deadline_us.into()),
+                    ]),
+                ),
             ];
             if let Some(rows) = shards {
                 fields.push(("shards", rows));
@@ -569,6 +767,7 @@ fn stage_json(s: &StageSnapshot) -> Value {
         ("occupancy", s.occupancy().into()),
         ("full_width", s.full_width.into()),
         ("window_expired", s.window_expired.into()),
+        ("shed", s.shed.into()),
     ])
 }
 
@@ -599,6 +798,28 @@ fn metrics_text(state: &ServerState) -> String {
     let _ = writeln!(out, "# HELP edgerag_queries_total Queries served.");
     let _ = writeln!(out, "# TYPE edgerag_queries_total counter");
     let _ = writeln!(out, "edgerag_queries_total {}", m.queries());
+
+    // Server-level overload/deadline counters (both serving paths).
+    let _ = writeln!(
+        out,
+        "# HELP edgerag_server_rejected_total Requests refused because the admission queue was full."
+    );
+    let _ = writeln!(out, "# TYPE edgerag_server_rejected_total counter");
+    let _ = writeln!(
+        out,
+        "edgerag_server_rejected_total {}",
+        state.rejected.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        out,
+        "# HELP edgerag_server_deadline_shed_total Queries shed at worker dequeue after their deadline expired."
+    );
+    let _ = writeln!(out, "# TYPE edgerag_server_deadline_shed_total counter");
+    let _ = writeln!(
+        out,
+        "edgerag_server_deadline_shed_total {}",
+        state.deadline_shed.load(Ordering::Relaxed)
+    );
 
     write_histogram(
         &mut out,
@@ -810,6 +1031,7 @@ fn metrics_text(state: &ServerState) -> String {
                 ("batches", snap.batches),
                 ("full_width", snap.full_width),
                 ("window_expired", snap.window_expired),
+                ("shed", snap.shed),
             ] {
                 let _ = writeln!(
                     out,

@@ -1,0 +1,696 @@
+//! The event-driven serving front end: every connection multiplexed
+//! onto one reactor thread through a non-blocking `poll(2)` readiness
+//! loop.
+//!
+//! ## Why not thread-per-connection
+//!
+//! The PR 1-era front end parked one handler thread per connection plus
+//! one blocking reply channel per request, so *connection count* — not
+//! the engine — capped concurrency, and a thousand idle keep-alive
+//! clients cost a thousand stacks. Here an idle connection costs one
+//! slab slot and two byte buffers; the only threads in the system are
+//! the reactor itself, the fixed worker pool, and the two batch-stage
+//! threads.
+//!
+//! ## Per-connection state machine
+//!
+//! ```text
+//!            POLLIN                 complete line
+//!   readable ──────► read buffer ───────────────► parse ──► control op
+//!                        │ (cap: MAX_LINE_BYTES)    │        (inline
+//!                        │                          ▼         reply)
+//!                        │                  submit to bounded
+//!                        │                  admission queue ──► rejected?
+//!                        │                          │           (inline
+//!                        │                          ▼            error)
+//!                        │                  pending (seq-ordered;
+//!                        │                  cap: MAX_PIPELINE)
+//!                        │                          │ completion queue
+//!                        ▼                          ▼   + wake pipe
+//!                     paused when saturated   write buffer ──► POLLOUT
+//! ```
+//!
+//! Responses append to the write buffer strictly in request order
+//! (`next_seq`/`next_flush` plus a parking map for out-of-order worker
+//! completions), so pipelined clients read answers in the order they
+//! asked.
+//!
+//! ## Wake path
+//!
+//! Workers finish a request by pushing `(token, generation, seq,
+//! response)` onto the shared completion queue and writing one byte to
+//! the **wake pipe**; the reactor polls the pipe's read end alongside
+//! the sockets, drains the queue, and routes each completion to its
+//! (generation-checked) connection. Shutdown needs no self-connect
+//! poke: the `shutdown` op is handled inline on the reactor thread,
+//! which stops accepting, stops reading, drains every in-flight worker
+//! job and write buffer, and returns — the caller then closes scheduler
+//! stages and checkpoints the WAL with the whole pipeline provably
+//! quiescent.
+//!
+//! ## No new dependencies
+//!
+//! `poll(2)`/`pipe(2)`/`fcntl(2)` are reached through direct `extern
+//! "C"` declarations — std already links libc on every Unix target, so
+//! this adds syscalls, not crates.
+
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::json::{self, Value};
+use crate::pool::{PoolHandle, SubmitError};
+
+use super::{dispatch, error_line, ServerState};
+
+/// Largest accepted request line; a connection that exceeds it without
+/// a newline gets an error response and is closed after the flush.
+const MAX_LINE_BYTES: usize = 1 << 20;
+/// In-flight + parked responses allowed per connection before the
+/// reactor stops reading from it (read resumes as completions land).
+const MAX_PIPELINE: usize = 64;
+/// Unflushed response bytes tolerated per connection; a client that
+/// pipelines requests but never reads responses is disconnected rather
+/// than buffered without bound.
+const MAX_WRITE_BUFFER: usize = 4 << 20;
+/// Read syscalls per connection per readiness round — bounds how long
+/// one streaming client can monopolize the loop (poll is
+/// level-triggered; leftover bytes surface next round).
+const MAX_READS_PER_ROUND: usize = 16;
+/// Safety tick so the loop re-checks drain conditions even with no
+/// socket or wake activity.
+const POLL_TIMEOUT_MS: i32 = 500;
+/// How long a draining server waits for clients to read their final
+/// responses before force-closing the sockets (worker jobs are still
+/// awaited — only unread output is abandoned).
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+// --------------------------------------------------------------------------
+// poll(2) / pipe(2) FFI (std links libc on every Unix target)
+// --------------------------------------------------------------------------
+
+#[repr(C)]
+struct PollFd {
+    fd: RawFd,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+#[cfg(target_os = "linux")]
+type NfdsT = u64;
+#[cfg(not(target_os = "linux"))]
+type NfdsT = u32;
+
+const F_GETFL: i32 = 3;
+const F_SETFL: i32 = 4;
+#[cfg(target_os = "linux")]
+const O_NONBLOCK: i32 = 0o4000;
+#[cfg(not(target_os = "linux"))]
+const O_NONBLOCK: i32 = 0x4;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: i32) -> i32;
+    fn pipe(fds: *mut i32) -> i32;
+    fn read(fd: i32, buf: *mut u8, count: usize) -> isize;
+    fn write(fd: i32, buf: *const u8, count: usize) -> isize;
+    fn close(fd: i32) -> i32;
+    fn fcntl(fd: i32, cmd: i32, arg: i32) -> i32;
+}
+
+/// The reactor's wake pipe: workers write one byte after pushing a
+/// completion; the poll loop reads the pipe level-triggered and drains
+/// it. Both ends non-blocking — a full pipe is fine (the queue being
+/// non-empty guarantees an unconsumed wake byte already exists).
+struct WakePipe {
+    read_fd: RawFd,
+    write_fd: RawFd,
+}
+
+impl WakePipe {
+    fn new() -> Result<WakePipe> {
+        let mut fds = [0i32; 2];
+        let rc = unsafe { pipe(fds.as_mut_ptr()) };
+        anyhow::ensure!(
+            rc == 0,
+            "pipe(2) failed: {}",
+            std::io::Error::last_os_error()
+        );
+        for fd in fds {
+            unsafe {
+                let flags = fcntl(fd, F_GETFL, 0);
+                fcntl(fd, F_SETFL, flags | O_NONBLOCK);
+            }
+        }
+        Ok(WakePipe {
+            read_fd: fds[0],
+            write_fd: fds[1],
+        })
+    }
+
+    fn wake(&self) {
+        let b = [1u8];
+        // EAGAIN (pipe full of wakes) is fine — see the struct docs.
+        unsafe { write(self.write_fd, b.as_ptr(), 1) };
+    }
+
+    fn drain(&self) {
+        let mut buf = [0u8; 256];
+        loop {
+            let n = unsafe { read(self.read_fd, buf.as_mut_ptr(), buf.len()) };
+            if n < buf.len() as isize {
+                break; // short read or EAGAIN: pipe is empty
+            }
+        }
+    }
+}
+
+impl Drop for WakePipe {
+    fn drop(&mut self) {
+        unsafe {
+            close(self.read_fd);
+            close(self.write_fd);
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Completion queue
+// --------------------------------------------------------------------------
+
+/// One finished worker job: the rendered response line routed back to
+/// connection `token` (generation-checked against slot reuse).
+struct Completion {
+    token: usize,
+    generation: u64,
+    seq: u64,
+    line: String,
+}
+
+/// The worker→reactor channel: a mutexed vector plus the wake pipe.
+/// Jobs hold an `Arc` to it, so the pipe outlives the reactor if
+/// stragglers are still finishing.
+struct Completions {
+    queue: Mutex<Vec<Completion>>,
+    pipe: WakePipe,
+    /// Jobs submitted whose completion the reactor has not yet taken —
+    /// every job pushes a completion even on panic, so this draining to
+    /// zero proves the worker pool is quiescent for this server.
+    outstanding: AtomicU64,
+}
+
+impl Completions {
+    fn new() -> Result<Completions> {
+        Ok(Completions {
+            queue: Mutex::new(Vec::new()),
+            pipe: WakePipe::new()?,
+            outstanding: AtomicU64::new(0),
+        })
+    }
+
+    fn push(&self, c: Completion) {
+        self.queue.lock().unwrap().push(c);
+        self.pipe.wake();
+    }
+
+    fn take(&self) -> Vec<Completion> {
+        std::mem::take(&mut *self.queue.lock().unwrap())
+    }
+
+    fn note_submitted(&self) {
+        self.outstanding.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn note_taken(&self, n: u64) {
+        self.outstanding.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    fn outstanding(&self) -> u64 {
+        self.outstanding.load(Ordering::SeqCst)
+    }
+}
+
+// --------------------------------------------------------------------------
+// Per-connection state machine
+// --------------------------------------------------------------------------
+
+struct Conn {
+    stream: TcpStream,
+    /// Guards completions against slab-slot reuse.
+    generation: u64,
+    /// Bytes received but not yet parsed into lines.
+    rbuf: Vec<u8>,
+    /// Bytes queued to send; `wpos` is how far they are flushed.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Next request sequence on this connection (every parsed line gets
+    /// one, inline or submitted).
+    next_seq: u64,
+    /// The sequence the write buffer ends at: responses append strictly
+    /// in request order.
+    next_flush: u64,
+    /// Out-of-order completions parked until their turn.
+    parked: HashMap<u64, String>,
+    /// Requests submitted to the pool whose completion hasn't landed.
+    inflight: usize,
+    /// Peer EOF (or fatal read error): parse no further requests; close
+    /// once pending responses flush.
+    read_closed: bool,
+    /// Close as soon as the write buffer drains and nothing is pending
+    /// (oversized line, write-side overflow).
+    close_after_flush: bool,
+    /// Hard failure (write error, POLLERR): discard immediately.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, generation: u64) -> Conn {
+        Conn {
+            stream,
+            generation,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            next_seq: 0,
+            next_flush: 0,
+            parked: HashMap::new(),
+            inflight: 0,
+            read_closed: false,
+            close_after_flush: false,
+            dead: false,
+        }
+    }
+
+    /// Non-blocking read into the line buffer (bounded per round).
+    fn fill_rbuf(&mut self) {
+        let mut chunk = [0u8; 4096];
+        for _ in 0..MAX_READS_PER_ROUND {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.read_closed = true;
+                    break;
+                }
+                Ok(n) => self.rbuf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.read_closed = true;
+                    self.dead = true;
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Deliver one response (inline or worker completion): append to the
+    /// write buffer in sequence order, parking it if earlier responses
+    /// are still pending.
+    fn complete(&mut self, seq: u64, line: String) {
+        self.parked.insert(seq, line);
+        while let Some(next) = self.parked.remove(&self.next_flush) {
+            self.wbuf.extend_from_slice(next.as_bytes());
+            self.wbuf.push(b'\n');
+            self.next_flush += 1;
+        }
+        if self.wbuf.len() - self.wpos > MAX_WRITE_BUFFER {
+            // Slow consumer: pipelining without reading responses.
+            self.dead = true;
+        }
+    }
+
+    /// Flush as much of the write buffer as the socket accepts.
+    fn flush(&mut self) {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return;
+                }
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        self.wbuf.clear();
+        self.wpos = 0;
+    }
+
+    fn flushed(&self) -> bool {
+        self.wpos >= self.wbuf.len()
+    }
+
+    /// Nothing submitted, parked or buffered for this connection.
+    fn quiescent(&self) -> bool {
+        self.inflight == 0 && self.parked.is_empty() && self.flushed()
+    }
+}
+
+/// What parsing one request line asked of the server.
+#[derive(PartialEq, Eq)]
+enum LineOutcome {
+    Continue,
+    Shutdown,
+}
+
+// --------------------------------------------------------------------------
+// The reactor loop
+// --------------------------------------------------------------------------
+
+/// Run the readiness loop until a `shutdown` op has been served **and**
+/// every accepted connection and in-flight worker job has drained. The
+/// caller (`Server::run`) performs scheduler shutdown and the WAL
+/// checkpoint after this returns — at that point nothing can be
+/// mutating the engine on the server's behalf.
+pub(super) fn run(
+    listener: &TcpListener,
+    state: &Arc<ServerState>,
+    pool: &PoolHandle,
+) -> Result<()> {
+    listener
+        .set_nonblocking(true)
+        .context("nonblocking listener")?;
+    let comps = Arc::new(Completions::new()?);
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut generation: u64 = 0;
+    let mut draining = !state.running.load(Ordering::SeqCst);
+    let mut drain_started: Option<Instant> = None;
+
+    let mut pollfds: Vec<PollFd> = Vec::new();
+    // pollfds[i] for i >= fixed belongs to connection tokens[i - fixed].
+    let mut tokens: Vec<usize> = Vec::new();
+
+    loop {
+        // --- Build the poll set: wake pipe, listener, ready conns.
+        pollfds.clear();
+        tokens.clear();
+        pollfds.push(PollFd {
+            fd: comps.pipe.read_fd,
+            events: POLLIN,
+            revents: 0,
+        });
+        let listening = !draining;
+        if listening {
+            pollfds.push(PollFd {
+                fd: listener.as_raw_fd(),
+                events: POLLIN,
+                revents: 0,
+            });
+        }
+        let fixed = pollfds.len();
+        for (token, slot) in conns.iter().enumerate() {
+            let Some(c) = slot else { continue };
+            let mut events: i16 = 0;
+            let saturated = c.inflight + c.parked.len() >= MAX_PIPELINE;
+            if !draining && !c.read_closed && !c.close_after_flush && !saturated {
+                events |= POLLIN;
+            }
+            if !c.flushed() {
+                events |= POLLOUT;
+            }
+            if events != 0 {
+                pollfds.push(PollFd {
+                    fd: c.stream.as_raw_fd(),
+                    events,
+                    revents: 0,
+                });
+                tokens.push(token);
+            }
+            // A conn with no events still progresses via completions.
+        }
+
+        let rc = unsafe { poll(pollfds.as_mut_ptr(), pollfds.len() as NfdsT, POLL_TIMEOUT_MS) };
+        if rc < 0 {
+            let err = std::io::Error::last_os_error();
+            if err.kind() == ErrorKind::Interrupted {
+                continue;
+            }
+            return Err(err).context("poll(2)");
+        }
+
+        // --- Wake pipe: clear the level-triggered bytes.
+        if pollfds[0].revents != 0 {
+            comps.pipe.drain();
+        }
+
+        // --- Route finished worker jobs to their connections.
+        let finished = comps.take();
+        if !finished.is_empty() {
+            comps.note_taken(finished.len() as u64);
+            for done in finished {
+                let Some(slot) = conns.get_mut(done.token) else {
+                    continue;
+                };
+                let Some(c) = slot.as_mut() else {
+                    continue; // connection force-closed while the job ran
+                };
+                if c.generation != done.generation {
+                    continue; // slot reused: stale completion
+                }
+                c.inflight = c.inflight.saturating_sub(1);
+                c.complete(done.seq, done.line);
+            }
+        }
+
+        // --- Accept new connections.
+        if listening && pollfds[1].revents != 0 {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        let _ = stream.set_nodelay(true);
+                        generation += 1;
+                        let conn = Conn::new(stream, generation);
+                        match free.pop() {
+                            Some(token) => conns[token] = Some(conn),
+                            None => conns.push(Some(conn)),
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => break,
+                }
+            }
+        }
+
+        // --- Socket readiness: reads and error states. (Writes happen
+        // in the sweep below so completion-driven output needs no extra
+        // poll round.)
+        for (i, pfd) in pollfds.iter().enumerate().skip(fixed) {
+            if pfd.revents == 0 {
+                continue;
+            }
+            let token = tokens[i - fixed];
+            let Some(c) = conns[token].as_mut() else {
+                continue;
+            };
+            if pfd.revents & (POLLERR | POLLNVAL) != 0 {
+                c.dead = true;
+                continue;
+            }
+            if pfd.revents & (POLLIN | POLLHUP) != 0 {
+                c.fill_rbuf();
+            }
+        }
+
+        // --- Per-connection sweep: parse, flush, reap.
+        let mut shutdown_requested = false;
+        for (token, slot) in conns.iter_mut().enumerate() {
+            let Some(c) = slot.as_mut() else { continue };
+            if !c.dead
+                && !draining
+                && parse_lines(c, token, state, pool, &comps) == LineOutcome::Shutdown
+            {
+                shutdown_requested = true;
+            }
+            if !c.dead {
+                c.flush();
+            }
+            let finished = if draining {
+                c.quiescent()
+            } else {
+                c.quiescent() && (c.read_closed || c.close_after_flush)
+            };
+            if c.dead || (finished && c.inflight == 0) {
+                // Dropping the Conn closes the socket; inflight jobs of
+                // a dead conn finish into a generation mismatch.
+                *slot = None;
+                free.push(token);
+            }
+        }
+        if shutdown_requested {
+            state.running.store(false, Ordering::SeqCst);
+            draining = true;
+            drain_started = Some(Instant::now());
+        }
+
+        // --- Drain: exit once every connection is gone and every
+        // submitted job's completion has been taken.
+        if draining {
+            if let Some(since) = drain_started {
+                if since.elapsed() > DRAIN_GRACE {
+                    // Clients that never read their final responses:
+                    // abandon the unread output, keep awaiting jobs.
+                    for (token, slot) in conns.iter_mut().enumerate() {
+                        if slot.is_some() {
+                            *slot = None;
+                            free.push(token);
+                        }
+                    }
+                }
+            }
+            if comps.outstanding() == 0 && conns.iter().all(|slot| slot.is_none()) {
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// Parse complete lines out of `c.rbuf` and start each request:
+/// control ops answer inline; everything else is submitted to the
+/// worker pool with this connection's routing coordinates. Stops at the
+/// pipeline cap (reads stay paused until completions land).
+fn parse_lines(
+    c: &mut Conn,
+    token: usize,
+    state: &Arc<ServerState>,
+    pool: &PoolHandle,
+    comps: &Arc<Completions>,
+) -> LineOutcome {
+    loop {
+        if c.inflight + c.parked.len() >= MAX_PIPELINE {
+            return LineOutcome::Continue;
+        }
+        let Some(pos) = c.rbuf.iter().position(|&b| b == b'\n') else {
+            if c.rbuf.len() > MAX_LINE_BYTES {
+                let seq = c.next_seq;
+                c.next_seq += 1;
+                c.complete(
+                    seq,
+                    error_line(&anyhow::anyhow!(
+                        "request line exceeds {MAX_LINE_BYTES} bytes"
+                    )),
+                );
+                c.rbuf.clear();
+                c.read_closed = true;
+                c.close_after_flush = true;
+            }
+            return LineOutcome::Continue;
+        };
+        let raw: Vec<u8> = c.rbuf.drain(..=pos).collect();
+        let line = String::from_utf8_lossy(&raw);
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if handle_line(trimmed, c, token, state, pool, comps) == LineOutcome::Shutdown {
+            // Stop parsing: requests pipelined after shutdown are
+            // dropped (the drain answers what was already submitted).
+            return LineOutcome::Shutdown;
+        }
+    }
+}
+
+/// Start one request: allocate its response sequence, answer control
+/// ops and parse failures inline, and hand real work to the pool with a
+/// completion-pushing job wrapper.
+fn handle_line(
+    line: &str,
+    c: &mut Conn,
+    token: usize,
+    state: &Arc<ServerState>,
+    pool: &PoolHandle,
+    comps: &Arc<Completions>,
+) -> LineOutcome {
+    let seq = c.next_seq;
+    c.next_seq += 1;
+    // Parse on the reactor thread (cheap); execute on the pool.
+    let parsed: Result<(String, Value)> = json::parse(line)
+        .map_err(|e| anyhow::anyhow!("bad request: {e}"))
+        .and_then(|req| {
+            let op = req
+                .req("op")?
+                .as_str()
+                .context("op must be a string")?
+                .to_string();
+            Ok((op, req))
+        });
+    let (op, req) = match parsed {
+        Ok(pair) => pair,
+        Err(e) => {
+            c.complete(seq, error_line(&e));
+            return LineOutcome::Continue;
+        }
+    };
+    // Control ops answered inline — they must not queue behind work.
+    // Shutdown dispatches on the parsed op, never on raw request text.
+    if op == "ping" {
+        c.complete(seq, Value::object(vec![("ok", true.into())]).to_string());
+        return LineOutcome::Continue;
+    }
+    if op == "shutdown" {
+        c.complete(seq, Value::object(vec![("ok", true.into())]).to_string());
+        return LineOutcome::Shutdown;
+    }
+
+    // Admission: deadline stamped here, so reactor queue time counts
+    // against the budget.
+    let queued = Instant::now();
+    let deadline = state.deadline.and_then(|d| queued.checked_add(d));
+    let job_state = state.clone();
+    let job_comps = comps.clone();
+    let generation = c.generation;
+    let job = Box::new(move || {
+        // A panicking dispatch must still push its completion — the
+        // drain logic counts every submitted job, and the connection
+        // would otherwise wait forever.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            dispatch(&op, &req, &job_state, queued, deadline, true)
+        }));
+        let line = match outcome {
+            Ok(Ok(v)) => v.to_string(),
+            Ok(Err(e)) => error_line(&e),
+            Err(_) => error_line(&anyhow::anyhow!("internal error: request handler panicked")),
+        };
+        job_comps.push(Completion {
+            token,
+            generation,
+            seq,
+            line,
+        });
+    });
+    match pool.submit(job) {
+        Ok(()) => {
+            c.inflight += 1;
+            comps.note_submitted();
+        }
+        Err(SubmitError::Full(_)) => {
+            state.note_rejected();
+            c.complete(
+                seq,
+                error_line(&anyhow::anyhow!("server overloaded: admission queue full")),
+            );
+        }
+        Err(SubmitError::Closed(_)) => {
+            c.complete(seq, error_line(&anyhow::anyhow!("worker pool is shut down")));
+        }
+    }
+    LineOutcome::Continue
+}

@@ -12,6 +12,12 @@
 //! tracing plane armed and every handled query carrying an active
 //! trace, proving the span record sites are purely observational (CI
 //! runs this leg explicitly).
+//!
+//! `EDGERAG_TEST_DEADLINE=1` re-runs them with a generous per-query
+//! deadline armed — deadline stamping, earliest-rider batch close, and
+//! the dequeue shed gates are all live but never fire, proving the
+//! deadline plane does not perturb successful results (CI runs this leg
+//! explicitly too).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -102,10 +108,23 @@ fn build_engine(shards: usize, tag: &str) -> (SystemBuilder, Arc<Engine>, Vec<St
     (b, engine, queries)
 }
 
+/// Query deadline under test: `EDGERAG_TEST_DEADLINE=1` arms a generous
+/// (two-minute) per-query deadline — the deadline plumbing is live on
+/// every query (stamped at admission, riders close batches, dequeue
+/// shed gates run) but never fires, so the bit-equality assertions must
+/// hold unchanged. CI runs this leg explicitly.
+fn test_deadline_us() -> u64 {
+    match std::env::var("EDGERAG_TEST_DEADLINE") {
+        Ok(v) if v == "1" => 120_000_000,
+        _ => 0,
+    }
+}
+
 fn sched_cfg(bypass: bool) -> SchedConfig {
     SchedConfig {
         batch_window_us: 300,
         max_inflight: 0,
+        deadline_us: test_deadline_us(),
         bypass,
     }
 }
@@ -252,6 +271,7 @@ fn backpressure_rejects_beyond_max_inflight() {
         SchedConfig {
             batch_window_us: 100,
             max_inflight: 1,
+            deadline_us: test_deadline_us(),
             bypass: true,
         },
     );
@@ -278,6 +298,7 @@ fn shutdown_flushes_queued_work_and_serves_inline_after() {
         SchedConfig {
             batch_window_us: 10_000_000,
             max_inflight: 0,
+            deadline_us: test_deadline_us(),
             bypass: false,
         },
     );

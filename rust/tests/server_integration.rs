@@ -4,7 +4,10 @@
 //! query/insert/stats/remove ops against the worker-pool server.
 
 use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use edgerag::config::{DatasetProfile, DeviceProfile, IndexKind};
 use edgerag::coordinator::builder::SystemBuilder;
@@ -40,6 +43,10 @@ fn batched_server_serves_and_reports_stage_stats() {
     b.retrieval.nprobe = 4;
     b.retrieval.batching = true;
     b.retrieval.batch_window_us = 200;
+    // Generous explicit deadline: the plumbing is armed (stamped at
+    // admission, riders close batches) but can never fire — this test
+    // asserts exact submitted counts.
+    b.retrieval.deadline_us = 60_000_000;
     let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
     let pipeline = b.pipeline(&built, IndexKind::EdgeRag).unwrap();
     let server =
@@ -460,4 +467,355 @@ fn stress_parallel_clients_interleave_query_insert_stats() {
     let total_queries = stats.get("queries").and_then(|v| v.as_u64()).unwrap();
     let expected = (THREADS * OPS / 2) as u64 + 1; // i%4 ∈ {0,1} per thread + this probe
     assert_eq!(total_queries, expected);
+}
+
+// ---------------------------------------------------------------------------
+// The reactor-era adversarial-client suite: partial writers, pipelining,
+// idle keep-alive fleets, overload visibility, deadline shedding, and
+// shutdown-under-load — everything the thread-per-connection front end
+// handled by accident or not at all.
+// ---------------------------------------------------------------------------
+
+/// Read one `\n`-terminated response line off a raw socket.
+fn read_line(r: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    let n = r.read_line(&mut line).unwrap();
+    assert!(n > 0, "server closed the connection mid-conversation");
+    line
+}
+
+#[test]
+fn remove_rejects_out_of_range_ids() {
+    // Regression: `as_u64()? as u32` silently truncated ids, so remove
+    // with id 2^32+n deleted chunk n. Out-of-range ids must error, and
+    // the aliased low id must be untouched.
+    let (addr, _) = spawn_server();
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let ins = c
+        .call(&Value::object(vec![
+            ("op", Value::str("insert")),
+            ("text", Value::str("truncation canary marker qwfpz")),
+        ]))
+        .unwrap();
+    let id = ins.get("id").and_then(|v| v.as_u64()).unwrap();
+
+    // The id that would alias onto `id` if the server truncated to u32.
+    let aliased = id + (1u64 << 32);
+    let rem = c
+        .call(&Value::object(vec![
+            ("op", Value::str("remove")),
+            ("id", Value::num(aliased as f64)),
+        ]))
+        .unwrap();
+    let err = rem
+        .get("error")
+        .and_then(|v| v.as_str())
+        .unwrap_or_else(|| panic!("out-of-range remove must error: {rem}"));
+    assert!(err.contains("out of range"), "{err}");
+
+    // The canary survived: no truncated-id deletion happened.
+    let found = c.query("truncation canary qwfpz").unwrap();
+    let ids: Vec<u64> = found
+        .get("hits")
+        .unwrap()
+        .as_array()
+        .unwrap()
+        .iter()
+        .map(|h| h.get("chunk").unwrap().as_u64().unwrap())
+        .collect();
+    assert!(ids.contains(&id), "canary {id} was removed: {ids:?}");
+
+    // The same id in range removes fine.
+    let rem = c
+        .call(&Value::object(vec![
+            ("op", Value::str("remove")),
+            ("id", Value::num(id as f64)),
+        ]))
+        .unwrap();
+    assert_eq!(rem.get("removed").and_then(|v| v.as_bool()), Some(true), "{rem}");
+}
+
+#[test]
+fn slow_and_partial_line_writers_are_served() {
+    // A client that dribbles its request byte-group by byte-group (or
+    // ships two requests in one segment) exercises the reactor's
+    // buffered line reassembly; the blocking front end got this free
+    // from `read_line`, the reactor must reproduce it.
+    let (addr, _) = spawn_server();
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+
+    // One ping, written in four fragments with pauses between them.
+    let ping = b"{\"op\":\"ping\"}\n";
+    for chunk in ping.chunks(4) {
+        w.write_all(chunk).unwrap();
+        w.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let resp = edgerag::json::parse(&read_line(&mut r)).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "{resp}");
+
+    // A real query split mid-JSON across two writes.
+    let q = b"{\"op\":\"query\",\"text\":\"partial writer query c1 t0w1\"}\n";
+    let (head, tail) = q.split_at(17);
+    w.write_all(head).unwrap();
+    w.flush().unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    w.write_all(tail).unwrap();
+    w.flush().unwrap();
+    let resp = edgerag::json::parse(&read_line(&mut r)).unwrap();
+    assert!(resp.get("hits").is_some(), "{resp}");
+
+    // Two pipelined requests in a single write: responses come back in
+    // request order (ping's `ok` first, then the query's `hits`).
+    let mut both = Vec::new();
+    both.extend_from_slice(b"{\"op\":\"ping\"}\n");
+    both.extend_from_slice(b"{\"op\":\"query\",\"text\":\"pipelined pair c2\"}\n");
+    w.write_all(&both).unwrap();
+    w.flush().unwrap();
+    let first = edgerag::json::parse(&read_line(&mut r)).unwrap();
+    assert_eq!(first.get("ok").and_then(|v| v.as_bool()), Some(true), "{first}");
+    let second = edgerag::json::parse(&read_line(&mut r)).unwrap();
+    assert!(second.get("hits").is_some(), "{second}");
+}
+
+#[cfg(target_os = "linux")]
+fn process_thread_count() -> usize {
+    let status = std::fs::read_to_string("/proc/self/status").unwrap();
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .expect("Threads: line in /proc/self/status")
+        .trim()
+        .parse()
+        .unwrap()
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn idle_keepalive_connections_spawn_no_threads() {
+    // 200 live keep-alive connections against the reactor must not grow
+    // the process by 200 handler threads (the thread-per-connection
+    // front end did exactly that). Other tests run threads in this
+    // process concurrently, so the bound is generous — the regression
+    // signal is ~200, the noise is tens.
+    let (addr, _) = spawn_server_with_workers(2);
+    let before = process_thread_count();
+    let mut conns = Vec::new();
+    for i in 0..200 {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        // Each connection proves it is served, then stays open idle.
+        w.write_all(b"{\"op\":\"ping\"}\n").unwrap();
+        let resp = edgerag::json::parse(&read_line(&mut r)).unwrap();
+        assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true), "conn {i}");
+        conns.push((w, r));
+    }
+    let after = process_thread_count();
+    let grown = after.saturating_sub(before);
+    assert!(
+        grown < 100,
+        "200 idle connections grew the process by {grown} threads \
+         (thread-per-connection regression)"
+    );
+    drop(conns);
+}
+
+#[test]
+fn overload_rejections_are_visible_without_batching() {
+    // Regression: the rejected counter lived on the batch scheduler, so
+    // with batching off (`bind_with_workers`-style deployments) admission
+    // rejections were invisible. It is a server-level stat now, on both
+    // paths.
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    b.retrieval.nprobe = 4;
+    b.retrieval.batching = false; // the path that used to lose the count
+    b.retrieval.max_inflight = 1; // 1 queued beyond the 1 executing
+    b.retrieval.deadline_us = 60_000_000; // generous: sheds can't mask rejects
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let pipeline = b.pipeline(&built, IndexKind::EdgeRag).unwrap();
+    let server =
+        Server::bind_with_retrieval("127.0.0.1:0", pipeline, b.embedder(), 1, &b.retrieval)
+            .unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || server.run().unwrap());
+
+    // Pipeline a burst far beyond worker + queue capacity in one write:
+    // the reactor parses and submits them in one sweep, so most must be
+    // turned away at admission.
+    const BURST: usize = 16;
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut payload = Vec::new();
+    for i in 0..BURST {
+        payload
+            .extend_from_slice(format!("{{\"op\":\"query\",\"text\":\"burst {i} c1\"}}\n").as_bytes());
+    }
+    w.write_all(&payload).unwrap();
+    w.flush().unwrap();
+
+    let mut served = 0u64;
+    let mut rejected = 0u64;
+    for _ in 0..BURST {
+        let resp = edgerag::json::parse(&read_line(&mut r)).unwrap();
+        match resp.get("error").and_then(|v| v.as_str()) {
+            Some(err) => {
+                assert!(err.contains("overloaded"), "unexpected error: {err}");
+                rejected += 1;
+            }
+            None => {
+                assert!(resp.get("hits").is_some(), "{resp}");
+                served += 1;
+            }
+        }
+    }
+    assert!(served >= 1, "nothing served out of the burst");
+    assert!(rejected >= 1, "nothing rejected: queue bound not enforced");
+
+    // The exact count is on the server-level stats block…
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let stats = c.call(&Value::object(vec![("op", Value::str("stats"))])).unwrap();
+    let srv = stats
+        .get("server")
+        .unwrap_or_else(|| panic!("stats missing server block: {stats}"));
+    assert_eq!(srv.get("rejected").and_then(|v| v.as_u64()), Some(rejected), "{srv}");
+
+    // …and on the Prometheus page, with batching off.
+    let met = c.call(&Value::object(vec![("op", Value::str("metrics"))])).unwrap();
+    let body = met.get("body").unwrap().as_str().unwrap();
+    let sample = parse_prometheus(body)
+        .into_iter()
+        .find(|(n, _, _)| n == "edgerag_server_rejected_total")
+        .map(|(_, _, v)| v)
+        .expect("edgerag_server_rejected_total missing from metrics");
+    assert_eq!(sample, rejected as f64);
+}
+
+#[test]
+fn saturated_server_sheds_expired_queries_distinctly() {
+    // With a 1µs budget every query's deadline expires while it sits in
+    // the admission queue: the worker sheds it with the distinct
+    // "deadline exceeded" error (not "overloaded"), counts it
+    // server-side, and control ops keep answering.
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    b.retrieval.nprobe = 4;
+    b.retrieval.batching = true;
+    b.retrieval.deadline_us = 1;
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let pipeline = b.pipeline(&built, IndexKind::EdgeRag).unwrap();
+    let server =
+        Server::bind_with_retrieval("127.0.0.1:0", pipeline, b.embedder(), 2, &b.retrieval)
+            .unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || server.run().unwrap());
+
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    const N: u64 = 6;
+    for i in 0..N {
+        let resp = c.query(&format!("doomed query {i} c1")).unwrap();
+        let err = resp
+            .get("error")
+            .and_then(|v| v.as_str())
+            .unwrap_or_else(|| panic!("expired query must shed, got: {resp}"));
+        assert!(err.contains("deadline exceeded"), "{err}");
+        assert!(!err.contains("overloaded"), "shed must be distinct from rejection: {err}");
+    }
+
+    // Control plane unaffected: ping and stats still serve, and the shed
+    // counter matches.
+    let pong = c.call(&Value::object(vec![("op", Value::str("ping"))])).unwrap();
+    assert_eq!(pong.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let stats = c.call(&Value::object(vec![("op", Value::str("stats"))])).unwrap();
+    let srv = stats.get("server").unwrap_or_else(|| panic!("no server block: {stats}"));
+    assert_eq!(srv.get("deadline_shed").and_then(|v| v.as_u64()), Some(N), "{srv}");
+    assert_eq!(srv.get("deadline_us").and_then(|v| v.as_u64()), Some(1), "{srv}");
+
+    let met = c.call(&Value::object(vec![("op", Value::str("metrics"))])).unwrap();
+    let body = met.get("body").unwrap().as_str().unwrap();
+    let shed = parse_prometheus(body)
+        .into_iter()
+        .find(|(n, _, _)| n == "edgerag_server_deadline_shed_total")
+        .map(|(_, _, v)| v)
+        .expect("edgerag_server_deadline_shed_total missing from metrics");
+    assert_eq!(shed, N as f64);
+}
+
+#[test]
+fn shutdown_under_load_drains_and_exits_without_helper_connection() {
+    // Regression: shutdown used to wake the blocked accept loop by
+    // self-connecting a throwaway socket; if that connect raced the
+    // listener teardown the server hung. The reactor's wake pipe needs
+    // no helper — and a shutdown issued while queries are still queued
+    // must drain them (responses flushed, worker jobs finished) before
+    // `run()` returns and the WAL checkpoint runs.
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    b.retrieval.nprobe = 4;
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let pipeline = b.pipeline(&built, IndexKind::EdgeRag).unwrap();
+    // One worker: the pipelined burst below is still queued when the
+    // shutdown lands.
+    let server = Server::bind_with_workers("127.0.0.1:0", pipeline, b.embedder(), 1).unwrap();
+    let addr = server.local_addr().unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(server.run());
+    });
+
+    // Load: pipeline a burst and confirm the server started answering
+    // (so every request in the burst is parsed and submitted).
+    const BURST: usize = 8;
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    let mut payload = Vec::new();
+    for i in 0..BURST {
+        payload
+            .extend_from_slice(format!("{{\"op\":\"query\",\"text\":\"drain {i} c1\"}}\n").as_bytes());
+    }
+    w.write_all(&payload).unwrap();
+    w.flush().unwrap();
+    let first = edgerag::json::parse(&read_line(&mut r)).unwrap();
+    assert!(first.get("hits").is_some(), "{first}");
+
+    // Shutdown from a second connection while 7 queries are still
+    // queued on the single worker.
+    let mut shut = Client::connect(&addr.to_string()).unwrap();
+    let ack = shut.call(&Value::object(vec![("op", Value::str("shutdown"))])).unwrap();
+    assert_eq!(ack.get("ok").and_then(|v| v.as_bool()), Some(true), "{ack}");
+
+    // The drain completes and `run()` returns — with no helper
+    // connection poking the listener awake.
+    let run_result = rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("server did not exit after shutdown under load");
+    run_result.unwrap();
+
+    // Every queued query was answered before exit, then the server
+    // closed the connection cleanly.
+    for _ in 1..BURST {
+        let resp = edgerag::json::parse(&read_line(&mut r)).unwrap();
+        assert!(resp.get("hits").is_some(), "{resp}");
+    }
+    let mut leftover = String::new();
+    assert_eq!(r.read_line(&mut leftover).unwrap(), 0, "expected EOF, got: {leftover}");
+
+    // And the listener really is down.
+    assert!(
+        TcpStream::connect(addr).is_err()
+            || TcpStream::connect(addr)
+                .and_then(|mut s| {
+                    s.write_all(b"{\"op\":\"ping\"}\n")?;
+                    let mut buf = String::new();
+                    BufReader::new(s).read_line(&mut buf)
+                })
+                .map(|n| n == 0)
+                .unwrap_or(true),
+        "server still serving after shutdown"
+    );
 }
