@@ -7,14 +7,15 @@
 //! thread-per-connection front end vs the event-driven reactor at
 //! 1/8/64 persistent connections), then a tracing sweep (the
 //! query-scoped tracing plane dark vs armed — overhead must stay
-//! within a few percent), then a skewed-placement rebalance sweep (one
-//! shard seeded with every cluster; spread before/after bounded
-//! rounds).
+//! within a few percent), then a resharding sweep (one live engine
+//! driven through grow/shrink rounds, measuring serving at each live
+//! shard count), then a skewed-placement rebalance sweep (one shard
+//! seeded with every cluster; spread before/after bounded rounds).
 //!
 //!     cargo bench --bench throughput_scaling [-- --limit N | --smoke]
 //!
 //! Each sweep records qps + per-request p50/p95/p99 wall latency into
-//! the machine-readable trajectory (`BENCH_9.json`, section
+//! the machine-readable trajectory (`BENCH_10.json`, section
 //! `throughput_scaling`) — validate with `edgerag bench-validate`.
 //!
 //! Before the read-parallel refactor every request serialized on a
@@ -528,6 +529,64 @@ fn main() {
         }
     }
 
+    // ---- resharding sweep: one live engine, elastic shard count ----
+    // The same engine (and the same warmed cache state) is resharded
+    // through 2 → 4 → 8 → 1 → 2 online — grows append empty shards the
+    // heat-aware rebalancer then fills, shrinks drain-then-retire — and
+    // serving is measured at each live count. Results stay bit-identical
+    // to the single-shard oracle through every topology swap
+    // (rust/tests/rebalance_churn.rs pins that); this sweep reports what
+    // the elasticity costs/buys in throughput.
+    let clients = 4;
+    println!("\n== resharding sweep: live engine, {clients} client threads ==");
+    let mut reshard_rows: Vec<json::Value> = Vec::new();
+    {
+        let mut b = ctx.builder.clone();
+        b.retrieval.shards = 2;
+        let engine = b
+            .pipeline(&built, IndexKind::EdgeRag)
+            .expect("build sharded engine");
+        for q in &queries {
+            engine.handle(q).unwrap(); // warm once; state persists across swaps
+        }
+        for target in [2usize, 4, 8, 1, 2] {
+            let (from, migrated) = {
+                let index = engine.index();
+                let sharded = index
+                    .as_any()
+                    .downcast_ref::<edgerag::index::ShardedEdgeIndex>()
+                    .expect("shards=2 builds the sharded index");
+                let r = sharded.reshard(target).expect("reshard");
+                sharded.rebalance().expect("fill grown shards");
+                (r.from, r.migrated)
+            };
+            let d = drive(&engine, &queries, clients, passes);
+            println!(
+                "shards {from}→{target}: {} drained; {} queries in {:.3}s → {:8.1} q/s \
+                 (mean wall {}µs/query, p50/p95/p99 {:.0}/{:.0}/{:.0}µs)",
+                migrated,
+                d.served,
+                d.secs,
+                d.qps(),
+                d.mean_wall_us(),
+                d.p_us(50.0),
+                d.p_us(95.0),
+                d.p_us(99.0)
+            );
+            reshard_rows.push(d.row(vec![
+                ("shards", target.into()),
+                ("resharded_from", from.into()),
+                ("migrated", migrated.into()),
+                ("clients", clients.into()),
+            ]));
+        }
+        println!(
+            "acceptance: every grow/shrink lands under live traffic with \
+             bit-identical results; q/s at a given live count tracks the \
+             static shard sweep above"
+        );
+    }
+
     common::bench_record("backend", json::Value::str(ctx.builder.compute.backend_name()));
     common::bench_record(
         "throughput_scaling",
@@ -537,6 +596,7 @@ fn main() {
             ("executor_pool", json::Value::array(pool_rows)),
             ("connection_sweep", json::Value::array(conn_rows)),
             ("tracing_sweep", json::Value::array(tracing_rows)),
+            ("resharding_sweep", json::Value::array(reshard_rows)),
         ]),
     );
 

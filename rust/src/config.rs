@@ -506,6 +506,24 @@ pub struct RetrievalConfig {
     /// copy/flip/retire work a single round may impose on the serving
     /// path.
     pub max_migrations_per_round: usize,
+    /// Halve every per-cluster probe-heat counter (and co-probe affinity
+    /// edge) after every this many structural updates, so the heat the
+    /// placement planner scores on tracks *current* traffic instead of
+    /// lifetime totals (a historical hot spot decays away within a few
+    /// intervals). 0 disables decay — counters become monotone lifetime
+    /// totals again. Heat is observational only: decay never changes
+    /// search results.
+    pub heat_decay_interval_ops: usize,
+    /// Floor for the elastic shard count: a server `reshard` op clamps
+    /// its target to at least this many shards (`--shards-min`). The
+    /// library APIs (`grow_shards`/`shrink_shards`) are not clamped —
+    /// the bound is serving policy, not an index invariant.
+    pub shards_min: usize,
+    /// Ceiling for the elastic shard count (`--shards-max`); also sizes
+    /// the shard worker pool so a later grow has workers waiting. 0 (the
+    /// default) means "no configured ceiling" — the hard
+    /// [`crate::index::shard::MAX_SHARDS`] limit still applies.
+    pub shards_max: usize,
     /// Structural write-ahead log: every insert/remove/migrate/threshold
     /// op is journalled before its irreversible mutation and replayed on
     /// startup (`docs/ARCHITECTURE.md` § Durability). **Off by default**
@@ -566,6 +584,9 @@ impl Default for RetrievalConfig {
             rebalance: false,
             rebalance_interval_ops: 128,
             max_migrations_per_round: 4,
+            heat_decay_interval_ops: 1024,
+            shards_min: 1,
+            shards_max: 0,
             wal: false,
             snapshot_interval_ops: 512,
             trace: false,
@@ -588,10 +609,18 @@ impl RetrievalConfig {
     /// `4 × slow_query_us` when 0 — a query four times over the slow
     /// threshold is past saving, so shedding it frees capacity for
     /// queries that can still meet their latency target.
+    ///
+    /// A derived deadline of 0 means **disarmed**, never "shed
+    /// immediately": running with `--slow-query-us 0` (keep-every-trace
+    /// mode) would otherwise derive a 0 µs budget that sheds every
+    /// query at admission. Both the server's deadline stamp and the
+    /// batch scheduler already treat 0 as "no deadline"; this makes the
+    /// derivation honor the same contract explicitly.
     pub fn resolved_deadline_us(&self) -> u64 {
-        match self.deadline_us {
-            0 => self.slow_query_us.saturating_mul(4),
-            n => n,
+        match (self.deadline_us, self.slow_query_us) {
+            (0, 0) => 0, // keep-all tracing: shedding disarmed
+            (0, slow) => slow.saturating_mul(4),
+            (n, _) => n,
         }
     }
 
@@ -618,6 +647,12 @@ impl RetrievalConfig {
                 "max_migrations_per_round",
                 self.max_migrations_per_round.into(),
             ),
+            (
+                "heat_decay_interval_ops",
+                self.heat_decay_interval_ops.into(),
+            ),
+            ("shards_min", self.shards_min.into()),
+            ("shards_max", self.shards_max.into()),
             ("wal", self.wal.into()),
             (
                 "snapshot_interval_ops",
@@ -681,6 +716,20 @@ impl RetrievalConfig {
             max_migrations_per_round: match v.get("max_migrations_per_round") {
                 Some(n) => n.as_usize().context("max_migrations_per_round")?,
                 None => 4,
+            },
+            // Optional for configs written before heat-aware placement
+            // and the elastic shard topology.
+            heat_decay_interval_ops: match v.get("heat_decay_interval_ops") {
+                Some(n) => n.as_usize().context("heat_decay_interval_ops")?,
+                None => 1024,
+            },
+            shards_min: match v.get("shards_min") {
+                Some(n) => n.as_usize().context("shards_min")?,
+                None => 1,
+            },
+            shards_max: match v.get("shards_max") {
+                Some(n) => n.as_usize().context("shards_max")?,
+                None => 0,
             },
             // Optional for configs written before the structural WAL.
             wal: match v.get("wal") {
@@ -834,6 +883,46 @@ mod tests {
         let text = cfg.to_json().pretty();
         let back = SystemConfig::from_json(&crate::json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn deadline_derivation_disarms_with_zero_slow_query() {
+        // --slow-query-us 0 (keep-all tracing) must not derive a 0 µs
+        // deadline that sheds every query: the derived deadline is
+        // disarmed (0 = no shedding, the contract both the server stamp
+        // and the batch scheduler already implement for 0).
+        let mut r = RetrievalConfig {
+            deadline_us: 0,
+            slow_query_us: 0,
+            ..Default::default()
+        };
+        assert_eq!(r.resolved_deadline_us(), 0);
+        // The ordinary derivation is untouched…
+        r.slow_query_us = 25_000;
+        assert_eq!(r.resolved_deadline_us(), 100_000);
+        // …and an explicit deadline always wins, even with
+        // slow_query_us = 0.
+        r.deadline_us = 7_500;
+        r.slow_query_us = 0;
+        assert_eq!(r.resolved_deadline_us(), 7_500);
+    }
+
+    #[test]
+    fn retrieval_json_back_compat_defaults_new_knobs() {
+        // A config written before heat-aware placement parses with the
+        // documented defaults for the new knobs.
+        let mut v = RetrievalConfig::default().to_json();
+        if let Value::Object(obj) = &mut v {
+            obj.remove("heat_decay_interval_ops");
+            obj.remove("shards_min");
+            obj.remove("shards_max");
+        } else {
+            panic!("retrieval config serializes to an object");
+        }
+        let back = RetrievalConfig::from_json(&v).unwrap();
+        assert_eq!(back.heat_decay_interval_ops, 1024);
+        assert_eq!(back.shards_min, 1);
+        assert_eq!(back.shards_max, 0);
     }
 
     #[test]

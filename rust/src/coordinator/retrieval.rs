@@ -200,6 +200,14 @@ impl Engine {
         self.index.read().unwrap().rebalance()
     }
 
+    /// Change the live shard count to `target` (grow appends empty
+    /// shards; shrink drains-then-retires) under the engine's *read*
+    /// lease — concurrent queries keep serving, bit-identically, through
+    /// every topology swap. Errors on unsharded indexes.
+    pub fn reshard(&self, target: usize) -> Result<crate::index::ReshardReport> {
+        self.index.read().unwrap().reshard(target)
+    }
+
     /// Shared metrics — recording is internally synchronized.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics

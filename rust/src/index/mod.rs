@@ -39,7 +39,10 @@ pub use clusters::{ClusterMeta, ClusterSet, EmbedSource};
 pub use edge::EdgeIndex;
 pub use flat::FlatIndex;
 pub use ivf::IvfIndex;
-pub use rebalance::{plan_rebalance, ClusterLoad, MigrationMove, MigrationPlan, RebalanceReport};
+pub use rebalance::{
+    plan_rebalance, ClusterLoad, MigrationMove, MigrationPlan, RebalanceReport, ReshardReport,
+    HEAT_WEIGHT,
+};
 pub use scorer::Scorer;
 pub use shard::{ShardStats, ShardedEdgeIndex};
 
@@ -316,6 +319,14 @@ pub trait VectorIndex: Send + Sync {
     /// zero migrated.
     fn rebalance(&self) -> Result<RebalanceReport> {
         Ok(RebalanceReport::default())
+    }
+
+    /// Change the live shard count to `target` by growing (empty shards
+    /// appended) or shrinking (drain-then-retire). Only the sharded index
+    /// supports elastic topology; everything else rejects the op so the
+    /// server can surface a clean error instead of silently ignoring it.
+    fn reshard(&self, _target: usize) -> Result<ReshardReport> {
+        anyhow::bail!("index is not sharded; reshard is unsupported")
     }
 
     /// Flush the structural write-ahead log's snapshot (consolidating

@@ -11,13 +11,18 @@
 //! others idle. This module adds
 //!
 //! * **per-shard load accounting** ([`ShardedEdgeIndex::cluster_loads`]):
-//!   chunk rows plus cached-embedding mass from the cost-LFU cache, per
-//!   owned cluster (per-shard probe counters ride along in
+//!   chunk rows plus cached-embedding mass from the cost-LFU cache plus
+//!   **probe heat** weighted at [`HEAT_WEIGHT`], per owned cluster
+//!   (per-shard probe counters ride along in
 //!   [`ShardStats`](crate::index::ShardStats) for observability);
 //! * a **planner** ([`plan_rebalance`]): a pure, deterministic greedy
 //!   equalizer that proposes at most `max_migrations_per_round` cluster
 //!   moves, each strictly reducing the load spread (max − min shard
-//!   load);
+//!   load). Because heat dominates the weighted load for hot clusters,
+//!   equalizing the weighted spread *spreads hot clusters across
+//!   shards*; among moves that reduce the spread equally, the planner
+//!   prefers the candidate with the highest co-probe affinity to the
+//!   receiving shard's residents, *co-locating co-probed clusters*;
 //! * an **online migration primitive**
 //!   ([`ShardedEdgeIndex::migrate_cluster`]): copy → flip → retire, one
 //!   cluster at a time, during which concurrent searches stay
@@ -54,6 +59,7 @@
 //! in the full lock hierarchy and composes with ProbeTable snapshots and
 //! the CacheIntent replay invariant.
 
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 
 use anyhow::Result;
@@ -61,6 +67,13 @@ use anyhow::Result;
 use crate::index::shard::{ShardedEdgeIndex, ORPHAN};
 use crate::index::updates::ClusterExport;
 use crate::storage::WalOp;
+
+/// How many resident rows one unit of probe heat weighs in the planner's
+/// load scalar. Heat decays (halves every `heat_decay_interval_ops`
+/// structural updates), so the weighted term tracks *current* traffic:
+/// a cluster probed a handful of times recently outweighs a cold fat
+/// one, which is exactly the skew EdgeRAG's serving path cares about.
+pub const HEAT_WEIGHT: u64 = 4;
 
 /// One cluster's contribution to its shard's load.
 #[derive(Debug, Clone, Copy)]
@@ -73,12 +86,20 @@ pub struct ClusterLoad {
     /// cluster (0 when not cached) — cached mass migrates with the
     /// cluster, so it counts toward placement.
     pub cached_rows: u64,
+    /// Decayed probe-heat counter for this cluster (see
+    /// [`ShardedEdgeIndex::cluster_probe_heat`]); weighted by
+    /// [`HEAT_WEIGHT`] in the load scalar so hot clusters spread across
+    /// shards instead of piling onto one.
+    pub heat: u64,
 }
 
 impl ClusterLoad {
-    /// The scalar the planner equalizes: resident rows plus cached rows.
+    /// The scalar the planner equalizes: resident rows plus cached rows
+    /// plus heat-weighted probe traffic.
     pub fn load(&self) -> u64 {
-        self.rows + self.cached_rows
+        self.rows
+            .saturating_add(self.cached_rows)
+            .saturating_add(self.heat.saturating_mul(HEAT_WEIGHT))
     }
 }
 
@@ -104,6 +125,20 @@ pub struct MigrationPlan {
     pub spread_after: u64,
 }
 
+/// Outcome of one elastic reshard ([`ShardedEdgeIndex::reshard`]): the
+/// shard count before and after, and how many clusters the shrink drain
+/// migrated (0 for a grow — fresh shards start empty and fill through
+/// later rebalance rounds).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReshardReport {
+    /// Shard count before the reshard.
+    pub from: usize,
+    /// Shard count after.
+    pub to: usize,
+    /// Clusters migrated off retiring shards by the drain.
+    pub migrated: usize,
+}
+
 /// Outcome of one rebalance round ([`ShardedEdgeIndex::rebalance`]).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct RebalanceReport {
@@ -121,26 +156,37 @@ pub struct RebalanceReport {
 }
 
 /// Compute a bounded, deterministic migration plan over a per-shard load
-/// snapshot. Pure: no locks, no index access — property-tested directly.
+/// snapshot and a co-probe affinity table. Pure: no locks, no index
+/// access — property-tested directly.
 ///
-/// Greedy equalization: each step moves one cluster from the currently
-/// heaviest shard to the currently lightest, choosing the cluster whose
-/// load is closest to half the gap (evaluated exactly against the
-/// resulting global spread). A step is only taken when it *strictly*
-/// reduces the spread, so the projected spread is monotonically
-/// non-increasing over the plan and the plan never exceeds `max_moves`.
+/// Greedy equalization of the **heat-weighted** load ([`ClusterLoad::load`]):
+/// each step moves one cluster from the currently heaviest shard to the
+/// currently lightest, choosing the cluster whose load is closest to
+/// half the gap (evaluated exactly against the resulting global
+/// spread). When both bracketing candidates reduce the spread equally,
+/// the one with the higher co-probe affinity to the receiver's current
+/// residents wins — co-probed clusters drift together while hot ones
+/// spread apart. A step is only taken when it *strictly* reduces the
+/// spread, so the projected spread is monotonically non-increasing over
+/// the plan and the plan never exceeds `max_moves`. With an empty
+/// affinity table the plan is exactly the pre-heat equalizer's.
 ///
 /// Composition with cross-shard merges: a plan draws exclusively from
 /// its input snapshot, and [`ShardedEdgeIndex::cluster_loads`] lists
 /// only owned, *active* clusters — a merged (tombstoned) cluster can
-/// never be scheduled, and a victim's absorbed mass is re-accounted the
-/// moment the next snapshot is taken. A *stale* plan naming a cluster
-/// that merged (or moved) after planning is defused at execution time:
+/// never be scheduled, and a victim's absorbed mass (heat included —
+/// merges absorb the dead cluster's heat) is re-accounted the moment
+/// the next snapshot is taken. A *stale* plan naming a cluster that
+/// merged (or moved) after planning is defused at execution time:
 /// [`ShardedEdgeIndex::migrate_cluster`] re-validates liveness and
 /// placement under the structural-updates mutex — the same mutex merges
 /// hold — and skips the move. `rust/tests/merge_routing.rs` pins both
 /// properties.
-pub fn plan_rebalance(shard_loads: &[Vec<ClusterLoad>], max_moves: usize) -> MigrationPlan {
+pub fn plan_rebalance(
+    shard_loads: &[Vec<ClusterLoad>],
+    affinity: &HashMap<(u32, u32), u64>,
+    max_moves: usize,
+) -> MigrationPlan {
     let k = shard_loads.len();
     let mut totals: Vec<u64> = shard_loads
         .iter()
@@ -173,6 +219,33 @@ pub fn plan_rebalance(shard_loads: &[Vec<ClusterLoad>], max_moves: usize) -> Mig
         return plan;
     }
 
+    // Current placement, updated as the plan applies its own moves — the
+    // affinity tie-break scores a candidate against the clusters that
+    // would actually be its neighbours when the move lands.
+    let mut at: HashMap<u32, usize> = shard_loads
+        .iter()
+        .enumerate()
+        .flat_map(|(s, cs)| cs.iter().map(move |c| (c.global, s)))
+        .collect();
+    // Summed co-probe affinity between `g` and the clusters currently
+    // placed on `shard`. The table is bounded (MAX_AFFINITY_PAIRS), so a
+    // full scan per candidate is cheap — and keeps this pure.
+    let aff_to = |g: u32, shard: usize, at: &HashMap<u32, usize>| -> u64 {
+        affinity
+            .iter()
+            .filter_map(|(&(a, b), &v)| {
+                let other = if a == g {
+                    b
+                } else if b == g {
+                    a
+                } else {
+                    return None;
+                };
+                (at.get(&other) == Some(&shard)).then_some(v)
+            })
+            .sum()
+    };
+
     for _ in 0..max_moves {
         let donor = (0..k).max_by_key(|&s| (totals[s], std::cmp::Reverse(s))).unwrap();
         let recv = (0..k).min_by_key(|&s| (totals[s], s)).unwrap();
@@ -181,12 +254,13 @@ pub fn plan_rebalance(shard_loads: &[Vec<ClusterLoad>], max_moves: usize) -> Mig
         }
         let gap = totals[donor] - totals[recv];
         // Candidates bracketing half the gap: the largest load ≤ gap/2
-        // and the smallest load > gap/2.
+        // and the smallest load > gap/2. Selection order is fixed, so
+        // ties (equal spread, equal affinity) resolve deterministically.
         let cands = &avail[donor];
         let split = cands.partition_point(|&(w, _)| w <= gap / 2);
-        let mut best: Option<(u64, usize)> = None; // (resulting spread, cand index)
+        let mut best: Option<(u64, u64, usize)> = None; // (spread, affinity, cand index)
         for i in [split.wrapping_sub(1), split] {
-            let Some(&(w, _)) = cands.get(i) else { continue };
+            let Some(&(w, g)) = cands.get(i) else { continue };
             if w == 0 {
                 continue; // moving an empty cluster changes nothing
             }
@@ -194,21 +268,25 @@ pub fn plan_rebalance(shard_loads: &[Vec<ClusterLoad>], max_moves: usize) -> Mig
             t[donor] -= w;
             t[recv] += w;
             let s = spread(&t);
+            let a = aff_to(g, recv, &at);
             let better = match best {
                 None => true,
-                Some((bs, _)) => s < bs,
+                // Smaller spread wins; equal spread → the candidate
+                // more co-probed with the receiver's residents wins.
+                Some((bs, ba, _)) => s < bs || (s == bs && a > ba),
             };
             if better {
-                best = Some((s, i));
+                best = Some((s, a, i));
             }
         }
-        let Some((new_spread, i)) = best else { break };
+        let Some((new_spread, _, i)) = best else { break };
         if new_spread >= plan.spread_after {
             break; // no candidate strictly improves — stop the round
         }
         let (w, global) = avail[donor].remove(i);
         totals[donor] -= w;
         totals[recv] += w;
+        at.insert(global, recv);
         // The moved cluster becomes a candidate on its new shard (a
         // later step of the same plan may move it again).
         let pos = avail[recv].partition_point(|&c| c < (w, global));
@@ -225,13 +303,21 @@ pub fn plan_rebalance(shard_loads: &[Vec<ClusterLoad>], max_moves: usize) -> Mig
 
 impl ShardedEdgeIndex {
     /// Per-shard load snapshot: one [`ClusterLoad`] per owned, active
-    /// cluster (rows + cached mass). Takes the ownership read lock, then
-    /// one shard read lease at a time.
+    /// cluster (rows + cached mass + decayed probe heat). Takes the
+    /// ownership read lock, then the heat table, then one shard read
+    /// lease at a time — the hierarchy `shard_stats` uses.
     pub fn cluster_loads(&self) -> Vec<Vec<ClusterLoad>> {
         let own = self.ownership.read().unwrap();
+        let heat_rows = self.cluster_probe_heat();
+        let heat_of = |g: u32| -> u64 {
+            heat_rows
+                .binary_search_by_key(&g, |&(id, _)| id)
+                .map_or(0, |i| heat_rows[i].1)
+        };
+        let topo = self.topo();
         let dim = self.scorer.dim().max(1) as u64;
-        let mut out = Vec::with_capacity(self.shards.len());
-        for (s, shard) in self.shards.iter().enumerate() {
+        let mut out = Vec::with_capacity(topo.len());
+        for (s, shard) in topo.shards.iter().enumerate() {
             let guard = shard.read().unwrap();
             let mut loads = Vec::new();
             for (l, &g) in own.locals[s].iter().enumerate() {
@@ -245,6 +331,7 @@ impl ShardedEdgeIndex {
                     global: g,
                     rows: guard.clusters().clusters[l].len() as u64,
                     cached_rows,
+                    heat: heat_of(g),
                 });
             }
             out.push(loads);
@@ -277,7 +364,8 @@ impl ShardedEdgeIndex {
     pub fn rebalance(&self) -> Result<RebalanceReport> {
         let _round = self.rebalance_serial.lock().unwrap();
         let loads = self.cluster_loads();
-        let plan = plan_rebalance(&loads, self.max_migrations);
+        let affinity: HashMap<(u32, u32), u64> = self.cluster_affinity().into_iter().collect();
+        let plan = plan_rebalance(&loads, &affinity, self.max_migrations);
         let mut report = RebalanceReport {
             planned: plan.moves.len(),
             spread_before: plan.spread_before,
@@ -300,8 +388,9 @@ impl ShardedEdgeIndex {
     /// retire sequence documented in the module docs under the
     /// structural-updates mutex.
     pub fn migrate_cluster(&self, global: u32, dest: usize) -> Result<bool> {
-        anyhow::ensure!(dest < self.shards.len(), "no shard {dest}");
         let _serial = self.updates_serial.lock().unwrap();
+        let topo = self.topo(); // stable under the updates mutex
+        anyhow::ensure!(dest < topo.len(), "no shard {dest}");
         let Some((src, local)) = self.ownership.read().unwrap().owner_of(global) else {
             return Ok(false);
         };
@@ -312,7 +401,7 @@ impl ShardedEdgeIndex {
         // Copy: a read lease only — searches of the source shard keep
         // flowing while the snapshot is taken.
         let export = {
-            let guard = self.shards[src].read().unwrap();
+            let guard = topo.shards[src].read().unwrap();
             if !guard.active_flags()[local as usize] {
                 return Ok(false); // tombstoned since planning
             }
@@ -355,7 +444,8 @@ impl ShardedEdgeIndex {
         local: u32,
         dest: usize,
     ) -> Result<u32> {
-        let new_local = self.shards[dest].write().unwrap().import_cluster(export)?;
+        let topo = self.topo(); // stable under the updates mutex
+        let new_local = topo.shards[dest].write().unwrap().import_cluster(export)?;
         {
             let mut own = self.ownership.write().unwrap();
             own.owner[global as usize] = (dest as u32, new_local);
@@ -363,11 +453,11 @@ impl ShardedEdgeIndex {
             debug_assert_eq!(own.locals[dest].len(), new_local as usize);
             own.locals[dest].push(global);
         }
-        self.shards[src].write().unwrap().retire_cluster(local)?;
-        self.counters[src]
+        topo.shards[src].write().unwrap().retire_cluster(local)?;
+        topo.counters[src]
             .migrated_out
             .fetch_add(1, Ordering::Relaxed);
-        self.counters[dest]
+        topo.counters[dest]
             .migrated_in
             .fetch_add(1, Ordering::Relaxed);
         Ok(new_local)
@@ -390,7 +480,8 @@ impl ShardedEdgeIndex {
     pub fn verify_integrity(&self) -> Result<()> {
         let _serial = self.updates_serial.lock().unwrap();
         let own = self.ownership.read().unwrap();
-        let k = self.shards.len();
+        let topo = self.topo(); // stable under the updates mutex
+        let k = topo.len();
         anyhow::ensure!(own.locals.len() == k, "locals table covers every shard");
 
         let mut seen = vec![false; own.owner.len()];
@@ -414,7 +505,7 @@ impl ShardedEdgeIndex {
             anyhow::ensure!(s, "global {g} has no owning slot");
         }
 
-        for (s, shard) in self.shards.iter().enumerate() {
+        for (s, shard) in topo.shards.iter().enumerate() {
             let guard = shard.read().unwrap();
             let n = guard.clusters().n_clusters();
             anyhow::ensure!(
@@ -495,6 +586,8 @@ mod tests {
         totals
     }
 
+    /// Random loads with heat included: every property below holds for
+    /// the heat-weighted scalar exactly as it did for rows+cached.
     fn random_loads(rng: &mut Rng, shards: usize) -> Vec<Vec<ClusterLoad>> {
         let mut g = 0u32;
         (0..shards)
@@ -506,11 +599,29 @@ mod tests {
                             global: g,
                             rows: rng.below(200) as u64,
                             cached_rows: rng.below(50) as u64,
+                            heat: rng.below(40) as u64,
                         }
                     })
                     .collect()
             })
             .collect()
+    }
+
+    /// Random (bounded) co-probe affinity over the snapshot's globals.
+    fn random_affinity(rng: &mut Rng, loads: &[Vec<ClusterLoad>]) -> HashMap<(u32, u32), u64> {
+        let globals: Vec<u32> = loads.iter().flatten().map(|c| c.global).collect();
+        let mut aff = HashMap::new();
+        if globals.len() < 2 {
+            return aff;
+        }
+        for _ in 0..rng.below(24) {
+            let a = globals[rng.below(globals.len())];
+            let b = globals[rng.below(globals.len())];
+            if a != b {
+                *aff.entry((a.min(b), a.max(b))).or_insert(0) += rng.below(16) as u64 + 1;
+            }
+        }
+        aff
     }
 
     #[test]
@@ -520,7 +631,8 @@ mod tests {
             let shards = rng.range(1, 6);
             let max_moves = rng.below(5);
             let loads = random_loads(&mut rng, shards);
-            let plan = plan_rebalance(&loads, max_moves);
+            let aff = random_affinity(&mut rng, &loads);
+            let plan = plan_rebalance(&loads, &aff, max_moves);
             assert!(plan.moves.len() <= max_moves, "{plan:?}");
         }
     }
@@ -531,7 +643,8 @@ mod tests {
         for case in 0..200 {
             let shards = rng.range(2, 6);
             let loads = random_loads(&mut rng, shards);
-            let plan = plan_rebalance(&loads, 8);
+            let aff = random_affinity(&mut rng, &loads);
+            let plan = plan_rebalance(&loads, &aff, 8);
             assert!(
                 plan.spread_after <= plan.spread_before,
                 "case {case}: spread grew: {plan:?}"
@@ -572,7 +685,8 @@ mod tests {
             let loads = random_loads(&mut rng, shards);
             let known: std::collections::HashSet<u32> =
                 loads.iter().flatten().map(|c| c.global).collect();
-            let plan = plan_rebalance(&loads, 8);
+            let aff = random_affinity(&mut rng, &loads);
+            let plan = plan_rebalance(&loads, &aff, 8);
             for m in &plan.moves {
                 assert!(
                     known.contains(&m.cluster),
@@ -589,7 +703,8 @@ mod tests {
         let mk = || {
             let mut rng = Rng::new(seed);
             let loads = random_loads(&mut rng, 4);
-            plan_rebalance(&loads, 6)
+            let aff = random_affinity(&mut rng, &loads);
+            plan_rebalance(&loads, &aff, 6)
         };
         let (a, b) = (mk(), mk());
         assert_eq!(a.moves, b.moves);
@@ -601,17 +716,120 @@ mod tests {
         // One shard holds everything: a round must move work off it.
         let loads = vec![
             vec![
-                ClusterLoad { global: 0, rows: 100, cached_rows: 0 },
-                ClusterLoad { global: 1, rows: 90, cached_rows: 10 },
-                ClusterLoad { global: 2, rows: 80, cached_rows: 0 },
-                ClusterLoad { global: 3, rows: 10, cached_rows: 0 },
+                ClusterLoad { global: 0, rows: 100, cached_rows: 0, heat: 0 },
+                ClusterLoad { global: 1, rows: 90, cached_rows: 10, heat: 0 },
+                ClusterLoad { global: 2, rows: 80, cached_rows: 0, heat: 0 },
+                ClusterLoad { global: 3, rows: 10, cached_rows: 0, heat: 0 },
             ],
             vec![],
             vec![],
         ];
-        let plan = plan_rebalance(&loads, 3);
+        let plan = plan_rebalance(&loads, &HashMap::new(), 3);
         assert!(!plan.moves.is_empty());
         assert!(plan.spread_after < plan.spread_before / 2, "{plan:?}");
         assert!(plan.moves.iter().all(|m| m.from == 0));
+    }
+
+    #[test]
+    fn heat_only_spread_decreases_monotonically() {
+        // The heat-spread half of the tentpole objective, isolated: with
+        // rows = cached = 0 the load scalar is HEAT_WEIGHT × heat, so
+        // the plan's strict spread decrease IS a strict heat-spread
+        // decrease — hot clusters spread out, never pile up.
+        let mut rng = Rng::new(test_seed(0x4EA7));
+        for case in 0..200 {
+            let shards = rng.range(2, 6);
+            let mut loads = random_loads(&mut rng, shards);
+            for c in loads.iter_mut().flatten() {
+                c.rows = 0;
+                c.cached_rows = 0;
+            }
+            let heat_spread = |totals: &[u64]| -> u64 {
+                match (totals.iter().max(), totals.iter().min()) {
+                    (Some(max), Some(min)) => max - min,
+                    _ => 0,
+                }
+            };
+            let plan = plan_rebalance(&loads, &HashMap::new(), 8);
+            assert!(plan.spread_after <= plan.spread_before, "case {case}: {plan:?}");
+            if !plan.moves.is_empty() {
+                assert!(plan.spread_after < plan.spread_before, "case {case}: {plan:?}");
+            }
+            // Projection is exact in heat units too.
+            let totals = apply(&plan, &loads);
+            assert_eq!(
+                heat_spread(&totals),
+                plan.spread_after,
+                "case {case}: {plan:?}"
+            );
+            assert_eq!(plan.spread_before % HEAT_WEIGHT, 0, "pure-heat loads");
+        }
+    }
+
+    #[test]
+    fn plan_never_moves_merged_or_tombstoned_clusters() {
+        // cluster_loads excludes tombstoned clusters from the snapshot;
+        // the plan must never resurrect one — even when the affinity
+        // table still holds edges naming it (merge re-keying is
+        // best-effort and decay-pruned, so stale edges can linger).
+        let mut rng = Rng::new(test_seed(0x70B5));
+        for case in 0..200 {
+            let shards = rng.range(2, 6);
+            let mut loads = random_loads(&mut rng, shards);
+            let mut aff = random_affinity(&mut rng, &loads);
+            // Tombstone roughly a third of the clusters: drop them from
+            // the snapshot, but leave their affinity edges in place.
+            let mut tombstoned = std::collections::HashSet::new();
+            for cs in loads.iter_mut() {
+                cs.retain(|c| {
+                    if c.global % 3 == 0 {
+                        tombstoned.insert(c.global);
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+            for (i, &g) in tombstoned.iter().enumerate().take(4) {
+                aff.insert((g.min(i as u32 + 1), g.max(i as u32 + 1)), 9);
+            }
+            let plan = plan_rebalance(&loads, &aff, 8);
+            for m in &plan.moves {
+                assert!(
+                    !tombstoned.contains(&m.cluster),
+                    "case {case}: planned tombstoned cluster {}: {plan:?}",
+                    m.cluster
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn affinity_breaks_equal_spread_ties_toward_coprobed_receiver() {
+        // Two donor candidates produce the same resulting spread (move 8
+        // or move 12 out of 20 → spread 4 either way). Without affinity
+        // the bracket's first candidate (global 1, load 8) wins; with an
+        // edge between global 2 and the receiver's resident global 3,
+        // the co-probed cluster must win instead.
+        let loads = vec![
+            vec![
+                ClusterLoad { global: 1, rows: 8, cached_rows: 0, heat: 0 },
+                ClusterLoad { global: 2, rows: 12, cached_rows: 0, heat: 0 },
+            ],
+            vec![ClusterLoad { global: 3, rows: 0, cached_rows: 0, heat: 0 }],
+        ];
+        let neutral = plan_rebalance(&loads, &HashMap::new(), 1);
+        assert_eq!(neutral.moves.len(), 1);
+        assert_eq!(neutral.moves[0].cluster, 1, "{neutral:?}");
+
+        let mut aff = HashMap::new();
+        aff.insert((2u32, 3u32), 5u64);
+        let steered = plan_rebalance(&loads, &aff, 1);
+        assert_eq!(steered.moves.len(), 1);
+        assert_eq!(steered.moves[0].cluster, 2, "{steered:?}");
+        assert_eq!(
+            steered.spread_after, neutral.spread_after,
+            "the tie-break never trades spread for affinity"
+        );
     }
 }

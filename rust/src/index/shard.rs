@@ -67,23 +67,34 @@
 //!
 //! ## Locking
 //!
-//! Lock order is strictly `updates mutex → ownership RwLock → shard
-//! RwLock → controller → cache → memory model`, and no thread ever holds
-//! two shard locks at once (probing reads only the snapshot; routing and
-//! snapshot rebuilds visit shards sequentially, one read lock at a time;
-//! fan-out workers each take exactly one). Structural mutations (insert,
-//! remove, migrate, merge) serialize on the updates mutex — they are
-//! rare and heavy, and serializing them keeps the composed structural
-//! sequences (migration's copy→flip→retire, a cross-shard merge's
+//! Lock order is strictly `updates mutex → ownership RwLock → probe-heat
+//! / co-probe tables → topology RwLock → shard RwLock → controller →
+//! cache → memory model`, and no thread ever holds two shard locks at
+//! once (probing reads only the snapshot; routing and snapshot rebuilds
+//! visit shards sequentially, one read lock at a time; fan-out workers
+//! each take exactly one). Structural mutations (insert, remove,
+//! migrate, merge) serialize on the updates mutex — they are rare and
+//! heavy, and serializing them keeps the composed structural sequences
+//! (migration's copy→flip→retire, a cross-shard merge's
 //! migrate-then-merge) atomic against other structural ops; searches
-//! never touch the mutex. A search holds the ownership **read** lock from probe-list
-//! grouping through its cluster walks, so a migration's ownership flip
-//! (the write lock) naturally drains every search still routed at the
-//! pre-flip owner before the source copy is retired. See
+//! never touch the mutex. A search holds the ownership **read** lock from
+//! probe-list grouping through its cluster walks, so a migration's
+//! ownership flip (the write lock) naturally drains every search still
+//! routed at the pre-flip owner before the source copy is retired.
+//!
+//! The shard set itself lives behind the **topology** lock as an
+//! `Arc<Topology>` snapshot ([`ShardedEdgeIndex::grow_shards`] /
+//! [`ShardedEdgeIndex::shrink_shards`] swap it online). The lock is held
+//! only to clone or swap the `Arc`; a search clones the snapshot *while
+//! holding the ownership read lock*, and every swap happens under the
+//! ownership **write** lock (plus the updates mutex), so the shard
+//! indices a search resolves through `Ownership` always index the
+//! topology snapshot it walks — a reshard can never tear a search. See
 //! `docs/ARCHITECTURE.md` for the full hierarchy including the engine
 //! lease above this one.
 
-use std::path::Path;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 
@@ -115,6 +126,12 @@ pub const HOT_CLUSTERS: usize = 16;
 /// away: the slot stays (local ids are never reused) but maps to no
 /// global cluster.
 pub(crate) const ORPHAN: u32 = u32::MAX;
+
+/// Cap on distinct co-probe affinity pairs tracked. At the cap, existing
+/// pairs keep counting but no new pair is admitted until decay prunes
+/// cold ones — the table is a placement heuristic, not an invariant, so
+/// bounded staleness beats unbounded memory.
+pub(crate) const MAX_AFFINITY_PAIRS: usize = 4096;
 
 // ---------------------------------------------------------------------------
 // Ownership: global cluster id ⇄ (shard, local)
@@ -224,17 +241,43 @@ pub struct ShardStats {
 }
 
 // ---------------------------------------------------------------------------
+// The live shard set (elastic)
+// ---------------------------------------------------------------------------
+
+/// An immutable snapshot of the live shard set: the shards themselves
+/// plus their serving counters, swapped as one `Arc` by
+/// [`ShardedEdgeIndex::grow_shards`] / [`ShardedEdgeIndex::shrink_shards`].
+/// Each shard (and counter block) is its own `Arc` so a swap clones only
+/// the spine: surviving shards keep their identity — and their in-flight
+/// read leases — across a reshard, and fan-out jobs on the pool can
+/// borrow a shard without tying its lifetime to the calling query.
+pub(crate) struct Topology {
+    pub(crate) shards: Vec<Arc<RwLock<EdgeIndex>>>,
+    pub(crate) counters: Vec<Arc<ShardCounters>>,
+}
+
+impl Topology {
+    pub(crate) fn len(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
 // The sharded index
 // ---------------------------------------------------------------------------
 
 /// Clusters partitioned across `N` independently locked [`EdgeIndex`]
 /// shards (see the module docs for the design and equivalence argument).
+/// `N` is elastic: [`ShardedEdgeIndex::reshard`] grows or shrinks the
+/// live shard set online.
 pub struct ShardedEdgeIndex {
     kind: IndexKind,
-    /// `Arc` so fan-out jobs on the pool can borrow shards without tying
-    /// their lifetimes to the calling query.
-    pub(crate) shards: Arc<Vec<RwLock<EdgeIndex>>>,
-    pub(crate) counters: Vec<ShardCounters>,
+    /// The live shard set, behind the topology lock (held only to clone
+    /// or swap the `Arc`; see the module docs for where it sits in the
+    /// hierarchy). Every swap runs under the ownership write lock, so a
+    /// snapshot cloned under the ownership read lock is always exactly
+    /// the set the ownership table indexes.
+    topology: RwLock<Arc<Topology>>,
     nprobe: usize,
     device: DeviceProfile,
     pub(crate) scorer: Scorer,
@@ -290,6 +333,26 @@ pub struct ShardedEdgeIndex {
     /// across shard read leases, and nothing holding a shard lease ever
     /// acquires it.
     probe_heat: RwLock<Vec<AtomicU64>>,
+    /// Co-probe affinity: for each unordered global-id pair `(a, b)`
+    /// (keyed `a < b`), how many searches probed both in one probe list.
+    /// The heat-aware planner reads it to co-locate co-probed clusters
+    /// (see [`crate::index::rebalance::plan_rebalance`]); bounded at
+    /// [`MAX_AFFINITY_PAIRS`] and halved alongside the heat decay. Sits
+    /// at the same level as `probe_heat` in the lock hierarchy.
+    co_probe: Mutex<HashMap<(u32, u32), u64>>,
+    /// Halve every heat counter and affinity edge after every this many
+    /// structural updates (0 = never): without decay the counters are
+    /// monotone lifetime totals and placement chases historical hot
+    /// spots forever.
+    heat_decay_every: usize,
+    // -- Retained build materials so `grow_shards` can construct fresh
+    //    empty shards identical to what `build` would have made. --
+    source: EmbedSource,
+    blob_dir: Option<PathBuf>,
+    memory: SharedMemory,
+    retrieval_cfg: RetrievalConfig,
+    store_limit: SimDuration,
+    slo: SimDuration,
     /// Structural write-ahead log, owned at the *wrapper* level: the
     /// per-shard [`EdgeIndex`]es keep `wal: None`, so their internal
     /// appends no-op and every record here carries **global** ids.
@@ -382,7 +445,7 @@ impl ShardedEdgeIndex {
                 slo,
             )?;
             shard.set_region_base((i as u32) << 24);
-            built.push(RwLock::new(shard));
+            built.push(Arc::new(RwLock::new(shard)));
         }
 
         // Initial ownership mirrors the round-robin partition: global
@@ -401,14 +464,23 @@ impl ShardedEdgeIndex {
 
         // Pool sizing: the calling thread always walks one shard-group
         // itself, so at most `k − 1` walks per query run remotely; more
-        // workers than cores just adds scheduler churn.
-        let workers = k
+        // workers than cores just adds scheduler churn. A configured
+        // elastic ceiling (`shards_max`) sizes the pool for the largest
+        // topology a later `grow_shards` may install, so growth never
+        // needs to resize the pool.
+        let pool_ceiling = match retrieval.shards_max {
+            0 => k,
+            m => k.max(m.min(MAX_SHARDS)),
+        };
+        let workers = pool_ceiling
             .saturating_sub(1)
             .min(crate::config::default_shards());
         let index = ShardedEdgeIndex {
             kind,
-            shards: Arc::new(built),
-            counters: (0..k).map(|_| ShardCounters::default()).collect(),
+            topology: RwLock::new(Arc::new(Topology {
+                shards: built,
+                counters: (0..k).map(|_| Arc::new(ShardCounters::default())).collect(),
+            })),
             nprobe: retrieval.nprobe,
             device,
             scorer,
@@ -433,6 +505,14 @@ impl ShardedEdgeIndex {
             table_stale: AtomicBool::new(false),
             table_rebuild: Mutex::new(()),
             probe_heat: RwLock::new((0..n).map(|_| AtomicU64::new(0)).collect()),
+            co_probe: Mutex::new(HashMap::new()),
+            heat_decay_every: retrieval.heat_decay_interval_ops,
+            source,
+            blob_dir: blob_dir.map(Path::to_path_buf),
+            memory,
+            retrieval_cfg: retrieval.clone(),
+            store_limit,
+            slo,
             wal: None,
             replaying: AtomicBool::new(false),
             probe_rebuilds: AtomicU64::new(0),
@@ -443,6 +523,16 @@ impl ShardedEdgeIndex {
             debug_assert!(_built_table, "initial rebuild cannot be torn");
         }
         Ok(index)
+    }
+
+    /// Snapshot the live shard set (one lock acquire + `Arc` clone).
+    /// Callers that index `Ownership::locals` against the snapshot must
+    /// take it while holding the ownership lock (any mode): swaps run
+    /// under the ownership write lock, so the two can never disagree.
+    /// Callers under `updates_serial` or `rebalance_serial` see a stable
+    /// topology for the whole critical section (swaps take both).
+    pub(crate) fn topo(&self) -> Arc<Topology> {
+        self.topology.read().unwrap().clone()
     }
 
     /// The current probe snapshot, rebuilding lazily if a structural
@@ -484,10 +574,11 @@ impl ShardedEdgeIndex {
     /// next probe retries once registration completes.
     fn rebuild_probe_table(&self) -> bool {
         let own = self.ownership.read().unwrap();
+        let topo = self.topo();
         // Per-shard copies first (one lease at a time), splice after.
-        let mut parts: Vec<(EmbeddingMatrix, Vec<bool>)> = Vec::with_capacity(self.shards.len());
+        let mut parts: Vec<(EmbeddingMatrix, Vec<bool>)> = Vec::with_capacity(topo.len());
         let mut generation = 0u64;
-        for (s, shard) in self.shards.iter().enumerate() {
+        for (s, shard) in topo.shards.iter().enumerate() {
             let guard = shard.read().unwrap();
             if guard.clusters().n_clusters() != own.locals[s].len() {
                 return false; // torn: shard mutated ahead of registration
@@ -526,9 +617,10 @@ impl ShardedEdgeIndex {
         true
     }
 
-    /// Number of shards.
+    /// Number of shards (the *current* count — [`ShardedEdgeIndex::reshard`]
+    /// changes it online).
     pub fn shards(&self) -> usize {
-        self.shards.len()
+        self.topo().len()
     }
 
     /// Owning shard of a global cluster id (its *current* owner — the
@@ -545,7 +637,8 @@ impl ShardedEdgeIndex {
     /// Run `f` against one shard under its read lease (introspection and
     /// tests; holding the guard blocks only that shard's writers).
     pub fn with_shard<R>(&self, shard: usize, f: impl FnOnce(&EdgeIndex) -> R) -> R {
-        f(&self.shards[shard].read().unwrap())
+        let topo = self.topo();
+        f(&topo.shards[shard].read().unwrap())
     }
 
     /// Override the probe width (harness sweeps).
@@ -600,7 +693,7 @@ impl ShardedEdgeIndex {
                         self.remove_chunk(*id)?;
                     }
                     WalOp::Migrate { global, dest } => {
-                        if (*dest as usize) < self.shards.len() {
+                        if (*dest as usize) < self.shards() {
                             self.migrate_cluster(*global, *dest as usize)?;
                         }
                     }
@@ -627,7 +720,7 @@ impl ShardedEdgeIndex {
         {
             return;
         }
-        for shard in self.shards.iter() {
+        for shard in self.topo().shards.iter() {
             shard.write().unwrap().pin_threshold(threshold_ms);
         }
     }
@@ -639,7 +732,7 @@ impl ShardedEdgeIndex {
             return None;
         }
         let mut total = CacheStats::default();
-        for shard in self.shards.iter() {
+        for shard in self.topo().shards.iter() {
             if let Some(s) = shard.read().unwrap().cache_stats() {
                 total.hits += s.hits;
                 total.misses += s.misses;
@@ -653,7 +746,8 @@ impl ShardedEdgeIndex {
 
     /// Total bytes resident across all shard caches.
     pub fn cache_used_bytes(&self) -> u64 {
-        self.shards
+        self.topo()
+            .shards
             .iter()
             .map(|s| s.read().unwrap().cache_used_bytes())
             .sum()
@@ -666,8 +760,9 @@ impl ShardedEdgeIndex {
     /// belt and braces).
     pub fn cached_clusters(&self) -> Vec<u32> {
         let own = self.ownership.read().unwrap();
+        let topo = self.topo();
         let mut all = Vec::new();
-        for (s, shard) in self.shards.iter().enumerate() {
+        for (s, shard) in topo.shards.iter().enumerate() {
             for local in shard.read().unwrap().cached_clusters() {
                 if let Some(g) = own.global_of(s, local) {
                     all.push(g);
@@ -681,7 +776,8 @@ impl ShardedEdgeIndex {
 
     /// Total clusters persisted across all shard blob stores.
     pub fn stored_clusters(&self) -> usize {
-        self.shards
+        self.topo()
+            .shards
             .iter()
             .map(|s| s.read().unwrap().stored_clusters())
             .sum()
@@ -689,7 +785,8 @@ impl ShardedEdgeIndex {
 
     /// Total bytes persisted across all shard blob stores.
     pub fn stored_bytes(&self) -> u64 {
-        self.shards
+        self.topo()
+            .shards
             .iter()
             .map(|s| s.read().unwrap().stored_bytes())
             .sum()
@@ -699,17 +796,19 @@ impl ShardedEdgeIndex {
     /// the scalar is for dashboards — see [`ShardedEdgeIndex::shard_stats`]
     /// for the per-shard values).
     pub fn threshold_ms(&self) -> f64 {
-        let sum: f64 = self
+        let topo = self.topo();
+        let sum: f64 = topo
             .shards
             .iter()
             .map(|s| s.read().unwrap().threshold_ms())
             .sum();
-        sum / self.shards.len() as f64
+        sum / topo.len() as f64
     }
 
     /// Active (non-tombstone) clusters across all shards.
     pub fn active_clusters(&self) -> usize {
-        self.shards
+        self.topo()
+            .shards
             .iter()
             .map(|s| s.read().unwrap().active_clusters())
             .sum()
@@ -720,7 +819,8 @@ impl ShardedEdgeIndex {
     /// yet flipped in) is skipped, so exactly the owning copy answers.
     pub fn cluster_of(&self, chunk: u32) -> Option<u32> {
         let own = self.ownership.read().unwrap();
-        for (s, shard) in self.shards.iter().enumerate() {
+        let topo = self.topo();
+        for (s, shard) in topo.shards.iter().enumerate() {
             if let Some(local) = shard.read().unwrap().cluster_of(chunk) {
                 if let Some(g) = own.global_of(s, local) {
                     return Some(g);
@@ -732,32 +832,66 @@ impl ShardedEdgeIndex {
 
     /// Count one search's probed globals into the per-cluster heat
     /// table, growing it when a probe names a global past the current
-    /// end (a split registered since the table last grew).
+    /// end (a split registered since the table last grew), and bump the
+    /// co-probe affinity edge for every pair in the probe list.
     fn note_probes(&self, probed: &[u32]) {
         let need = probed.iter().map(|&g| g as usize + 1).max().unwrap_or(0);
-        {
+        let counted = {
             let heat = self.probe_heat.read().unwrap();
             if heat.len() >= need {
                 for &g in probed {
                     heat[g as usize].fetch_add(1, Ordering::Relaxed);
                 }
-                return;
+                true
+            } else {
+                false
+            }
+        };
+        if !counted {
+            let mut heat = self.probe_heat.write().unwrap();
+            while heat.len() < need {
+                heat.push(AtomicU64::new(0));
+            }
+            for &g in probed {
+                heat[g as usize].fetch_add(1, Ordering::Relaxed);
             }
         }
-        let mut heat = self.probe_heat.write().unwrap();
-        while heat.len() < need {
-            heat.push(AtomicU64::new(0));
-        }
-        for &g in probed {
-            heat[g as usize].fetch_add(1, Ordering::Relaxed);
+        // Pairwise co-probe bumps: O(nprobe²) with nprobe small by
+        // design (the paper's sweeps top out well under 32). At the
+        // table cap only existing pairs keep counting — decay prunes
+        // cold edges and re-opens admission.
+        if probed.len() > 1 {
+            let mut aff = self.co_probe.lock().unwrap();
+            for i in 0..probed.len() {
+                for j in (i + 1)..probed.len() {
+                    let (a, b) = if probed[i] < probed[j] {
+                        (probed[i], probed[j])
+                    } else {
+                        (probed[j], probed[i])
+                    };
+                    if a == b {
+                        continue;
+                    }
+                    match aff.get_mut(&(a, b)) {
+                        Some(v) => *v += 1,
+                        None if aff.len() < MAX_AFFINITY_PAIRS => {
+                            aff.insert((a, b), 1);
+                        }
+                        None => {}
+                    }
+                }
+            }
         }
     }
 
     /// The full per-cluster probe-heat table: `(global id, probes)` for
-    /// every global id probed at least once, ascending by id. Tombstoned
-    /// clusters keep their history (heat is per-global, placement-
-    /// independent), which is exactly what an affinity-aware placement
-    /// policy wants to score over.
+    /// every global id with non-zero heat, ascending by id. Heat is
+    /// per-global and placement-independent — a migration moves it
+    /// implicitly — but it is **not** a lifetime total: a merged-away
+    /// cluster's heat is absorbed by its merge victim and its own
+    /// counter cleared (so tombstones report no heat), and every counter
+    /// halves after each `heat_decay_interval_ops` structural updates so
+    /// the table tracks current traffic, not history.
     pub fn cluster_probe_heat(&self) -> Vec<(u32, u64)> {
         self.probe_heat
             .read()
@@ -769,18 +903,107 @@ impl ShardedEdgeIndex {
             .collect()
     }
 
+    /// Snapshot of the co-probe affinity table, sorted by pair for
+    /// deterministic consumption (the planner and tests).
+    pub fn cluster_affinity(&self) -> Vec<((u32, u32), u64)> {
+        let mut all: Vec<((u32, u32), u64)> = self
+            .co_probe
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(&k, &v)| (k, v))
+            .collect();
+        all.sort_unstable();
+        all
+    }
+
+    /// Halve every heat counter and affinity edge, pruning edges that
+    /// reach zero. Racing probe bumps may land in the load/store window
+    /// and lose one increment — heat is a statistical placement signal,
+    /// not an invariant, and the read lock keeps the table itself
+    /// stable.
+    fn decay_heat(&self) {
+        {
+            let heat = self.probe_heat.read().unwrap();
+            for h in heat.iter() {
+                let v = h.load(Ordering::Relaxed);
+                if v > 0 {
+                    h.store(v / 2, Ordering::Relaxed);
+                }
+            }
+        }
+        let mut aff = self.co_probe.lock().unwrap();
+        aff.retain(|_, v| {
+            *v /= 2;
+            *v > 0
+        });
+    }
+
+    /// Fold a merged-away cluster's heat into its merge victim and clear
+    /// the dead counter, then re-key the dead cluster's affinity edges
+    /// onto the victim (a pair that collapses into self-affinity is
+    /// dropped). Called under `updates_serial` right after a merge
+    /// commits; without this the dead global's heat is orphaned forever
+    /// and tombstones surface in the heat table.
+    fn absorb_heat(&self, dead: u32, victim: u32) {
+        if dead == victim {
+            return;
+        }
+        let need = dead.max(victim) as usize + 1;
+        let moved = {
+            let heat = self.probe_heat.read().unwrap();
+            if heat.len() >= need {
+                let h = heat[dead as usize].swap(0, Ordering::Relaxed);
+                if h > 0 {
+                    heat[victim as usize].fetch_add(h, Ordering::Relaxed);
+                }
+                true
+            } else {
+                (dead as usize) >= heat.len() // never probed: nothing to move
+            }
+        };
+        if !moved {
+            // The victim's row doesn't exist yet: grow under the write
+            // lock, then move.
+            let mut heat = self.probe_heat.write().unwrap();
+            while heat.len() < need {
+                heat.push(AtomicU64::new(0));
+            }
+            let h = heat[dead as usize].swap(0, Ordering::Relaxed);
+            if h > 0 {
+                heat[victim as usize].fetch_add(h, Ordering::Relaxed);
+            }
+        }
+        let mut aff = self.co_probe.lock().unwrap();
+        let touching: Vec<((u32, u32), u64)> = aff
+            .iter()
+            .filter(|&(&(a, b), _)| a == dead || b == dead)
+            .map(|(&k, &v)| (k, v))
+            .collect();
+        for ((a, b), v) in touching {
+            aff.remove(&(a, b));
+            let other = if a == dead { b } else { a };
+            if other == victim {
+                continue;
+            }
+            let key = (other.min(victim), other.max(victim));
+            *aff.entry(key).or_insert(0) += v;
+        }
+    }
+
     /// Per-shard serving statistics.
     pub fn shard_stats(&self) -> Vec<ShardStats> {
         // Per-shard heat rows need the ownership table; acquisition
         // follows the hierarchy: ownership → heat → shard leases.
         let own = self.ownership.read().unwrap();
         let heat = self.probe_heat.read().unwrap();
-        self.shards
+        let topo = self.topo();
+        topo.shards
             .iter()
             .enumerate()
             .map(|(i, shard)| {
                 let guard = shard.read().unwrap();
-                let c = &self.counters[i];
+                let c = &topo.counters[i];
                 let mut hot: Vec<(u32, u64)> = own.locals[i]
                     .iter()
                     .enumerate()
@@ -861,6 +1084,7 @@ impl ShardedEdgeIndex {
     pub fn insert_chunk(&self, id: u32, text: &str, emb: &[f32]) -> Result<u32> {
         let (global, split) = {
             let _serial = self.updates_serial.lock().unwrap();
+            let topo = self.topo(); // stable under the updates mutex
             let target = self.route(emb)?;
             // Record-before-mutation: the routed insert hits the WAL
             // before the shard write lease. An append failure aborts
@@ -878,13 +1102,13 @@ impl ShardedEdgeIndex {
             // updates mutex keeps merges/splits/migrations from racing
             // the routing decision.
             let (local, n_before, n_after, parked_split) = {
-                let mut guard = self.shards[target].write().unwrap();
+                let mut guard = topo.shards[target].write().unwrap();
                 let n_before = guard.clusters().n_clusters();
                 let local = guard.insert_chunk(id, text, emb)?;
                 let parked = guard.take_last_split();
                 (local, n_before, guard.clusters().n_clusters(), parked)
             };
-            self.counters[target].inserts.fetch_add(1, Ordering::Relaxed);
+            topo.counters[target].inserts.fetch_add(1, Ordering::Relaxed);
             // Only a split touches the first level: it appends a fresh
             // local cluster (which needs a global id before anything can
             // probe for it) and rewrites the split cluster's centroid. A
@@ -952,13 +1176,14 @@ impl ShardedEdgeIndex {
     pub fn remove_chunk(&self, id: u32) -> Result<bool> {
         let removed = {
             let _serial = self.updates_serial.lock().unwrap();
+            let topo = self.topo(); // stable under the updates mutex
             // Owner discovery is ownership-aware: a stale copy left by a
             // mid-flight migration never matches (and the updates mutex
             // means no migration is mid-flight now anyway).
             let owner = {
                 let own = self.ownership.read().unwrap();
-                (0..self.shards.len()).find(|&s| {
-                    self.shards[s]
+                (0..topo.len()).find(|&s| {
+                    topo.shards[s]
                         .read()
                         .unwrap()
                         .cluster_of(id)
@@ -969,11 +1194,11 @@ impl ShardedEdgeIndex {
             // Record-before-mutation, once the chunk is known to exist.
             self.wal_append(&WalOp::Remove { id })?;
             let (removed, drained) = {
-                let mut guard = self.shards[s].write().unwrap();
+                let mut guard = topo.shards[s].write().unwrap();
                 guard.remove_chunk_deferred(id)?
             };
             if removed {
-                self.counters[s].removes.fetch_add(1, Ordering::Relaxed);
+                topo.counters[s].removes.fetch_add(1, Ordering::Relaxed);
                 // A plain removal changes neither centroids nor liveness,
                 // so the probe snapshot stays valid; only a merge (below)
                 // touches the first level.
@@ -1087,15 +1312,20 @@ impl ShardedEdgeIndex {
             source: global,
             victim,
         });
+        let topo = self.topo(); // stable under the updates mutex
         if vs == shard {
             // Victim on the same shard: the inline path under one write
             // lease (no search observes an intermediate state; blob
             // failures abort before any in-memory mutation).
-            self.shards[shard].write().unwrap().merge_into(local, vl)?;
+            topo.shards[shard].write().unwrap().merge_into(local, vl)?;
         } else {
             self.merge_cross_shard(global, shard, local, vs, vl)?;
         }
-        self.counters[vs].merges.fetch_add(1, Ordering::Relaxed);
+        // The dead cluster's probe heat moves with its rows: the victim
+        // absorbs it and the tombstone's counter clears (satellite
+        // bugfix — orphaned heat used to survive merges forever).
+        self.absorb_heat(global, victim);
+        topo.counters[vs].merges.fetch_add(1, Ordering::Relaxed);
         Ok(true)
     }
 
@@ -1138,15 +1368,16 @@ impl ShardedEdgeIndex {
         dest: usize,
         victim_local: u32,
     ) -> Result<()> {
+        let topo = self.topo(); // stable under the updates mutex
         // Export + plan: read leases only, searches keep flowing.
-        let (export, rows) = self.shards[src].read().unwrap().export_for_merge(local)?;
+        let (export, rows) = topo.shards[src].read().unwrap().export_for_merge(local)?;
         let extra = crate::index::updates::MergeExtra::from_export(&export, rows);
-        let plan = self.shards[dest].read().unwrap().plan_merge(victim_local, &extra)?;
+        let plan = topo.shards[dest].read().unwrap().plan_merge(victim_local, &extra)?;
 
         // Drop the drained cluster's blob while the source copy still
         // owns it — the last chance to abort with *zero* mutations.
         {
-            let guard = self.shards[src].write().unwrap();
+            let guard = topo.shards[src].write().unwrap();
             if let Some(blob) = guard.blob_store() {
                 if blob.contains(local) {
                     blob.remove(local)?;
@@ -1163,31 +1394,37 @@ impl ShardedEdgeIndex {
         // blob transition first (an abort here leaves a plain migration
         // — both shards consistent, the merge retryable), then the
         // infallible membership rewire.
-        let mut guard = self.shards[dest].write().unwrap();
+        let mut guard = topo.shards[dest].write().unwrap();
         guard.apply_merge_blob(&plan, None)?;
         guard.apply_merge_members(new_local, &plan);
         Ok(())
     }
 
     /// Count one completed structural update toward the periodic
-    /// rebalance trigger, running a round when the interval elapses.
-    /// Called after all locks are released (a round re-enters the
-    /// updates mutex). Round errors are swallowed here — the serving
-    /// update that triggered the round already succeeded; an explicit
-    /// `rebalance` op surfaces them.
+    /// triggers — the heat decay (every `heat_decay_interval_ops`) and
+    /// the rebalance round (every `rebalance_interval_ops`). Called
+    /// after all locks are released (a round re-enters the updates
+    /// mutex). Round errors are swallowed here — the serving update that
+    /// triggered the round already succeeded; an explicit `rebalance` op
+    /// surfaces them.
     fn note_update_op(&self) {
-        // Recovery replay never triggers rebalance rounds: the trigger's
-        // migration choices depend on cache/heat state that is defined
-        // cold after recovery, while replay must re-derive exactly the
-        // structure the log records.
+        // Recovery replay never triggers decay or rebalance rounds: the
+        // trigger's migration choices depend on cache/heat state that is
+        // defined cold after recovery, while replay must re-derive
+        // exactly the structure the log records.
         if self.replaying.load(Ordering::Relaxed) {
             return;
         }
-        if self.rebalance_every == 0 {
+        if self.rebalance_every == 0 && self.heat_decay_every == 0 {
             return;
         }
         let n = self.update_ops.fetch_add(1, Ordering::Relaxed) + 1;
-        if n % self.rebalance_every as u64 == 0 {
+        // Decay before a coinciding rebalance round, so the round plans
+        // on decayed (current-traffic) heat.
+        if self.heat_decay_every != 0 && n % self.heat_decay_every as u64 == 0 {
+            self.decay_heat();
+        }
+        if self.rebalance_every != 0 && n % self.rebalance_every as u64 == 0 {
             let _ = self.rebalance();
         }
     }
@@ -1201,11 +1438,12 @@ impl ShardedEdgeIndex {
         Ok(out)
     }
 
-    /// Execute the per-shard cluster walks, fanning all but the first
-    /// group out to the pool. Returns `(shard, walk)` pairs in arbitrary
-    /// order.
+    /// Execute the per-shard cluster walks against the given topology
+    /// snapshot, fanning all but the first group out to the pool.
+    /// Returns `(shard, walk)` pairs in arbitrary order.
     fn run_walks(
         &self,
+        topo: &Arc<Topology>,
         query: &[f32],
         work: Vec<(usize, Vec<(u32, u32)>)>,
         k: usize,
@@ -1213,7 +1451,7 @@ impl ShardedEdgeIndex {
         let mut walks = Vec::with_capacity(work.len());
         if work.len() <= 1 || self.pool.workers() == 0 {
             for (s, group) in work {
-                let walk = self.shards[s].read().unwrap().search_clusters(query, &group, k)?;
+                let walk = topo.shards[s].read().unwrap().search_clusters(query, &group, k)?;
                 walks.push((s, walk));
             }
             return Ok(walks);
@@ -1225,12 +1463,12 @@ impl ShardedEdgeIndex {
         let first = iter.next().expect("work checked non-empty");
         let mut remote = 0usize;
         for (s, group) in iter {
-            let shards = self.shards.clone();
+            let shard = topo.shards[s].clone();
             let q = query.clone();
             let tx = tx.clone();
             let job: Job = Box::new(move || {
                 let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    shards[s].read().unwrap().search_clusters(&q, &group, k)
+                    shard.read().unwrap().search_clusters(&q, &group, k)
                 }));
                 let msg = match res {
                     Ok(r) => r.map(|walk| (s, walk)),
@@ -1251,7 +1489,7 @@ impl ShardedEdgeIndex {
         // Walk the first group on the calling thread while workers run
         // theirs, then collect.
         let (s, group) = first;
-        let walk = self.shards[s].read().unwrap().search_clusters(&query, &group, k)?;
+        let walk = topo.shards[s].read().unwrap().search_clusters(&query, &group, k)?;
         walks.push((s, walk));
         for _ in 0..remote {
             let pair = rx
@@ -1282,7 +1520,6 @@ impl ShardedEdgeIndex {
             scores.len(),
             table.len()
         );
-        let n_shards = self.shards.len();
         let mut ledger = LatencyLedger::new();
 
         // One modeled charge for the whole (distributed but byte-
@@ -1300,7 +1537,12 @@ impl ShardedEdgeIndex {
         // ownership flip (the write lock) waits for us before the source
         // copy is retired — which is what keeps concurrent searches
         // bit-identical to an unsharded index throughout a migration.
+        // The topology snapshot is cloned *under* the ownership read
+        // lock (reshard swaps run under the write lock), so the shard
+        // indices the table resolves always index this snapshot.
         let own = self.ownership.read().unwrap();
+        let topo = self.topo();
+        let n_shards = topo.len();
         let mut probed = Vec::with_capacity(probes.len());
         let mut groups: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n_shards];
         for (pos, &(i, _)) in probes.iter().enumerate() {
@@ -1317,14 +1559,14 @@ impl ShardedEdgeIndex {
             .filter(|(_, g)| !g.is_empty())
             .collect();
         for (s, group) in &work {
-            self.counters[*s]
+            topo.counters[*s]
                 .probes
                 .fetch_add(group.len() as u64, Ordering::Relaxed);
         }
         self.note_probes(&probed);
 
         // Fan the cluster walks out and merge.
-        let mut walks = self.run_walks(query, work, k)?;
+        let mut walks = self.run_walks(&topo, query, work, k)?;
         drop(own);
         walks.sort_by_key(|&(s, _)| s); // deterministic intent order
 
@@ -1349,7 +1591,7 @@ impl ShardedEdgeIndex {
             events.loaded += walk.events.loaded;
             events.cache_hits += walk.events.cache_hits;
             events.thrash_faults += walk.events.thrash_faults;
-            let c = &self.counters[s];
+            let c = &topo.counters[s];
             c.cache_hits
                 .fetch_add(walk.events.cache_hits as u64, Ordering::Relaxed);
             c.generated
@@ -1377,6 +1619,231 @@ impl ShardedEdgeIndex {
             shard_walks,
         })
     }
+
+    // -----------------------------------------------------------------
+    // Elastic topology: grow / shrink the live shard set
+    // -----------------------------------------------------------------
+
+    /// Change the live shard count to `target` (clamped to at least 1),
+    /// online, under concurrent traffic. Growth installs fresh empty
+    /// shards (clusters flow onto them through subsequent rebalance
+    /// rounds — search results are placement-independent, so a grow
+    /// alone changes nothing a query can observe); shrink drains every
+    /// doomed shard through [`ShardedEdgeIndex::migrate_cluster`] and
+    /// then retires it. Returns how many clusters the shrink migrated
+    /// (0 for a grow).
+    pub fn reshard(&self, target: usize) -> Result<crate::index::ReshardReport> {
+        let target = target.max(1);
+        let from = self.shards();
+        let migrated = if target > from {
+            self.grow_shards(target)?;
+            0
+        } else {
+            self.shrink_shards(target)?
+        };
+        Ok(crate::index::ReshardReport {
+            from,
+            to: self.shards(),
+            migrated,
+        })
+    }
+
+    /// Grow the live shard set to `target` shards by building fresh
+    /// empty [`EdgeIndex`]es from the retained build materials and
+    /// installing them with one topology swap. The expensive
+    /// construction runs outside every lock; the swap itself holds the
+    /// updates mutex (no structural op mid-flight) and the ownership
+    /// write lock (drains in-flight searches), so no search ever holds
+    /// a pre-grow snapshot against post-grow ownership state. A no-op
+    /// when `target` is not larger than the current count.
+    pub fn grow_shards(&self, target: usize) -> Result<()> {
+        anyhow::ensure!(target <= MAX_SHARDS, "at most {MAX_SHARDS} shards");
+        let _round = self.rebalance_serial.lock().unwrap();
+        let current = self.shards();
+        if target <= current {
+            return Ok(());
+        }
+        let dim = self.scorer.dim();
+        // New shards get an even slice of the configured cache budget at
+        // the post-grow count; existing shards keep the slice they were
+        // built with (cache budgets are per-shard state, re-sliced only
+        // on rebuild).
+        let mut per_shard = self.retrieval_cfg.clone();
+        per_shard.cache_capacity_bytes =
+            (self.retrieval_cfg.cache_capacity_bytes / target as u64).max(1);
+        let mut fresh = Vec::with_capacity(target - current);
+        for i in current..target {
+            let blob = if self.kind.uses_storage() {
+                let dir = self
+                    .blob_dir
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("selective storage requires a blob dir"))?;
+                Some(BlobStore::open(&dir.join(format!("shard{i}")), dim)?)
+            } else {
+                None
+            };
+            let set = ClusterSet {
+                centroids: EmbeddingMatrix::new(dim),
+                clusters: Vec::new(),
+            };
+            let mut shard = EdgeIndex::build(
+                self.kind,
+                set,
+                self.source.clone(),
+                blob,
+                self.scorer.clone(),
+                self.memory.clone(),
+                self.device.clone(),
+                &per_shard,
+                self.store_limit,
+                self.slo,
+            )?;
+            shard.set_region_base((i as u32) << 24);
+            fresh.push(Arc::new(RwLock::new(shard)));
+        }
+        // Install: updates mutex → ownership write → topology write —
+        // exactly the swap ordering the lock hierarchy prescribes.
+        let _serial = self.updates_serial.lock().unwrap();
+        let mut own = self.ownership.write().unwrap();
+        let old = self.topo();
+        let mut shards = old.shards.clone();
+        let mut counters = old.counters.clone();
+        for s in fresh {
+            shards.push(s);
+            counters.push(Arc::new(ShardCounters::default()));
+            own.locals.push(Vec::new());
+        }
+        *self.topology.write().unwrap() = Arc::new(Topology { shards, counters });
+        Ok(())
+    }
+
+    /// Shrink the live shard set to `target` shards with a
+    /// drain-then-retire protocol: every cluster owned by a doomed
+    /// (trailing) shard migrates to the least-loaded surviving shard via
+    /// the ordinary copy→flip→retire primitive — live traffic keeps
+    /// flowing, and the oracle bit-equality argument is untouched
+    /// because each step *is* a plain migration — then the doomed
+    /// shards, verified empty under the updates mutex, are dropped with
+    /// one topology swap (their `Arc`s free once in-flight walks
+    /// finish). Tombstoned residents (merged-away clusters, which
+    /// migration refuses) relocate through
+    /// [`ShardedEdgeIndex::evacuate_tombstone`]. Concurrent structural
+    /// ops can land new clusters on a doomed shard mid-drain, so the
+    /// drain re-snapshots and retries until the retire check passes.
+    /// Returns how many live clusters migrated.
+    pub fn shrink_shards(&self, target: usize) -> Result<usize> {
+        anyhow::ensure!(target >= 1, "at least one shard");
+        let _round = self.rebalance_serial.lock().unwrap();
+        let mut migrated = 0usize;
+        for _attempt in 0..32 {
+            // Snapshot: per-survivor row totals and the doomed residents.
+            let (mut totals, doomed) = {
+                let own = self.ownership.read().unwrap();
+                let topo = self.topo();
+                if target >= topo.len() {
+                    return Ok(migrated);
+                }
+                let mut totals = vec![0u64; target];
+                let mut doomed: Vec<(u32, u64, bool)> = Vec::new();
+                for (s, shard) in topo.shards.iter().enumerate() {
+                    let guard = shard.read().unwrap();
+                    for (l, &g) in own.locals[s].iter().enumerate() {
+                        if g == ORPHAN {
+                            continue;
+                        }
+                        let rows = guard.clusters().clusters[l].len() as u64;
+                        if s < target {
+                            totals[s] += rows;
+                        } else {
+                            doomed.push((g, rows, guard.active_flags()[l]));
+                        }
+                    }
+                }
+                (totals, doomed)
+            };
+            // Drain, packing each cluster onto the currently
+            // least-loaded survivor (ties → lower shard index).
+            for &(g, rows, active) in &doomed {
+                let dest = totals
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(s, &t)| (t, s))
+                    .map(|(s, _)| s)
+                    .expect("target >= 1");
+                if active {
+                    if self.migrate_cluster(g, dest)? {
+                        migrated += 1;
+                        totals[dest] += rows;
+                    }
+                    // false: merged away since the snapshot — the next
+                    // attempt sees it as a tombstone and evacuates it.
+                } else {
+                    self.evacuate_tombstone(g, dest)?;
+                }
+            }
+            // Retire: verify the doomed shards own nothing, then swap
+            // them out. The updates mutex guarantees no structural op is
+            // mid-flight; the ownership write lock drains searches.
+            let _serial = self.updates_serial.lock().unwrap();
+            let mut own = self.ownership.write().unwrap();
+            let clean = own.locals[target..]
+                .iter()
+                .all(|slots| slots.iter().all(|&g| g == ORPHAN));
+            if !clean {
+                continue; // a racing structural op landed a cluster; re-drain
+            }
+            let old = self.topo();
+            let shards = old.shards[..target].to_vec();
+            let counters = old.counters[..target].to_vec();
+            own.locals.truncate(target);
+            *self.topology.write().unwrap() = Arc::new(Topology { shards, counters });
+            drop(own);
+            self.table_stale.store(true, Ordering::Release);
+            return Ok(migrated);
+        }
+        anyhow::bail!("shard drain did not quiesce after 32 attempts")
+    }
+
+    /// Relocate a tombstoned slot (a merged-away cluster, which
+    /// [`ShardedEdgeIndex::migrate_cluster`] refuses to move) to `dest`:
+    /// import an empty tombstone copy of its centroid there — keeping
+    /// the spliced probe snapshot byte-identical, since the splice reads
+    /// exactly one centroid row per global id from its owner — flip
+    /// ownership, and orphan the source slot. Shrink's drain uses this
+    /// so a doomed shard can retire even when merges left tombstones on
+    /// it; search results cannot change (tombstones are masked from
+    /// every probe).
+    fn evacuate_tombstone(&self, global: u32, dest: usize) -> Result<()> {
+        let _serial = self.updates_serial.lock().unwrap();
+        let topo = self.topo(); // stable under the updates mutex
+        anyhow::ensure!(dest < topo.len(), "destination shard {dest} does not exist");
+        let Some((src, local)) = self.ownership.read().unwrap().owner_of(global) else {
+            return Ok(());
+        };
+        if src == dest {
+            return Ok(());
+        }
+        let (still_tombstoned, centroid) = {
+            let guard = topo.shards[src].read().unwrap();
+            (
+                !guard.active_flags()[local as usize],
+                guard.clusters().centroids.row(local as usize).to_vec(),
+            )
+        };
+        if !still_tombstoned {
+            return Ok(()); // raced: a live cluster drains via migrate instead
+        }
+        let new_local = topo.shards[dest].write().unwrap().import_tombstone(&centroid);
+        {
+            let mut own = self.ownership.write().unwrap();
+            own.owner[global as usize] = (dest as u32, new_local);
+            own.locals[src][local as usize] = ORPHAN;
+            debug_assert_eq!(own.locals[dest].len(), new_local as usize);
+            own.locals[dest].push(global);
+        }
+        self.table_stale.store(true, Ordering::Release);
+        Ok(())
+    }
 }
 
 impl VectorIndex for ShardedEdgeIndex {
@@ -1399,8 +1866,12 @@ impl VectorIndex for ShardedEdgeIndex {
     /// controller/cache locks are taken, so commits for different shards
     /// (from this or other queries) never serialize on each other.
     fn commit(&self, intents: &[CacheIntent], retrieval: SimDuration) {
+        let topo = self.topo();
         for intent in intents {
-            let Some(shard) = self.shards.get(intent.shard) else {
+            // `get`, not indexing: a shrink may have retired the shard
+            // this intent was recorded against between search and commit
+            // — its cache died with it, so the intent just drops.
+            let Some(shard) = topo.shards.get(intent.shard) else {
                 continue;
             };
             shard.read().unwrap().commit_intent(intent, retrieval);
@@ -1416,7 +1887,8 @@ impl VectorIndex for ShardedEdgeIndex {
     }
 
     fn resident_bytes(&self) -> u64 {
-        self.shards
+        self.topo()
+            .shards
             .iter()
             .map(|s| s.read().unwrap().resident_bytes())
             .sum()
@@ -1456,6 +1928,10 @@ impl VectorIndex for ShardedEdgeIndex {
 
     fn rebalance(&self) -> Result<crate::index::RebalanceReport> {
         ShardedEdgeIndex::rebalance(self)
+    }
+
+    fn reshard(&self, target: usize) -> Result<crate::index::ReshardReport> {
+        ShardedEdgeIndex::reshard(self, target)
     }
 
     fn supports_concurrent_updates(&self) -> bool {
@@ -1768,7 +2244,8 @@ mod tests {
         let idx = build_sharded(&f, "probe-free", 4);
         let q = f.emb.row(10).to_vec();
         let expect = idx.search(&q, 5).unwrap();
-        let guards: Vec<_> = idx.shards.iter().map(|s| s.write().unwrap()).collect();
+        let topo = idx.topo();
+        let guards: Vec<_> = topo.shards.iter().map(|s| s.write().unwrap()).collect();
         let table = VectorIndex::probe_table(&idx).unwrap();
         let scores = table.masked_scores(&f.scorer, &q).unwrap();
         let probes = vecmath::top_k(&scores, scores.len(), 4);
@@ -1956,5 +2433,188 @@ mod tests {
             MAX_SHARDS + 1,
         );
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn grow_and_shrink_preserve_results_under_repeat_queries() {
+        // The elastic tentpole at unit scale: grow 2→4, spread clusters
+        // onto the new shards, shrink 4→1 — search results (hits,
+        // probes, modeled latency) must be bit-identical throughout,
+        // because every step is composed from the migrate primitive.
+        let f = fixture();
+        let idx = build_sharded(&f, "elastic", 2);
+        let queries: Vec<Vec<f32>> = (0..8).map(|i| f.emb.row(i * 55).to_vec()).collect();
+        let before: Vec<SearchOutcome> =
+            queries.iter().map(|q| idx.search(q, 5).unwrap()).collect();
+
+        let r = idx.reshard(4).unwrap();
+        assert_eq!((r.from, r.to, r.migrated), (2, 4, 0));
+        assert_eq!(idx.shards(), 4);
+        idx.verify_integrity().unwrap();
+        for (q, b) in queries.iter().zip(&before) {
+            let a = idx.search(q, 5).unwrap();
+            assert_eq!(a.hits, b.hits);
+            assert_eq!(a.probed, b.probed);
+            assert_eq!(a.ledger.total(), b.ledger.total());
+        }
+
+        // The new shards are live migration targets.
+        let g = before[0].probed[0];
+        assert!(idx.migrate_cluster(g, 3).unwrap());
+        assert_eq!(idx.shard_of(g), 3);
+        idx.verify_integrity().unwrap();
+
+        let r = idx.reshard(1).unwrap();
+        assert_eq!((r.from, r.to), (4, 1));
+        assert!(r.migrated > 0, "the drain must move the trailing shards' clusters");
+        assert_eq!(idx.shards(), 1);
+        idx.verify_integrity().unwrap();
+        for (q, b) in queries.iter().zip(&before) {
+            let a = idx.search(q, 5).unwrap();
+            assert_eq!(a.hits, b.hits);
+            assert_eq!(a.probed, b.probed);
+            assert_eq!(a.ledger.total(), b.ledger.total());
+        }
+    }
+
+    #[test]
+    fn shrink_evacuates_tombstoned_slots() {
+        // Merge-away a cluster owned by the shard about to retire, then
+        // shrink: the tombstone (which migrate_cluster refuses to move)
+        // must relocate rather than wedge the drain.
+        let f = fixture();
+        let idx = build_sharded(&f, "shrink-tomb", 2);
+        // Global 1 lives at shard 1 (round-robin); drain it fully so it
+        // merges into its nearest neighbour.
+        let chunks = idx.with_shard(1, |e| e.clusters().clusters[0].chunk_ids.clone());
+        for &c in &chunks {
+            idx.remove_chunk(c).unwrap();
+        }
+        idx.verify_integrity().unwrap();
+        let before: Vec<SearchOutcome> = (0..6)
+            .map(|i| idx.search(&f.emb.row(i * 40).to_vec(), 5).unwrap())
+            .collect();
+        idx.reshard(1).unwrap();
+        assert_eq!(idx.shards(), 1);
+        idx.verify_integrity().unwrap();
+        for (i, b) in before.iter().enumerate() {
+            let a = idx.search(&f.emb.row(i * 40).to_vec(), 5).unwrap();
+            assert_eq!(a.hits, b.hits, "query {i}");
+            assert_eq!(a.probed, b.probed, "query {i}");
+        }
+    }
+
+    #[test]
+    fn merge_absorbs_probe_heat_and_tombstones_report_none() {
+        // Satellite regression: a merged-away cluster's heat must move
+        // to its victim and clear — no orphaned heat, no tombstones in
+        // the heat table or any shard's hot_clusters rows.
+        let f = fixture();
+        let idx = build_sharded(&f, "heat-absorb", 2);
+        // Heat every cluster a little, then heat the doomed cluster
+        // specifically through its own centroid.
+        for i in 0..6usize {
+            idx.search(&f.emb.row(i * 70).to_vec(), 5).unwrap();
+        }
+        let doomed: u32 = 1;
+        let centroid = idx.with_shard(1, |e| e.clusters().centroids.row(0).to_vec());
+        idx.search(&centroid, 5).unwrap();
+        let heat_of = |table: &[(u32, u64)], g: u32| {
+            table.iter().find(|&&(id, _)| id == g).map_or(0, |&(_, n)| n)
+        };
+        let before = idx.cluster_probe_heat();
+        assert!(heat_of(&before, doomed) > 0, "doomed cluster must be hot");
+        let victim = idx
+            .merge_victim(doomed)
+            .unwrap()
+            .expect("a victim exists among 8 clusters");
+        let chunks = idx.with_shard(1, |e| e.clusters().clusters[0].chunk_ids.clone());
+        for &c in &chunks {
+            idx.remove_chunk(c).unwrap();
+        }
+        let after = idx.cluster_probe_heat();
+        assert_eq!(heat_of(&after, doomed), 0, "dead cluster's heat must clear");
+        assert_eq!(
+            heat_of(&after, victim),
+            heat_of(&before, victim) + heat_of(&before, doomed),
+            "victim absorbs the dead cluster's heat"
+        );
+        for s in idx.shard_stats() {
+            assert!(
+                s.hot_clusters.iter().all(|&(g, _)| g != doomed),
+                "tombstoned cluster surfaced in shard {}'s hot list",
+                s.shard
+            );
+        }
+    }
+
+    #[test]
+    fn heat_decay_halves_counters_and_prunes_affinity() {
+        let f = fixture();
+        let dir = state_dir("decay");
+        let idx = ShardedEdgeIndex::build(
+            IndexKind::EdgeRag,
+            cluster_set(&f),
+            EmbedSource::Prebuilt(f.emb.clone()),
+            Some(dir.as_path()),
+            f.scorer.clone(),
+            shared_memory(64 << 20),
+            f.device.clone(),
+            &RetrievalConfig {
+                nprobe: 4,
+                heat_decay_interval_ops: 1,
+                rebalance: false,
+                ..Default::default()
+            },
+            SimDuration::from_millis(150),
+            SimDuration::from_millis(1_000),
+            2,
+        )
+        .unwrap();
+        // Two identical searches: every probed cluster at heat 2, every
+        // co-probe pair at 2; plus one single search elsewhere at 1.
+        let q = f.emb.row(5).to_vec();
+        idx.search(&q, 5).unwrap();
+        idx.search(&q, 5).unwrap();
+        let probed = idx.search(&f.emb.row(400).to_vec(), 5).unwrap().probed;
+        assert_eq!(probed.len(), 4);
+        let heat_before = idx.cluster_probe_heat();
+        let aff_before = idx.cluster_affinity();
+        assert!(!aff_before.is_empty(), "nprobe=4 searches must record pairs");
+        // One structural op fires the decay (interval 1).
+        let text = "decay trigger document zzdecay";
+        let emb = f.embedder.embed_one(text).unwrap();
+        idx.insert_chunk(f.corpus.len() as u32 + 31, text, &emb).unwrap();
+        let heat_after = idx.cluster_probe_heat();
+        let aff_after = idx.cluster_affinity();
+        for &(g, n) in &heat_before {
+            let now = heat_after.iter().find(|&&(id, _)| id == g).map_or(0, |&(_, v)| v);
+            assert_eq!(now, n / 2, "heat[{g}] must halve ({n} -> {now})");
+        }
+        for &(pair, n) in &aff_before {
+            let now = aff_after.iter().find(|&&(p, _)| p == pair).map_or(0, |&(_, v)| v);
+            assert_eq!(now, n / 2, "affinity[{pair:?}] must halve ({n} -> {now})");
+        }
+        assert!(
+            aff_after.iter().all(|&(_, v)| v > 0),
+            "decay must prune zeroed affinity edges"
+        );
+    }
+
+    #[test]
+    fn co_probe_pairs_are_normalized_and_bounded() {
+        let f = fixture();
+        let idx = build_sharded(&f, "aff", 2);
+        let out = idx.search(&f.emb.row(3).to_vec(), 5).unwrap();
+        assert_eq!(out.probed.len(), 4);
+        let aff = idx.cluster_affinity();
+        // One search with nprobe=4 yields exactly C(4,2) = 6 pairs.
+        assert_eq!(aff.len(), 6);
+        for &((a, b), n) in &aff {
+            assert!(a < b, "pair keys are normalized low/high");
+            assert!(n >= 1);
+            assert!(out.probed.contains(&a) && out.probed.contains(&b));
+        }
+        assert!(aff.len() <= MAX_AFFINITY_PAIRS);
     }
 }

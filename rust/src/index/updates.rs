@@ -441,6 +441,30 @@ impl EdgeIndex {
         Ok(local)
     }
 
+    /// Append a **tombstone** for an already-merged-away global cluster:
+    /// the centroid row lands here (masked out of probes, exactly like a
+    /// locally produced merge tombstone) with empty membership and no
+    /// blob/cache footprint. Used by shard retirement
+    /// ([`ShardedEdgeIndex::shrink_shards`](crate::index::ShardedEdgeIndex))
+    /// to relocate a doomed shard's tombstones — `migrate_cluster`
+    /// refuses tombstoned clusters, yet every global id must keep an
+    /// owning slot for the spliced probe table to stay complete. Returns
+    /// the new local id. Infallible in-memory append; does not bump
+    /// `update_gen` (nothing that existed on this shard changed).
+    pub(crate) fn import_tombstone(&mut self, centroid: &[f32]) -> u32 {
+        let local = self.clusters.n_clusters() as u32;
+        self.clusters.centroids.push(centroid);
+        self.clusters.clusters.push(crate::index::ClusterMeta {
+            id: local,
+            chunk_ids: Vec::new(),
+            chars: 0,
+            gen_cost: SimDuration::ZERO,
+        });
+        self.active.push(false);
+        self.invalidate_probe_snapshot();
+        local
+    }
+
     /// Tombstone the source copy of a migrated cluster and release every
     /// resource it held (chunk routing, dynamic overlay rows, cache entry
     /// + memory-model region, blob). Bumps `update_gen` so in-flight

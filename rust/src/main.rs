@@ -149,7 +149,8 @@ COMMANDS
           [--workers N] [--shards N] [--batching true|false]
           [--batch-window-us U] [--max-inflight N]
           [--rebalance true|false] [--rebalance-interval N]
-          [--max-migrations N] [--compute-threads N]
+          [--max-migrations N] [--heat-decay-interval N]
+          [--shards-min N] [--shards-max N] [--compute-threads N]
           [--wal true|false] [--wal-dir PATH]
           [--snapshot-interval-ops N]
           [--trace true|false] [--slow-query-us U] [--deadline-us U]
@@ -162,6 +163,12 @@ COMMANDS
            queries' embed/probe kernel calls into fused batches;
            --rebalance true — the serve default — migrates hot clusters
            between shards online when placement drifts under updates;
+           --heat-decay-interval N halves every probe-heat counter (and
+           prunes the co-probe affinity table) every N update ops so
+           placement tracks current traffic, not lifetime totals
+           (0 = never decay); --shards-min/--shards-max bound the
+           {{\"op\":\"reshard\",\"shards\":N}} elastic-topology op
+           (--shards-max 0 = only the hard 256-shard limit);
            --wal true — the serve default — logs structural updates to a
            write-ahead log and replays it on restart; --wal-dir overrides
            the per-dataset default location; --snapshot-interval-ops 0
@@ -238,6 +245,18 @@ fn serve(args: &Args) -> Result<()> {
     if let Some(n) = args.get("max-migrations") {
         builder.retrieval.max_migrations_per_round =
             n.parse().context("bad --max-migrations")?;
+    }
+    if let Some(n) = args.get("heat-decay-interval") {
+        builder.retrieval.heat_decay_interval_ops =
+            n.parse().context("bad --heat-decay-interval")?;
+    }
+    // Elastic-topology bounds for the `reshard` server op: an operator
+    // can grow/shrink the live shard count online within [min, max].
+    if let Some(n) = args.get("shards-min") {
+        builder.retrieval.shards_min = n.parse().context("bad --shards-min")?;
+    }
+    if let Some(n) = args.get("shards-max") {
+        builder.retrieval.shards_max = n.parse().context("bad --shards-max")?;
     }
     // Serving defaults to durability: structural updates go through the
     // write-ahead log and are replayed on restart. The library/config
@@ -383,7 +402,7 @@ fn bench(args: &Args) -> Result<()> {
 /// by the CI `bench-smoke` job after running both benches, and by hand
 /// before committing an updated trajectory.
 fn bench_validate(args: &Args) -> Result<()> {
-    let path = args.get("file").unwrap_or("BENCH_9.json");
+    let path = args.get("file").unwrap_or("BENCH_10.json");
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let v = edgerag::json::parse(&text).with_context(|| format!("parsing {path}"))?;
 
@@ -432,6 +451,7 @@ fn bench_validate(args: &Args) -> Result<()> {
         "executor_pool",
         "tracing_sweep",
         "connection_sweep",
+        "resharding_sweep",
     ] {
         let rows = tput
             .req(sweep)?

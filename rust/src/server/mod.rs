@@ -52,6 +52,11 @@
 //!   {"op":"rebalance"}               → run one cross-shard rebalance
 //!                                      round; reports moves + load
 //!                                      spread (all-zero when unsharded)
+//!   {"op":"reshard","shards":N}      → grow/shrink the live shard count
+//!                                      to N (clamped to the serve
+//!                                      `--shards-min/--shards-max`
+//!                                      bounds; error on an unsharded
+//!                                      index)
 //!   {"op":"trace"}                   → recent + slow trace summaries
 //!                                      (tracing enabled); with "id": one
 //!                                      trace's full span tree
@@ -118,6 +123,11 @@ pub struct ServerState {
     /// Queries shed at worker dequeue because their deadline had already
     /// expired (stage-level sheds are counted per stage in `sched`).
     deadline_shed: AtomicU64,
+    /// Elastic-topology floor for the `reshard` op (≥ 1).
+    shards_min: usize,
+    /// Elastic-topology ceiling for the `reshard` op (0 = only the
+    /// hard [`crate::index::shard::MAX_SHARDS`] limit applies).
+    shards_max: usize,
 }
 
 impl ServerState {
@@ -220,6 +230,8 @@ impl Server {
                 deadline_us,
                 rejected: AtomicU64::new(0),
                 deadline_shed: AtomicU64::new(0),
+                shards_min: retrieval.shards_min.max(1),
+                shards_max: retrieval.shards_max,
             }),
             pool,
             listener,
@@ -634,6 +646,27 @@ fn dispatch_op(
                 ("skipped", r.skipped.into()),
                 ("spread_before", r.spread_before.into()),
                 ("spread_after", r.spread_after.into()),
+            ]))
+        }
+        "reshard" => {
+            // Elastic topology: grow appends empty shards the planner
+            // then fills; shrink drains-then-retires the tail shards.
+            // Concurrent queries keep serving bit-identical results
+            // through every topology swap. The target is clamped to the
+            // serve bounds so an operator typo cannot collapse or
+            // explode the topology.
+            let raw = req.req("shards")?.as_u64().context("shards")? as usize;
+            let ceiling = match state.shards_max {
+                0 => crate::index::shard::MAX_SHARDS,
+                max => max,
+            };
+            let target = raw.clamp(state.shards_min, ceiling.max(state.shards_min));
+            let r = state.engine.reshard(target)?;
+            Ok(Value::object(vec![
+                ("requested", raw.into()),
+                ("from", r.from.into()),
+                ("to", r.to.into()),
+                ("migrated", r.migrated.into()),
             ]))
         }
         "trace" => {

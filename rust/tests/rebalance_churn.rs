@@ -658,6 +658,222 @@ fn concurrent_churn_smoke_holds_invariants() {
 }
 
 #[test]
+fn elastic_reshard_under_concurrent_traffic_matches_oracle() {
+    // The PR's acceptance property: `reshard` swaps the live topology —
+    // grows append empty shards, shrinks drain-then-retire — while 8
+    // searcher threads hammer the engine, and every single result stays
+    // bit-identical to a single-shard oracle. The churn suite's oracle
+    // discipline, extended verbatim to resharding.
+    let seed = test_seed(0xE1A5);
+    for shards in merge_shard_counts() {
+        if shards < 2 {
+            continue; // shards=1 builds the plain (unsharded) index
+        }
+        for batching in batching_modes() {
+            if batching && !reference_backend() {
+                continue;
+            }
+            let tag = format!("reshard-{shards}-{batching}");
+            let b_o = builder(1, &format!("{tag}-oracle"));
+            let built_o = b_o.build_dataset(&DatasetProfile::tiny()).unwrap();
+            let oracle = b_o.pipeline(&built_o, IndexKind::EdgeRag).unwrap();
+            oracle.index_mut().pin_threshold(0.0);
+
+            let b = builder(shards, &tag);
+            let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+            let engine = Arc::new(b.pipeline(&built, IndexKind::EdgeRag).unwrap());
+            engine.index_mut().pin_threshold(0.0);
+            let sched = batching.then(|| {
+                BatchScheduler::new(
+                    engine.clone(),
+                    SchedConfig {
+                        batch_window_us: 300,
+                        max_inflight: 0,
+                        bypass: true,
+                    },
+                )
+            });
+
+            let queries: Vec<String> = built
+                .workload
+                .queries
+                .iter()
+                .take(16)
+                .map(|q| q.text.clone())
+                .collect();
+            let expect: Vec<Vec<(u32, f32)>> = queries
+                .iter()
+                .map(|q| oracle.handle(q).unwrap().hits)
+                .collect();
+
+            let done = AtomicBool::new(false);
+            std::thread::scope(|scope| {
+                for t in 0..8usize {
+                    let engine = &engine;
+                    let sched = &sched;
+                    let queries = &queries;
+                    let expect = &expect;
+                    let done = &done;
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(seed ^ (t as u64 + 1));
+                        for round in 0..40 {
+                            let i = rng.below(queries.len());
+                            let out = match sched {
+                                Some(s) => s.handle(&queries[i]).unwrap(),
+                                None => engine.handle(&queries[i]).unwrap(),
+                            };
+                            assert_eq!(
+                                out.hits, expect[i],
+                                "thread {t} round {round} query {i} diverged mid-reshard"
+                            );
+                        }
+                        done.store(true, Ordering::Release);
+                    });
+                }
+                // Driver: cycle the live shard count through grows and
+                // shrinks until the searchers finish, checking the
+                // invariant suite after every topology swap.
+                let engine = &engine;
+                let done = &done;
+                scope.spawn(move || {
+                    let index = engine.index();
+                    let sharded = index.as_any().downcast_ref::<ShardedEdgeIndex>().unwrap();
+                    let targets = [shards * 2, 1, 3, shards];
+                    let mut migrated_total = 0usize;
+                    'outer: loop {
+                        for &target in &targets {
+                            let r = sharded.reshard(target).unwrap();
+                            assert_eq!(r.to, target, "reshard landed off-target: {r:?}");
+                            assert_eq!(sharded.shards(), target, "live count != report");
+                            migrated_total += r.migrated;
+                            // Fill freshly grown (empty) shards so the
+                            // next shrink has something to drain.
+                            sharded.rebalance().unwrap();
+                            sharded.verify_integrity().unwrap();
+                            if done.load(Ordering::Acquire) {
+                                break 'outer;
+                            }
+                        }
+                    }
+                    assert!(migrated_total > 0, "resharding never drained a cluster");
+                });
+            });
+        }
+    }
+}
+
+#[test]
+fn sequential_churn_with_reshard_rounds_matches_oracle() {
+    // The sequential randomized suite with `reshard` in the op mix:
+    // a seeded interleaving of search / insert / remove / reshard steps
+    // replayed against the sharded index and a single-shard oracle.
+    // Every search — between any pair of grow/shrink rounds — must match
+    // bit for bit (hits, probes, events, modeled latency), cluster-id
+    // allocation must stay identical, and the invariant suite must hold
+    // after every topology swap.
+    let seed = test_seed(0x4E5A);
+    for shards in merge_shard_counts() {
+        if shards < 2 {
+            continue; // shards=1 builds the plain (unsharded) index
+        }
+        let b_o = builder(1, &format!("rs-seq-oracle-{shards}"));
+        let built_o = b_o.build_dataset(&DatasetProfile::tiny()).unwrap();
+        let (mut oracle, _mem_o) = b_o.index(&built_o, IndexKind::EdgeRag).unwrap();
+
+        let b = builder(shards, &format!("rs-seq-{shards}"));
+        let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+        let (mut subject, _mem_s) = b.index(&built, IndexKind::EdgeRag).unwrap();
+
+        let embedder = b.embedder();
+        let mut rng = Rng::new(seed ^ shards as u64);
+        let mut alive: Vec<u32> = (0..built.corpus.len() as u32).collect();
+        let mut next_id = built.corpus.len() as u32 + 5_000;
+        let targets = [shards * 2, 1, 3, 8, shards];
+        let mut reshards = 0usize;
+        let mut migrated_total = 0usize;
+
+        for step in 0..240 {
+            match rng.below(100) {
+                // -------- search (40%) --------
+                0..=39 => {
+                    let q = &built.workload.queries[rng.below(built.workload.queries.len())];
+                    let emb = embedder.embed_one(&q.text).unwrap();
+                    let sa = oracle.search(&emb, 5).unwrap();
+                    let sb = subject.search(&emb, 5).unwrap();
+                    assert_eq!(sa.hits, sb.hits, "step {step} hits");
+                    assert_eq!(sa.probed, sb.probed, "step {step} probes");
+                    assert_eq!(sa.events.generated, sb.events.generated, "step {step}");
+                    assert_eq!(sa.events.loaded, sb.events.loaded, "step {step}");
+                    assert_eq!(
+                        sa.ledger.total(),
+                        sb.ledger.total(),
+                        "step {step} modeled latency"
+                    );
+                }
+                // -------- insert (20%) --------
+                40..=59 => {
+                    let text = format!("reshard churn doc {next_id} marker zzrs{next_id}");
+                    let emb = embedder.embed_one(&text).unwrap();
+                    let ca = oracle.insert_chunk(next_id, &text, &emb).unwrap();
+                    let cb = subject.insert_chunk_concurrent(next_id, &text, &emb).unwrap();
+                    assert_eq!(ca, cb, "step {step}: cluster-id allocation diverged");
+                    alive.push(next_id);
+                    next_id += 1;
+                }
+                // -------- remove (28%), unrestricted --------
+                60..=87 => {
+                    if alive.is_empty() {
+                        continue;
+                    }
+                    let id = removal_victim(
+                        &mut rng,
+                        oracle.as_any().downcast_ref::<EdgeIndex>().unwrap(),
+                        &alive,
+                    );
+                    let ra = oracle.remove_chunk(id).unwrap();
+                    let rb = subject.remove_chunk_concurrent(id).unwrap();
+                    assert_eq!(ra, rb, "step {step} removed flags");
+                    let i = alive.iter().position(|&a| a == id).unwrap();
+                    alive.swap_remove(i);
+                }
+                // -------- reshard (12%) --------
+                _ => {
+                    let sharded = subject.as_any().downcast_ref::<ShardedEdgeIndex>().unwrap();
+                    let target = targets[reshards % targets.len()];
+                    let r = sharded.reshard(target).unwrap();
+                    assert_eq!(sharded.shards(), target, "step {step}: {r:?}");
+                    migrated_total += r.migrated;
+                    reshards += 1;
+                    // A rebalance round right after fills freshly grown
+                    // shards (grow alone appends empty ones).
+                    sharded.rebalance().unwrap();
+                    sharded.verify_integrity().unwrap();
+                }
+            }
+        }
+        assert!(reshards >= 2, "op mix never resharded");
+        assert!(migrated_total > 0, "shrink rounds never drained a cluster");
+
+        // Terminal state agreement after the grow/shrink churn.
+        let oracle_edge = oracle.as_any().downcast_ref::<EdgeIndex>().unwrap();
+        let sharded = subject.as_any().downcast_ref::<ShardedEdgeIndex>().unwrap();
+        sharded.verify_integrity().unwrap();
+        assert_eq!(
+            sharded.active_clusters(),
+            oracle_edge.active_clusters(),
+            "active-cluster sets diverged after reshard churn"
+        );
+        for &id in &alive {
+            assert_eq!(
+                oracle_edge.cluster_of(id),
+                sharded.cluster_of(id),
+                "chunk {id} routed differently after reshard churn"
+            );
+        }
+    }
+}
+
+#[test]
 fn skewed_placement_rebalances_under_live_traffic() {
     // The bench-sweep property as a test: seed one shard with every
     // cluster (the worst drift), then require bounded rebalance rounds

@@ -396,6 +396,80 @@ fn kill_at_random_op_recovers_to_oracle_exact_index() {
 }
 
 #[test]
+fn log_written_during_resharding_recovers_at_a_different_shard_count() {
+    // Reshard-era logs: ops recorded while the live shard count grew and
+    // shrank (2 → 4 → 1 → 6 → 3 → 2) must recover on builds with a
+    // *fixed* — and different — shard count. Shrink-driven migrations
+    // land in the log like any others; replay skips destinations that
+    // don't exist at the recovery count, tombstone evacuations are not
+    // logged at all (replay re-derives merges from the removes), and
+    // placement never affects search results — so every recovery must be
+    // oracle-exact.
+    let seed = test_seed(0x4E5D);
+    let tag = "rs-portable";
+
+    let b_live = builder(1, &format!("{tag}-live"));
+    let built_live = b_live.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let (mut live_oracle, _ml) = b_live.index(&built_live, IndexKind::EdgeRag).unwrap();
+
+    let mut b2 = builder(2, tag);
+    b2.retrieval.wal = true;
+    b2.retrieval.snapshot_interval_ops = 16;
+    let built = b2.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let wal_dir = b2
+        .options
+        .state_dir
+        .join(&built.profile.name)
+        .join(format!("{}-wal", IndexKind::EdgeRag.name()));
+    let _ = std::fs::remove_dir_all(&wal_dir);
+    let (mut subject, _ms) = b2.index(&built, IndexKind::EdgeRag).unwrap();
+
+    let embedder = b2.embedder();
+    let mut churn = Churn::new(seed, &embedder, &built);
+    let targets = [4usize, 1, 6, 3, 2];
+    for (round, &target) in targets.iter().enumerate() {
+        for step in 0..24 {
+            churn.step(&mut subject, &mut live_oracle, round * 24 + step);
+        }
+        let sharded = subject.as_any().downcast_ref::<ShardedEdgeIndex>().unwrap();
+        let r = sharded.reshard(target).unwrap();
+        assert_eq!(sharded.shards(), target, "round {round}: {r:?}");
+        // Fill freshly grown shards so later shrink rounds log real
+        // drain migrations.
+        sharded.rebalance().unwrap();
+        sharded.verify_integrity().unwrap();
+    }
+    drop(subject);
+    drop(live_oracle);
+
+    let b_fresh = builder(1, &format!("{tag}-fresh"));
+    let built_fresh = b_fresh.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let (mut oracle, _mf) = b_fresh.index(&built_fresh, IndexKind::EdgeRag).unwrap();
+    apply_trace(&mut oracle, &churn.trace);
+
+    let qembs: Vec<Vec<f32>> = built
+        .workload
+        .queries
+        .iter()
+        .take(16)
+        .map(|q| embedder.embed_one(&q.text).unwrap())
+        .collect();
+
+    for shards in [8usize, 4, 2, 1] {
+        let mut bn = b2.clone();
+        bn.retrieval.shards = shards;
+        let (recovered, _mr) = bn.index(&built, IndexKind::EdgeRag).unwrap();
+        assert_oracle_equal(
+            recovered.as_ref(),
+            oracle.as_ref(),
+            &churn.alive,
+            &qembs,
+            &format!("reshard-era recovery at shards={shards}"),
+        );
+    }
+}
+
+#[test]
 fn log_written_at_four_shards_recovers_at_two_and_one() {
     // Shard-count portability: placement is the only thing Migrate
     // records carry, and placement never affects results — so a log

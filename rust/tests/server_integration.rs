@@ -746,6 +746,105 @@ fn saturated_server_sheds_expired_queries_distinctly() {
 }
 
 #[test]
+fn zero_slow_query_threshold_disarms_the_derived_deadline() {
+    // Regression: the derived deadline was `4 × slow_query_us`, so
+    // `--slow-query-us 0` (keep-all tracing) derived a 0µs budget that
+    // shed every query. With both knobs 0 the deadline must disarm —
+    // every query serves, nothing sheds.
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    b.retrieval.nprobe = 4;
+    b.retrieval.batching = true;
+    b.retrieval.trace = true;
+    b.retrieval.slow_query_us = 0; // keep-all tracing
+    b.retrieval.deadline_us = 0; // derive — must disarm, not derive 0
+    assert_eq!(b.retrieval.resolved_deadline_us(), 0);
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let pipeline = b.pipeline(&built, IndexKind::EdgeRag).unwrap();
+    let server =
+        Server::bind_with_retrieval("127.0.0.1:0", pipeline, b.embedder(), 2, &b.retrieval)
+            .unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || server.run().unwrap());
+
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    for i in 0..6 {
+        let resp = c.query(&format!("keep-all query {i} c1 t0w1")).unwrap();
+        assert!(resp.get("error").is_none(), "query {i} shed/errored: {resp}");
+        assert!(resp.get("hits").is_some(), "{resp}");
+    }
+    let stats = c.call(&Value::object(vec![("op", Value::str("stats"))])).unwrap();
+    let srv = stats.get("server").unwrap_or_else(|| panic!("no server block: {stats}"));
+    assert_eq!(srv.get("deadline_shed").and_then(|v| v.as_u64()), Some(0), "{srv}");
+    assert_eq!(srv.get("deadline_us").and_then(|v| v.as_u64()), Some(0), "{srv}");
+}
+
+#[test]
+fn reshard_op_round_trips_and_clamps_to_serve_bounds() {
+    // The elastic-topology server op: grow over the wire, observe the
+    // new shard-stats row count, keep serving, and verify the
+    // `--shards-min/--shards-max` clamp.
+    let mut b = SystemBuilder::new(shared_compute(), DeviceProfile::jetson_orin_nano());
+    b.options.cache_dir = None;
+    b.retrieval.nprobe = 4;
+    b.retrieval.shards = 2;
+    b.retrieval.shards_min = 1;
+    b.retrieval.shards_max = 4;
+    let built = b.build_dataset(&DatasetProfile::tiny()).unwrap();
+    let pipeline = b.pipeline(&built, IndexKind::EdgeRag).unwrap();
+    let server =
+        Server::bind_with_retrieval("127.0.0.1:0", pipeline, b.embedder(), 2, &b.retrieval)
+            .unwrap();
+    let addr = server.local_addr().unwrap();
+    std::thread::spawn(move || server.run().unwrap());
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+
+    let reshard = |c: &mut Client, n: f64| {
+        c.call(&Value::object(vec![
+            ("op", Value::str("reshard")),
+            ("shards", Value::num(n)),
+        ]))
+        .unwrap()
+    };
+    let shard_rows = |c: &mut Client| -> usize {
+        c.call(&Value::object(vec![("op", Value::str("shard-stats"))]))
+            .unwrap()
+            .get("shards")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .len()
+    };
+
+    // Grow 2 → 4.
+    let grown = reshard(&mut c, 4.0);
+    assert_eq!(grown.get("from").and_then(|v| v.as_u64()), Some(2), "{grown}");
+    assert_eq!(grown.get("to").and_then(|v| v.as_u64()), Some(4), "{grown}");
+    assert_eq!(shard_rows(&mut c), 4);
+
+    // Service continues across the swap.
+    let resp = c.query("post-grow query c1 t0w1").unwrap();
+    assert!(resp.get("hits").is_some(), "{resp}");
+
+    // Shrink 4 → 1, draining every cluster off the doomed shards.
+    let shrunk = reshard(&mut c, 1.0);
+    assert_eq!(shrunk.get("to").and_then(|v| v.as_u64()), Some(1), "{shrunk}");
+    assert!(
+        shrunk.get("migrated").and_then(|v| v.as_u64()).unwrap() > 0,
+        "shrink drained nothing: {shrunk}"
+    );
+    assert_eq!(shard_rows(&mut c), 1);
+    let resp = c.query("post-shrink query c1 t0w1").unwrap();
+    assert!(resp.get("hits").is_some(), "{resp}");
+
+    // A request beyond --shards-max clamps instead of exploding.
+    let clamped = reshard(&mut c, 100.0);
+    assert_eq!(clamped.get("requested").and_then(|v| v.as_u64()), Some(100), "{clamped}");
+    assert_eq!(clamped.get("to").and_then(|v| v.as_u64()), Some(4), "{clamped}");
+    assert_eq!(shard_rows(&mut c), 4);
+}
+
+#[test]
 fn shutdown_under_load_drains_and_exits_without_helper_connection() {
     // Regression: shutdown used to wake the blocked accept loop by
     // self-connecting a throwaway socket; if that connect raced the
